@@ -1,0 +1,219 @@
+"""AOT export: lower every model/method variant to HLO text + manifest.
+
+HLO *text* is the interchange format (NOT serialized protos): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+runtime behind the rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+All artifacts are lowered with ``return_tuple=False`` so PJRT returns one
+buffer per output and the rust coordinator can keep training state
+device-resident across steps (execute_b chaining, DESIGN.md §7).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--force]
+        [--only SUBSTR] [--skip-heavy]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train, sketching
+from .kernels.sketch_bwd import sketched_linear_bwd
+
+# Which methods get a train-step artifact per model. MLP carries the full
+# estimator zoo (Figs 1–2, 4); the larger architectures carry the retained
+# subset (Fig 3) — spectral methods are MLP-only on this single-core testbed
+# (DESIGN.md §6).
+MLP_METHODS = list(sketching.ALL_METHODS)
+BIG_METHODS = [
+    "baseline",
+    "per_element",
+    "per_column",
+    "per_sample",
+    "l1",
+    "l1_sq",
+    "var",
+    "ds",
+]
+GRADS_METHODS = ["baseline", "per_column", "per_sample", "l1", "ds", "rcs"]
+
+BATCH = {"mlp": 128, "vit": 32, "bagnet": 32}
+
+DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "s32",
+    jnp.dtype("uint32"): "u32",
+}
+
+
+def to_hlo_text(fn, example_inputs) -> str:
+    lowered = jax.jit(fn).lower(*example_inputs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract(vals):
+    out = []
+    for v in vals:
+        a = jax.api_util.shaped_abstractify(v)
+        out.append({"dtype": DTYPE_NAMES[a.dtype], "shape": list(a.shape)})
+    return out
+
+
+def _spec_entry(name, spec, out_dir, force):
+    """Lower one StepSpec → artifacts/<name>.hlo.txt, return manifest row."""
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    t0 = time.time()
+    if force or not os.path.exists(path):
+        text = to_hlo_text(spec.fn, spec.example_inputs)
+        with open(path, "w") as f:
+            f.write(text)
+        status = f"lowered {len(text) // 1024}KiB in {time.time() - t0:.1f}s"
+    else:
+        status = "cached"
+    outputs = jax.eval_shape(spec.fn, *spec.example_inputs)
+    out_abs = [
+        {"dtype": DTYPE_NAMES[o.dtype], "shape": list(o.shape)} for o in outputs
+    ]
+    in_abs = _abstract(spec.example_inputs)
+    print(f"  {name}: {status}", flush=True)
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [{"name": n, **a} for n, a in zip(spec.input_names, in_abs)],
+        "outputs": [{"name": n, **a} for n, a in zip(spec.output_names, out_abs)],
+        "meta": spec.meta,
+    }
+
+
+def micro_specs():
+    """Micro-function artifacts for rust↔python integration tests."""
+    n = 64
+
+    def pstar_fn(w, r):
+        return (sketching.pstar_from_weights(w, r),)
+
+    def sample_fn(key_bits, p):
+        key = jax.random.wrap_key_data(key_bits)
+        return (sketching.correlated_bernoulli(key, p),)
+
+    def bwd_fn(g, colinv, rowinv, x, w):
+        return sketched_linear_bwd(g, colinv, rowinv, x, w)
+
+    key = jnp.zeros((2,), jnp.uint32)
+    specs = [
+        train.StepSpec(
+            pstar_fn,
+            ["w", "r"],
+            ["p"],
+            (jnp.ones((n,), jnp.float32), jnp.float32(8.0)),
+            {"n": n},
+        ),
+        train.StepSpec(
+            sample_fn,
+            ["key", "p"],
+            ["z"],
+            (key, jnp.full((n,), 0.25, jnp.float32)),
+            {"n": n},
+        ),
+        train.StepSpec(
+            bwd_fn,
+            ["g", "colinv", "rowinv", "x", "w"],
+            ["dx", "dw", "db"],
+            (
+                jnp.ones((32, n), jnp.float32),
+                jnp.ones((n,), jnp.float32),
+                jnp.ones((32,), jnp.float32),
+                jnp.ones((32, 48), jnp.float32),
+                jnp.ones((n, 48), jnp.float32),
+            ),
+            {"b": 32, "dout": n, "din": 48},
+        ),
+    ]
+    return ["micro_pstar", "micro_corr_sample", "micro_sketch_bwd"], specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    ap.add_argument(
+        "--skip-heavy",
+        action="store_true",
+        help="skip vit/bagnet variants (fast CI artifact builds)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = []  # (name, lazy builder)
+    for model in ["mlp", "vit", "bagnet"]:
+        if args.skip_heavy and model != "mlp":
+            continue
+        methods = MLP_METHODS if model == "mlp" else BIG_METHODS
+        b = BATCH[model]
+        jobs.append((f"init_{model}", lambda m=model: train.build_init(m)))
+        jobs.append(
+            (f"eval_{model}", lambda m=model, bb=b: train.build_eval_step(m, bb))
+        )
+        for method in methods:
+            jobs.append(
+                (
+                    f"train_{model}_{method}",
+                    lambda m=model, me=method, bb=b: train.build_train_step(
+                        m, me, bb
+                    ),
+                )
+            )
+    for method in GRADS_METHODS:
+        jobs.append(
+            (
+                f"grads_mlp_{method}",
+                lambda me=method: train.build_grads("mlp", me, BATCH["mlp"]),
+            )
+        )
+    mnames, mspecs = micro_specs()
+    for n, s in zip(mnames, mspecs):
+        jobs.append((n, lambda s=s: s))
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    old = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = {e["name"]: e for e in json.load(f)["artifacts"]}
+
+    entries = []
+    t0 = time.time()
+    for name, builder in jobs:
+        if args.only and args.only not in name:
+            if name in old:
+                entries.append(old[name])
+            continue
+        hlo_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        if not args.force and os.path.exists(hlo_path) and name in old:
+            entries.append(old[name])
+            print(f"  {name}: cached")
+            continue
+        entries.append(_spec_entry(name, builder(), args.out_dir, args.force))
+
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "artifacts": entries}, f, indent=1)
+    print(
+        f"wrote {len(entries)} artifact entries to {manifest_path} "
+        f"in {time.time() - t0:.0f}s",
+        flush=True,
+    )
+
+
+if __name__ == "__main__":
+    main()

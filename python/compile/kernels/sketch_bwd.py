@@ -1,0 +1,189 @@
+"""L1 Pallas kernels: the sketched linear backward pass.
+
+This is the compute hot-spot of the paper: given the (possibly sketched)
+output gradient of a linear layer ``y = x Wᵀ + b``, produce
+
+    dX = Ĝ · W          (B, d_in)
+    dW = Ĝᵀ · X         (d_out, d_in)
+    db = Σ_b Ĝ[b, :]    (d_out,)
+
+where ``Ĝ = G ⊙ rowinv[:, None] ⊙ colinv[None, :]`` fuses the unbiased
+mask-and-rescale of §4 into the tile loads (one VPU pass per tile), so the
+mask never materializes in HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tiles default to 128×128 — the
+MXU systolic shape — and each grid step keeps one Ĝ tile + one W/X tile in
+VMEM; the reduction axis runs innermost so partial accumulators stay resident
+in the output VMEM block. Column-budget sparsity corresponds to dropping
+colinv≈0 column-blocks from the grid (HBM→VMEM traffic savings); in this
+repo the CPU interpret path always materializes the full grid and the FLOP
+savings are modeled in the rust cost model (DESIGN.md §6).
+
+``interpret=True`` is mandatory here: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-only box; see module docstring.
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Block size: the requested MXU-friendly tile, clamped for small dims."""
+    return min(want, _ceil_to(dim, 8))
+
+
+def _pad2(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+def _pad1(a, n):
+    return jnp.pad(a, ((0, n - a.shape[0]),))
+
+
+# ---------------------------------------------------------------------------
+# dX = Ĝ W  — grid (B/bB, d_in/bD, d_out/bK), accumulate over k.
+# ---------------------------------------------------------------------------
+def _dx_kernel(g_ref, colinv_ref, rowinv_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+    ghat = g_ref[...] * colinv_ref[...][None, :] * rowinv_ref[...][:, None]
+    acc = jnp.dot(ghat, w_ref[...], preferred_element_type=o_ref.dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += acc
+
+
+# ---------------------------------------------------------------------------
+# dW = Ĝᵀ X — grid (d_out/bO, d_in/bD, B/bK), accumulate over k.
+# ---------------------------------------------------------------------------
+def _dw_kernel(g_ref, colinv_ref, rowinv_ref, x_ref, o_ref):
+    k = pl.program_id(2)
+    ghat = g_ref[...] * colinv_ref[...][None, :] * rowinv_ref[...][:, None]
+    acc = jnp.dot(ghat.T, x_ref[...], preferred_element_type=o_ref.dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += acc
+
+
+# ---------------------------------------------------------------------------
+# db = Σ_b Ĝ — grid (d_out/bO, B/bK), accumulate over k.
+# ---------------------------------------------------------------------------
+def _db_kernel(g_ref, colinv_ref, rowinv_ref, o_ref):
+    k = pl.program_id(1)
+    ghat = g_ref[...] * colinv_ref[...][None, :] * rowinv_ref[...][:, None]
+    acc = jnp.sum(ghat, axis=0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += acc
+
+
+def sketched_linear_bwd(
+    g: jax.Array,
+    colinv: jax.Array,
+    rowinv: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_b: int = 128,
+    block_dout: int = 128,
+    block_din: int = 128,
+):
+    """Sketched backward of ``y = x Wᵀ + b``; returns (dX, dW, db).
+
+    Shapes: g (B, d_out), colinv (d_out,), rowinv (B,), x (B, d_in),
+    w (d_out, d_in). Ragged shapes are zero-padded to tile multiples (zeros
+    are absorbing for all three products) and sliced back.
+    """
+    bsz, dout = g.shape
+    din = x.shape[1]
+    dtype = g.dtype
+
+    bb = _pick_block(bsz, block_b)
+    bo = _pick_block(dout, block_dout)
+    bd = _pick_block(din, block_din)
+    pb, po, pd = _ceil_to(bsz, bb), _ceil_to(dout, bo), _ceil_to(din, bd)
+
+    gp = _pad2(g, pb, po)
+    xp = _pad2(x, pb, pd)
+    wp = _pad2(w, po, pd)
+    cp = _pad1(colinv, po)
+    rp = _pad1(rowinv, pb)
+
+    nb, no, nd, nkb, nko = pb // bb, po // bo, pd // bd, pb // bb, po // bo
+
+    dx = pl.pallas_call(
+        _dx_kernel,
+        grid=(nb, nd, nko),
+        in_specs=[
+            pl.BlockSpec((bb, bo), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bo,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bb,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bo, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pd), dtype),
+        interpret=INTERPRET,
+    )(gp, cp, rp, wp)
+
+    dw = pl.pallas_call(
+        _dw_kernel,
+        grid=(no, nd, nkb),
+        in_specs=[
+            pl.BlockSpec((bb, bo), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bo,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bb,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bb, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bo, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((po, pd), dtype),
+        interpret=INTERPRET,
+    )(gp, cp, rp, xp)
+
+    db = pl.pallas_call(
+        _db_kernel,
+        grid=(no, nkb),
+        in_specs=[
+            pl.BlockSpec((bb, bo), lambda i, k: (k, i)),
+            pl.BlockSpec((bo,), lambda i, k: (i,)),
+            pl.BlockSpec((bb,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bo,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((po,), dtype),
+        interpret=INTERPRET,
+    )(gp, cp, rp)
+
+    return dx[:bsz, :din], dw[:dout, :din], db[:dout]
+
+
+def vmem_bytes(block_b: int, block_dout: int, block_din: int, dtype_bytes: int = 4):
+    """Estimated VMEM residency of one dX-grid step (for DESIGN.md §Perf)."""
+    g_tile = block_b * block_dout
+    w_tile = block_dout * block_din
+    o_tile = block_b * block_din
+    vecs = block_b + block_dout
+    return (g_tile + w_tile + o_tile + vecs) * dtype_bytes

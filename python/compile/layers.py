@@ -1,0 +1,160 @@
+"""L2 building blocks: layers whose backward pass is a randomized VJP.
+
+The central export is :func:`sketched_linear` — a linear layer whose forward
+is exact and whose backward replaces the exact VJPs by the paper's unbiased
+randomized estimators (method chosen statically, budget/enable/key traced).
+
+Plumbing notes
+--------------
+* PRNG keys cross the ``jax.custom_vjp`` boundary as **f32-bitcast uint32
+  pairs** (``key_bits``): integer primals would demand float0 cotangents,
+  while f32 bits get ordinary zero cotangents. Use :func:`key_to_bits` /
+  :func:`bits_to_key`.
+* Inputs with leading batch/token/pixel axes are flattened to rows for the
+  sketch — exactly the paper's treatment of 1×1 convolutions and token MLPs
+  as linear layers over a widened batch.
+* ``enable`` ∈ {0., 1.} gates the sketch per layer (Fig 4 location ablation)
+  by blending the mask with all-ones — numerically exact when 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import sketching
+from .kernels.sketch_bwd import sketched_linear_bwd as pallas_bwd
+
+
+def key_to_bits(key: jax.Array) -> jax.Array:
+    """Typed PRNG key → f32[2] bit pattern (safe custom_vjp primal)."""
+    data = jax.random.key_data(key).astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(data, jnp.float32)
+
+def bits_to_key(bits: jax.Array) -> jax.Array:
+    """Inverse of :func:`key_to_bits`."""
+    data = jax.lax.bitcast_convert_type(bits, jnp.uint32)
+    return jax.random.wrap_key_data(data)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_sketched_linear(method: str, use_pallas: bool):
+    """Build (and cache) the custom-VJP linear for one sketch method."""
+
+    @jax.custom_vjp
+    def f(x, w, b, key_bits, p_budget, enable):
+        del key_bits, p_budget, enable
+        return x @ w.T + b
+
+    def fwd(x, w, b, key_bits, p_budget, enable):
+        return f(x, w, b, key_bits, p_budget, enable), (x, w, key_bits, p_budget, enable)
+
+    def bwd(res, gy):
+        x, w, key_bits, p_budget, enable = res
+        lead = gy.shape[:-1]
+        dout = gy.shape[-1]
+        din = x.shape[-1]
+        g2 = gy.reshape((-1, dout))
+        x2 = x.reshape((-1, din))
+        key = bits_to_key(key_bits)
+        zeros_bits = jnp.zeros_like(key_bits)
+        zero = jnp.zeros_like(p_budget)
+
+        if method == "per_element":
+            # Algorithm 3: independent element masks on W and X.
+            kw, kx = jax.random.split(key)
+            p = p_budget
+            mw = sketching.independent_bernoulli(kw, jnp.full(w.shape, p, w.dtype))
+            mx = sketching.independent_bernoulli(kx, jnp.full(x2.shape, p, x2.dtype))
+            mw = enable * mw / p + (1.0 - enable)
+            mx = enable * mx / p + (1.0 - enable)
+            dx = (g2 @ (w * mw)).reshape(x.shape)
+            dw = g2.T @ (x2 * mx)
+            db = jnp.sum(g2, axis=0)
+            return dx, dw, db, zeros_bits, zero, zero
+
+        ghat, colinv, rowinv = sketching.sketch_ghat(
+            method, g2, w, key, p_budget, enable
+        )
+        if use_pallas:
+            # Wide row counts (1×1 convs fold pixels into rows) want taller
+            # tiles: fewer grid steps amortize the per-tile loop overhead of
+            # the interpret path and map to deeper HBM→VMEM pipelining on TPU.
+            bb = 512 if g2.shape[0] >= 2048 else 128
+            dx2, dw, db = pallas_bwd(ghat, colinv, rowinv, x2, w, block_b=bb)
+        else:
+            gh = ghat * colinv[None, :] * rowinv[:, None]
+            dx2, dw, db = gh @ w, gh.T @ x2, jnp.sum(gh, axis=0)
+        return dx2.reshape(x.shape), dw, db, zeros_bits, zero, zero
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def sketched_linear(
+    method: str,
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    key: jax.Array,
+    p_budget: jax.Array,
+    enable: jax.Array,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Linear layer ``y = x Wᵀ + b`` with an unbiased randomized backward.
+
+    ``method`` ∈ sketching.ALL_METHODS (static); ``p_budget`` the kept
+    fraction (traced scalar); ``enable`` the per-layer sketch gate (traced
+    scalar in {0, 1}).
+    """
+    f = _make_sketched_linear(method, use_pallas)
+    return f(x, w, b, key_to_bits(key), p_budget, enable)
+
+
+# ---------------------------------------------------------------------------
+# Exact layers (never sketched — paper sketches only linear/1×1-conv layers)
+# ---------------------------------------------------------------------------
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def layernorm(x, gamma, beta, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q, k, v, n_heads: int):
+    """Multi-head self-attention on (B, T, D) tensors (exact backward)."""
+    bsz, t, d = q.shape
+    hd = d // n_heads
+
+    def split(a):
+        return a.reshape(bsz, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    logits = jnp.einsum("bhtd,bhsd->bhts", qh, kh) / jnp.sqrt(float(hd))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+
+
+def patchify(images, patch: int):
+    """(B, H, W, C) → (B, T, patch·patch·C) non-overlapping patches."""
+    bsz, h, w, c = images.shape
+    gh, gw = h // patch, w // patch
+    x = images.reshape(bsz, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(bsz, gh * gw, patch * patch * c)
+
+
+def avgpool2x2(x):
+    """(B, H, W, C) → (B, H/2, W/2, C) mean pooling."""
+    bsz, h, w, c = x.shape
+    return x.reshape(bsz, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))

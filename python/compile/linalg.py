@@ -1,0 +1,92 @@
+"""Pure-jnp dense linear algebra substrate.
+
+Why this exists: ``jnp.linalg.eigh`` lowers to a LAPACK ``custom-call`` that
+the pinned PJRT runtime (xla_extension 0.5.1 CPU) cannot execute, and real-TPU
+lowering would emit a Mosaic call. The spectral sketches of the paper (G-SV,
+RCS — Prop 3.3) need full symmetric eigendecompositions *inside* the AOT-
+compiled train step, so we implement a **parallel-ordered cyclic Jacobi**
+eigensolver out of plain matmuls + scatters. On TPU this maps cleanly onto the
+MXU (each round is two n×n matmuls); on the CPU PJRT runtime it executes as
+ordinary HLO.
+
+The pair schedule is the classic round-robin tournament: n−1 rounds of n/2
+disjoint pivots, each round applied as one orthogonal similarity transform.
+Jacobi converges quadratically once sweeps start; ``sweeps=10`` reaches ~1e-6
+relative accuracy for the matrix sizes used here (n ≤ 256), validated against
+numpy in ``python/tests/test_linalg.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _round_robin_pairs(n: int) -> np.ndarray:
+    """Static (n-1, n/2, 2) round-robin pairing of n players (n even)."""
+    assert n % 2 == 0
+    arr = list(range(n))
+    rounds = []
+    for _ in range(n - 1):
+        rounds.append([(arr[i], arr[n - 1 - i]) for i in range(n // 2)])
+        arr = [arr[0]] + [arr[-1]] + arr[1:-1]
+    return np.asarray(rounds, dtype=np.int32)
+
+
+def eigh_jacobi(a: jax.Array, sweeps: int = 10):
+    """Symmetric eigendecomposition A = V diag(w) Vᵀ via parallel Jacobi.
+
+    Returns eigenvalues in descending order and the matching eigenvectors as
+    columns of V. ``a`` must be symmetric; only the symmetric part is used.
+    """
+    n = a.shape[0]
+    a = 0.5 * (a + a.T)
+    padded = n % 2 == 1
+    if padded:
+        # Decouple the padding index with a zero row/col; drop it at the end.
+        a = jnp.pad(a, ((0, 1), (0, 1)))
+    m = a.shape[0]
+    pairs = jnp.asarray(_round_robin_pairs(m))
+    n_rounds = pairs.shape[0]
+    eye = jnp.eye(m, dtype=a.dtype)
+
+    def round_body(r, carry):
+        amat, v = carry
+        pq = pairs[r % n_rounds]
+        ps, qs = pq[:, 0], pq[:, 1]
+        app = amat[ps, ps]
+        aqq = amat[qs, qs]
+        apq = amat[ps, qs]
+        small = jnp.abs(apq) < 1e-30
+        safe_apq = jnp.where(small, 1.0, apq)
+        tau = (aqq - app) / (2.0 * safe_apq)
+        t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        t = jnp.where(tau == 0.0, 1.0, t)  # 45° rotation when diag equal
+        c = 1.0 / jnp.sqrt(1.0 + t * t)
+        s = t * c
+        c = jnp.where(small, 1.0, c)
+        s = jnp.where(small, 0.0, s)
+        # One orthogonal transform for the whole round (disjoint pivots).
+        rot = eye.at[ps, ps].set(c).at[qs, qs].set(c)
+        rot = rot.at[ps, qs].set(s).at[qs, ps].set(-s)
+        amat = rot.T @ amat @ rot
+        amat = 0.5 * (amat + amat.T)  # kill rounding drift off symmetry
+        v = v @ rot
+        return amat, v
+
+    amat, v = lax.fori_loop(0, sweeps * n_rounds, round_body, (a, eye))
+    evals = jnp.diagonal(amat)
+    if padded:
+        evals = evals[:n]
+        v = v[:n, :n]
+    order = jnp.argsort(-evals)
+    return evals[order], v[:, order]
+
+
+def singular_values_gram(m: jax.Array, sweeps: int = 10) -> jax.Array:
+    """Singular values of M via the (smaller) Gram matrix eigenvalues."""
+    gram = m.T @ m if m.shape[0] >= m.shape[1] else m @ m.T
+    evals, _ = eigh_jacobi(gram, sweeps=sweeps)
+    return jnp.sqrt(jnp.maximum(evals, 0.0))

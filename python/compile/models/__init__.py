@@ -1,0 +1,9 @@
+"""Model zoo: the paper's three experimental architectures (§5)."""
+
+from . import mlp, vit, bagnet
+
+REGISTRY = {
+    "mlp": mlp,
+    "vit": vit,
+    "bagnet": bagnet,
+}

@@ -1,0 +1,111 @@
+"""BagNet-style residual network of §5, scaled to this testbed.
+
+Note: real BagNet-17 uses BatchNorm; running statistics complicate the AOT
+step interface (state that is neither a parameter nor an optimizer slot), so
+we substitute channel LayerNorm — same conditioning role, stateless
+(DESIGN.md §6). Without normalization the sketched 1×1-conv backward (whose
+rescaled-mask variance is large at small p) destabilizes momentum training.
+
+BagNet (Brendel & Bethge 2019) is ResNet-like but built almost entirely from
+1×1 convolutions — which the paper "assimilates as linear layers and
+sketches". We keep exactly that structure: a single exact 3×3 stem (the
+paper excludes the initial input projection), then stages of residual blocks
+whose 1×1 convs are sketched linears applied over the channel axis with the
+pixel grid folded into the batch. Classifier head exact (excluded, §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .. import layers
+
+STAGE_WIDTHS = (16, 32, 64)
+BLOCKS_PER_STAGE = 2
+IMG = 32
+CHANNELS = 3
+INPUT_SHAPE = (IMG, IMG, CHANNELS)
+NUM_CLASSES = 10
+# per block: two 1×1 convs; per stage transition (incl. stem→stage0): one 1×1
+NUM_SKETCHED = len(STAGE_WIDTHS) * BLOCKS_PER_STAGE * 2 + len(STAGE_WIDTHS)
+
+
+def _dense_init(key, dout, din):
+    return {
+        "w": jax.random.normal(key, (dout, din), jnp.float32)
+        * jnp.sqrt(2.0 / din),
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def _ln_init(width):
+    return {"g": jnp.ones((width,)), "b": jnp.zeros((width,))}
+
+
+def init(key: jax.Array):
+    keys = iter(jax.random.split(key, 64))
+    params = {
+        "stem": {
+            "w": jax.random.normal(next(keys), (3, 3, CHANNELS, STAGE_WIDTHS[0]))
+            * jnp.sqrt(2.0 / (9 * CHANNELS)),
+            "b": jnp.zeros((STAGE_WIDTHS[0],)),
+        },
+        "head": _dense_init(next(keys), NUM_CLASSES, STAGE_WIDTHS[-1]),
+    }
+    cin = STAGE_WIDTHS[0]
+    for s, width in enumerate(STAGE_WIDTHS):
+        params[f"trans{s}"] = _dense_init(next(keys), width, cin)
+        params[f"trans{s}_ln"] = _ln_init(width)
+        for b in range(BLOCKS_PER_STAGE):
+            params[f"s{s}b{b}"] = {
+                "c1": _dense_init(next(keys), width, width),
+                "ln1": _ln_init(width),
+                "c2": _dense_init(next(keys), width, width),
+                "ln2": _ln_init(width),
+            }
+        cin = width
+    return params
+
+
+def apply(params, x, key, p_budget, layer_mask, method: str):
+    """x: (B, 32, 32, 3) images → (B, 10) logits."""
+    li = [0]
+
+    def slin(p, h):
+        i = li[0]
+        li[0] += 1
+        lkey = jax.random.fold_in(key, i)
+        return layers.sketched_linear(
+            method, h, p["w"], p["b"], lkey, p_budget, layer_mask[i]
+        )
+
+    # exact 3×3 stem (NHWC), stride 2: pixels fold into the sketch batch
+    # downstream, so the stem halves resolution up front (testbed scaling,
+    # DESIGN.md §6 — structure preserved, 4× fewer folded rows).
+    h = lax.conv_general_dilated(
+        x,
+        params["stem"]["w"],
+        window_strides=(2, 2),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + params["stem"]["b"]
+    h = layers.relu(h)
+
+    for s in range(len(STAGE_WIDTHS)):
+        if s > 0:
+            h = layers.avgpool2x2(h)
+        h = slin(params[f"trans{s}"], h)  # 1×1 channel projection
+        ln = params[f"trans{s}_ln"]
+        h = layers.layernorm(h, ln["g"], ln["b"])
+        for b in range(BLOCKS_PER_STAGE):
+            blk = params[f"s{s}b{b}"]
+            r = slin(blk["c1"], h)
+            r = layers.relu(layers.layernorm(r, blk["ln1"]["g"], blk["ln1"]["b"]))
+            r = slin(blk["c2"], r)
+            r = layers.layernorm(r, blk["ln2"]["g"], blk["ln2"]["b"])
+            h = layers.relu(h + r)
+
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ params["head"]["w"].T + params["head"]["b"]

@@ -1,0 +1,91 @@
+"""Visual Transformer of §5/Appendix B.2, scaled to this testbed.
+
+Paper config: embed 192, MLP 1024, depth 9, 12 heads, patch 4 on CIFAR-10.
+Ours (DESIGN.md §6): embed 64, MLP 256, depth 3, 4 heads, patch 8 — all
+structural elements preserved (attention blocks + feed-forward linears, both
+sketched; classification head exact, as in the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+
+EMBED = 64
+MLP_DIM = 256
+DEPTH = 3
+HEADS = 4
+PATCH = 8
+IMG = 32
+CHANNELS = 3
+TOKENS = (IMG // PATCH) ** 2
+INPUT_SHAPE = (IMG, IMG, CHANNELS)
+NUM_CLASSES = 10
+# sketched layers: patch embed + per block (q, k, v, o, mlp1, mlp2)
+NUM_SKETCHED = 1 + DEPTH * 6
+
+
+def _dense_init(key, dout, din, scale=None):
+    scale = scale if scale is not None else jnp.sqrt(2.0 / din)
+    return {
+        "w": jax.random.normal(key, (dout, din), jnp.float32) * scale,
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def init(key: jax.Array):
+    keys = iter(jax.random.split(key, 64))
+    patch_dim = PATCH * PATCH * CHANNELS
+    params = {
+        "embed": _dense_init(next(keys), EMBED, patch_dim),
+        "pos": jax.random.normal(next(keys), (TOKENS, EMBED), jnp.float32) * 0.02,
+        "head": _dense_init(next(keys), NUM_CLASSES, EMBED, scale=0.01),
+        "ln_f": {"g": jnp.ones((EMBED,)), "b": jnp.zeros((EMBED,))},
+    }
+    for d in range(DEPTH):
+        blk = {
+            "ln1": {"g": jnp.ones((EMBED,)), "b": jnp.zeros((EMBED,))},
+            "ln2": {"g": jnp.ones((EMBED,)), "b": jnp.zeros((EMBED,))},
+            "q": _dense_init(next(keys), EMBED, EMBED, scale=EMBED**-0.5),
+            "k": _dense_init(next(keys), EMBED, EMBED, scale=EMBED**-0.5),
+            "v": _dense_init(next(keys), EMBED, EMBED, scale=EMBED**-0.5),
+            "o": _dense_init(next(keys), EMBED, EMBED, scale=EMBED**-0.5),
+            "mlp1": _dense_init(next(keys), MLP_DIM, EMBED),
+            "mlp2": _dense_init(next(keys), EMBED, MLP_DIM),
+        }
+        params[f"block{d}"] = blk
+    return params
+
+
+def apply(params, x, key, p_budget, layer_mask, method: str):
+    """x: (B, 32, 32, 3) images → (B, 10) logits."""
+
+    li = [0]  # running sketched-layer index
+
+    def slin(p, h, lm_key):
+        i = li[0]
+        li[0] += 1
+        lkey = jax.random.fold_in(lm_key, i)
+        return layers.sketched_linear(
+            method, h, p["w"], p["b"], lkey, p_budget, layer_mask[i]
+        )
+
+    tokens = layers.patchify(x, PATCH)
+    h = slin(params["embed"], tokens, key) + params["pos"][None, :, :]
+    for d in range(DEPTH):
+        blk = params[f"block{d}"]
+        hn = layers.layernorm(h, blk["ln1"]["g"], blk["ln1"]["b"])
+        q = slin(blk["q"], hn, key)
+        k = slin(blk["k"], hn, key)
+        v = slin(blk["v"], hn, key)
+        att = layers.attention(q, k, v, HEADS)
+        h = h + slin(blk["o"], att, key)
+        hn = layers.layernorm(h, blk["ln2"]["g"], blk["ln2"]["b"])
+        m = layers.gelu(slin(blk["mlp1"], hn, key))
+        h = h + slin(blk["mlp2"], m, key)
+    h = layers.layernorm(h, params["ln_f"]["g"], params["ln_f"]["b"])
+    pooled = jnp.mean(h, axis=1)
+    # classification head: exact backward (excluded from sketching, §5)
+    return pooled @ params["head"]["w"].T + params["head"]["b"]

@@ -1,0 +1,292 @@
+"""Unbiased randomized VJP sketching — core algorithms (paper §3–§4).
+
+Everything in this module is pure-jnp and jit/AOT-friendly: the sketch
+*method* is a static (trace-time) choice, while the budget ``p`` (fraction of
+kept coordinates), the per-layer ``enable`` gate and all PRNG keys are traced
+runtime inputs, so a single lowered artifact serves every budget / layer
+placement / seed.
+
+Implemented estimators (names follow the paper):
+
+uniform masks (§4.1)
+    ``per_element``   Bernoulli(p) mask on every entry of W and X (Alg. 3)
+    ``per_column``    i.i.d. Bernoulli(p) gate per output column (Alg. 5)
+    ``per_sample``    one Bernoulli(p) gate per batch row (Alg. 4)
+
+data-dependent coordinate sketches (§4.2, solved via Alg. 1 + Alg. 2)
+    ``l1``     weights w_j = ‖G[:,j]‖₁²           → p_j ∝ ‖G[:,j]‖₁
+    ``l1_sq``  weights w_j = ‖G[:,j]‖₁⁴           → p_j ∝ ‖G[:,j]‖₁²
+    ``l2``     weights w_j = ‖G[:,j]‖₂²           → p_j ∝ ‖G[:,j]‖₂
+    ``l2_sq``  weights w_j = ‖G[:,j]‖₂⁴           → p_j ∝ ‖G[:,j]‖₂²
+    ``var``    weights w_j = Var_b(G[:,j])        → p_j ∝ sqrt(Var)
+    ``var_sq`` weights w_j = Var²                 → p_j ∝ Var
+    ``ds``     Lemma 3.4 optimum: w_j = (Γ_B)_jj (JᵀJ)_jj
+    ``l1_ind`` ℓ1 scores + *independent* Bernoulli sampling (Fig 1a ablation)
+
+spectral sketches (§4.2)
+    ``gsv``    eigenbasis of GᵀG (left singular basis of the gradient
+               matrix), weights = eigenvalues          → p_i ∝ σ_i
+    ``gsv_sq`` same basis, weights = eigenvalues²      → p_i ∝ σ_i²
+    ``rcs``    Prop 3.3 optimum: eigenbasis of Γ^{1/2} JᵀJ Γ^{1/2},
+               R* = Γ^{1/2} U diag(z/p*) Uᵀ Γ^{-1/2}
+
+Conventions: row-major batches (Appendix C.1) — activations X ∈ R^{B×d_in},
+output gradients G ∈ R^{B×d_out}, weights W ∈ R^{d_out×d_in}; the Jacobian of
+the input-VJP is Wᵀ so (JᵀJ) restricted to masked coordinates is WWᵀ and its
+diagonal is the squared row norms of W.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg
+
+# All sketch method names, grouped.
+UNIFORM_METHODS = ("per_element", "per_column", "per_sample")
+COORD_METHODS = ("l1", "l1_sq", "l2", "l2_sq", "var", "var_sq", "ds", "l1_ind")
+SPECTRAL_METHODS = ("gsv", "gsv_sq", "rcs")
+ALL_METHODS = ("baseline",) + UNIFORM_METHODS + COORD_METHODS + SPECTRAL_METHODS
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — waterfilling solution of  min Σ w_i / p_i  s.t.  Σ p_i ≤ r
+# ---------------------------------------------------------------------------
+def pstar_from_weights(w: jax.Array, r: jax.Array) -> jax.Array:
+    """Optimal sampling probabilities for importance weights ``w`` (Alg. 1).
+
+    Solves the convex program (23): minimize Σ w_i/p_i subject to Σ p_i = r,
+    0 < p_i ≤ 1. The KKT conditions give the thresholding structure
+    p_i* = min(1, sqrt(w_i)/sqrt(λ)) with λ chosen so the budget is met.
+
+    Fully traced: ``r`` may be a scalar array (r = p·n at call sites). Zero
+    weights receive a floor probability so the estimator stays well-defined
+    (1/p_i never divides by zero); the floor is far below any kept mass.
+    """
+    n = w.shape[0]
+    t = jnp.sqrt(jnp.maximum(w, 0.0))
+    order = jnp.argsort(-t)
+    ts = t[order]
+    # suffix[k] = sum_{i >= k} ts[i]
+    suffix = jnp.cumsum(ts[::-1])[::-1]
+    ks = jnp.arange(n, dtype=w.dtype)
+    denom = jnp.maximum(r - ks, _EPS)
+    lam_sqrt = suffix / denom  # candidate threshold with k entries saturated
+    # k is valid when the k saturated entries are ≥ threshold and the rest ≤.
+    prev_ok = jnp.concatenate(
+        [jnp.ones((1,), bool), ts[:-1] >= lam_sqrt[1:] - 1e-9]
+    )
+    ok = prev_ok & (ts <= lam_sqrt + 1e-9) & (r - ks > 0)
+    k_idx = jnp.argmax(ok)
+    lam = jnp.maximum(lam_sqrt[k_idx], _EPS)
+    p_sorted = jnp.minimum(1.0, ts / lam)
+    p_sorted = jnp.where(jnp.arange(n) < k_idx, 1.0, p_sorted)
+    p = jnp.zeros_like(p_sorted).at[order].set(p_sorted)
+    # Budget ≥ n (or degenerate weights): keep everything.
+    p = jnp.where((r >= n) | (jnp.sum(t) <= _EPS), jnp.ones_like(p), p)
+    return jnp.clip(p, 1e-6, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — correlated exact-r sampling (systematic sampling)
+# ---------------------------------------------------------------------------
+def correlated_bernoulli(key: jax.Array, p: jax.Array) -> jax.Array:
+    """Sample Z_i ~ Bernoulli(p_i) with Σ Z_i = ⌈Σ p_i⌉ or ⌊Σ p_i⌋ a.s.
+
+    Systematic sampling: draw u ~ U(0,1) and select index i iff some point
+    u + ℓ (ℓ ∈ N) falls in the cumulative interval (C_{i-1}, C_i]. Marginals
+    are exactly p_i (p_i ≤ 1) and the sample size is fixed given Σ p_i — the
+    correlated scheme of Lemma 3.1 / Alg. 2, fully vectorized.
+    """
+    c = jnp.cumsum(p)
+    prev = c - p
+    u = jax.random.uniform(key, (), dtype=p.dtype)
+    z = jnp.floor(c - u) - jnp.floor(prev - u)
+    return jnp.clip(z, 0.0, 1.0)
+
+
+def independent_bernoulli(key: jax.Array, p: jax.Array) -> jax.Array:
+    """Independent Bernoulli(p_i) gates (Lemma 3.4 sampling model)."""
+    return (jax.random.uniform(key, p.shape, dtype=p.dtype) < p).astype(p.dtype)
+
+
+def mask_and_rescale_vector(
+    key: jax.Array, w: jax.Array, r: jax.Array, correlated: bool = True
+) -> jax.Array:
+    """End-to-end coordinate gate: weights → p* → z → z/p* (mean-one)."""
+    p = pstar_from_weights(w, r)
+    z = correlated_bernoulli(key, p) if correlated else independent_bernoulli(key, p)
+    return z / p
+
+
+# ---------------------------------------------------------------------------
+# Column scores (§4.2 proxies)
+# ---------------------------------------------------------------------------
+def column_scores(method: str, g: jax.Array, w_mat: jax.Array) -> jax.Array:
+    """Importance weights w_j per output column for coordinate methods.
+
+    ``g`` is the (B, d_out) output gradient, ``w_mat`` the (d_out, d_in)
+    weight matrix (only used by ``ds``).
+    """
+    if method in ("l1", "l1_ind"):
+        s = jnp.sum(jnp.abs(g), axis=0)
+        return s * s
+    if method == "l1_sq":
+        s = jnp.sum(jnp.abs(g), axis=0)
+        return (s * s) ** 2
+    if method == "l2":
+        return jnp.sum(g * g, axis=0)
+    if method == "l2_sq":
+        return jnp.sum(g * g, axis=0) ** 2
+    if method == "var":
+        return jnp.var(g, axis=0)
+    if method == "var_sq":
+        return jnp.var(g, axis=0) ** 2
+    if method == "ds":
+        gamma_diag = jnp.mean(g * g, axis=0)  # (Γ_B)_jj
+        jtj_diag = jnp.sum(w_mat * w_mat, axis=1)  # (WWᵀ)_jj
+        return gamma_diag * jtj_diag
+    raise ValueError(f"unknown coordinate method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sketch application: produce Ĝ (the masked / sketched output gradient)
+# ---------------------------------------------------------------------------
+def _blend(minv: jax.Array, enable: jax.Array) -> jax.Array:
+    """Per-layer gating: enable=1 → sketched, enable=0 → exact (all-ones)."""
+    return enable * minv + (1.0 - enable) * jnp.ones_like(minv)
+
+
+def sketch_ghat(
+    method: str,
+    g: jax.Array,
+    w_mat: jax.Array,
+    key: jax.Array,
+    p_budget: jax.Array,
+    enable: jax.Array,
+):
+    """Return (ghat, colinv, rowinv) for the sketched backward pass.
+
+    For coordinate/uniform methods the sketch factors as element-wise scaling
+    ``ghat = g * rowinv[:, None] * colinv[None, :]`` and we return the two
+    mean-one vectors so the Pallas kernel can fuse the scaling into its tile
+    loads. For spectral methods (gsv/rcs) the sketch is a dense basis change
+    and ``ghat`` is returned with colinv/rowinv = ones.
+    """
+    b, dout = g.shape
+    dtype = g.dtype
+    ones_col = jnp.ones((dout,), dtype)
+    ones_row = jnp.ones((b,), dtype)
+
+    if method == "baseline":
+        return g, ones_col, ones_row
+
+    if method == "per_column":
+        z = independent_bernoulli(key, jnp.full((dout,), p_budget, dtype))
+        colinv = _blend(z / p_budget, enable)
+        return g, colinv, ones_row
+
+    if method == "per_sample":
+        z = independent_bernoulli(key, jnp.full((b,), p_budget, dtype))
+        rowinv = _blend(z / p_budget, enable)
+        return g, ones_col, rowinv
+
+    if method in COORD_METHODS:
+        scores = column_scores("l1" if method == "l1_ind" else method, g, w_mat)
+        r = p_budget * dout
+        p = pstar_from_weights(scores, r)
+        z = (
+            independent_bernoulli(key, p)
+            if method == "l1_ind"
+            else correlated_bernoulli(key, p)
+        )
+        colinv = _blend(z / p, enable)
+        return g, colinv, ones_row
+
+    if method in ("gsv", "gsv_sq"):
+        ghat = _gsv_sketch(g, key, p_budget, squared=method == "gsv_sq")
+        ghat = enable * ghat + (1.0 - enable) * g
+        return ghat, ones_col, ones_row
+
+    if method == "rcs":
+        ghat = _rcs_sketch(g, w_mat, key, p_budget)
+        ghat = enable * ghat + (1.0 - enable) * g
+        return ghat, ones_col, ones_row
+
+    raise ValueError(f"unknown sketch method {method!r}")
+
+
+def _gsv_sketch(g, key, p_budget, squared=False):
+    """G-SV sketch: gate in the left singular basis of the gradient matrix.
+
+    Eigendecompose GᵀG (row convention: (d_out, d_out) Gram of columns) with
+    the pure-jnp parallel Jacobi solver, allocate the budget over eigen-
+    directions by eigenvalue (squared singular values), and rescale kept
+    directions by 1/p — an unbiased R = U diag(z/p) Uᵀ with E[R] = I.
+    """
+    dout = g.shape[1]
+    gram = g.T @ g / g.shape[0]
+    evals, u = linalg.eigh_jacobi(gram)
+    w = jnp.maximum(evals, 0.0)
+    if squared:
+        w = w * w
+    r = p_budget * dout
+    p = pstar_from_weights(w, r)
+    z = correlated_bernoulli(key, p)
+    diag = z / p
+    # ghat rows: R g = U diag Uᵀ g  → row convention: ghat = g (U diag Uᵀ)ᵀ
+    return (g @ u) * diag[None, :] @ u.T
+
+
+def _rcs_sketch(g, w_mat, key, p_budget, ridge=1e-6):
+    """Rank-Constraint Sketch (Prop 3.3): the minimal-distortion unbiased R.
+
+    R* = Γ^{1/2} U diag(z_i/p_i*) Uᵀ Γ^{-1/2} with U, σ² the eigensystem of
+    Γ^{1/2} (WWᵀ) Γ^{1/2} and p* waterfilled over σ². Γ^{±1/2} come from the
+    same Jacobi eigensolver (pure matmuls — no LAPACK custom-calls, see
+    DESIGN.md §Hardware-Adaptation). Γ is ridge-regularized: the batch Gram
+    is rank ≤ B and Γ^{-1/2} must exist.
+    """
+    dout = g.shape[1]
+    gamma = g.T @ g / g.shape[0] + ridge * jnp.eye(dout, dtype=g.dtype)
+    gevals, q = linalg.eigh_jacobi(gamma)
+    gevals = jnp.maximum(gevals, ridge)
+    ghalf = (q * jnp.sqrt(gevals)[None, :]) @ q.T
+    ginvhalf = (q * (1.0 / jnp.sqrt(gevals))[None, :]) @ q.T
+    jtj = w_mat @ w_mat.T  # (d_out, d_out) = WWᵀ
+    k = ghalf @ jtj @ ghalf
+    sig2, u = linalg.eigh_jacobi(k)
+    r = p_budget * dout
+    p = pstar_from_weights(jnp.maximum(sig2, 0.0), r)
+    z = correlated_bernoulli(key, p)
+    diag = z / p
+    # R = Γ^{1/2} U diag Uᵀ Γ^{-1/2}; rows transform by Rᵀ.
+    r_t = ginvhalf @ (u * diag[None, :]) @ u.T @ ghalf
+    return g @ r_t
+
+
+# ---------------------------------------------------------------------------
+# Optimal unbiased low-rank sketch of a fixed matrix (Lemma 3.1) — used by
+# the lemma31 validation experiment and pytest, not on the training path.
+# ---------------------------------------------------------------------------
+def optimal_unbiased_sketch(key: jax.Array, m: jax.Array, r: jax.Array):
+    """Sample the Lemma 3.1 minimal-distortion unbiased rank-r sketch of M.
+
+    Returns (S, expected_frobenius_sq_error). Uses the Jacobi eigensolver on
+    MᵀM / MMᵀ to stay LAPACK-free.
+    """
+    mm = m.T @ m if m.shape[0] >= m.shape[1] else m @ m.T
+    evals, v = linalg.eigh_jacobi(mm)
+    sig = jnp.sqrt(jnp.maximum(evals, 0.0))
+    p = pstar_from_weights(jnp.maximum(evals, 0.0), r)
+    z = correlated_bernoulli(key, p)
+    diag = z / p
+    if m.shape[0] >= m.shape[1]:
+        s = m @ (v * diag[None, :]) @ v.T  # scale right singular directions
+    else:
+        s = v @ (v.T * diag[:, None]) @ m
+    err = jnp.sum(sig**2 / p) - jnp.sum(sig**2)
+    return s, err

@@ -1,0 +1,292 @@
+"""L2 training graph: loss, optimizers, and the AOT step builders.
+
+Each builder returns a *flat-signature* function suitable for HLO export —
+every pytree (params, optimizer state) is flattened to a fixed-order list of
+arrays whose names/shapes are recorded in the artifact manifest, so the rust
+coordinator can drive training generically.
+
+Step signature (train):
+    (params…, opt_state…, x, y, key_bits u32[2], p_budget f32, layer_mask
+     f32[L], lr f32) → (params'…, opt_state'…, loss f32)
+
+The sketch method is baked per artifact; budget, per-layer placement,
+learning rate and seed are runtime inputs (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models import REGISTRY
+
+# optimizer recipes per model, following §5 / Appendix B.2 (schedules are
+# computed runtime-side in rust and fed through the `lr` input).
+OPTIMIZERS = {
+    "mlp": {"kind": "sgd", "clip": 1.0, "wd": 0.0},
+    "bagnet": {"kind": "momentum", "mu": 0.9, "clip": 0.0, "wd": 1e-3},
+    "vit": {"kind": "adamw", "b1": 0.9, "b2": 0.999, "clip": 0.0, "wd": 0.05},
+}
+
+
+def cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _tree_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for path, _leaf in flat:
+        names.append("".join(str(p) for p in path).replace("['", ".").replace("']", "").lstrip("."))
+    return names
+
+
+def _clip_by_global_norm(grads, max_norm):
+    if max_norm <= 0:
+        return grads
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers over pytrees (state is itself a pytree, possibly empty)
+# ---------------------------------------------------------------------------
+def opt_init(cfg, params):
+    kind = cfg["kind"]
+    if kind == "sgd":
+        return {}
+    if kind == "momentum":
+        return {"m": jax.tree_util.tree_map(jnp.zeros_like, params)}
+    if kind == "adamw":
+        return {
+            "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def opt_update(cfg, params, grads, state, lr):
+    kind = cfg["kind"]
+    wd = cfg.get("wd", 0.0)
+    if kind == "sgd":
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new, state
+    if kind == "momentum":
+        mu = cfg["mu"]
+        if wd:
+            grads = jax.tree_util.tree_map(lambda g, p: g + wd * p, grads, params)
+        m = jax.tree_util.tree_map(lambda m_, g: mu * m_ + g, state["m"], grads)
+        new = jax.tree_util.tree_map(lambda p, m_: p - lr * m_, params, m)
+        return new, {"m": m}
+    if kind == "adamw":
+        b1, b2, eps = cfg["b1"], cfg["b2"], 1e-8
+        t = state["t"] + 1.0
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+        )
+        mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1**t), m)
+        vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2**t), v)
+        new = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+            params,
+            mhat,
+            vhat,
+        )
+        return new, {"m": m, "v": v, "t": t}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+class StepSpec:
+    """Flat-signature function + metadata for AOT export."""
+
+    def __init__(self, fn, input_names, output_names, example_inputs, meta):
+        self.fn = fn
+        self.input_names = input_names
+        self.output_names = output_names
+        self.example_inputs = example_inputs
+        self.meta = meta
+
+
+def _example_batch(model_name: str, batch: int):
+    mod = REGISTRY[model_name]
+    x = jnp.zeros((batch,) + mod.INPUT_SHAPE, jnp.float32)
+    y = jnp.zeros((batch,), jnp.int32)
+    return x, y
+
+
+def _loss_fn(model_name: str, method: str):
+    mod = REGISTRY[model_name]
+
+    def loss(params, x, y, key, p_budget, layer_mask):
+        logits = mod.apply(params, x, key, p_budget, layer_mask, method)
+        return cross_entropy(logits, y)
+
+    return loss
+
+
+def build_train_step(model_name: str, method: str, batch: int) -> StepSpec:
+    """One SGD/momentum/AdamW step with the chosen sketched backward."""
+    mod = REGISTRY[model_name]
+    cfg = OPTIMIZERS[model_name]
+    params0 = mod.init(jax.random.key(0))
+    opt0 = opt_init(cfg, params0)
+    p_leaves, p_def = jax.tree_util.tree_flatten(params0)
+    o_leaves, o_def = jax.tree_util.tree_flatten(opt0)
+    loss_fn = _loss_fn(model_name, method)
+    n_p = len(p_leaves)
+    n_o = len(o_leaves)
+
+    def step(*args):
+        params = jax.tree_util.tree_unflatten(p_def, args[:n_p])
+        opt = jax.tree_util.tree_unflatten(o_def, args[n_p : n_p + n_o])
+        x, y, key_bits, p_budget, layer_mask, lr = args[n_p + n_o :]
+        key = jax.random.wrap_key_data(key_bits)
+        lval, grads = jax.value_and_grad(loss_fn)(
+            params, x, y, key, p_budget, layer_mask
+        )
+        grads = _clip_by_global_norm(grads, cfg.get("clip", 0.0))
+        params, opt = opt_update(cfg, params, grads, opt, lr)
+        return tuple(jax.tree_util.tree_leaves(params)) + tuple(
+            jax.tree_util.tree_leaves(opt)
+        ) + (lval,)
+
+    x, y = _example_batch(model_name, batch)
+    lm = jnp.ones((mod.NUM_SKETCHED,), jnp.float32)
+    example = (
+        tuple(p_leaves)
+        + tuple(o_leaves)
+        + (
+            x,
+            y,
+            jnp.zeros((2,), jnp.uint32),
+            jnp.float32(1.0),
+            lm,
+            jnp.float32(0.1),
+        )
+    )
+    pnames = ["param." + n for n in _tree_names(params0)]
+    onames = ["opt." + n for n in _tree_names(opt0)]
+    input_names = pnames + onames + ["x", "y", "key", "p_budget", "layer_mask", "lr"]
+    output_names = pnames + onames + ["loss"]
+    meta = {
+        "model": model_name,
+        "method": method,
+        "batch": batch,
+        "num_params": n_p,
+        "num_opt": n_o,
+        "num_sketched": mod.NUM_SKETCHED,
+        "optimizer": cfg["kind"],
+    }
+    return StepSpec(step, input_names, output_names, example, meta)
+
+
+def build_eval_step(model_name: str, batch: int) -> StepSpec:
+    """(params…, x, y) → (loss_sum, correct_count) on one batch."""
+    mod = REGISTRY[model_name]
+    params0 = mod.init(jax.random.key(0))
+    p_leaves, p_def = jax.tree_util.tree_flatten(params0)
+    n_p = len(p_leaves)
+    lm = jnp.zeros((mod.NUM_SKETCHED,), jnp.float32)
+
+    def step(*args):
+        params = jax.tree_util.tree_unflatten(p_def, args[:n_p])
+        x, y = args[n_p:]
+        key = jax.random.key(0)
+        logits = mod.apply(params, x, key, jnp.float32(1.0), lm, "baseline")
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss_sum = -jnp.sum(jnp.take_along_axis(logp, y[:, None], axis=1))
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss_sum, correct
+
+    x, y = _example_batch(model_name, batch)
+    example = tuple(p_leaves) + (x, y)
+    pnames = ["param." + n for n in _tree_names(params0)]
+    meta = {"model": model_name, "batch": batch, "num_params": n_p}
+    return StepSpec(step, pnames + ["x", "y"], ["loss_sum", "correct"], example, meta)
+
+
+def build_init(model_name: str) -> StepSpec:
+    """(key) → (params…, opt_state…) — keeps init logic in python."""
+    mod = REGISTRY[model_name]
+    cfg = OPTIMIZERS[model_name]
+
+    def fn(key_bits):
+        key = jax.random.wrap_key_data(key_bits)
+        params = mod.init(key)
+        opt = opt_init(cfg, params)
+        return tuple(jax.tree_util.tree_leaves(params)) + tuple(
+            jax.tree_util.tree_leaves(opt)
+        )
+
+    params0 = mod.init(jax.random.key(0))
+    opt0 = opt_init(cfg, params0)
+    pnames = ["param." + n for n in _tree_names(params0)]
+    onames = ["opt." + n for n in _tree_names(opt0)]
+    meta = {
+        "model": model_name,
+        "num_params": len(pnames),
+        "num_opt": len(onames),
+    }
+    return StepSpec(
+        fn, ["key"], pnames + onames, (jnp.zeros((2,), jnp.uint32),), meta
+    )
+
+
+def build_grads(model_name: str, method: str, batch: int) -> StepSpec:
+    """(params…, x, y, key, p_budget, layer_mask) → flat gradient vector.
+
+    Used by the variance experiments (Prop 2.2 validation): rust executes this
+    repeatedly with fresh keys on a fixed batch and measures E‖ĝ − g‖².
+    """
+    mod = REGISTRY[model_name]
+    params0 = mod.init(jax.random.key(0))
+    p_leaves, p_def = jax.tree_util.tree_flatten(params0)
+    n_p = len(p_leaves)
+    loss_fn = _loss_fn(model_name, method)
+
+    def step(*args):
+        params = jax.tree_util.tree_unflatten(p_def, args[:n_p])
+        x, y, key_bits, p_budget, layer_mask = args[n_p:]
+        key = jax.random.wrap_key_data(key_bits)
+        grads = jax.grad(loss_fn)(params, x, y, key, p_budget, layer_mask)
+        flat = jnp.concatenate(
+            [g.reshape(-1) for g in jax.tree_util.tree_leaves(grads)]
+        )
+        return (flat,)
+
+    x, y = _example_batch(model_name, batch)
+    lm = jnp.ones((mod.NUM_SKETCHED,), jnp.float32)
+    example = tuple(p_leaves) + (
+        x,
+        y,
+        jnp.zeros((2,), jnp.uint32),
+        jnp.float32(1.0),
+        lm,
+    )
+    pnames = ["param." + n for n in _tree_names(params0)]
+    dim = sum(int(l.size) for l in p_leaves)
+    meta = {
+        "model": model_name,
+        "method": method,
+        "batch": batch,
+        "grad_dim": dim,
+        "num_params": n_p,
+        "num_sketched": mod.NUM_SKETCHED,
+    }
+    return StepSpec(
+        step,
+        pnames + ["x", "y", "key", "p_budget", "layer_mask"],
+        ["grads"],
+        example,
+        meta,
+    )

@@ -1,0 +1,8 @@
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,72 @@
+"""Jacobi eigensolver substrate vs numpy (python/compile/linalg.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import linalg
+
+
+def _sym(n, seed, scale=1.0):
+    a = np.random.default_rng(seed).normal(size=(n, n)) * scale
+    return jnp.asarray((a + a.T) / 2, jnp.float32)
+
+
+@pytest.mark.parametrize("n", [2, 3, 8, 10, 17, 64])
+def test_eigh_matches_numpy(n):
+    a = _sym(n, n)
+    evals, v = linalg.eigh_jacobi(a)
+    ref = np.linalg.eigvalsh(np.asarray(a))[::-1]
+    assert_allclose(np.asarray(evals), ref, rtol=2e-4, atol=2e-4)
+    # eigenvector property: A v_i = λ_i v_i
+    av = np.asarray(a) @ np.asarray(v)
+    lv = np.asarray(v) * np.asarray(evals)[None, :]
+    assert_allclose(av, lv, rtol=1e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("n", [4, 9, 32])
+def test_eigenvectors_orthonormal(n):
+    a = _sym(n, 100 + n)
+    _, v = linalg.eigh_jacobi(a)
+    vtv = np.asarray(v).T @ np.asarray(v)
+    assert_allclose(vtv, np.eye(n), atol=2e-4)
+
+
+def test_reconstruction():
+    a = _sym(12, 7)
+    evals, v = linalg.eigh_jacobi(a)
+    recon = (np.asarray(v) * np.asarray(evals)[None, :]) @ np.asarray(v).T
+    assert_allclose(recon, np.asarray(a), atol=2e-4)
+
+
+def test_psd_gram_eigs_nonnegative():
+    g = jax.random.normal(jax.random.key(0), (20, 8))
+    gram = g.T @ g
+    evals, _ = linalg.eigh_jacobi(gram)
+    assert np.asarray(evals).min() > -1e-3
+
+
+def test_eigh_inside_jit():
+    """Must trace/lower (it lives inside the RCS train-step artifact)."""
+    f = jax.jit(lambda a: linalg.eigh_jacobi(a)[0])
+    a = _sym(6, 3)
+    evals = f(a)
+    ref = np.linalg.eigvalsh(np.asarray(a))[::-1]
+    assert_allclose(np.asarray(evals), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_singular_values_gram():
+    m = jax.random.normal(jax.random.key(1), (15, 6))
+    sv = linalg.singular_values_gram(m)
+    ref = np.linalg.svd(np.asarray(m), compute_uv=False)
+    assert_allclose(np.asarray(sv), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_degenerate_eigenvalues():
+    # repeated eigenvalues (identity block) must not break convergence
+    a = jnp.diag(jnp.asarray([3.0, 3.0, 3.0, 1.0], jnp.float32))
+    evals, v = linalg.eigh_jacobi(a)
+    assert_allclose(np.asarray(evals), [3, 3, 3, 1], atol=1e-5)
+    assert_allclose(np.asarray(v).T @ np.asarray(v), np.eye(4), atol=1e-5)

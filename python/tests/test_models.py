@@ -1,0 +1,166 @@
+"""Model zoo: shapes, baseline-equals-autodiff, disable-equals-exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import layers, train
+from compile.models import REGISTRY, mlp, vit, bagnet
+
+
+def _inputs(model_name, b=4):
+    mod = REGISTRY[model_name]
+    k = jax.random.key(0)
+    x = jax.random.normal(k, (b,) + mod.INPUT_SHAPE, jnp.float32)
+    return mod, x
+
+
+@pytest.mark.parametrize("model_name", ["mlp", "vit", "bagnet"])
+def test_forward_shapes(model_name):
+    mod, x = _inputs(model_name)
+    params = mod.init(jax.random.key(1))
+    lm = jnp.ones((mod.NUM_SKETCHED,), jnp.float32)
+    logits = mod.apply(params, x, jax.random.key(2), jnp.float32(0.5), lm, "l1")
+    assert logits.shape == (4, mod.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("model_name", ["mlp", "vit", "bagnet"])
+def test_sketched_layer_count_matches(model_name):
+    """apply() consumes exactly NUM_SKETCHED mask entries: appending extra
+    entries must not change the computation (they are never indexed), while
+    flipping the *last* real entry must change it."""
+    mod, x = _inputs(model_name, b=2)
+    params = mod.init(jax.random.key(1))
+    k = jax.random.key(2)
+    p = jnp.float32(0.3)
+    lm = jnp.ones((mod.NUM_SKETCHED,), jnp.float32)
+    lm_pad = jnp.concatenate([lm, jnp.zeros((3,), jnp.float32)])
+
+    def grads(mask):
+        def loss(pp):
+            logits = mod.apply(pp, x, k, p, mask, "per_column")
+            return jnp.sum(logits**2)
+        return jax.grad(loss)(pp := params)
+
+    g_exact = jax.tree_util.tree_leaves(grads(lm))
+    g_pad = jax.tree_util.tree_leaves(grads(lm_pad))
+    for a, b in zip(g_exact, g_pad):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    # flipping the last real entry changes the backward
+    lm_flip = lm.at[mod.NUM_SKETCHED - 1].set(0.0)
+    g_flip = jax.tree_util.tree_leaves(grads(lm_flip))
+    assert any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(g_exact, g_flip)
+    )
+
+
+def test_mlp_baseline_grads_equal_autodiff():
+    """method='baseline' must be *exactly* reverse-mode AD of the forward."""
+    params = mlp.init(jax.random.key(1))
+    x = jax.random.normal(jax.random.key(2), (8, 784))
+    y = jax.random.randint(jax.random.key(3), (8,), 0, 10)
+    lm = jnp.ones((mlp.NUM_SKETCHED,), jnp.float32)
+
+    def loss_sketched(p):
+        logits = mlp.apply(p, x, jax.random.key(4), jnp.float32(1.0), lm, "baseline")
+        return train.cross_entropy(logits, y)
+
+    def plain_forward(p):
+        h = x
+        for i in range(3):
+            lp = p[f"fc{i}"]
+            h = h @ lp["w"].T + lp["b"]
+            if i < 2:
+                h = jnp.maximum(h, 0.0)
+        return train.cross_entropy(h, y)
+
+    g1 = jax.grad(loss_sketched)(params)
+    g2 = jax.grad(plain_forward)(params)
+    for k in g1:
+        assert_allclose(
+            np.asarray(g1[k]["w"]), np.asarray(g2[k]["w"]), rtol=1e-4, atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("method", ["per_column", "per_sample", "l1", "ds"])
+def test_disabled_layers_give_exact_grads(method):
+    """layer_mask = 0 ⇒ any method reduces to exact backward (Fig 4 gate)."""
+    params = mlp.init(jax.random.key(1))
+    x = jax.random.normal(jax.random.key(2), (8, 784))
+    y = jax.random.randint(jax.random.key(3), (8,), 0, 10)
+    lm0 = jnp.zeros((mlp.NUM_SKETCHED,), jnp.float32)
+    lm1 = jnp.ones((mlp.NUM_SKETCHED,), jnp.float32)
+
+    def loss(p, lm, m):
+        logits = mlp.apply(p, x, jax.random.key(4), jnp.float32(0.3), lm, m)
+        return train.cross_entropy(logits, y)
+
+    g_dis = jax.grad(loss)(params, lm0, method)
+    g_ref = jax.grad(loss)(params, lm1, "baseline")
+    for k in g_dis:
+        assert_allclose(
+            np.asarray(g_dis[k]["w"]), np.asarray(g_ref[k]["w"]),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_vit_token_count():
+    assert vit.TOKENS == 16
+    x = jax.random.normal(jax.random.key(0), (2, 32, 32, 3))
+    toks = layers.patchify(x, vit.PATCH)
+    assert toks.shape == (2, 16, 8 * 8 * 3)
+
+
+def test_patchify_preserves_content():
+    x = jnp.arange(2 * 4 * 4 * 1, dtype=jnp.float32).reshape(2, 4, 4, 1)
+    t = layers.patchify(x, 2)
+    # first patch of first image = pixels (0,0),(0,1),(1,0),(1,1)
+    assert_allclose(np.asarray(t[0, 0]), [0, 1, 4, 5])
+
+
+def test_avgpool():
+    x = jnp.asarray([[1.0, 2.0], [3.0, 4.0]]).reshape(1, 2, 2, 1)
+    p = layers.avgpool2x2(x)
+    assert p.shape == (1, 1, 1, 1)
+    assert float(p[0, 0, 0, 0]) == pytest.approx(2.5)
+
+
+def test_attention_shapes_and_softmax():
+    q = jax.random.normal(jax.random.key(0), (2, 5, 8))
+    out = layers.attention(q, q, q, n_heads=2)
+    assert out.shape == (2, 5, 8)
+    # attention over identical tokens = value itself
+    ones = jnp.ones((1, 3, 4))
+    assert_allclose(
+        np.asarray(layers.attention(ones, ones, ones, 2)), np.ones((1, 3, 4))
+    )
+
+
+def test_layernorm_stats():
+    x = jax.random.normal(jax.random.key(0), (6, 11)) * 4 + 3
+    y = layers.layernorm(x, jnp.ones((11,)), jnp.zeros((11,)))
+    assert_allclose(np.asarray(y.mean(-1)), np.zeros(6), atol=1e-5)
+    assert_allclose(np.asarray(y.var(-1)), np.ones(6), atol=1e-3)
+
+
+def test_bagnet_layer_indexing():
+    """NUM_SKETCHED must equal the number of sketched calls in apply()."""
+    params = bagnet.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+    lm = jnp.ones((bagnet.NUM_SKETCHED,), jnp.float32)
+    logits = bagnet.apply(params, x, jax.random.key(2), jnp.float32(0.5), lm, "l1")
+    assert logits.shape == (2, 10)
+
+
+def test_key_bits_roundtrip():
+    k = jax.random.key(123)
+    bits = layers.key_to_bits(k)
+    assert bits.dtype == jnp.float32
+    k2 = layers.bits_to_key(bits)
+    a = jax.random.uniform(k, (3,))
+    b = jax.random.uniform(k2, (3,))
+    assert_allclose(np.asarray(a), np.asarray(b))

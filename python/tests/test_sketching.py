@@ -1,0 +1,247 @@
+"""Algorithm 1 / Algorithm 2 / estimator properties (paper §3–§4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import sketching
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — waterfilling
+# ---------------------------------------------------------------------------
+@given(
+    n=st.integers(4, 80),
+    r_frac=st.floats(0.05, 0.95),
+    seed=st.integers(0, 2**31),
+)
+def test_pstar_budget_and_range(n, r_frac, seed):
+    w = jnp.abs(jax.random.normal(jax.random.key(seed), (n,))) + 1e-3
+    r = jnp.float32(max(1.0, r_frac * n))
+    p = sketching.pstar_from_weights(w, r)
+    p = np.asarray(p)
+    assert np.all(p > 0) and np.all(p <= 1.0 + 1e-6)
+    assert abs(p.sum() - float(r)) < 1e-2 * n
+
+
+def _bisect_waterfill(w, r):
+    """Independent oracle: solve min Σ w/p, Σp=r by bisection on λ."""
+    t = np.sqrt(np.maximum(np.asarray(w, np.float64), 0))
+    lo, hi = 1e-12, (t.sum() / r) * 10 + 1.0
+
+    def total(lam_sqrt):
+        return np.minimum(1.0, t / lam_sqrt).sum()
+
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if total(mid) > r:
+            lo = mid
+        else:
+            hi = mid
+    return np.minimum(1.0, t / hi)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("r", [2.0, 7.5, 20.0])
+def test_pstar_matches_bisection_oracle(seed, r):
+    w = jnp.abs(jax.random.normal(jax.random.key(seed), (32,))) + 1e-4
+    p = np.asarray(sketching.pstar_from_weights(w, jnp.float32(r)))
+    oracle = _bisect_waterfill(w, r)
+    assert_allclose(p, oracle, rtol=5e-3, atol=5e-3)
+
+
+def test_pstar_objective_beats_uniform():
+    """Waterfilled probabilities must not lose to uniform p=r/n."""
+    w = np.abs(np.random.default_rng(0).normal(size=64)) ** 3 + 1e-6
+    r = 12.0
+    p = np.asarray(sketching.pstar_from_weights(jnp.asarray(w, jnp.float32), jnp.float32(r)))
+    uni = np.full(64, r / 64)
+    assert (w / p).sum() <= (w / uni).sum() + 1e-3 * (w / uni).sum()
+
+
+def test_pstar_saturates_large_budget():
+    w = jnp.arange(1.0, 11.0)
+    p = np.asarray(sketching.pstar_from_weights(w, jnp.float32(10.0)))
+    assert_allclose(p, np.ones(10), atol=1e-6)
+
+
+def test_pstar_heavy_coordinate_saturates():
+    w = jnp.asarray([100.0] + [1e-4] * 15, jnp.float32)
+    p = np.asarray(sketching.pstar_from_weights(w, jnp.float32(2.0)))
+    assert p[0] == pytest.approx(1.0, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — correlated exact-r sampling
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31), n=st.integers(4, 64), r=st.integers(1, 10))
+def test_correlated_sampling_exact_count(seed, n, r):
+    r = min(r, n - 1)
+    w = jnp.abs(jax.random.normal(jax.random.key(seed), (n,))) + 1e-3
+    p = sketching.pstar_from_weights(w, jnp.float32(r))
+    z = np.asarray(
+        sketching.correlated_bernoulli(jax.random.key(seed + 1), p)
+    )
+    assert set(np.unique(z)).issubset({0.0, 1.0})
+    # Σ z equals the (rounded) total budget a.s.
+    assert abs(z.sum() - round(float(np.asarray(p).sum()))) <= 1.0
+
+
+def test_correlated_sampling_marginals():
+    """Empirical selection frequencies match p_i."""
+    p = jnp.asarray([0.9, 0.5, 0.25, 0.25, 0.1], jnp.float32)
+    trials = 4000
+    keys = jax.random.split(jax.random.key(0), trials)
+    zs = jax.vmap(lambda k: sketching.correlated_bernoulli(k, p))(keys)
+    freq = np.asarray(zs).mean(axis=0)
+    assert_allclose(freq, np.asarray(p), atol=0.03)
+
+
+def test_independent_sampling_marginals():
+    p = jnp.asarray([0.8, 0.4, 0.2], jnp.float32)
+    keys = jax.random.split(jax.random.key(3), 4000)
+    zs = jax.vmap(lambda k: sketching.independent_bernoulli(k, p))(keys)
+    assert_allclose(np.asarray(zs).mean(axis=0), np.asarray(p), atol=0.03)
+
+
+def test_mask_and_rescale_mean_one():
+    w = jnp.abs(jax.random.normal(jax.random.key(5), (24,))) + 1e-3
+    keys = jax.random.split(jax.random.key(6), 3000)
+    ms = jax.vmap(
+        lambda k: sketching.mask_and_rescale_vector(k, w, jnp.float32(6.0))
+    )(keys)
+    mean = np.asarray(ms).mean(axis=0)
+    # per-coordinate MC tolerance: 4σ of the z/p estimator over 3000 draws
+    p = np.asarray(sketching.pstar_from_weights(w, jnp.float32(6.0)))
+    tol = 4.0 * np.sqrt((1.0 / p - 1.0) / 3000) + 1e-3
+    assert np.all(np.abs(mean - 1.0) < tol), (mean, tol)
+
+
+# ---------------------------------------------------------------------------
+# Estimator unbiasedness: E[Ĝ-induced dW] = exact dW (Assumption 2.1)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "method",
+    ["per_column", "per_sample", "l1", "l2", "var", "ds", "l1_ind", "gsv"],
+)
+def test_sketch_ghat_unbiased(method):
+    b, dout = 16, 12
+    g = jax.random.normal(jax.random.key(0), (b, dout))
+    w = jax.random.normal(jax.random.key(1), (dout, 8))
+    p_budget = jnp.float32(0.4)
+    enable = jnp.float32(1.0)
+
+    def one(k):
+        ghat, colinv, rowinv = sketching.sketch_ghat(
+            method, g, w, k, p_budget, enable
+        )
+        return ghat * colinv[None, :] * rowinv[:, None]
+
+    n_trials = 1500 if method in ("gsv", "rcs") else 3000
+    keys = jax.random.split(jax.random.key(2), n_trials)
+    mean = np.asarray(jax.lax.map(one, keys, batch_size=250).mean(axis=0))
+    scale = np.abs(np.asarray(g)).mean()
+    assert_allclose(mean, np.asarray(g), atol=0.15 * scale + 0.05)
+
+
+def test_rcs_unbiased_on_vjp_product():
+    """RCS is unbiased for what it is optimal for: the VJP product J R g.
+
+    Directions of Γ^{1/2}WWᵀΓ^{1/2} with σᵢ = 0 receive p → floor under
+    waterfilling (they cost nothing in distortion because J annihilates
+    them), so Ĝ itself is a heavy-tailed estimator whose raw Monte-Carlo
+    mean converges impractically slowly in those null directions. The
+    downstream product dX = Ĝ W kills exactly those directions — and must
+    be cleanly unbiased at MC scale."""
+    b, dout = 16, 12
+    g = jax.random.normal(jax.random.key(0), (b, dout))
+    w = jax.random.normal(jax.random.key(1), (dout, 8))
+
+    def one(k):
+        ghat, colinv, rowinv = sketching.sketch_ghat(
+            "rcs", g, w, k, jnp.float32(0.4), jnp.float32(1.0)
+        )
+        return (ghat * colinv[None, :] * rowinv[:, None]) @ w
+
+    n = 4000
+    keys = jax.random.split(jax.random.key(2), n)
+    samples = jax.lax.map(one, keys, batch_size=250)
+    mean = np.asarray(samples.mean(axis=0))
+    std = np.asarray(samples.std(axis=0))
+    exact = np.asarray(g @ w)
+    dev = np.abs(mean - exact)
+    bound = 5.0 * std / np.sqrt(n) + 5e-3
+    assert np.all(dev < bound), (dev.max(), float(bound.min()))
+
+
+def test_sketch_ghat_disable_is_exact():
+    g = jax.random.normal(jax.random.key(0), (8, 6))
+    w = jax.random.normal(jax.random.key(1), (6, 4))
+    for method in ["per_column", "l1", "ds", "rcs", "gsv"]:
+        ghat, colinv, rowinv = sketching.sketch_ghat(
+            method, g, w, jax.random.key(9), jnp.float32(0.3), jnp.float32(0.0)
+        )
+        full = np.asarray(ghat * colinv[None, :] * rowinv[:, None])
+        assert_allclose(full, np.asarray(g), rtol=1e-5, atol=1e-5)
+
+
+def test_baseline_identity():
+    g = jax.random.normal(jax.random.key(0), (8, 6))
+    w = jax.random.normal(jax.random.key(1), (6, 4))
+    ghat, colinv, rowinv = sketching.sketch_ghat(
+        "baseline", g, w, jax.random.key(2), jnp.float32(0.5), jnp.float32(1.0)
+    )
+    assert_allclose(np.asarray(ghat), np.asarray(g))
+    assert np.all(np.asarray(colinv) == 1) and np.all(np.asarray(rowinv) == 1)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3.1 — optimal unbiased low-rank sketch
+# ---------------------------------------------------------------------------
+def test_lemma31_unbiased_and_achieves_bound():
+    m = jax.random.normal(jax.random.key(0), (12, 10))
+    r = jnp.float32(4.0)
+    keys = jax.random.split(jax.random.key(1), 3000)
+    ss = jax.lax.map(
+        lambda k: sketching.optimal_unbiased_sketch(k, m, r)[0], keys,
+        batch_size=250,
+    )
+    mean = np.asarray(ss.mean(axis=0))
+    assert_allclose(mean, np.asarray(m), atol=0.12)
+    # Monte-Carlo distortion ≈ analytic Σσ²/p − Σσ²
+    _, err = sketching.optimal_unbiased_sketch(jax.random.key(2), m, r)
+    emp = np.mean(
+        [float(jnp.sum((s - m) ** 2)) for s in np.asarray(ss)[:500]]
+    )
+    assert emp == pytest.approx(float(err), rel=0.2)
+
+    # The lower bound of Lemma 3.1: Σ_{i≤i0}σᵢ² + (Σ_{i>i0}σᵢ)²/(r−i0).
+    sv = np.linalg.svd(np.asarray(m), compute_uv=False)
+    best = np.inf
+    for i0 in range(int(r)):
+        best = min(
+            best, (sv[:i0] ** 2).sum() + sv[i0:].sum() ** 2 / (float(r) - i0)
+        )
+    bound = best - (sv**2).sum()
+    assert float(err) == pytest.approx(bound, rel=1e-3)
+
+
+def test_lemma31_beats_uniform_column_sampling():
+    """Optimal sketch distortion ≤ uniform coordinate mask distortion."""
+    rng = np.random.default_rng(0)
+    # strongly anisotropic matrix (low-rank + noise) — where it matters
+    m_np = rng.normal(size=(16, 1)) @ rng.normal(size=(1, 16)) * 3
+    m_np += rng.normal(size=(16, 16)) * 0.1
+    m = jnp.asarray(m_np, jnp.float32)
+    r = 4.0
+    _, err_opt = sketching.optimal_unbiased_sketch(jax.random.key(0), m, jnp.float32(r))
+    # uniform mask-and-rescale distortion: Σ_j ‖m_j‖² (1/p − 1), p = r/n
+    p = r / 16.0
+    err_uniform = (np.asarray(m) ** 2).sum() * (1 / p - 1)
+    assert float(err_opt) < err_uniform

@@ -1,0 +1,136 @@
+"""Train-step builders: optimizers, clipping, loss descent, eval counting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import train
+
+
+def _run_steps(model, method, steps=15, budget=0.3, lr=0.1, batch=16):
+    spec = train.build_train_step(model, method, batch)
+    f = jax.jit(spec.fn)
+    n = spec.meta["num_params"] + spec.meta["num_opt"]
+    args = list(spec.example_inputs)
+    key = jax.random.key(7)
+    mod_shape = args[n].shape
+    args[n] = jax.random.normal(key, mod_shape) * 0.5
+    args[n + 1] = jax.random.randint(key, (batch,), 0, 10)
+    args[n + 3] = jnp.float32(budget)
+    args[n + 5] = jnp.float32(lr)
+    losses = []
+    for t in range(steps):
+        args[n + 2] = jnp.asarray(np.array([t, 3], np.uint32))
+        out = f(*args)
+        args[:n] = out[:n]
+        losses.append(float(out[-1]))
+    return losses
+
+
+@pytest.mark.parametrize("method", ["baseline", "l1", "per_column", "ds"])
+def test_mlp_memorizes_fixed_batch(method):
+    losses = _run_steps("mlp", method, steps=25)
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_vit_adamw_steps_are_finite():
+    losses = _run_steps("vit", "l1", steps=6, lr=3e-4, batch=8)
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0] + 0.1
+
+
+def test_bagnet_momentum_steps_are_finite():
+    losses = _run_steps("bagnet", "ds", steps=6, lr=0.02, batch=8)
+    assert all(np.isfinite(losses)), losses
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0]), "b": jnp.asarray([0.0])}
+    clipped = train._clip_by_global_norm(g, 1.0)
+    norm = float(
+        jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree_util.tree_leaves(clipped)))
+    )
+    assert norm == pytest.approx(1.0, abs=1e-5)
+    # below the threshold: untouched
+    small = train._clip_by_global_norm({"a": jnp.asarray([0.1])}, 1.0)
+    assert float(small["a"][0]) == pytest.approx(0.1)
+    # disabled (clip<=0): untouched
+    same = train._clip_by_global_norm(g, 0.0)
+    assert float(same["a"][1]) == 4.0
+
+
+def test_adamw_state_advances():
+    cfg = {"kind": "adamw", "b1": 0.9, "b2": 0.999, "wd": 0.0}
+    params = {"w": jnp.ones((3,))}
+    state = train.opt_init(cfg, params)
+    g = {"w": jnp.asarray([1.0, -1.0, 0.5])}
+    p1, s1 = train.opt_update(cfg, params, g, state, 0.1)
+    assert float(s1["t"]) == 1.0
+    # bias-corrected first step ≈ sign-SGD
+    assert_allclose(np.asarray(p1["w"]), [0.9, 1.1, 0.9], atol=1e-3)
+    p2, s2 = train.opt_update(cfg, p1, g, s1, 0.1)
+    assert float(s2["t"]) == 2.0
+    assert np.all(np.asarray(p2["w"]) != np.asarray(p1["w"]))
+
+
+def test_momentum_accumulates():
+    cfg = {"kind": "momentum", "mu": 0.9, "wd": 0.0}
+    params = {"w": jnp.zeros((1,))}
+    state = train.opt_init(cfg, params)
+    g = {"w": jnp.asarray([1.0])}
+    p, s = train.opt_update(cfg, params, g, state, 1.0)
+    assert float(p["w"][0]) == pytest.approx(-1.0)
+    p, s = train.opt_update(cfg, p, g, s, 1.0)
+    assert float(p["w"][0]) == pytest.approx(-1.0 - 1.9)
+
+
+def test_weight_decay_applied():
+    cfg = {"kind": "momentum", "mu": 0.0, "wd": 0.1}
+    params = {"w": jnp.asarray([10.0])}
+    state = train.opt_init(cfg, params)
+    g = {"w": jnp.asarray([0.0])}
+    p, _ = train.opt_update(cfg, params, g, state, 1.0)
+    assert float(p["w"][0]) == pytest.approx(9.0)
+
+
+def test_eval_step_counts():
+    spec = train.build_eval_step("mlp", 8)
+    f = jax.jit(spec.fn)
+    n = spec.meta["num_params"]
+    args = list(spec.example_inputs)
+    loss_sum, correct = f(*args)
+    # zero params, zero inputs → uniform logits → loss = 8·ln10, argmax=0
+    assert float(loss_sum) == pytest.approx(8 * np.log(10), rel=1e-3)
+    y = np.zeros(8, np.int32)
+    args[n + 1] = jnp.asarray(y)
+    _, correct = f(*args)
+    assert float(correct) == 8.0
+
+
+def test_cross_entropy_known_value():
+    logits = jnp.asarray([[0.0, jnp.log(3.0)]])
+    y = jnp.asarray([1])
+    # softmax = [1/4, 3/4] → CE = -ln(3/4)
+    assert float(train.cross_entropy(logits, y)) == pytest.approx(
+        -np.log(0.75), rel=1e-5
+    )
+
+
+def test_grads_builder_dim():
+    spec = train.build_grads("mlp", "l1", 8)
+    expected = 784 * 64 + 64 + 64 * 64 + 64 + 64 * 10 + 10
+    assert spec.meta["grad_dim"] == expected
+    out = jax.jit(spec.fn)(*spec.example_inputs)
+    assert out[0].shape == (expected,)
+
+
+def test_tree_names_stable():
+    spec = train.build_train_step("mlp", "baseline", 4)
+    assert spec.input_names[0].startswith("param.")
+    assert spec.input_names[-1] == "lr"
+    assert spec.output_names[-1] == "loss"
+    # names must be unique (the manifest keys generic rust logic off them)
+    assert len(set(spec.input_names)) == len(spec.input_names)

@@ -1,0 +1,128 @@
+"""Empirical validation of Proposition 2.2 (variance propagation) and the
+paper-level invariant that estimator variance decreases with budget.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import sketching
+
+
+def _linear_chain_grads(key, g_out, w1, w2, method, p_budget):
+    """Two stacked linear VJPs with sketching at both edges.
+
+    Returns ĝ_in = R̂2-sketched VJP of layer2 then R̂1-sketched VJP of layer1,
+    mirroring the cascade of Eq. (11) on a 2-layer linear chain.
+    """
+    k1, k2 = jax.random.split(key)
+    ghat2, c2, r2 = sketching.sketch_ghat(
+        method, g_out, w2, k2, p_budget, jnp.float32(1.0)
+    )
+    g_mid = (ghat2 * c2[None, :] * r2[:, None]) @ w2
+    ghat1, c1, r1 = sketching.sketch_ghat(
+        method, g_mid, w1, k1, p_budget, jnp.float32(1.0)
+    )
+    return (ghat1 * c1[None, :] * r1[:, None]) @ w1
+
+
+@pytest.mark.parametrize("method", ["per_column", "l1", "ds"])
+def test_cascade_unbiased(method):
+    """Prop 2.2 (i): unbiasedness survives the layer cascade."""
+    b, d = 8, 10
+    g_out = jax.random.normal(jax.random.key(0), (b, d))
+    w1 = jax.random.normal(jax.random.key(1), (d, d)) / np.sqrt(d)
+    w2 = jax.random.normal(jax.random.key(2), (d, d)) / np.sqrt(d)
+    exact = (g_out @ w2) @ w1
+
+    keys = jax.random.split(jax.random.key(3), 4000)
+    f = lambda k: _linear_chain_grads(k, g_out, w1, w2, method, jnp.float32(0.4))
+    samples = jax.lax.map(f, keys, batch_size=500)
+    mean = np.asarray(samples.mean(axis=0))
+    scale = np.abs(np.asarray(exact)).mean()
+    np.testing.assert_allclose(mean, np.asarray(exact), atol=0.2 * scale + 0.02)
+
+
+@pytest.mark.parametrize("method", ["per_column", "l1"])
+def test_variance_decreases_with_budget(method):
+    b, d = 8, 12
+    g_out = jax.random.normal(jax.random.key(0), (b, d))
+    w1 = jax.random.normal(jax.random.key(1), (d, d)) / np.sqrt(d)
+    w2 = jax.random.normal(jax.random.key(2), (d, d)) / np.sqrt(d)
+    exact = (g_out @ w2) @ w1
+
+    def var_at(p):
+        keys = jax.random.split(jax.random.key(4), 600)
+        f = lambda k: _linear_chain_grads(k, g_out, w1, w2, method, jnp.float32(p))
+        s = jax.lax.map(f, keys, batch_size=200)
+        return float(jnp.mean(jnp.sum((s - exact) ** 2, axis=(1, 2))))
+
+    v_small, v_mid, v_large = var_at(0.15), var_at(0.4), var_at(0.9)
+    assert v_small > v_mid > v_large, (v_small, v_mid, v_large)
+    assert v_large < 0.25 * v_small
+
+
+def test_variance_decomposition_two_terms():
+    """Prop 2.2 (ii), measured exactly as stated: at a node the error splits
+    into a *local* term (Ĵ − J) applied to the NOISY incoming gradient ĝ and
+    a *propagated* term J(ĝ − g); the cross-term vanishes by conditional
+    unbiasedness, so the variances add. We sample both pieces from the same
+    draws and check E‖total‖² = E‖local(ĝ)‖² + E‖prop‖².
+    """
+    b, d = 6, 10
+    g_out = jax.random.normal(jax.random.key(0), (b, d))
+    w1 = jax.random.normal(jax.random.key(1), (d, d)) / np.sqrt(d)
+    w2 = jax.random.normal(jax.random.key(2), (d, d)) / np.sqrt(d)
+    g_mid_exact = g_out @ w2
+    p = jnp.float32(0.35)
+
+    def pieces(key):
+        k1, k2 = jax.random.split(key)
+        ghat2, c2, r2 = sketching.sketch_ghat(
+            "per_column", g_out, w2, k2, p, jnp.float32(1.0)
+        )
+        g_mid_hat = (ghat2 * c2[None, :] * r2[:, None]) @ w2
+        ghat1, c1, r1 = sketching.sketch_ghat(
+            "per_column", g_mid_hat, w1, k1, p, jnp.float32(1.0)
+        )
+        masked = ghat1 * c1[None, :] * r1[:, None]
+        local = (masked - g_mid_hat) @ w1       # (R̂−I)ĝ then J
+        prop = (g_mid_hat - g_mid_exact) @ w1   # J(ĝ − g)
+        total = masked @ w1 - g_mid_exact @ w1
+        return (
+            jnp.sum(local**2),
+            jnp.sum(prop**2),
+            jnp.sum(total**2),
+        )
+
+    keys = jax.random.split(jax.random.key(5), 6000)
+    l2, p2, t2 = jax.lax.map(pieces, keys, batch_size=500)
+    v_local, v_prop, v_total = float(l2.mean()), float(p2.mean()), float(t2.mean())
+    assert v_total == pytest.approx(v_local + v_prop, rel=0.1), (
+        v_total,
+        v_local,
+        v_prop,
+    )
+
+
+def test_error_dampens_with_small_operator_norm():
+    """§2.4: small downstream Jacobian norms dampen propagated error."""
+    b, d = 6, 10
+    g_out = jax.random.normal(jax.random.key(0), (b, d))
+    w2 = jax.random.normal(jax.random.key(2), (d, d)) / np.sqrt(d)
+    p = jnp.float32(0.3)
+
+    def mid_err_sq(key):
+        ghat2, c2, r2 = sketching.sketch_ghat(
+            "per_column", g_out, w2, key, p, jnp.float32(1.0)
+        )
+        return ((ghat2 * c2[None, :] * r2[:, None]) - g_out) @ w2
+
+    keys = jax.random.split(jax.random.key(7), 2000)
+    errs = jax.lax.map(mid_err_sq, keys, batch_size=500)
+    base = float(jnp.mean(jnp.sum(errs**2, axis=(1, 2))))
+    # shrink the Jacobian 10× → propagated variance shrinks 100×
+    errs_small = errs * 0.1
+    small = float(jnp.mean(jnp.sum(errs_small**2, axis=(1, 2))))
+    assert small == pytest.approx(base / 100.0, rel=1e-5)

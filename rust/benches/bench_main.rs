@@ -1,0 +1,197 @@
+//! Benchmark harness (criterion is unavailable offline — hand-rolled
+//! median-of-N timing with warmup; `harness = false`).
+//!
+//! Sections map to the paper's evaluation (DESIGN.md §4):
+//!   step_latency   — AOT train-step wall time per (model, method): the ρ(V)
+//!                    wall-clock column of Eq 6 on this runtime
+//!   eq6_gemm       — dense vs kept-column backward GEMMs (rust-native): the
+//!                    real FLOP-saving mechanism, per budget
+//!   pipeline       — simulated pipeline step time vs budget (Fig §1(i))
+//!   substrates     — pstar / correlated sampling / JSON parse throughput
+//!
+//! Run all:  cargo bench    Filter:  cargo bench -- step_latency
+//! Results append-logged by `make bench` into bench_output.txt.
+
+use std::time::Instant;
+
+use uavjp::config::{Preset, TrainConfig};
+use uavjp::coordinator::trainer::layer_mask;
+use uavjp::coordinator::Trainer;
+use uavjp::data::{self, DatasetKind};
+use uavjp::pipeline::{simulate, PipelineConfig};
+use uavjp::rng::Pcg64;
+use uavjp::runtime::Runtime;
+use uavjp::sketch::{correlated_bernoulli, kept_columns, pstar_from_weights};
+use uavjp::tensor::{dense_backward, sparse_dw, sparse_dx, Mat};
+
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn bench_step_latency(filter: &str) {
+    if !"step_latency".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== step_latency (train-step wall time, PJRT CPU) ==");
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("  skipped: no artifacts ({e})");
+            return;
+        }
+    };
+    let cases = [
+        ("mlp", "baseline", 1.0),
+        ("mlp", "per_column", 0.2),
+        ("mlp", "l1", 0.2),
+        ("mlp", "ds", 0.2),
+        ("mlp", "rcs", 0.2),
+        ("vit", "baseline", 1.0),
+        ("vit", "l1", 0.2),
+        ("bagnet", "baseline", 1.0),
+        ("bagnet", "l1", 0.2),
+    ];
+    for (model, method, budget) in cases {
+        let mut cfg: TrainConfig = Preset::Smoke.base(model);
+        cfg.method = method.into();
+        cfg.budget = budget;
+        let trainer = match Trainer::new(&rt, cfg.clone()) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("  {model}/{method}: skipped ({e})");
+                continue;
+            }
+        };
+        let mut state = trainer.init_state().expect("init");
+        let kind = DatasetKind::for_model(model);
+        let batch = trainer.batch_size();
+        let ds = data::generate(kind, batch, 1, "train");
+        let spec = rt.manifest.get(&format!("train_{model}_{method}")).unwrap();
+        let xspec = spec
+            .inputs
+            .iter()
+            .find(|t| t.name == "x")
+            .unwrap()
+            .shape
+            .clone();
+        let n_sk = spec.meta_usize("num_sketched").unwrap();
+        let mask = layer_mask("all", n_sk);
+        let mut step = 0usize;
+        let med = time_median(7, || {
+            trainer
+                .step(&mut state, &ds.x, &ds.y, &xspec, &mask, step)
+                .expect("step");
+            step += 1;
+        });
+        println!(
+            "  {model:>7}/{method:<11} p={budget:<4}: {:8.2} ms/step  ({:6.1} steps/s)",
+            med * 1e3,
+            1.0 / med
+        );
+    }
+}
+
+fn bench_eq6_gemm(filter: &str) {
+    if !"eq6_gemm".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== eq6_gemm (dense vs kept-column backward, rust-native) ==");
+    let mut rng = Pcg64::new(7, 0);
+    let (b, dout, din) = (128usize, 512usize, 512usize);
+    let g = Mat::from_fn(b, dout, |_, _| rng.gaussian() as f32);
+    let x = Mat::from_fn(b, din, |_, _| rng.gaussian() as f32);
+    let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
+
+    let dense = time_median(5, || {
+        let _ = dense_backward(&g, &x, &w);
+    });
+    println!("  dense backward (B={b}, {dout}×{din}): {:.2} ms", dense * 1e3);
+    for budget in [0.05, 0.1, 0.2, 0.5] {
+        let scores = uavjp::sketch::column_scores("l1", &g, None);
+        let p = pstar_from_weights(&scores, budget * dout as f64);
+        let z = correlated_bernoulli(&mut rng, &p);
+        let kept = kept_columns(&z, &p);
+        let t = time_median(5, || {
+            let _ = sparse_dx(&g, &kept, &w);
+            let _ = sparse_dw(&g, &kept, &x);
+        });
+        println!(
+            "  sketched p={budget:<4} ({} cols kept): {:.2} ms  (ρ_wall = {:.3})",
+            kept.len(),
+            t * 1e3,
+            t / dense
+        );
+    }
+}
+
+fn bench_pipeline(filter: &str) {
+    if !"pipeline".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== pipeline (simulated 4-stage GPipe, comm-bound regime) ==");
+    let mut cfg = PipelineConfig::uniform(4, 2048, 64, 8, 1.0);
+    cfg.bandwidth = 0.125e9;
+    let exact = simulate(&cfg);
+    for budget in [0.05, 0.1, 0.2, 0.5, 1.0] {
+        cfg.budget = budget;
+        let rep = simulate(&cfg);
+        println!(
+            "  p={budget:<4}: step {:8.3} ms, bwd traffic {:7.2} MB, speedup {:.2}x",
+            rep.total_time * 1e3,
+            rep.backward_bytes / 1e6,
+            exact.total_time / rep.total_time
+        );
+    }
+}
+
+fn bench_substrates(filter: &str) {
+    if !"substrates".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== substrates ==");
+    let mut rng = Pcg64::new(9, 0);
+    let w: Vec<f32> = (0..4096).map(|_| (rng.gaussian() as f32).abs()).collect();
+    let t = time_median(20, || {
+        let _ = pstar_from_weights(&w, 409.6);
+    });
+    println!("  pstar_from_weights(n=4096): {:.1} µs", t * 1e6);
+    let p = pstar_from_weights(&w, 409.6);
+    let t = time_median(20, || {
+        let _ = correlated_bernoulli(&mut rng, &p);
+    });
+    println!("  correlated_bernoulli(n=4096): {:.1} µs", t * 1e6);
+    // JSON parse throughput on the manifest
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        let t = time_median(10, || {
+            let _ = uavjp::json::parse(&text).unwrap();
+        });
+        println!(
+            "  json parse manifest ({} KiB): {:.2} ms ({:.1} MiB/s)",
+            text.len() / 1024,
+            t * 1e3,
+            text.len() as f64 / t / 1e6
+        );
+    }
+}
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    println!("uavjp bench harness (median-of-N, warmup excluded)");
+    bench_step_latency(&filter);
+    bench_eq6_gemm(&filter);
+    bench_pipeline(&filter);
+    bench_substrates(&filter);
+}

@@ -1,0 +1,145 @@
+//! Tiny CLI substrate (`clap` unavailable offline).
+//!
+//! Supports `binary <subcommand> [--flag value] [--switch] [positional...]`
+//! with typed accessors, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args {
+            subcommand: None,
+            flags: BTreeMap::new(),
+            switches: Vec::new(),
+            positional: Vec::new(),
+        };
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.str_opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s}")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.str_opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated list flag → Vec<f64>.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.str_opt(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number {x}")))
+                .collect(),
+        }
+    }
+
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // note: a bare token right after `--flag` is that flag's value, so
+        // switches go last (documented parser semantics)
+        let a = parse("train --model mlp --lr 0.1 extra --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("model", "x"), "mlp");
+        assert_eq!(a.f64_or("lr", 0.0), 0.1);
+        assert!(a.has("quiet"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("fig1a --budgets=0.05,0.1,0.5");
+        assert_eq!(a.f64_list_or("budgets", &[]), vec![0.05, 0.1, 0.5]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.str_or("m", "d"), "d");
+        assert_eq!(a.f64_list_or("l", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("run --force");
+        assert!(a.has("force"));
+        assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn str_list() {
+        let a = parse("x --methods l1,ds , --k v");
+        assert_eq!(a.str_list_or("methods", &[]), vec!["l1", "ds"]);
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! This is where the paper's protocol lives: single-run training loops over
+//! AOT-compiled step artifacts ([`trainer`]), learning-rate cross-validation
+//! and (method × budget × seed) sweeps ([`sweeps`]), gradient-variance
+//! measurement for the Prop 2.2 / Eq 6 analyses ([`variance`]), and the
+//! per-figure experiment registry ([`experiments`]) that regenerates every
+//! figure/table of §5 as CSV + markdown under `results/`.
+
+pub mod experiments;
+pub mod sweeps;
+pub mod trainer;
+pub mod variance;
+
+pub use trainer::Trainer;

@@ -1,0 +1,146 @@
+//! Sweep orchestration: LR cross-validation and (method × budget × seed)
+//! grids — the protocol behind every accuracy-vs-budget figure in §5.
+
+use crate::config::{Preset, TrainConfig};
+use crate::metrics::{mean_std, RunCurve};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+use super::trainer::Trainer;
+
+/// Result of one fully-specified training run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub cfg: TrainConfig,
+    pub curve: RunCurve,
+}
+
+impl RunRecord {
+    pub fn final_acc(&self) -> f64 {
+        self.curve.final_acc().unwrap_or(0.0)
+    }
+}
+
+/// Train once under `cfg`.
+pub fn run_one(rt: &Runtime, cfg: TrainConfig) -> Result<RunRecord> {
+    let t = Trainer::new(rt, cfg.clone())?;
+    let curve = t.run()?;
+    Ok(RunRecord { cfg, curve })
+}
+
+/// Cross-validate the learning rate over `grid`, as the paper does per seed:
+/// train at every LR, keep the best final test accuracy.
+pub fn best_over_lr(
+    rt: &Runtime,
+    base: &TrainConfig,
+    grid: &[f64],
+    verbose: bool,
+) -> Result<RunRecord> {
+    let mut best: Option<RunRecord> = None;
+    for &lr in grid {
+        let mut cfg = base.clone();
+        cfg.lr = lr;
+        let rec = run_one(rt, cfg)?;
+        if verbose {
+            eprintln!(
+                "    lr={lr:.4}: acc={:.3} loss={:.3}",
+                rec.final_acc(),
+                rec.curve.tail_loss(20).unwrap_or(f64::NAN)
+            );
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => rec.final_acc() > b.final_acc(),
+        };
+        if better {
+            best = Some(rec);
+        }
+    }
+    Ok(best.expect("empty LR grid"))
+}
+
+/// One point of an accuracy-vs-budget curve: mean ± std over seeds of the
+/// LR-cross-validated final accuracy.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub method: String,
+    pub budget: f64,
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub accs: Vec<f64>,
+    pub best_lr: f64,
+}
+
+/// Sweep a method over budgets × seeds with per-seed LR cross-validation.
+pub fn budget_sweep(
+    rt: &Runtime,
+    preset: Preset,
+    model: &str,
+    method: &str,
+    budgets: &[f64],
+    location: &str,
+    verbose: bool,
+) -> Result<Vec<SweepPoint>> {
+    let mut points = Vec::new();
+    let grid = preset.lr_grid(model);
+    for &budget in budgets {
+        let mut accs = Vec::new();
+        let mut best_lr = 0.0;
+        for &seed in &preset.seeds() {
+            let mut base = preset.base(model);
+            base.method = method.to_string();
+            base.budget = budget;
+            base.seed = seed;
+            base.location = location.to_string();
+            if verbose {
+                eprintln!("  [{method}] p={budget} seed={seed}");
+            }
+            let rec = best_over_lr(rt, &base, &grid, verbose)?;
+            accs.push(rec.final_acc());
+            best_lr = rec.cfg.lr;
+        }
+        let (m, s) = mean_std(&accs);
+        points.push(SweepPoint {
+            method: method.to_string(),
+            budget,
+            acc_mean: m,
+            acc_std: s,
+            accs,
+            best_lr,
+        });
+        eprintln!(
+            "[{model}/{method}] p={budget}: acc {:.3} ± {:.3}",
+            m, s
+        );
+    }
+    Ok(points)
+}
+
+/// Baseline (exact VJP) accuracy for a model under the preset.
+pub fn baseline_point(
+    rt: &Runtime,
+    preset: Preset,
+    model: &str,
+    verbose: bool,
+) -> Result<SweepPoint> {
+    let pts = budget_sweep(rt, preset, model, "baseline", &[1.0], "none", verbose)?;
+    Ok(pts.into_iter().next().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_point_shape() {
+        let p = SweepPoint {
+            method: "l1".into(),
+            budget: 0.1,
+            acc_mean: 0.8,
+            acc_std: 0.01,
+            accs: vec![0.79, 0.81],
+            best_lr: 0.1,
+        };
+        assert_eq!(p.accs.len(), 2);
+    }
+}

@@ -1,0 +1,240 @@
+//! Single-run training loop over AOT step artifacts.
+//!
+//! The trainer owns no python: it executes `init_<model>`,
+//! `train_<model>_<method>` and `eval_<model>` artifacts through the PJRT
+//! runtime, feeding batches from the synthetic dataset generators and
+//! threading (params, opt_state) as raw `xla::Literal`s between steps.
+
+use crate::config::TrainConfig;
+use crate::data::{self, BatchIter, Dataset, DatasetKind};
+use crate::metrics::RunCurve;
+use crate::rng::Pcg64;
+use crate::runtime::{Executable, HostTensor, Runtime};
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+/// Per-layer sketch gate from the config's `location` field.
+pub fn layer_mask(location: &str, num_sketched: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; num_sketched];
+    match location {
+        "all" => m.iter_mut().for_each(|v| *v = 1.0),
+        "first" => m[0] = 1.0,
+        "last" => *m.last_mut().expect("no sketched layers") = 1.0,
+        "none" => {}
+        other => panic!("unknown location {other} (want all|first|last|none)"),
+    }
+    m
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    train_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    init_exe: Rc<Executable>,
+    n_state: usize, // params + opt leaves carried between steps
+    n_params: usize,
+    batch: usize,
+    num_sketched: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Trainer<'rt>> {
+        let train_name = format!("train_{}_{}", cfg.model, cfg.method);
+        let train_exe = rt
+            .load(&train_name)
+            .with_context(|| format!("loading {train_name}"))?;
+        let eval_exe = rt.load(&format!("eval_{}", cfg.model))?;
+        let init_exe = rt.load(&format!("init_{}", cfg.model))?;
+        let n_params = train_exe.spec.meta_usize("num_params")?;
+        let n_opt = train_exe.spec.meta_usize("num_opt")?;
+        let batch = train_exe.spec.meta_usize("batch")?;
+        let num_sketched = train_exe.spec.meta_usize("num_sketched")?;
+        Ok(Trainer {
+            rt,
+            cfg,
+            train_exe,
+            eval_exe,
+            init_exe,
+            n_state: n_params + n_opt,
+            n_params,
+            batch,
+            num_sketched,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Initialize (params, opt_state) literals from the model's init artifact.
+    pub fn init_state(&self) -> Result<Vec<xla::Literal>> {
+        let key = HostTensor::U32(
+            vec![(self.cfg.seed >> 32) as u32 ^ 0x5eed, self.cfg.seed as u32],
+            vec![2],
+        );
+        let outs = self.train_literals(&self.init_exe, &[key.to_literal()?])?;
+        if outs.len() != self.n_state {
+            bail!("init returned {} leaves, expected {}", outs.len(), self.n_state);
+        }
+        Ok(outs)
+    }
+
+    fn train_literals(
+        &self,
+        exe: &Executable,
+        lits: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        exe.run_literals_raw(lits)
+    }
+
+    /// Generate this run's datasets.
+    pub fn datasets(&self) -> (Dataset, Dataset) {
+        let kind = DatasetKind::for_model(&self.cfg.model);
+        // dataset contents are shared across methods/seeds (generator seed
+        // fixed) so comparisons are paired; batch order varies with cfg.seed.
+        let train = data::generate(kind, self.cfg.train_size, 1234, "train");
+        let test = data::generate(kind, self.cfg.test_size, 1234, "test");
+        (train, test)
+    }
+
+    /// Full training run; returns the loss/eval curve.
+    pub fn run(&self) -> Result<RunCurve> {
+        let (train_ds, test_ds) = self.datasets();
+        let mut state = self.init_state()?;
+        let mut curve = RunCurve::default();
+        let mut rng = Pcg64::new(self.cfg.seed.wrapping_add(77), 3);
+
+        let dim = train_ds.dim;
+        let mut xbuf = vec![0.0f32; self.batch * dim];
+        let mut ybuf = vec![0i32; self.batch];
+        let mask = layer_mask(&self.cfg.location, self.num_sketched);
+        let x_shape = self.train_exe.spec.inputs[self.n_state].shape.clone();
+
+        let mut step = 0usize;
+        'outer: loop {
+            let mut iter = BatchIter::new(&train_ds, self.batch, &mut rng);
+            while iter.next_into(&mut xbuf, &mut ybuf) {
+                if step >= self.cfg.steps {
+                    break 'outer;
+                }
+                let loss = self.step(&mut state, &xbuf, &ybuf, &x_shape, &mask, step)?;
+                if !loss.is_finite() {
+                    // diverged (bad LR) — record and stop early
+                    curve.record_loss(step, f64::INFINITY);
+                    break 'outer;
+                }
+                curve.record_loss(step, loss);
+                step += 1;
+                if step % self.cfg.eval_every == 0 || step == self.cfg.steps {
+                    let (el, ea) = self.evaluate(&state, &test_ds)?;
+                    curve.record_eval(step, el, ea);
+                }
+            }
+            if step >= self.cfg.steps {
+                break;
+            }
+        }
+        if curve.evals.is_empty() {
+            let (el, ea) = self.evaluate(&state, &test_ds)?;
+            curve.record_eval(step, el, ea);
+        }
+        Ok(curve)
+    }
+
+    /// One optimizer step; `state` is updated in place.
+    pub fn step(
+        &self,
+        state: &mut Vec<xla::Literal>,
+        x: &[f32],
+        y: &[i32],
+        x_shape: &[usize],
+        mask: &[f32],
+        step: usize,
+    ) -> Result<f64> {
+        let xt = HostTensor::F32(x.to_vec(), x_shape.to_vec());
+        let yt = HostTensor::S32(y.to_vec(), vec![self.batch]);
+        let key = HostTensor::U32(
+            vec![self.cfg.seed as u32 ^ 0x9e3779b9, step as u32],
+            vec![2],
+        );
+        let pb = HostTensor::scalar_f32(self.cfg.budget as f32);
+        let lm = HostTensor::F32(mask.to_vec(), vec![mask.len()]);
+        let lr = HostTensor::scalar_f32(self.cfg.lr_at(step) as f32);
+
+        let locals: Vec<xla::Literal> = [&xt, &yt, &key, &pb, &lm, &lr]
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.n_state + 6);
+        refs.extend(state.iter());
+        refs.extend(locals.iter());
+        let mut outs = self.train_exe.run_refs(&refs)?;
+        let loss_lit = outs.pop().expect("loss output");
+        let loss = HostTensor::from_literal(&loss_lit)?.f32_scalar()? as f64;
+        *state = outs;
+        Ok(loss)
+    }
+
+    /// Evaluate on the full test set; returns (mean loss, accuracy).
+    pub fn evaluate(
+        &self,
+        state: &[xla::Literal],
+        test: &Dataset,
+    ) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut seen = 0usize;
+        let dim = test.dim;
+        let x_shape = self.eval_exe.spec.inputs[self.n_params].shape.clone();
+        let mut xbuf = vec![0.0f32; self.batch * dim];
+        let mut ybuf = vec![0i32; self.batch];
+        let nb = test.n / self.batch;
+        for b in 0..nb {
+            for (bi, idx) in (b * self.batch..(b + 1) * self.batch).enumerate() {
+                xbuf[bi * dim..(bi + 1) * dim]
+                    .copy_from_slice(&test.x[idx * dim..(idx + 1) * dim]);
+                ybuf[bi] = test.y[idx];
+            }
+            let xl = HostTensor::F32(xbuf.clone(), x_shape.clone()).to_literal()?;
+            let yl = HostTensor::S32(ybuf.clone(), vec![self.batch]).to_literal()?;
+            let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.n_params + 2);
+            refs.extend(state[..self.n_params].iter());
+            refs.push(&xl);
+            refs.push(&yl);
+            let outs = self.eval_exe.run_refs(&refs)?;
+            loss_sum += HostTensor::from_literal(&outs[0])?.f32_scalar()? as f64;
+            correct += HostTensor::from_literal(&outs[1])?.f32_scalar()? as f64;
+            seen += self.batch;
+        }
+        if seen == 0 {
+            bail!("test set smaller than one batch");
+        }
+        Ok((loss_sum / seen as f64, correct / seen as f64))
+    }
+}
+
+/// Copy a literal (xla::Literal has no Clone; reshape to same dims copies).
+pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    Ok(l.reshape(shape.dims())?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_mask_variants() {
+        assert_eq!(layer_mask("all", 3), vec![1.0, 1.0, 1.0]);
+        assert_eq!(layer_mask("first", 3), vec![1.0, 0.0, 0.0]);
+        assert_eq!(layer_mask("last", 3), vec![0.0, 0.0, 1.0]);
+        assert_eq!(layer_mask("none", 2), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn layer_mask_bad_location() {
+        layer_mask("middle", 3);
+    }
+}

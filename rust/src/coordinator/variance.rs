@@ -1,0 +1,183 @@
+//! Gradient-variance measurement (Prop 2.2 validation + Eq 6 trade-off).
+//!
+//! Uses the `grads_mlp_<method>` artifacts: a fixed parameter point and a
+//! fixed batch, repeated with fresh sketch keys, give Monte-Carlo estimates
+//! of E[ĝ], E‖ĝ − g‖² and per-coordinate spread — the quantities §2's
+//! theory reasons about.
+
+use crate::data::{self, DatasetKind};
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct VarianceReport {
+    pub method: String,
+    pub budget: f64,
+    /// ‖mean_k ĝ_k − g‖ / ‖g‖ — should → 0 (unbiasedness, Prop 2.2 i)
+    pub bias_rel: f64,
+    /// E‖ĝ − g‖² (the V of §2.2)
+    pub variance: f64,
+    /// ‖g‖² for normalization
+    pub grad_norm_sq: f64,
+    pub trials: usize,
+}
+
+impl VarianceReport {
+    /// Relative variance V / ‖g‖².
+    pub fn rel_variance(&self) -> f64 {
+        self.variance / self.grad_norm_sq
+    }
+}
+
+/// Measure gradient bias/variance for one (method, budget) on a fixed batch.
+pub fn measure(
+    rt: &Runtime,
+    method: &str,
+    budget: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<VarianceReport> {
+    let grads_exe = rt.load(&format!("grads_mlp_{method}"))?;
+    let base_exe = rt.load("grads_mlp_baseline")?;
+    let init_exe = rt.load("init_mlp")?;
+    let n_params = grads_exe.spec.meta_usize("num_params")?;
+    let batch = grads_exe.spec.meta_usize("batch")?;
+    let num_sketched = grads_exe.spec.meta_usize("num_sketched")?;
+
+    // parameter point: fresh init, lightly trained state not needed — the
+    // variance mechanics are identical anywhere; seed fixes the point.
+    let key = HostTensor::U32(vec![seed as u32, 0x1217], vec![2]).to_literal()?;
+    let state = init_exe.run_refs(&[&key])?;
+    let params = &state[..n_params];
+
+    let ds = data::generate(DatasetKind::SynthMnist, batch, 99, "train");
+    let x = HostTensor::F32(ds.x.clone(), vec![batch, ds.dim]).to_literal()?;
+    let y = HostTensor::S32(ds.y.clone(), vec![batch]).to_literal()?;
+    let pb = HostTensor::scalar_f32(budget as f32).to_literal()?;
+    let lm = HostTensor::F32(vec![1.0; num_sketched], vec![num_sketched]).to_literal()?;
+
+    // exact gradient
+    let lm0 = HostTensor::F32(vec![0.0; num_sketched], vec![num_sketched]).to_literal()?;
+    let k0 = HostTensor::U32(vec![7, 7], vec![2]).to_literal()?;
+    let pb1 = HostTensor::scalar_f32(1.0).to_literal()?;
+    let mut refs: Vec<&xla::Literal> = params.iter().collect();
+    refs.extend([&x, &y, &k0, &pb1, &lm0]);
+    let g_exact = base_exe.run_refs(&refs)?;
+    let g = HostTensor::from_literal(&g_exact[0])?;
+    let g = g.as_f32()?.to_vec();
+    let gnorm2: f64 = g.iter().map(|&v| (v as f64) * (v as f64)).sum();
+
+    let dim = g.len();
+    let mut mean = vec![0.0f64; dim];
+    let mut sq_err = 0.0f64;
+    for t in 0..trials {
+        let kt = HostTensor::U32(vec![seed as u32 ^ 0xabcd, t as u32], vec![2])
+            .to_literal()?;
+        let mut refs: Vec<&xla::Literal> = params.iter().collect();
+        refs.extend([&x, &y, &kt, &pb, &lm]);
+        let out = grads_exe.run_refs(&refs)?;
+        let ghat = HostTensor::from_literal(&out[0])?;
+        let ghat = ghat.as_f32()?;
+        let mut err = 0.0f64;
+        for i in 0..dim {
+            let d = ghat[i] as f64 - g[i] as f64;
+            err += d * d;
+            mean[i] += ghat[i] as f64;
+        }
+        sq_err += err;
+    }
+    let mut bias2 = 0.0f64;
+    for i in 0..dim {
+        let b = mean[i] / trials as f64 - g[i] as f64;
+        bias2 += b * b;
+    }
+    Ok(VarianceReport {
+        method: method.to_string(),
+        budget,
+        bias_rel: (bias2 / gnorm2.max(1e-30)).sqrt(),
+        variance: sq_err / trials as f64,
+        grad_norm_sq: gnorm2,
+        trials,
+    })
+}
+
+/// Eq 6 check: net-cost comparison ρ(V)(σ²+V) vs ρ(0)σ² for the MLP layers.
+///
+/// σ² (minibatch gradient variance) is measured by resampling batches with
+/// the exact gradient; V comes from `measure`; ρ from the analytic FLOP
+/// model in `sketch::cost_ratio` over the MLP's sketched layers.
+pub fn eq6_row(
+    rt: &Runtime,
+    method: &str,
+    budget: f64,
+    sigma2: f64,
+    trials: usize,
+) -> Result<(f64, f64, f64, f64)> {
+    let rep = measure(rt, method, budget, trials, 5)?;
+    // MLP sketched layers (dout, din): 784→64, 64→64, 64→10 at batch 128
+    let layers = [(64usize, 784usize), (64, 64), (10, 64)];
+    let total: f64 = layers
+        .iter()
+        .map(|&(o, i)| 4.0 * 128.0 * o as f64 * i as f64)
+        .sum();
+    let cost: f64 = layers
+        .iter()
+        .map(|&(o, i)| {
+            crate::sketch::cost_ratio(128, o, i, budget)
+                * 4.0
+                * 128.0
+                * o as f64
+                * i as f64
+        })
+        .sum();
+    let rho = cost / total;
+    let v = rep.variance;
+    let net = rho * (sigma2 + v);
+    Ok((rho, v, net, sigma2))
+}
+
+/// Minibatch gradient variance σ² at the same parameter point: resample
+/// batches, exact gradients.
+pub fn sigma2(rt: &Runtime, trials: usize) -> Result<f64> {
+    let base_exe = rt.load("grads_mlp_baseline")?;
+    let init_exe = rt.load("init_mlp")?;
+    let n_params = base_exe.spec.meta_usize("num_params")?;
+    let batch = base_exe.spec.meta_usize("batch")?;
+    let num_sketched = base_exe.spec.meta_usize("num_sketched")?;
+    let key = HostTensor::U32(vec![5, 0x1217], vec![2]).to_literal()?;
+    let state = init_exe.run_refs(&[&key])?;
+    let params = &state[..n_params];
+    let lm0 =
+        HostTensor::F32(vec![0.0; num_sketched], vec![num_sketched]).to_literal()?;
+    let k0 = HostTensor::U32(vec![7, 7], vec![2]).to_literal()?;
+    let pb1 = HostTensor::scalar_f32(1.0).to_literal()?;
+
+    let mut grads: Vec<Vec<f32>> = Vec::new();
+    for t in 0..trials {
+        let ds = data::generate(DatasetKind::SynthMnist, batch, 500 + t as u64, "train");
+        let x = HostTensor::F32(ds.x.clone(), vec![batch, ds.dim]).to_literal()?;
+        let y = HostTensor::S32(ds.y.clone(), vec![batch]).to_literal()?;
+        let mut refs: Vec<&xla::Literal> = params.iter().collect();
+        refs.extend([&x, &y, &k0, &pb1, &lm0]);
+        let out = base_exe.run_refs(&refs)?;
+        grads.push(HostTensor::from_literal(&out[0])?.as_f32()?.to_vec());
+    }
+    let dim = grads[0].len();
+    let mut mean = vec![0.0f64; dim];
+    for g in &grads {
+        for i in 0..dim {
+            mean[i] += g[i] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= trials as f64;
+    }
+    let mut var = 0.0f64;
+    for g in &grads {
+        for i in 0..dim {
+            let d = g[i] as f64 - mean[i];
+            var += d * d;
+        }
+    }
+    Ok(var / trials as f64)
+}

@@ -1,0 +1,322 @@
+//! Synthetic dataset substrate (DESIGN.md §6 substitutions).
+//!
+//! The paper trains on MNIST and CIFAR-10; neither ships with this offline
+//! box, so we generate structured stand-ins that exercise the identical code
+//! paths and preserve what the experiments measure — *relative* degradation
+//! of training under randomized VJPs:
+//!
+//! * **synth-MNIST** — 10 classes, 784-dim. Each class has a deterministic
+//!   anchor "digit" pattern (coarse 7×7 stroke layout upsampled to 28×28);
+//!   samples add Gaussian pixel noise, per-sample brightness jitter and a
+//!   small random translation. Linearly-separable-ish but noisy, like MNIST.
+//! * **synth-CIFAR** — 10 classes, 32×32×3. Class anchors are colored
+//!   multi-scale blob/stripe textures with spatially-correlated noise
+//!   (box-filtered), so nearby pixels co-vary as in natural images.
+//!
+//! Everything is deterministic given (seed, split).
+
+use crate::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    SynthMnist,
+    SynthCifar,
+}
+
+impl DatasetKind {
+    pub fn for_model(model: &str) -> DatasetKind {
+        match model {
+            "mlp" => DatasetKind::SynthMnist,
+            "vit" | "bagnet" => DatasetKind::SynthCifar,
+            other => panic!("unknown model {other}"),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            DatasetKind::SynthMnist => 784,
+            DatasetKind::SynthCifar => 32 * 32 * 3,
+        }
+    }
+}
+
+/// An in-memory dataset: row-major features + integer labels.
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub x: Vec<f32>, // n * dim
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub dim: usize,
+}
+
+pub const NUM_CLASSES: usize = 10;
+
+/// Generate `n` samples. `split` decouples train/test streams.
+pub fn generate(kind: DatasetKind, n: usize, seed: u64, split: &str) -> Dataset {
+    let stream = match split {
+        "train" => 1,
+        "test" => 2,
+        other => panic!("unknown split {other}"),
+    };
+    let mut rng = Pcg64::new(seed, stream);
+    let dim = kind.dim();
+    let anchors = match kind {
+        DatasetKind::SynthMnist => mnist_anchors(seed),
+        DatasetKind::SynthCifar => cifar_anchors(seed),
+    };
+    let mut x = vec![0.0f32; n * dim];
+    let mut y = vec![0i32; n];
+    for i in 0..n {
+        let cls = rng.below(NUM_CLASSES);
+        y[i] = cls as i32;
+        let row = &mut x[i * dim..(i + 1) * dim];
+        match kind {
+            DatasetKind::SynthMnist => sample_mnist(row, &anchors[cls], &mut rng),
+            DatasetKind::SynthCifar => sample_cifar(row, &anchors[cls], &mut rng),
+        }
+    }
+    Dataset { kind, x, y, n, dim }
+}
+
+// ---------------------------------------------------------------------------
+// synth-MNIST
+// ---------------------------------------------------------------------------
+fn mnist_anchors(seed: u64) -> Vec<Vec<f32>> {
+    // Deterministic per-class coarse stroke patterns on a 7×7 grid,
+    // upsampled to 28×28. Classes differ by which cells are "ink".
+    let mut anchors = Vec::with_capacity(NUM_CLASSES);
+    for cls in 0..NUM_CLASSES {
+        let mut rng = Pcg64::new(seed ^ 0xa17c, 100 + cls as u64);
+        let mut coarse = [0.0f32; 49];
+        // each class draws a distinct connected stroke: random walk of 12 cells
+        let mut pos = (rng.below(7), rng.below(7));
+        for _ in 0..12 {
+            coarse[pos.0 * 7 + pos.1] = 1.0;
+            let dir = rng.below(4);
+            pos = match dir {
+                0 => ((pos.0 + 1).min(6), pos.1),
+                1 => (pos.0.saturating_sub(1), pos.1),
+                2 => (pos.0, (pos.1 + 1).min(6)),
+                _ => (pos.0, pos.1.saturating_sub(1)),
+            };
+        }
+        let mut img = vec![0.0f32; 784];
+        for r in 0..28 {
+            for c in 0..28 {
+                img[r * 28 + c] = coarse[(r / 4) * 7 + (c / 4)];
+            }
+        }
+        anchors.push(img);
+    }
+    anchors
+}
+
+fn sample_mnist(out: &mut [f32], anchor: &[f32], rng: &mut Pcg64) {
+    let bright = 0.8 + 0.4 * rng.f32();
+    let (dr, dc) = (rng.below(5) as i32 - 2, rng.below(5) as i32 - 2);
+    for r in 0..28i32 {
+        for c in 0..28i32 {
+            let (sr, sc) = (r - dr, c - dc);
+            let base = if (0..28).contains(&sr) && (0..28).contains(&sc) {
+                anchor[(sr * 28 + sc) as usize]
+            } else {
+                0.0
+            };
+            let noise = rng.gaussian() as f32 * 0.25;
+            out[(r * 28 + c) as usize] = (base * bright + noise).clamp(-0.5, 1.5);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synth-CIFAR
+// ---------------------------------------------------------------------------
+fn cifar_anchors(seed: u64) -> Vec<Vec<f32>> {
+    let mut anchors = Vec::with_capacity(NUM_CLASSES);
+    for cls in 0..NUM_CLASSES {
+        let mut rng = Pcg64::new(seed ^ 0xc1fa, 200 + cls as u64);
+        let mut img = vec![0.0f32; 32 * 32 * 3];
+        // class-specific color palette + texture frequency
+        let color = [rng.f32(), rng.f32(), rng.f32()];
+        let (fx, fy) = (
+            1.0 + rng.below(4) as f32,
+            1.0 + rng.below(4) as f32,
+        );
+        let phase = rng.f32() * 6.28;
+        // 3 random blobs per class
+        let blobs: Vec<(f32, f32, f32)> = (0..3)
+            .map(|_| (rng.f32() * 32.0, rng.f32() * 32.0, 4.0 + rng.f32() * 6.0))
+            .collect();
+        for r in 0..32 {
+            for c in 0..32 {
+                let stripes = ((fx * r as f32 / 32.0 + fy * c as f32 / 32.0)
+                    * 6.28
+                    + phase)
+                    .sin()
+                    * 0.3;
+                let mut blob = 0.0f32;
+                for &(br, bc, rad) in &blobs {
+                    let d2 = (r as f32 - br).powi(2) + (c as f32 - bc).powi(2);
+                    blob += (-d2 / (rad * rad)).exp();
+                }
+                for ch in 0..3 {
+                    img[(r * 32 + c) * 3 + ch] =
+                        color[ch] * (0.4 + blob).min(1.2) + stripes;
+                }
+            }
+        }
+        anchors.push(img);
+    }
+    anchors
+}
+
+fn sample_cifar(out: &mut [f32], anchor: &[f32], rng: &mut Pcg64) {
+    // spatially-correlated noise: white noise box-filtered once (3×3)
+    let mut white = vec![0.0f32; 32 * 32];
+    for v in white.iter_mut() {
+        *v = rng.gaussian() as f32;
+    }
+    let flip = rng.bernoulli(0.5);
+    let bright = 0.85 + 0.3 * rng.f32();
+    for r in 0..32usize {
+        for c in 0..32usize {
+            let mut acc = 0.0f32;
+            let mut cnt = 0.0f32;
+            for dr in -1i32..=1 {
+                for dc in -1i32..=1 {
+                    let rr = r as i32 + dr;
+                    let cc = c as i32 + dc;
+                    if (0..32).contains(&rr) && (0..32).contains(&cc) {
+                        acc += white[(rr * 32 + cc) as usize];
+                        cnt += 1.0;
+                    }
+                }
+            }
+            let noise = acc / cnt * 0.35;
+            let src_c = if flip { 31 - c } else { c };
+            for ch in 0..3 {
+                out[(r * 32 + c) * 3 + ch] =
+                    (anchor[(r * 32 + src_c) * 3 + ch] * bright + noise)
+                        .clamp(-1.0, 2.0);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batching
+// ---------------------------------------------------------------------------
+/// Epoch iterator: shuffles indices each epoch, yields fixed-size batches
+/// (drops the ragged tail, as the AOT artifacts have a baked batch size).
+pub struct BatchIter<'a> {
+    ds: &'a Dataset,
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, rng: &mut Pcg64) -> Self {
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        rng.shuffle(&mut order);
+        BatchIter { ds, order, batch, cursor: 0 }
+    }
+
+    /// Copy the next batch into caller-provided staging buffers.
+    pub fn next_into(&mut self, x: &mut [f32], y: &mut [i32]) -> bool {
+        if self.cursor + self.batch > self.ds.n {
+            return false;
+        }
+        let dim = self.ds.dim;
+        for (bi, &idx) in
+            self.order[self.cursor..self.cursor + self.batch].iter().enumerate()
+        {
+            x[bi * dim..(bi + 1) * dim]
+                .copy_from_slice(&self.ds.x[idx * dim..(idx + 1) * dim]);
+            y[bi] = self.ds.y[idx];
+        }
+        self.cursor += self.batch;
+        true
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.n / self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(DatasetKind::SynthMnist, 16, 7, "train");
+        let b = generate(DatasetKind::SynthMnist, 16, 7, "train");
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let a = generate(DatasetKind::SynthMnist, 16, 7, "train");
+        let b = generate(DatasetKind::SynthMnist, 16, 7, "test");
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = generate(DatasetKind::SynthMnist, 400, 3, "train");
+        let mut seen = [false; NUM_CLASSES];
+        for &y in &d.y {
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn cifar_dims_and_range() {
+        let d = generate(DatasetKind::SynthCifar, 8, 5, "train");
+        assert_eq!(d.dim, 3072);
+        assert_eq!(d.x.len(), 8 * 3072);
+        assert!(d.x.iter().all(|&v| (-1.0..=2.0).contains(&v)));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // nearest-anchor classification on clean anchors must beat chance by a lot
+        let d = generate(DatasetKind::SynthMnist, 300, 11, "train");
+        let anchors = mnist_anchors(11);
+        let mut correct = 0;
+        for i in 0..d.n {
+            let row = &d.x[i * 784..(i + 1) * 784];
+            let mut best = (f32::MAX, 0usize);
+            for (cls, a) in anchors.iter().enumerate() {
+                let dist: f32 =
+                    row.iter().zip(a).map(|(x, y)| (x - y) * (x - y)).sum();
+                if dist < best.0 {
+                    best = (dist, cls);
+                }
+            }
+            if best.1 == d.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.n as f64;
+        assert!(acc > 0.5, "nearest-anchor acc {acc}");
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let d = generate(DatasetKind::SynthMnist, 64, 1, "train");
+        let mut rng = Pcg64::new(0, 0);
+        let mut it = BatchIter::new(&d, 16, &mut rng);
+        assert_eq!(it.batches_per_epoch(), 4);
+        let mut x = vec![0.0f32; 16 * 784];
+        let mut y = vec![0i32; 16];
+        let mut count = 0;
+        while it.next_into(&mut x, &mut y) {
+            count += 1;
+        }
+        assert_eq!(count, 4);
+    }
+}

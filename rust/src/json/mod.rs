@@ -1,0 +1,153 @@
+//! Minimal JSON substrate (parser + writer).
+//!
+//! The build environment is fully offline and `serde`/`serde_json` are not in
+//! the vendored crate set, so the manifest, experiment configs and run
+//! outputs flow through this hand-rolled implementation. It supports the full
+//! JSON grammar minus exotic number forms; strings handle the standard escape
+//! set plus `\uXXXX` (including surrogate pairs).
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+
+/// A JSON document node. Object keys are kept sorted (BTreeMap) so output is
+/// deterministic — handy for golden tests and diffable run records.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|f| f as i64)
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|f| if f >= 0.0 { Some(f as usize) } else { None })
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+    /// Object member access; `Value::Null` for anything that isn't there.
+    pub fn get(&self, key: &str) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Obj(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+    pub fn num(n: f64) -> Value {
+        Value::Num(n)
+    }
+    pub fn arr_f64(xs: &[f64]) -> Value {
+        Value::Arr(xs.iter().map(|x| Value::Num(*x)).collect())
+    }
+    pub fn arr_f32(xs: &[f32]) -> Value {
+        Value::Arr(xs.iter().map(|x| Value::Num(*x as f64)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for src in ["null", "true", "false", "0", "-1.5", "1e3", "\"hi\""] {
+            let v = parse(src).unwrap();
+            let v2 = parse(&to_string_pretty(&v)).unwrap();
+            assert_eq!(v, v2, "roundtrip {src}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a":[1,2,{"b":null,"c":[true,false]}],"d":{"e":"f g"}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("d").get("e").as_str(), Some("f g"));
+        let v2 = parse(&to_string_pretty(&v)).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\"b\\c\n\tAé""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\"b\\c\n\tAé"));
+        let v2 = parse(&to_string_pretty(&v)).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn surrogate_pairs() {
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for src in ["{", "[1,", "tru", "\"", "{\"a\" 1}", "1 2", "{,}"] {
+            assert!(parse(src).is_err(), "should reject {src}");
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"n": 3, "s": "x", "b": true, "a": [1]}"#).unwrap();
+        assert_eq!(v.get("n").as_usize(), Some(3));
+        assert_eq!(v.get("n").as_i64(), Some(3));
+        assert_eq!(v.get("b").as_bool(), Some(true));
+        assert_eq!(v.get("a").as_arr().unwrap().len(), 1);
+        assert_eq!(v.get("missing").as_str(), None);
+    }
+
+    #[test]
+    fn numbers_precise() {
+        let v = parse("[0.25, 1048576, -3.5e-2]").unwrap();
+        let a = v.as_arr().unwrap();
+        assert_eq!(a[0].as_f64(), Some(0.25));
+        assert_eq!(a[1].as_f64(), Some(1048576.0));
+        assert!((a[2].as_f64().unwrap() + 0.035).abs() < 1e-12);
+    }
+}

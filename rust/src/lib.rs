@@ -1,0 +1,29 @@
+//! # uavjp — Unbiased Approximate Vector-Jacobian Products
+//!
+//! Rust+JAX+Pallas reproduction of *"Unbiased Approximate Vector-Jacobian
+//! Products for Efficient Backpropagation"* (Bakong, Massoulié, Oyallon,
+//! Scaman, 2026).
+//!
+//! Layering (DESIGN.md):
+//! * **L1/L2 (python, build-time only)** — Pallas sketched-backward kernels
+//!   and JAX model/train graphs, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** — the training coordinator: loads artifacts via
+//!   PJRT ([`runtime`]), generates data ([`data`]), orchestrates LR/budget
+//!   sweeps and the paper's experiments ([`coordinator`]), simulates
+//!   pipeline-parallel gradient compression ([`pipeline`]), and provides
+//!   the offline substrates ([`json`], [`rng`], [`tensor`], [`pool`],
+//!   [`config`], [`metrics`], [`ptest`], [`cli`], [`sketch`]).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod pipeline;
+pub mod pool;
+pub mod ptest;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod tensor;

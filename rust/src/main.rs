@@ -1,0 +1,257 @@
+//! `uavjp` — leader binary: train, sweep, and regenerate the paper's
+//! figures/tables from AOT artifacts.
+
+use anyhow::Result;
+use uavjp::cli::Args;
+use uavjp::config::{Preset, TrainConfig};
+use uavjp::coordinator::{experiments, sweeps, trainer::Trainer};
+use uavjp::json;
+use uavjp::pipeline;
+use uavjp::runtime::Runtime;
+
+const USAGE: &str = "\
+uavjp — Unbiased Approximate VJPs for Efficient Backpropagation (repro)
+
+USAGE: uavjp <command> [flags]
+
+commands:
+  train       one training run
+              --model mlp|vit|bagnet --method <m> --budget <p> --lr <f>
+              --steps <n> --seed <n> --location all|first|last|none
+              [--preset ci|paper] [--out run.json]
+  sweep       budget sweep for one method (LR cross-validated)
+              --model <m> --method <m> [--budgets 0.05,0.1,...] [--preset ..]
+  fig1a|fig1b|fig2a|fig2b|fig3|fig4|variance|eq6
+              regenerate a paper figure/table into results/
+              [--preset ci|paper] [--budgets ...] [--out-dir results]
+  all         run every experiment in sequence
+  pipeline-sim  pipeline-parallel compression model
+              [--stages 4 --width 512 --microbatch 32 --mb-count 8
+               --bandwidth 1e9 --budgets 0.05,0.1,0.2,0.5,1.0]
+  hlo-stats   static op histogram / fusion report for one artifact
+  exec-bench  compile+execute latency for one artifact [--hlo-override f]
+  list        list available artifacts
+  methods     list sketch methods per model
+
+flags:
+  --artifacts DIR   artifact directory (default: artifacts or $UAVJP_ARTIFACTS)
+  --verbose         chatty sweeps
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sub = match args.subcommand.as_deref() {
+        Some(s) => s.to_string(),
+        None => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let artifacts = args.str_or("artifacts", "artifacts");
+
+    match sub.as_str() {
+        "exec-bench" => cmd_exec_bench(&args, &artifacts),
+        "hlo-stats" => cmd_hlo_stats(&args, &artifacts),
+        "train" => cmd_train(&args, &artifacts),
+        "sweep" => cmd_sweep(&args, &artifacts),
+        "pipeline-sim" => cmd_pipeline(&args),
+        "list" => cmd_list(&artifacts),
+        "methods" => {
+            println!("mlp: baseline per_element per_column per_sample l1 l1_sq l2 l2_sq var var_sq ds l1_ind gsv gsv_sq rcs");
+            println!("vit/bagnet: baseline per_element per_column per_sample l1 l1_sq var ds");
+            Ok(())
+        }
+        "all" => {
+            let rt = Runtime::open(&artifacts)?;
+            let ctx = ctx_from(&args, &rt);
+            for id in experiments::ALL_EXPERIMENTS {
+                experiments::run(&ctx, id)?;
+            }
+            Ok(())
+        }
+        id if experiments::ALL_EXPERIMENTS.contains(&id) || id == "fig3" => {
+            let rt = Runtime::open(&artifacts)?;
+            let ctx = ctx_from(&args, &rt);
+            experiments::run(&ctx, id)
+        }
+        other => {
+            eprintln!("unknown command {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn ctx_from<'rt>(args: &Args, rt: &'rt Runtime) -> experiments::ExperimentCtx<'rt> {
+    experiments::ExperimentCtx {
+        rt,
+        preset: Preset::parse(&args.str_or("preset", "ci")),
+        out_dir: args.str_or("out-dir", "results"),
+        verbose: args.has("verbose"),
+        budgets: args.str_opt("budgets").map(|_| args.f64_list_or("budgets", &[])),
+    }
+}
+
+/// Static HLO cost analysis of an artifact (L2 profiling, DESIGN.md §8).
+fn cmd_hlo_stats(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let name = args.str_or("artifact", "train_mlp_l1");
+    let spec = rt
+        .manifest
+        .get(&name)
+        .ok_or_else(|| anyhow::anyhow!("no artifact {name}"))?;
+    let text = std::fs::read_to_string(format!("{artifacts}/{}", spec.file))?;
+    let stats = uavjp::runtime::hlo_stats::analyze(&text);
+    print!("{}", uavjp::runtime::hlo_stats::report(&name, &stats));
+    Ok(())
+}
+
+/// Compile+execute latency for one artifact, optionally with an alternative
+/// HLO file sharing the same signature (A/B perf comparisons, §Perf).
+fn cmd_exec_bench(args: &Args, artifacts: &str) -> Result<()> {
+    use uavjp::runtime::HostTensor;
+    let rt = Runtime::open(artifacts)?;
+    let name = args.str_or("artifact", "train_mlp_l1");
+    let spec = rt
+        .manifest
+        .get(&name)
+        .ok_or_else(|| anyhow::anyhow!("no artifact {name}"))?
+        .clone();
+    let hlo_path = args
+        .str_opt("hlo-override")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("{artifacts}/{}", spec.file));
+    let proto = xla::HloModuleProto::from_text_file(&hlo_path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let t0 = std::time::Instant::now();
+    let exe = rt.client().compile(&comp)?;
+    println!("compile: {:.2}s ({hlo_path})", t0.elapsed().as_secs_f64());
+    let lits: Vec<xla::Literal> = spec
+        .inputs
+        .iter()
+        .map(|t| HostTensor::zeros(t).to_literal())
+        .collect::<Result<_>>()?;
+    let reps = args.usize_or("reps", 5);
+    // warmup
+    let _ = exe.execute::<xla::Literal>(&lits)?;
+    let mut times = Vec::new();
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let res = exe.execute::<xla::Literal>(&lits)?;
+        let _ = res[0][0].to_literal_sync()?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "exec median: {:.1} ms over {reps} reps",
+        times[times.len() / 2] * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let preset = Preset::parse(&args.str_or("preset", "ci"));
+    let model = args.str_or("model", "mlp");
+    let mut cfg: TrainConfig = preset.base(&model);
+    cfg.method = args.str_or("method", "baseline");
+    cfg.budget = args.f64_or("budget", 0.2);
+    cfg.lr = args.f64_or("lr", cfg.lr);
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
+    cfg.seed = args.usize_or("seed", 0) as u64;
+    cfg.location = args.str_or("location", "all");
+    cfg.train_size = args.usize_or("train-size", cfg.train_size);
+    cfg.test_size = args.usize_or("test-size", cfg.test_size);
+
+    eprintln!(
+        "[train] {} / {} p={} lr={} steps={}",
+        cfg.model, cfg.method, cfg.budget, cfg.lr, cfg.steps
+    );
+    let t0 = std::time::Instant::now();
+    let trainer = Trainer::new(&rt, cfg.clone())?;
+    let curve = trainer.run()?;
+    let dt = t0.elapsed().as_secs_f64();
+    let (el, ea, _) = curve.evals.last().copied().unwrap_or((0, f64::NAN, f64::NAN));
+    println!(
+        "final: step={} eval_loss={:.4} eval_acc={:.4}  ({:.1}s, {:.1} steps/s)",
+        el, ea, curve.final_acc().unwrap_or(f64::NAN), dt,
+        curve.losses.len() as f64 / dt
+    );
+    if let Some(out) = args.str_opt("out") {
+        let v = json::Value::obj(vec![
+            ("config", cfg.to_json()),
+            ("curve", curve.to_json()),
+            ("wall_seconds", json::Value::num(dt)),
+        ]);
+        std::fs::write(out, json::to_string_pretty(&v))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let preset = Preset::parse(&args.str_or("preset", "ci"));
+    let model = args.str_or("model", "mlp");
+    let method = args.str_or("method", "l1");
+    let budgets = args.f64_list_or("budgets", &preset.budgets());
+    let pts = sweeps::budget_sweep(
+        &rt,
+        preset,
+        &model,
+        &method,
+        &budgets,
+        &args.str_or("location", "all"),
+        args.has("verbose"),
+    )?;
+    println!("budget,acc_mean,acc_std,best_lr");
+    for p in pts {
+        println!("{},{:.4},{:.4},{}", p.budget, p.acc_mean, p.acc_std, p.best_lr);
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = pipeline::PipelineConfig {
+        stages: (0..args.usize_or("stages", 4))
+            .map(|_| pipeline::Stage {
+                dout: args.usize_or("width", 512),
+                din: args.usize_or("width", 512),
+            })
+            .collect(),
+        microbatch: args.usize_or("microbatch", 32),
+        num_microbatches: args.usize_or("mb-count", 8),
+        bandwidth: args.f64_or("bandwidth", 1e9),
+        latency: args.f64_or("latency", 5e-6),
+        flops_per_sec: args.f64_or("flops", 1e11),
+        budget: 1.0,
+    };
+    let budgets = args.f64_list_or("budgets", &[0.05, 0.1, 0.2, 0.5, 1.0]);
+    println!("budget,step_time_s,bubble,backward_MB,speedup_vs_exact");
+    let exact = pipeline::simulate(&cfg);
+    for (b, rep) in pipeline::budget_sweep(&cfg, &budgets) {
+        println!(
+            "{},{:.6},{:.3},{:.3},{:.2}",
+            b,
+            rep.total_time,
+            rep.bubble_fraction,
+            rep.backward_bytes / 1e6,
+            exact.total_time / rep.total_time
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list(artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    for name in rt.manifest.names() {
+        let a = rt.manifest.get(name).unwrap();
+        println!(
+            "{name}: {} inputs, {} outputs ({})",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Metrics substrate: training curves, summaries, CSV/markdown emitters.
+
+use crate::json::Value;
+use std::fmt::Write as _;
+
+/// One training run's time series.
+#[derive(Debug, Clone, Default)]
+pub struct RunCurve {
+    pub steps: Vec<usize>,
+    pub losses: Vec<f64>,
+    pub evals: Vec<(usize, f64, f64)>, // (step, eval_loss, eval_acc)
+}
+
+impl RunCurve {
+    pub fn record_loss(&mut self, step: usize, loss: f64) {
+        self.steps.push(step);
+        self.losses.push(loss);
+    }
+
+    pub fn record_eval(&mut self, step: usize, loss: f64, acc: f64) {
+        self.evals.push((step, loss, acc));
+    }
+
+    pub fn final_acc(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.2)
+    }
+
+    pub fn best_acc(&self) -> Option<f64> {
+        self.evals
+            .iter()
+            .map(|e| e.2)
+            .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.losses.last().copied()
+    }
+
+    /// Mean loss over the last `k` recorded steps (smoother signal for LR
+    /// cross-validation than the single final step).
+    pub fn tail_loss(&self, k: usize) -> Option<f64> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let n = self.losses.len();
+        let tail = &self.losses[n.saturating_sub(k)..];
+        Some(tail.iter().sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "steps",
+                Value::Arr(self.steps.iter().map(|&s| Value::Num(s as f64)).collect()),
+            ),
+            ("losses", Value::arr_f64(&self.losses)),
+            (
+                "evals",
+                Value::Arr(
+                    self.evals
+                        .iter()
+                        .map(|(s, l, a)| {
+                            Value::Arr(vec![
+                                Value::Num(*s as f64),
+                                Value::Num(*l),
+                                Value::Num(*a),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Mean and (population) std of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Markdown table builder for EXPERIMENTS.md output.
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        MdTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+}
+
+/// CSV emitter (for figure data series).
+pub fn to_csv(header: &[&str], rows: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", header.join(","));
+    for r in rows {
+        let cells: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+        let _ = writeln!(out, "{}", cells.join(","));
+    }
+    out
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_accessors() {
+        let mut c = RunCurve::default();
+        c.record_loss(0, 2.0);
+        c.record_loss(1, 1.0);
+        c.record_eval(1, 0.9, 0.55);
+        c.record_eval(2, 0.8, 0.60);
+        assert_eq!(c.final_acc(), Some(0.60));
+        assert_eq!(c.best_acc(), Some(0.60));
+        assert_eq!(c.final_loss(), Some(1.0));
+        assert_eq!(c.tail_loss(2), Some(1.5));
+        assert_eq!(c.tail_loss(10), Some(1.5));
+    }
+
+    #[test]
+    fn curve_json_roundtrip() {
+        let mut c = RunCurve::default();
+        c.record_loss(0, 2.5);
+        c.record_eval(0, 2.0, 0.1);
+        let v = c.to_json();
+        let txt = crate::json::to_string_pretty(&v);
+        let v2 = crate::json::parse(&txt).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m, _) = mean_std(&[]);
+        assert!(m.is_nan());
+    }
+
+    #[test]
+    fn md_table_shape() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("|---|---|"));
+        assert!(s.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let s = to_csv(&["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.5]]);
+        assert_eq!(s, "x,y\n1,2\n3,4.5\n");
+    }
+}

@@ -1,0 +1,406 @@
+//! Pipeline-parallel simulator: activation-gradient compression (paper §1
+//! motivation (i)).
+//!
+//! The paper motivates sketched VJPs partly by pipeline parallelism, where
+//! inter-stage activation gradients dominate cross-device traffic. This
+//! module simulates a GPipe-style fill–drain schedule over `S` stages and
+//! `M` microbatches with a simple but faithful cost model:
+//!
+//! * forward sends activations stage→stage+1 (uncompressed — the paper's
+//!   scheme touches only the backward pass, keeping the forward exact);
+//! * backward sends activation *gradients* stage+1→stage, compressed by a
+//!   column sketch with budget p: bytes shrink to ≈ p·B·d·4 plus the kept
+//!   index+scale sideband;
+//! * each stage's backward compute also shrinks per Eq 6's ρ(V) because the
+//!   sketched VJP only touches kept columns (sketch::cost_ratio).
+//!
+//! The simulator is event-driven per (microbatch, stage) task with
+//! dependency-correct start times, so pipeline bubbles emerge naturally
+//! rather than from a closed-form formula — and a unit test checks the
+//! closed form on the uniform case.
+
+use crate::sketch;
+
+/// One pipeline stage: a linear block of the model.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub dout: usize,
+    pub din: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub stages: Vec<Stage>,
+    pub microbatch: usize,
+    pub num_microbatches: usize,
+    /// link bandwidth in bytes/sec
+    pub bandwidth: f64,
+    /// per-message latency in sec
+    pub latency: f64,
+    /// compute throughput in FLOP/sec per stage
+    pub flops_per_sec: f64,
+    /// sketch budget p ∈ (0,1]; 1.0 = exact backward
+    pub budget: f64,
+}
+
+impl PipelineConfig {
+    pub fn uniform(
+        num_stages: usize,
+        width: usize,
+        microbatch: usize,
+        num_microbatches: usize,
+        budget: f64,
+    ) -> PipelineConfig {
+        PipelineConfig {
+            stages: (0..num_stages)
+                .map(|_| Stage { dout: width, din: width })
+                .collect(),
+            microbatch,
+            num_microbatches,
+            bandwidth: 1e9,
+            latency: 5e-6,
+            flops_per_sec: 1e11,
+            budget,
+        }
+    }
+
+    fn fwd_flops(&self, s: usize) -> f64 {
+        let st = &self.stages[s];
+        2.0 * self.microbatch as f64 * st.dout as f64 * st.din as f64
+    }
+
+    fn bwd_flops(&self, s: usize) -> f64 {
+        let st = &self.stages[s];
+        let kept = ((self.budget * st.dout as f64).round() as usize).clamp(1, st.dout);
+        sketch::backward_flops(self.microbatch, st.dout, st.din, kept)
+    }
+
+    /// bytes of one forward activation message out of stage s.
+    fn fwd_bytes(&self, s: usize) -> f64 {
+        4.0 * self.microbatch as f64 * self.stages[s].dout as f64
+    }
+
+    /// bytes of one backward gradient message out of stage s (into s-1):
+    /// kept columns (p·B·d values) + index/scale sideband (8 bytes/column).
+    fn bwd_bytes(&self, s: usize) -> f64 {
+        let d = self.stages[s].din as f64;
+        let kept = (self.budget * d).ceil().max(1.0);
+        4.0 * self.microbatch as f64 * kept + 8.0 * kept
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub total_time: f64,
+    pub compute_time: f64,
+    pub comm_time: f64,
+    pub bubble_fraction: f64,
+    pub backward_bytes: f64,
+    pub forward_bytes: f64,
+    /// max microbatches whose activations a stage holds at once (GPipe: m;
+    /// 1F1B: ≤ pipeline depth — the schedule's actual payoff)
+    pub peak_in_flight: usize,
+}
+
+/// Simulate one optimizer step (all microbatches forward then backward,
+/// GPipe fill–drain) and report timing + traffic.
+pub fn simulate(cfg: &PipelineConfig) -> PipelineReport {
+    let s = cfg.stages.len();
+    let m = cfg.num_microbatches;
+    // ready[stage] = time the stage becomes free
+    let mut stage_free = vec![0.0f64; s];
+    // arrival[mb][stage] = when microbatch mb's input is available at stage
+    let mut fwd_arrival = vec![vec![0.0f64; s]; m];
+    let mut fwd_done = vec![vec![0.0f64; s]; m];
+    let mut compute_time = 0.0;
+    let mut comm = 0.0;
+    let mut fbytes = 0.0;
+    let mut bbytes = 0.0;
+
+    // forward pass
+    for mb in 0..m {
+        for st in 0..s {
+            let t_start = fwd_arrival[mb][st].max(stage_free[st]);
+            let dur = cfg.fwd_flops(st) / cfg.flops_per_sec;
+            compute_time += dur;
+            let t_end = t_start + dur;
+            stage_free[st] = t_end;
+            fwd_done[mb][st] = t_end;
+            if st + 1 < s {
+                let tx = cfg.fwd_bytes(st) / cfg.bandwidth + cfg.latency;
+                comm += tx;
+                fbytes += cfg.fwd_bytes(st);
+                fwd_arrival[mb][st + 1] = t_end + tx;
+            }
+        }
+    }
+
+    // backward pass (reverse stage order), gradient flows s-1 → 0
+    let mut bwd_arrival = vec![vec![0.0f64; s]; m];
+    for mb in 0..m {
+        // loss gradient available at the last stage once its fwd is done
+        bwd_arrival[mb][s - 1] = fwd_done[mb][s - 1];
+    }
+    for mb in 0..m {
+        for st in (0..s).rev() {
+            let t_start = bwd_arrival[mb][st].max(stage_free[st]);
+            let dur = cfg.bwd_flops(st) / cfg.flops_per_sec;
+            compute_time += dur;
+            let t_end = t_start + dur;
+            stage_free[st] = t_end;
+            if st > 0 {
+                let tx = cfg.bwd_bytes(st) / cfg.bandwidth + cfg.latency;
+                comm += tx;
+                bbytes += cfg.bwd_bytes(st);
+                bwd_arrival[mb][st - 1] = bwd_arrival[mb][st - 1].max(t_end + tx);
+            }
+        }
+    }
+
+    let total = stage_free.iter().cloned().fold(0.0, f64::max);
+    let ideal = compute_time / s as f64;
+    PipelineReport {
+        total_time: total,
+        compute_time,
+        comm_time: comm,
+        bubble_fraction: (total - ideal) / total,
+        backward_bytes: bbytes,
+        forward_bytes: fbytes,
+        peak_in_flight: m,
+    }
+}
+
+/// 1F1B (PipeDream-flush) schedule: each stage alternates forward and
+/// backward work once warm, bounding in-flight activations to the stage
+/// depth instead of the full microbatch count — the ablation the paper's
+/// §1(i) pipeline framing invites (GPipe fill–drain vs 1F1B).
+///
+/// Cost model identical to `simulate`; only the per-stage task order
+/// changes. We model it by interleaving: stage s admits backward microbatch
+/// k as soon as (a) its gradient arrived and (b) forward microbatch
+/// k + (S − s) has been issued (the classic 1F1B steady-state window).
+pub fn simulate_1f1b(cfg: &PipelineConfig) -> PipelineReport {
+    let s = cfg.stages.len();
+    let m = cfg.num_microbatches;
+    let mut stage_free = vec![0.0f64; s];
+    let mut fwd_arrival = vec![vec![0.0f64; s]; m];
+    let mut fwd_done = vec![vec![0.0f64; s]; m];
+    let mut bwd_arrival = vec![vec![f64::INFINITY; s]; m];
+    let mut bwd_done = vec![vec![0.0f64; s]; m];
+    let mut compute_time = 0.0;
+    let mut comm = 0.0;
+    let mut fbytes = 0.0;
+    let mut bbytes = 0.0;
+
+    // event-driven per stage: maintain per-stage cursors over (fwd, bwd)
+    // work and greedily run whichever is admissible, preferring backward
+    // once the 1F1B window is full.
+    let mut fcur = vec![0usize; s]; // next fwd microbatch per stage
+    let mut bcur = vec![0usize; s]; // next bwd microbatch per stage
+    let mut peak = 0usize;
+    let mut pending = m * s * 2;
+    while pending > 0 {
+        let mut progressed = false;
+        for st in 0..s {
+            // backward first (1F1B preference) if its input arrived
+            if bcur[st] < m {
+                let mb = bcur[st];
+                let arr = if st == s - 1 {
+                    if fcur[s - 1] > mb { fwd_done[mb][s - 1] } else { f64::INFINITY }
+                } else {
+                    bwd_arrival[mb][st]
+                };
+                // classic 1F1B warmup: stage st keeps (s - st) forwards in
+                // flight before strictly alternating
+                let window_ok = fcur[st] >= (mb + (s - st)).min(m);
+                if arr.is_finite() && window_ok {
+                    let t_start = arr.max(stage_free[st]);
+                    let dur = cfg.bwd_flops(st) / cfg.flops_per_sec;
+                    compute_time += dur;
+                    let t_end = t_start + dur;
+                    stage_free[st] = t_end;
+                    bwd_done[mb][st] = t_end;
+                    if st > 0 {
+                        let tx = cfg.bwd_bytes(st) / cfg.bandwidth + cfg.latency;
+                        comm += tx;
+                        bbytes += cfg.bwd_bytes(st);
+                        bwd_arrival[mb][st - 1] = t_end + tx;
+                    }
+                    bcur[st] += 1;
+                    pending -= 1;
+                    progressed = true;
+                    continue;
+                }
+            }
+            // otherwise forward if admissible
+            if fcur[st] < m {
+                let mb = fcur[st];
+                let arr = if st == 0 { 0.0 } else { fwd_arrival[mb][st] };
+                let ready = st == 0 || fwd_done[mb][st - 1] > 0.0 || mb < fcur[st - 1];
+                if ready && arr.is_finite() {
+                    let t_start = arr.max(stage_free[st]);
+                    let dur = cfg.fwd_flops(st) / cfg.flops_per_sec;
+                    compute_time += dur;
+                    let t_end = t_start + dur;
+                    stage_free[st] = t_end;
+                    fwd_done[mb][st] = t_end;
+                    if st + 1 < s {
+                        let tx = cfg.fwd_bytes(st) / cfg.bandwidth + cfg.latency;
+                        comm += tx;
+                        fbytes += cfg.fwd_bytes(st);
+                        fwd_arrival[mb][st + 1] = t_end + tx;
+                    }
+                    fcur[st] += 1;
+                    peak = peak.max(fcur[st] - bcur[st]);
+                    pending -= 1;
+                    progressed = true;
+                }
+            }
+        }
+        if !progressed {
+            // deadlock guard: relax the 1F1B window (degenerate configs)
+            let st = (0..s).find(|&st| bcur[st] < m || fcur[st] < m).unwrap();
+            if fcur[st] < m {
+                fcur[st] += 1;
+                pending -= 1;
+            } else {
+                bcur[st] += 1;
+                pending -= 1;
+            }
+        }
+    }
+    let total = stage_free.iter().cloned().fold(0.0, f64::max);
+    let ideal = compute_time / s as f64;
+    PipelineReport {
+        total_time: total,
+        compute_time,
+        comm_time: comm,
+        bubble_fraction: (total - ideal) / total,
+        backward_bytes: bbytes,
+        forward_bytes: fbytes,
+        peak_in_flight: peak,
+    }
+}
+
+/// Budget sweep: returns (budget, report) rows for the bench/example.
+pub fn budget_sweep(base: &PipelineConfig, budgets: &[f64]) -> Vec<(f64, PipelineReport)> {
+    budgets
+        .iter()
+        .map(|&b| {
+            let mut cfg = base.clone();
+            cfg.budget = b;
+            (b, simulate(&cfg))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> PipelineConfig {
+        PipelineConfig::uniform(4, 512, 32, 8, 1.0)
+    }
+
+    #[test]
+    fn exact_backward_bytes_match_closed_form() {
+        let cfg = base();
+        let rep = simulate(&cfg);
+        // backward messages: (s-1) edges × m microbatches × (B·d·4 + 8d)
+        let expect = 3.0 * 8.0 * (4.0 * 32.0 * 512.0 + 8.0 * 512.0);
+        assert!((rep.backward_bytes - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compression_shrinks_backward_traffic_only() {
+        let exact = simulate(&base());
+        let mut c = base();
+        c.budget = 0.1;
+        let comp = simulate(&c);
+        assert!(comp.backward_bytes < 0.15 * exact.backward_bytes);
+        assert_eq!(comp.forward_bytes, exact.forward_bytes);
+    }
+
+    #[test]
+    fn compression_reduces_step_time_when_comm_bound() {
+        let mut cfg = base();
+        cfg.bandwidth = 5e7; // starve the links
+        let exact = simulate(&cfg);
+        cfg.budget = 0.1;
+        let comp = simulate(&cfg);
+        assert!(
+            comp.total_time < exact.total_time,
+            "compressed {} vs exact {}",
+            comp.total_time,
+            exact.total_time
+        );
+    }
+
+    #[test]
+    fn bubble_fraction_sane() {
+        let rep = simulate(&base());
+        assert!(rep.bubble_fraction > 0.0 && rep.bubble_fraction < 1.0);
+        // more microbatches → smaller bubble
+        let mut c = base();
+        c.num_microbatches = 32;
+        let rep2 = simulate(&c);
+        assert!(rep2.bubble_fraction < rep.bubble_fraction);
+    }
+
+    #[test]
+    fn sweep_monotone_in_traffic() {
+        let rows = budget_sweep(&base(), &[0.05, 0.2, 0.5, 1.0]);
+        for w in rows.windows(2) {
+            assert!(w[0].1.backward_bytes < w[1].1.backward_bytes);
+        }
+    }
+
+    #[test]
+    fn one_f1b_same_traffic_as_gpipe() {
+        let cfg = base();
+        let a = simulate(&cfg);
+        let b = simulate_1f1b(&cfg);
+        assert!((a.backward_bytes - b.backward_bytes).abs() < 1e-6);
+        assert!((a.forward_bytes - b.forward_bytes).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_f1b_time_comparable_memory_much_smaller() {
+        // 1F1B's payoff is activation memory (≤ depth vs m), at comparable
+        // step time; the greedy simulator tolerates a small scheduling gap.
+        let mut cfg = base();
+        cfg.num_microbatches = 32;
+        let gpipe = simulate(&cfg);
+        let f1b = simulate_1f1b(&cfg);
+        assert!(
+            f1b.total_time <= gpipe.total_time * 1.3,
+            "1F1B {} vs GPipe {}",
+            f1b.total_time,
+            gpipe.total_time
+        );
+        assert_eq!(gpipe.peak_in_flight, 32);
+        assert!(
+            f1b.peak_in_flight <= cfg.stages.len() + 1,
+            "1F1B in-flight {}",
+            f1b.peak_in_flight
+        );
+    }
+
+    #[test]
+    fn one_f1b_compression_still_helps() {
+        let mut cfg = base();
+        cfg.bandwidth = 5e7;
+        let exact = simulate_1f1b(&cfg);
+        cfg.budget = 0.1;
+        let comp = simulate_1f1b(&cfg);
+        assert!(comp.total_time < exact.total_time);
+    }
+
+    #[test]
+    fn single_stage_has_no_comm() {
+        let cfg = PipelineConfig::uniform(1, 128, 16, 4, 0.5);
+        let rep = simulate(&cfg);
+        assert_eq!(rep.comm_time, 0.0);
+        assert_eq!(rep.backward_bytes, 0.0);
+    }
+}

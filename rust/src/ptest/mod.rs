@@ -1,0 +1,186 @@
+//! Mini property-testing harness (`proptest` is not in the offline crate
+//! set — DESIGN.md §6).
+//!
+//! Provides the 80% that matters here: seeded case generation from simple
+//! strategies, a fixed case budget, and greedy input shrinking on failure.
+//! Used by the coordinator/sketch/pipeline invariant tests.
+
+use crate::rng::Pcg64;
+
+/// A generated case that knows how to shrink itself.
+pub trait Shrink: Clone + std::fmt::Debug {
+    /// Candidate smaller versions of `self` (tried in order).
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<f32> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+        }
+        if self.iter().any(|&x| x != 0.0) {
+            out.push(self.iter().map(|&x| x / 2.0).collect());
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; on failure, shrink greedily and
+/// panic with the minimal counterexample.
+pub fn check<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Shrink,
+    G: Fn(&mut Pcg64) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(seed, 0x9e37);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case_idx}, seed {seed}):\n  input: {:?}\n  error: {}",
+                min_input, min_msg
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut cur: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    let mut budget = 200;
+    'outer: while budget > 0 {
+        for cand in cur.shrinks() {
+            budget -= 1;
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    (cur, msg)
+}
+
+/// Strategy helpers.
+pub mod gen {
+    use crate::rng::Pcg64;
+
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        lo + rng.f64() * (hi - lo)
+    }
+
+    pub fn vec_f32(rng: &mut Pcg64, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    pub fn vec_f32_pos(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| (rng.gaussian() as f32).abs() + 1e-3)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            1,
+            50,
+            |rng| {
+                let n = gen::usize_in(rng, 1, 20);
+                gen::vec_f32_pos(rng, n)
+            },
+            |v| {
+                if v.iter().all(|&x| x > 0.0) {
+                    Ok(())
+                } else {
+                    Err("nonpositive".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(
+            2,
+            50,
+            |rng| gen::usize_in(rng, 10, 100),
+            |&n| {
+                if n < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_reaches_small_vec() {
+        let v = vec![1.0f32; 64];
+        let (min, _) = shrink_loop(v, "err".into(), &|v: &Vec<f32>| {
+            if v.len() >= 4 {
+                Err("len>=4".into())
+            } else {
+                Ok(())
+            }
+        });
+        assert!(min.len() >= 4 && min.len() <= 7, "len {}", min.len());
+    }
+}

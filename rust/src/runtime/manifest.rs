@@ -1,0 +1,188 @@
+//! Artifact manifest (artifacts/manifest.json) parsing.
+
+use super::DType;
+use crate::json::{self, Value};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let dtype = DType::parse(
+            v.get("dtype").as_str().ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Value,
+}
+
+impl ArtifactSpec {
+    /// Index of the input named `name`.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("{}: no input named {name}", self.name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .as_usize()
+            .ok_or_else(|| anyhow!("{}: meta key {key} missing", self.name))
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let arts = root
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut by_name = BTreeMap::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            by_name.insert(
+                name.clone(),
+                ArtifactSpec { name, file, inputs, outputs, meta: a.get("meta").clone() },
+            );
+        }
+        Ok(Manifest { by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "t1",
+          "file": "t1.hlo.txt",
+          "inputs": [
+            {"name": "x", "dtype": "f32", "shape": [2, 3]},
+            {"name": "y", "dtype": "s32", "shape": [2]}
+          ],
+          "outputs": [{"name": "loss", "dtype": "f32", "shape": []}],
+          "meta": {"batch": 2, "model": "mlp"}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("t1").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].numel(), 6);
+        assert_eq!(a.inputs[1].dtype, DType::S32);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.input_index("y").unwrap(), 1);
+        assert!(a.input_index("z").is_err());
+        assert_eq!(a.meta_usize("batch").unwrap(), 2);
+        assert_eq!(a.meta.get("model").as_str(), Some("mlp"));
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("[1,2]").is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"file":"x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // integration-ish: if the repo's artifacts exist, they must parse
+        let p = Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.get("train_mlp_l1").is_some());
+            assert!(m.get("eval_mlp").is_some());
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): one process-wide
+//! client, an executable cache keyed by artifact name, and typed host
+//! tensors (`HostTensor`) that mirror the manifest dtypes.
+//!
+//! Interchange is HLO **text** — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which is what makes jax≥0.5 modules loadable on this
+//! runtime (64-bit-id protos are rejected; see DESIGN.md §2).
+//!
+//! Outputs: the lowered entry computations are tuple-rooted and this PJRT
+//! build returns the tuple as a *single* buffer, so `run` synchronizes to a
+//! host literal and decomposes it. Training state therefore lives host-side
+//! as `xla::Literal`s between steps; at the model sizes used here the
+//! per-step host↔device copies are <3 MB and dwarfed by compute (measured
+//! in EXPERIMENTS.md §Perf).
+
+pub mod hlo_stats;
+mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// dtype tags used by the manifest (subset we actually emit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" => DType::S32,
+            "u32" => DType::U32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// A typed host tensor (row-major).
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    S32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> HostTensor {
+        let n: usize = spec.shape.iter().product();
+        match spec.dtype {
+            DType::F32 => HostTensor::F32(vec![0.0; n], spec.shape.clone()),
+            DType::S32 => HostTensor::S32(vec![0; n], spec.shape.clone()),
+            DType::U32 => HostTensor::U32(vec![0; n], spec.shape.clone()),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::S32(_, s) | HostTensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::S32(d, _) => d.len(),
+            HostTensor::U32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32_scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elems", d.len());
+        }
+        Ok(d[0])
+    }
+
+    fn dims_i64(shape: &[usize]) -> Vec<i64> {
+        shape.iter().map(|&d| d as i64).collect()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(d, s) => {
+                xla::Literal::vec1(d).reshape(&Self::dims_i64(s))?
+            }
+            HostTensor::S32(d, s) => {
+                xla::Literal::vec1(d).reshape(&Self::dims_i64(s))?
+            }
+            HostTensor::U32(d, s) => {
+                xla::Literal::vec1(d).reshape(&Self::dims_i64(s))?
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(match shape.ty() {
+            xla::ElementType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, dims),
+            xla::ElementType::S32 => HostTensor::S32(lit.to_vec::<i32>()?, dims),
+            xla::ElementType::U32 => HostTensor::U32(lit.to_vec::<u32>()?, dims),
+            other => bail!("unsupported element type {other:?}"),
+        })
+    }
+}
+
+// NOTE: the xla crate's PjRtClient is Rc-backed (not Send/Sync), so each
+// Runtime owns its client and everything PJRT stays on one thread. Sweeps
+// are sequential on this single-core testbed anyway; the `pool` substrate is
+// used only for CPU-native work (pipeline sim, tensor benches).
+
+/// A compiled artifact ready to run.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns one HostTensor per manifest output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&lits)
+    }
+
+    /// Execute with pre-built literals, decoding outputs to host tensors.
+    pub fn run_literals(&self, lits: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let outs = self.run_refs(&refs)?;
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute returning raw literals (no host decode) — training loops
+    /// chain these across steps without converting params to Vec<f32>.
+    pub fn run_literals_raw(&self, lits: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with borrowed literals — the hot path: lets the training loop
+    /// pass carried state by reference (zero host copies of params).
+    pub fn run_refs(&self, lits: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if lits.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                lits.len()
+            );
+        }
+        let res = self.exe.execute::<&xla::Literal>(lits)?;
+        let buf = &res[0][0];
+        let root = buf.to_literal_sync()?;
+        // single-output computations lower to a bare array root; multi-output
+        // ones to a tuple the PJRT build returns as one buffer.
+        if self.spec.outputs.len() == 1 && root.array_shape().is_ok() {
+            return Ok(vec![root]);
+        }
+        let outs = root.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Artifact loader + executable cache.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { dir, manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The PJRT client backing this runtime.
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Default artifacts dir: $UAVJP_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("UAVJP_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(dir)
+    }
+
+    /// Load (compile) an artifact by name; cached for the runtime lifetime.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        eprintln!(
+            "[runtime] compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let e = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Names of loaded (compiled) artifacts.
+    pub fn loaded(&self) -> Vec<String> {
+        self.cache.borrow().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let t2 = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t2.shape(), &[2, 3]);
+        assert_eq!(t2.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn host_tensor_roundtrip_ints() {
+        let t = HostTensor::S32(vec![-1, 2, 7], vec![3]);
+        let t2 = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        match t2 {
+            HostTensor::S32(d, s) => {
+                assert_eq!(d, vec![-1, 2, 7]);
+                assert_eq!(s, vec![3]);
+            }
+            _ => panic!("wrong dtype"),
+        }
+        let u = HostTensor::U32(vec![5, 6], vec![2]);
+        let u2 = HostTensor::from_literal(&u.to_literal().unwrap()).unwrap();
+        match u2 {
+            HostTensor::U32(d, _) => assert_eq!(d, vec![5, 6]),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let s = HostTensor::scalar_f32(0.25);
+        assert_eq!(s.f32_scalar().unwrap(), 0.25);
+        assert!(s.shape().is_empty());
+        let lit = s.to_literal().unwrap();
+        let s2 = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(s2.f32_scalar().unwrap(), 0.25);
+    }
+
+    #[test]
+    fn zeros_matches_spec() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![4, 2],
+        };
+        let t = HostTensor::zeros(&spec);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.shape(), &[4, 2]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Native mirror of the paper's sketching algorithms (§3–§4).
+//!
+//! The rust coordinator needs these outside the AOT graphs: the pipeline
+//! simulator compresses inter-stage gradients with them, the eq6 bench
+//! drives the sparse GEMMs from them, and the property-test suite checks the
+//! same invariants the python oracle suite checks — so the two language
+//! implementations cross-validate through `rust/tests/integration_pjrt.rs`
+//! against the `micro_*` artifacts.
+
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+
+/// Algorithm 1 — waterfilling: minimize Σ wᵢ/pᵢ s.t. Σ pᵢ = r, 0 < pᵢ ≤ 1.
+///
+/// KKT gives pᵢ* = min(1, √wᵢ / √λ); we find the saturation split exactly by
+/// scanning candidate counts of saturated coordinates (sorted order), which
+/// matches the thresholding construction in the paper's Appendix A.2.
+pub fn pstar_from_weights(w: &[f32], r: f64) -> Vec<f32> {
+    let n = w.len();
+    if r >= n as f64 {
+        return vec![1.0; n];
+    }
+    let mut t: Vec<(f64, usize)> = w
+        .iter()
+        .enumerate()
+        .map(|(i, &wi)| ((wi.max(0.0) as f64).sqrt(), i))
+        .collect();
+    t.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let total_t: f64 = t.iter().map(|x| x.0).sum();
+    if total_t <= 0.0 {
+        return vec![(r / n as f64).clamp(1e-6, 1.0) as f32; n];
+    }
+    // suffix sums of sorted t
+    let mut suffix = vec![0.0f64; n + 1];
+    for k in (0..n).rev() {
+        suffix[k] = suffix[k + 1] + t[k].0;
+    }
+    let mut lam_sqrt = suffix[0] / r; // k = 0 candidate
+    for k in 0..n {
+        let rem = r - k as f64;
+        if rem <= 0.0 {
+            break;
+        }
+        let cand = suffix[k] / rem;
+        let prev_ok = k == 0 || t[k - 1].0 >= cand - 1e-12;
+        let cur_ok = t[k].0 <= cand + 1e-12;
+        if prev_ok && cur_ok {
+            lam_sqrt = cand;
+            break;
+        }
+    }
+    let mut p = vec![0.0f32; n];
+    for (tv, i) in &t {
+        p[*i] = ((tv / lam_sqrt).min(1.0)).clamp(1e-6, 1.0) as f32;
+    }
+    p
+}
+
+/// Algorithm 2 — correlated exact-r sampling (systematic sampling).
+///
+/// Draw u ~ U(0,1]; index i is selected iff some u+ℓ lies in the cumulative
+/// interval (C_{i-1}, C_i]. Marginals are exactly pᵢ and the number of
+/// selected indices equals Σpᵢ (up to the integer boundary) almost surely.
+pub fn correlated_bernoulli(rng: &mut Pcg64, p: &[f32]) -> Vec<bool> {
+    let u = rng.f64().max(1e-12);
+    let mut out = vec![false; p.len()];
+    let mut c_prev = 0.0f64;
+    for (i, &pi) in p.iter().enumerate() {
+        let c = c_prev + pi as f64;
+        let lo = (c_prev - u).floor();
+        let hi = (c - u).floor();
+        out[i] = hi > lo;
+        c_prev = c;
+    }
+    out
+}
+
+/// Independent Bernoulli(pᵢ) gates (Lemma 3.4 sampling model).
+pub fn independent_bernoulli(rng: &mut Pcg64, p: &[f32]) -> Vec<bool> {
+    p.iter().map(|&pi| rng.bernoulli(pi as f64)).collect()
+}
+
+/// Kept-column list (index, 1/pᵢ) for the sparse backward kernels.
+pub fn kept_columns(z: &[bool], p: &[f32]) -> Vec<(usize, f32)> {
+    z.iter()
+        .zip(p)
+        .enumerate()
+        .filter(|(_, (&zi, _))| zi)
+        .map(|(i, (_, &pi))| (i, 1.0 / pi))
+        .collect()
+}
+
+/// Column importance weights for the coordinate methods (§4.2) on a native
+/// gradient matrix. Mirrors python `sketching.column_scores`.
+pub fn column_scores(method: &str, g: &Mat, w_mat: Option<&Mat>) -> Vec<f32> {
+    let (b, dout) = (g.rows, g.cols);
+    let mut abs = vec![0.0f64; dout];
+    let mut sq = vec![0.0f64; dout];
+    let mut sum = vec![0.0f64; dout];
+    for i in 0..b {
+        for j in 0..dout {
+            let v = g.at(i, j) as f64;
+            abs[j] += v.abs();
+            sq[j] += v * v;
+            sum[j] += v;
+        }
+    }
+    let var =
+        |j: usize| (sq[j] / b as f64 - (sum[j] / b as f64).powi(2)).max(0.0);
+    (0..dout)
+        .map(|j| {
+            (match method {
+                "l1" | "l1_ind" => abs[j] * abs[j],
+                "l1_sq" => (abs[j] * abs[j]).powi(2),
+                "l2" => sq[j],
+                "l2_sq" => sq[j] * sq[j],
+                "var" => var(j),
+                "var_sq" => var(j) * var(j),
+                "ds" => {
+                    let wm = w_mat.expect("ds needs W");
+                    let row_sq: f64 = wm
+                        .row(j)
+                        .iter()
+                        .map(|&x| (x as f64) * (x as f64))
+                        .sum();
+                    (sq[j] / b as f64) * row_sq
+                }
+                other => panic!("unknown coordinate method {other}"),
+            }) as f32
+        })
+        .collect()
+}
+
+/// Analytic FLOP model for one sketched linear backward (Eq. 6's ρ(V)).
+///
+/// Exact backward: 2·B·d_out·d_in (dX) + 2·B·d_out·d_in (dW).
+/// Sketched with r kept columns: both GEMMs shrink by r/d_out, plus the
+/// score pass (B·d_out) and the waterfilling sort (d_out log d_out).
+pub fn backward_flops(batch: usize, dout: usize, din: usize, kept: usize) -> f64 {
+    let gemm = 4.0 * batch as f64 * kept as f64 * din as f64;
+    let scores = 2.0 * batch as f64 * dout as f64;
+    let sort = dout as f64 * (dout.max(2) as f64).log2();
+    gemm + scores + sort
+}
+
+/// ρ(V) cost ratio of a sketched step vs exact for one layer (Eq. 6).
+pub fn cost_ratio(batch: usize, dout: usize, din: usize, budget: f64) -> f64 {
+    let kept = ((budget * dout as f64).round() as usize).clamp(1, dout);
+    backward_flops(batch, dout, din, kept)
+        / backward_flops(batch, dout, din, dout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pstar_budget_met() {
+        let w: Vec<f32> = (1..=32).map(|i| (i * i) as f32).collect();
+        for r in [2.0, 8.0, 20.0] {
+            let p = pstar_from_weights(&w, r);
+            let s: f64 = p.iter().map(|&x| x as f64).sum();
+            assert!((s - r).abs() < 0.05, "sum {s} != r {r}");
+            assert!(p.iter().all(|&x| x > 0.0 && x <= 1.0));
+        }
+    }
+
+    #[test]
+    fn pstar_proportional_below_saturation() {
+        // with a tight budget and mild weights: p_i ∝ √w_i
+        let w = [1.0f32, 4.0, 9.0, 16.0];
+        let p = pstar_from_weights(&w, 1.0);
+        for i in 1..4 {
+            let ratio = p[i] / p[0];
+            let expect = ((w[i] / w[0]) as f64).sqrt() as f32;
+            assert!((ratio - expect).abs() < 1e-3, "{ratio} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn pstar_saturation() {
+        let w = [1000.0f32, 1.0, 1.0, 1.0];
+        let p = pstar_from_weights(&w, 2.0);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+        let tail: f64 = p[1..].iter().map(|&x| x as f64).sum();
+        assert!((tail - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn correlated_count_is_exact() {
+        let mut rng = Pcg64::new(5, 0);
+        let w: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+        let p = pstar_from_weights(&w, 12.0);
+        for _ in 0..100 {
+            let z = correlated_bernoulli(&mut rng, &p);
+            let count = z.iter().filter(|&&b| b).count();
+            assert!((count as i64 - 12).abs() <= 1, "count {count}");
+        }
+    }
+
+    #[test]
+    fn correlated_marginals() {
+        let p = [0.9f32, 0.5, 0.25, 0.25, 0.1];
+        let mut rng = Pcg64::new(6, 0);
+        let mut freq = [0.0f64; 5];
+        let trials = 20000;
+        for _ in 0..trials {
+            let z = correlated_bernoulli(&mut rng, &p);
+            for (f, &zi) in freq.iter_mut().zip(&z) {
+                if zi {
+                    *f += 1.0;
+                }
+            }
+        }
+        for (f, &pi) in freq.iter().zip(&p) {
+            assert!((f / trials as f64 - pi as f64).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn scores_match_definitions() {
+        let g = Mat::from_rows(vec![vec![1.0, -2.0], vec![3.0, 0.0]]);
+        let l1 = column_scores("l1", &g, None);
+        assert!((l1[0] - 16.0).abs() < 1e-5); // (|1|+|3|)²
+        assert!((l1[1] - 4.0).abs() < 1e-5);
+        let l2 = column_scores("l2", &g, None);
+        assert!((l2[0] - 10.0).abs() < 1e-5);
+        let w = Mat::from_rows(vec![vec![2.0, 0.0], vec![0.0, 1.0]]);
+        let ds = column_scores("ds", &g, Some(&w));
+        // Γ_00 = (1+9)/2 = 5, row0 ‖·‖² = 4 → 20
+        assert!((ds[0] - 20.0).abs() < 1e-4, "{ds:?}");
+    }
+
+    #[test]
+    fn cost_ratio_monotone() {
+        let r05 = cost_ratio(128, 64, 64, 0.05);
+        let r20 = cost_ratio(128, 64, 64, 0.2);
+        let r100 = cost_ratio(128, 64, 64, 1.0);
+        assert!(r05 < r20 && r20 < 1.01 && (r100 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn kept_columns_inverse_prob() {
+        let z = [true, false, true];
+        let p = [0.5f32, 0.9, 0.25];
+        let kept = kept_columns(&z, &p);
+        assert_eq!(kept, vec![(0, 2.0), (2, 4.0)]);
+    }
+}

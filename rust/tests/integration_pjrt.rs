@@ -1,0 +1,241 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These cross-validate the two language implementations: the rust-native
+//! sketch math (rust/src/sketch) must agree with the jax implementation
+//! compiled into the `micro_*` artifacts, and the full train/eval/init
+//! artifacts must compose into a working training loop.
+//!
+//! All tests skip gracefully when `artifacts/` hasn't been built (run
+//! `make artifacts` first); CI treats missing artifacts as a failure via
+//! `make test`.
+
+use uavjp::config::{Preset, TrainConfig};
+use uavjp::coordinator::trainer::layer_mask;
+use uavjp::coordinator::Trainer;
+use uavjp::runtime::{HostTensor, Runtime};
+use uavjp::sketch;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts not built — skipping integration test");
+        return None;
+    }
+    Some(Runtime::open("artifacts").expect("open runtime"))
+}
+
+#[test]
+fn micro_pstar_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("micro_pstar").expect("load micro_pstar");
+    let w: Vec<f32> = (1..=64).map(|i| (i * i) as f32).collect();
+    for r in [4.0f32, 12.0, 40.0] {
+        let out = exe
+            .run(&[
+                HostTensor::F32(w.clone(), vec![64]),
+                HostTensor::scalar_f32(r),
+            ])
+            .expect("run");
+        let jax_p = out[0].as_f32().unwrap();
+        let native_p = sketch::pstar_from_weights(&w, r as f64);
+        for (a, b) in jax_p.iter().zip(&native_p) {
+            assert!(
+                (a - b).abs() < 5e-3,
+                "pstar mismatch at r={r}: jax {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn micro_corr_sample_exact_count_and_unbiased() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("micro_corr_sample").expect("load");
+    let p = vec![0.25f32; 64]; // Σp = 16
+    let trials = 200;
+    let mut freq = vec![0.0f64; 64];
+    for t in 0..trials {
+        let out = exe
+            .run(&[
+                HostTensor::U32(vec![11, t as u32], vec![2]),
+                HostTensor::F32(p.clone(), vec![64]),
+            ])
+            .expect("run");
+        let z = out[0].as_f32().unwrap();
+        let count: f32 = z.iter().sum();
+        assert!(
+            (count - 16.0).abs() <= 1.0,
+            "trial {t}: selected {count}, want 16"
+        );
+        for (f, &zi) in freq.iter_mut().zip(z) {
+            *f += zi as f64;
+        }
+    }
+    for f in &freq {
+        let emp = f / trials as f64;
+        assert!((emp - 0.25).abs() < 0.12, "marginal {emp} far from 0.25");
+    }
+}
+
+#[test]
+fn micro_sketch_bwd_matches_native_tensor_math() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("micro_sketch_bwd").expect("load");
+    let (b, dout, din) = (32usize, 64usize, 48usize);
+    let mut rng = uavjp::rng::Pcg64::new(3, 0);
+    let g: Vec<f32> = (0..b * dout).map(|_| rng.gaussian() as f32).collect();
+    let x: Vec<f32> = (0..b * din).map(|_| rng.gaussian() as f32).collect();
+    let w: Vec<f32> = (0..dout * din).map(|_| rng.gaussian() as f32).collect();
+    let colinv: Vec<f32> = (0..dout).map(|_| rng.f32() + 0.5).collect();
+    let rowinv: Vec<f32> = (0..b).map(|_| rng.f32() + 0.5).collect();
+    let out = exe
+        .run(&[
+            HostTensor::F32(g.clone(), vec![b, dout]),
+            HostTensor::F32(colinv.clone(), vec![dout]),
+            HostTensor::F32(rowinv.clone(), vec![b]),
+            HostTensor::F32(x.clone(), vec![b, din]),
+            HostTensor::F32(w.clone(), vec![dout, din]),
+        ])
+        .expect("run");
+    // native reference with the tensor substrate
+    let gm = uavjp::tensor::Mat { rows: b, cols: dout, data: g };
+    let mut ghat = gm.clone();
+    for i in 0..b {
+        for j in 0..dout {
+            ghat.data[i * dout + j] *= colinv[j] * rowinv[i];
+        }
+    }
+    let xm = uavjp::tensor::Mat { rows: b, cols: din, data: x };
+    let wm = uavjp::tensor::Mat { rows: dout, cols: din, data: w };
+    let (dx, dw) = uavjp::tensor::dense_backward(&ghat, &xm, &wm);
+    let kdx = out[0].as_f32().unwrap();
+    let kdw = out[1].as_f32().unwrap();
+    let kdb = out[2].as_f32().unwrap();
+    for (a, b_) in kdx.iter().zip(&dx.data) {
+        assert!((a - b_).abs() < 1e-3, "dx mismatch {a} vs {b_}");
+    }
+    for (a, b_) in kdw.iter().zip(&dw.data) {
+        assert!((a - b_).abs() < 1e-3, "dw mismatch {a} vs {b_}");
+    }
+    for j in 0..dout {
+        let db_j: f32 = (0..b).map(|i| ghat.data[i * dout + j]).sum();
+        assert!((kdb[j] - db_j).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn training_reduces_loss_mlp_l1() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    cfg.method = "l1".into();
+    cfg.budget = 0.2;
+    cfg.steps = 60;
+    cfg.eval_every = 60;
+    let trainer = Trainer::new(&rt, cfg).expect("trainer");
+    let curve = trainer.run().expect("run");
+    let first = curve.losses[0];
+    let last = curve.tail_loss(10).unwrap();
+    assert!(last < first * 0.8, "loss {first} → {last} did not decrease");
+    assert!(curve.final_acc().unwrap() > 0.3, "acc too low");
+}
+
+#[test]
+fn disabled_sketch_matches_baseline_trajectory() {
+    // location="none" must make any sketched artifact numerically follow
+    // the baseline artifact exactly (same seed ⇒ same batches ⇒ same loss).
+    let Some(rt) = runtime() else { return };
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    cfg.steps = 12;
+    cfg.eval_every = 12;
+    cfg.method = "per_column".into();
+    cfg.budget = 0.1;
+    cfg.location = "none".into();
+    let sketched = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    cfg.method = "baseline".into();
+    let baseline = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    for (a, b) in sketched.losses.iter().zip(&baseline.losses) {
+        assert!(
+            (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+            "trajectories diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_curve() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    cfg.method = "l1".into();
+    cfg.budget = 0.2;
+    cfg.steps = 10;
+    cfg.eval_every = 10;
+    let c1 = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    let c2 = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(c1.losses, c2.losses, "same seed must give identical curves");
+}
+
+#[test]
+fn eval_artifact_counts_correctly() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    cfg.method = "baseline".into();
+    cfg.test_size = 256;
+    let trainer = Trainer::new(&rt, cfg).unwrap();
+    let state = trainer.init_state().unwrap();
+    let (_, test) = trainer.datasets();
+    let (loss, acc) = trainer.evaluate(&state, &test).unwrap();
+    // fresh random init on 10 classes: acc near chance, loss near ln(10)
+    assert!(acc < 0.35, "untrained acc suspicious: {acc}");
+    assert!((loss - 2.302).abs() < 1.0, "untrained loss suspicious: {loss}");
+}
+
+#[test]
+fn fig4_layer_masks_affect_only_selected_layers() {
+    let Some(rt) = runtime() else { return };
+    // first-layer-only sketching must differ from all-layer sketching
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    cfg.method = "per_column".into();
+    cfg.budget = 0.05;
+    cfg.steps = 15;
+    cfg.eval_every = 15;
+    cfg.location = "first".into();
+    let first = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    cfg.location = "all".into();
+    let all = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_ne!(first.losses, all.losses);
+    let _ = layer_mask("first", 3);
+}
+
+#[test]
+fn manifest_covers_every_figure_dependency() {
+    let Some(rt) = runtime() else { return };
+    // every artifact the experiment registry references must exist
+    let needed = [
+        "train_mlp_l1",
+        "train_mlp_l1_ind",
+        "train_mlp_per_element",
+        "train_mlp_per_column",
+        "train_mlp_per_sample",
+        "train_mlp_l2",
+        "train_mlp_var",
+        "train_mlp_ds",
+        "train_mlp_rcs",
+        "train_mlp_gsv",
+        "train_mlp_gsv_sq",
+        "train_vit_l1",
+        "train_vit_ds",
+        "train_bagnet_l1",
+        "train_bagnet_ds",
+        "grads_mlp_baseline",
+        "grads_mlp_l1",
+        "grads_mlp_rcs",
+        "eval_mlp",
+        "eval_vit",
+        "eval_bagnet",
+        "init_mlp",
+        "init_vit",
+        "init_bagnet",
+    ];
+    for name in needed {
+        assert!(rt.manifest.get(name).is_some(), "missing artifact {name}");
+    }
+}

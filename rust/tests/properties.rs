@@ -1,0 +1,233 @@
+//! Property-based tests over the coordinator-side invariants, using the
+//! from-scratch `ptest` harness (DESIGN.md §6: proptest is unavailable
+//! offline). These mirror the paper's §3 guarantees on the rust-native
+//! implementations.
+
+use uavjp::ptest::{check, gen};
+use uavjp::rng::Pcg64;
+use uavjp::sketch::{
+    backward_flops, correlated_bernoulli, cost_ratio, independent_bernoulli,
+    kept_columns, pstar_from_weights,
+};
+
+#[test]
+fn prop_pstar_budget_and_bounds() {
+    check(
+        1,
+        200,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 128);
+            let w = gen::vec_f32_pos(rng, n);
+            let r = gen::f64_in(rng, 1.0, n as f64 - 0.5);
+            (w, r)
+        },
+        |(w, r)| {
+            let p = pstar_from_weights(w, *r);
+            if p.len() != w.len() {
+                return Err("length mismatch".into());
+            }
+            if !p.iter().all(|&x| x > 0.0 && x <= 1.0) {
+                return Err(format!("out of range: {p:?}"));
+            }
+            let sum: f64 = p.iter().map(|&x| x as f64).sum();
+            if (sum - r).abs() > 0.05 * r.max(1.0) {
+                return Err(format!("budget violated: Σp = {sum}, r = {r}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pstar_is_monotone_in_weights() {
+    // heavier coordinates must never get smaller probabilities
+    check(
+        2,
+        150,
+        |rng| {
+            let n = gen::usize_in(rng, 3, 64);
+            let w = gen::vec_f32_pos(rng, n);
+            let r = gen::f64_in(rng, 1.0, n as f64 * 0.8);
+            (w, r)
+        },
+        |(w, r)| {
+            let p = pstar_from_weights(w, *r);
+            let mut idx: Vec<usize> = (0..w.len()).collect();
+            idx.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+            for pair in idx.windows(2) {
+                if p[pair[0]] < p[pair[1]] - 1e-5 {
+                    return Err(format!(
+                        "w[{}]={} ≥ w[{}]={} but p {} < {}",
+                        pair[0], w[pair[0]], pair[1], w[pair[1]],
+                        p[pair[0]], p[pair[1]]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_correlated_sampling_count_fixed() {
+    check(
+        3,
+        150,
+        |rng| {
+            let n = gen::usize_in(rng, 4, 96);
+            let w = gen::vec_f32_pos(rng, n);
+            let r = gen::f64_in(rng, 1.0, (n as f64 - 1.0).max(1.5));
+            (w, r)
+        },
+        |(w, r)| {
+            let p = pstar_from_weights(w, *r);
+            let total: f64 = p.iter().map(|&x| x as f64).sum();
+            let mut rng = Pcg64::new(17, 0);
+            for _ in 0..20 {
+                let z = correlated_bernoulli(&mut rng, &p);
+                let count = z.iter().filter(|&&b| b).count() as f64;
+                // systematic sampling: count ∈ {⌊Σp⌋, ⌈Σp⌉}
+                if count < total.floor() - 1e-9 || count > total.ceil() + 1e-9 {
+                    return Err(format!("count {count} outside [{}] Σp={total}",
+                        total));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mask_rescale_unbiased() {
+    // E[z_i/p_i] = 1 for both sampling schemes (Monte-Carlo check)
+    check(
+        4,
+        8,
+        |rng| {
+            let n = gen::usize_in(rng, 4, 24);
+            let w = gen::vec_f32_pos(rng, n);
+            (w, 0.0f64)
+        },
+        |(w, _)| {
+            let r = (w.len() as f64 / 3.0).max(1.0);
+            let p = pstar_from_weights(w, r);
+            let mut rng = Pcg64::new(23, 1);
+            let trials = 6000;
+            let mut acc = vec![0.0f64; w.len()];
+            for _ in 0..trials {
+                let z = correlated_bernoulli(&mut rng, &p);
+                for (a, (zi, pi)) in acc.iter_mut().zip(z.iter().zip(&p)) {
+                    if *zi {
+                        *a += 1.0 / *pi as f64;
+                    }
+                }
+            }
+            for (i, a) in acc.iter().enumerate() {
+                let mean = a / trials as f64;
+                // wide tolerance for small p_i (heavy-tailed estimator)
+                let tol = 0.1 + 0.7 * (1.0 - p[i] as f64);
+                if (mean - 1.0).abs() > tol {
+                    return Err(format!(
+                        "coordinate {i}: E[z/p] = {mean:.3} (p={})", p[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_independent_sampling_marginals() {
+    check(
+        5,
+        6,
+        |rng| {
+            let n = gen::usize_in(rng, 3, 16);
+            (gen::vec_f32_pos(rng, n), 0.0f64)
+        },
+        |(w, _)| {
+            let p = pstar_from_weights(w, (w.len() / 2).max(1) as f64);
+            let mut rng = Pcg64::new(29, 2);
+            let trials = 5000;
+            let mut freq = vec![0.0f64; p.len()];
+            for _ in 0..trials {
+                let z = independent_bernoulli(&mut rng, &p);
+                for (f, zi) in freq.iter_mut().zip(z) {
+                    if zi {
+                        *f += 1.0;
+                    }
+                }
+            }
+            for (f, &pi) in freq.iter().zip(&p) {
+                if (f / trials as f64 - pi as f64).abs() > 0.05 {
+                    return Err(format!("marginal {} vs p {}", f / trials as f64, pi));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kept_columns_consistent() {
+    check(
+        6,
+        200,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 64);
+            (gen::vec_f32_pos(rng, n), 0.0f64)
+        },
+        |(w, _)| {
+            let r = (w.len() as f64 * 0.3).max(1.0);
+            let p = pstar_from_weights(w, r);
+            let mut rng = Pcg64::new(31, 3);
+            let z = correlated_bernoulli(&mut rng, &p);
+            let kept = kept_columns(&z, &p);
+            if kept.len() != z.iter().filter(|&&b| b).count() {
+                return Err("kept length mismatch".into());
+            }
+            for &(j, inv) in &kept {
+                if !z[j] {
+                    return Err(format!("index {j} not selected"));
+                }
+                if (inv - 1.0 / p[j]).abs() > 1e-6 {
+                    return Err("bad rescale".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cost_model_monotone_and_bounded() {
+    check(
+        7,
+        200,
+        |rng| {
+            let b = gen::usize_in(rng, 1, 256);
+            let d = gen::usize_in(rng, 2, 512);
+            (b, d)
+        },
+        |&(b, d)| {
+            let full = backward_flops(b, d, d, d);
+            let mut prev = 0.0;
+            for kept in [1, d / 4 + 1, d / 2 + 1, d] {
+                let f = backward_flops(b, d, d, kept.min(d));
+                if f < prev {
+                    return Err("flops not monotone in kept".into());
+                }
+                prev = f;
+                if f > full + 1.0 {
+                    return Err("sketched flops exceed dense".into());
+                }
+            }
+            let r = cost_ratio(b, d, d, 0.1);
+            if !(0.0 < r && r <= 1.0 + 1e-9) {
+                return Err(format!("cost ratio {r} out of (0,1]"));
+            }
+            Ok(())
+        },
+    );
+}
