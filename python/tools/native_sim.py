@@ -1,0 +1,249 @@
+"""Faithful Python port of the rust native backend (same RNG streams, same
+call order) to pre-verify the deterministic test assertions."""
+import numpy as np
+import math
+
+MASK128 = (1 << 128) - 1
+M64 = (1 << 64) - 1
+MUL = 0x2360ed051fc65da44385df649fccf645
+
+class Pcg64:
+    def __init__(self, seed, stream):
+        seed &= M64; stream &= M64
+        inc = (((stream << 1) | 1) ^ 0xda3e39cb94b95bdb) & MASK128
+        self.inc = ((inc << 1) | 1) & MASK128
+        self.state = 0
+        self.state = (self.state * MUL + self.inc) & MASK128
+        self.state = (self.state + seed) & MASK128
+        self.state = (self.state * MUL + self.inc) & MASK128
+    def next_u64(self):
+        self.state = (self.state * MUL + self.inc) & MASK128
+        rot = self.state >> 122
+        xsl = ((self.state >> 64) ^ self.state) & M64
+        rot &= 63
+        return xsl if rot == 0 else (((xsl >> rot) | (xsl << (64 - rot))) & M64)
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+    def f32(self):
+        return np.float32(self.f64())
+    def below(self, n):
+        assert n > 0
+        while True:
+            x = self.next_u64()
+            m = x * n
+            l = m & M64
+            if l >= ((M64 - n + 1) % n):
+                return m >> 64
+    def gaussian(self):
+        u1 = max(1.0 - self.f64(), 1e-300)
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+    def bernoulli(self, p):
+        return self.f64() < p
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+# ---- data generator (SynthMnist) ----
+def mnist_anchors(seed):
+    anchors = []
+    for cls in range(10):
+        rng = Pcg64(seed ^ 0xa17c, 100 + cls)
+        coarse = np.zeros(49, np.float32)
+        pos = (rng.below(7), rng.below(7))
+        for _ in range(12):
+            coarse[pos[0] * 7 + pos[1]] = 1.0
+            d = rng.below(4)
+            if d == 0: pos = (min(pos[0] + 1, 6), pos[1])
+            elif d == 1: pos = (max(pos[0] - 1, 0), pos[1])
+            elif d == 2: pos = (pos[0], min(pos[1] + 1, 6))
+            else: pos = (pos[0], max(pos[1] - 1, 0))
+        img = np.zeros(784, np.float32)
+        for r in range(28):
+            for c in range(28):
+                img[r * 28 + c] = coarse[(r // 4) * 7 + (c // 4)]
+        anchors.append(img)
+    return anchors
+
+def generate(n, seed, split):
+    stream = 1 if split == "train" else 2
+    rng = Pcg64(seed, stream)
+    anchors = mnist_anchors(seed)
+    x = np.zeros((n, 784), np.float32)
+    y = np.zeros(n, np.int64)
+    for i in range(n):
+        cls = rng.below(10)
+        y[i] = cls
+        a = anchors[cls].reshape(28, 28)
+        bright = 0.8 + 0.4 * rng.f32()
+        dr = rng.below(5) - 2
+        dc = rng.below(5) - 2
+        row = np.zeros((28, 28), np.float32)
+        for r in range(28):
+            for c in range(28):
+                sr, sc = r - dr, c - dc
+                base = a[sr, sc] if 0 <= sr < 28 and 0 <= sc < 28 else 0.0
+                noise = np.float32(rng.gaussian()) * np.float32(0.25)
+                row[r, c] = min(max(base * bright + noise, -0.5), 1.5)
+        x[i] = row.reshape(-1)
+    return x, y
+
+# ---- sketch math ----
+def pstar_from_weights(w, r):
+    n = len(w)
+    if r >= n:
+        return np.ones(n, np.float32)
+    t = [(math.sqrt(max(float(wi), 0.0)), i) for i, wi in enumerate(w)]
+    t.sort(key=lambda p: -p[0])
+    total_t = sum(v for v, _ in t)
+    if total_t <= 0.0:
+        return np.full(n, min(max(r / n, 1e-6), 1.0), np.float32)
+    suffix = [0.0] * (n + 1)
+    for k in range(n - 1, -1, -1):
+        suffix[k] = suffix[k + 1] + t[k][0]
+    lam = suffix[0] / r
+    for k in range(n):
+        rem = r - k
+        if rem <= 0: break
+        cand = suffix[k] / rem
+        prev_ok = k == 0 or t[k - 1][0] >= cand - 1e-12
+        cur_ok = t[k][0] <= cand + 1e-12
+        if prev_ok and cur_ok:
+            lam = cand; break
+    p = np.zeros(n, np.float32)
+    for tv, i in t:
+        p[i] = min(max(min(tv / lam, 1.0), 1e-6), 1.0)
+    return p
+
+def correlated_bernoulli(rng, p):
+    u = max(rng.f64(), 1e-12)
+    out = np.zeros(len(p), bool)
+    c_prev = 0.0
+    for i, pi in enumerate(p):
+        c = c_prev + float(pi)
+        out[i] = math.floor(c - u) > math.floor(c_prev - u)
+        c_prev = c
+    return out
+
+def independent_bernoulli(rng, p):
+    return np.array([rng.bernoulli(float(pi)) for pi in p])
+
+def column_scores(method, g, w):
+    abss = np.abs(g).sum(0).astype(np.float64)
+    sq = (g.astype(np.float64) ** 2).sum(0)
+    if method in ("l1", "l1_ind"): return (abss * abss).astype(np.float32)
+    if method == "ds":
+        return ((sq / g.shape[0]) * (w.astype(np.float64) ** 2).sum(1)).astype(np.float32)
+    raise ValueError(method)
+
+def sketched_linear_backward(g, x, w, method, budget, rng, need_dx):
+    dout = g.shape[1]
+    if method == "per_column":
+        p = np.full(dout, np.float32(min(max(budget, 1e-6), 1.0)), np.float32)
+    else:
+        scores = column_scores(method, g, w)
+        p = pstar_from_weights(scores, budget * dout)
+    independent = method == "per_column" or method.endswith("_ind")
+    z = independent_bernoulli(rng, p) if independent else correlated_bernoulli(rng, p)
+    inv = np.where(z, 1.0 / p, 0.0).astype(np.float32)
+    gh = g * inv[None, :]
+    dw = gh.T @ x
+    db = gh.sum(0)
+    dx = gh @ w if need_dx else None
+    return dw, db, dx
+
+# ---- model ----
+def mlp_new(dims, seed):
+    layers = []
+    for li, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        rng = Pcg64(seed ^ 0x1e57, 300 + li)
+        std = math.sqrt(2.0 / din)
+        wdata = np.array([np.float32(rng.gaussian() * std)
+                          for _ in range(dout * din)], np.float32).reshape(dout, din)
+        layers.append([wdata, np.zeros(dout, np.float32)])
+    return layers
+
+def forward(layers, x):
+    acts = [x]; zs = []
+    n = len(layers)
+    for i, (w, b) in enumerate(layers):
+        z = (acts[-1] @ w.T + b).astype(np.float32)
+        h = np.maximum(z, 0) if i + 1 < n else z
+        zs.append(z); acts.append(h.astype(np.float32))
+    return acts, zs
+
+def ce_loss_grad(logits, y):
+    m = logits.max(1, keepdims=True)
+    e = np.exp((logits - m).astype(np.float32))
+    sm = e / e.sum(1, keepdims=True)
+    B = len(y)
+    loss = -np.log(np.maximum(sm[np.arange(B), y], 1e-12)).mean()
+    g = sm.copy(); g[np.arange(B), y] -= 1.0
+    return float(loss), (g / B).astype(np.float32)
+
+def backward(layers, acts, zs, dlogits, method, budget, mask, rng):
+    n = len(layers)
+    dws = [None] * n; dbs = [None] * n
+    g = dlogits
+    for i in range(n - 1, -1, -1):
+        x = acts[i]; w = layers[i][0]
+        need_dx = i > 0
+        if mask[i] > 0 and method != "baseline":
+            dw, db, dx = sketched_linear_backward(g, x, w, method, budget, rng, need_dx)
+        else:
+            dw = g.T @ x; db = g.sum(0); dx = g @ w if need_dx else None
+        dws[i] = dw.astype(np.float32); dbs[i] = db.astype(np.float32)
+        if dx is not None:
+            dx = dx.astype(np.float32)
+            dx[zs[i - 1] <= 0] = 0
+            g = dx
+    return dws, dbs
+
+def clip(dws, dbs, maxn=1.0):
+    sq = sum(float((d.astype(np.float64) ** 2).sum()) for d in dws + dbs)
+    norm = math.sqrt(sq)
+    if norm > maxn:
+        s = np.float32(maxn / max(norm, 1e-12))
+        dws = [d * s for d in dws]; dbs = [d * s for d in dbs]
+    return dws, dbs
+
+def run_trainer(dims, method, budget, location, seed, train_size, test_size,
+                steps, eval_every, batch, lr):
+    xtr, ytr = DATA[("train", train_size)]
+    xte, yte = DATA[("test", test_size)]
+    layers = mlp_new(dims, seed)
+    mask = [0.0] * (len(dims) - 1)
+    if location == "all": mask = [1.0] * len(mask)
+    sk_rng = Pcg64(seed ^ 0x9e3779b9, 11)
+    rng = Pcg64(seed + 77, 3)
+    losses = []
+    step = 0
+    while step < steps:
+        order = list(range(train_size))
+        rng.shuffle(order)
+        cursor = 0
+        while cursor + batch <= train_size and step < steps:
+            idx = order[cursor:cursor + batch]; cursor += batch
+            xb, yb = xtr[idx], ytr[idx]
+            acts, zs = forward(layers, xb)
+            loss, dl = ce_loss_grad(acts[-1], yb)
+            dws, dbs = backward(layers, acts, zs, dl, method, budget, mask, sk_rng)
+            dws, dbs = clip(dws, dbs)
+            for li in range(len(layers)):
+                layers[li][0] = (layers[li][0] - np.float32(lr) * dws[li]).astype(np.float32)
+                layers[li][1] = (layers[li][1] - np.float32(lr) * dbs[li]).astype(np.float32)
+            losses.append(loss)
+            step += 1
+    # evaluate
+    nb = test_size // batch
+    lsum = 0.0; correct = 0.0
+    for b in range(nb):
+        xb = xte[b * batch:(b + 1) * batch]; yb = yte[b * batch:(b + 1) * batch]
+        acts, _ = forward(layers, xb)
+        l, _ = ce_loss_grad(acts[-1], yb)
+        lsum += l * batch
+        correct += (acts[-1].argmax(1) == yb).sum()
+    return losses, lsum / (nb * batch), correct / (nb * batch)
+
+DATA = {}

@@ -2,25 +2,25 @@
 //! median-of-N timing with warmup; `harness = false`).
 //!
 //! Sections map to the paper's evaluation (DESIGN.md §4):
-//!   step_latency   — AOT train-step wall time per (model, method): the ρ(V)
-//!                    wall-clock column of Eq 6 on this runtime
-//!   eq6_gemm       — dense vs kept-column backward GEMMs (rust-native): the
-//!                    real FLOP-saving mechanism, per budget
+//!   native_bwd     — exact vs sketched layer backward (scores + waterfilling
+//!                    + sampling + kept-column GEMMs) across budgets and
+//!                    widths: the ρ(V) wall-clock of Eq 6 on real kernels
+//!   native_step    — full native train-step wall time, exact vs sketched
+//!   step_latency   — AOT train-step wall time per (model, method) through
+//!                    PJRT (requires --features pjrt + built artifacts)
+//!   eq6_gemm       — dense vs kept-column backward GEMMs (kernel-only view)
 //!   pipeline       — simulated pipeline step time vs budget (Fig §1(i))
 //!   substrates     — pstar / correlated sampling / JSON parse throughput
 //!
-//! Run all:  cargo bench    Filter:  cargo bench -- step_latency
+//! Run all:  cargo bench    Filter:  cargo bench -- native_bwd
 //! Results append-logged by `make bench` into bench_output.txt.
 
 use std::time::Instant;
 
 use uavjp::config::{Preset, TrainConfig};
-use uavjp::coordinator::trainer::layer_mask;
-use uavjp::coordinator::Trainer;
-use uavjp::data::{self, DatasetKind};
+use uavjp::native::{sketched_linear_backward, NativeTrainer};
 use uavjp::pipeline::{simulate, PipelineConfig};
 use uavjp::rng::Pcg64;
-use uavjp::runtime::Runtime;
 use uavjp::sketch::{correlated_bernoulli, kept_columns, pstar_from_weights};
 use uavjp::tensor::{dense_backward, sparse_dw, sparse_dx, Mat};
 
@@ -38,7 +38,87 @@ fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     times[times.len() / 2]
 }
 
+/// Exact vs sketched native layer backward, *including* the sketch overhead
+/// (scores, waterfilling, sampling) the analytic model in `sketch::
+/// backward_flops` accounts for — the honest ρ wall-clock.
+fn bench_native_bwd(filter: &str) {
+    if !"native_bwd".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== native_bwd (exact vs sketched layer backward, full path) ==");
+    let b = 128usize;
+    for dout in [256usize, 512, 1024] {
+        let din = dout;
+        let mut rng = Pcg64::new(7, dout as u64);
+        let g = Mat::from_fn(b, dout, |_, _| rng.gaussian() as f32);
+        let x = Mat::from_fn(b, din, |_, _| rng.gaussian() as f32);
+        let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
+        let dense = time_median(5, || {
+            let _ = dense_backward(&g, &x, &w);
+        });
+        println!(
+            "  d_out={dout:<5} exact: {:8.2} ms",
+            dense * 1e3
+        );
+        for budget in [0.05, 0.1, 0.2, 0.5] {
+            let mut srng = Pcg64::new(11, dout as u64);
+            let t = time_median(5, || {
+                let _ = sketched_linear_backward(
+                    &g, &x, &w, "l1", budget, &mut srng, true,
+                );
+            });
+            println!(
+                "  d_out={dout:<5} l1 p={budget:<4}: {:8.2} ms  (speedup {:.2}x, ρ_wall {:.3})",
+                t * 1e3,
+                dense / t,
+                t / dense
+            );
+        }
+    }
+}
+
+/// Whole native train-step (forward + backward + clip + SGD), exact vs
+/// sketched, at the paper's MLP shape.
+fn bench_native_step(filter: &str) {
+    if !"native_step".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== native_step (full train-step wall time, MLP 784-64-64-10) ==");
+    for (method, budget) in [("baseline", 1.0), ("l1", 0.25), ("l1", 0.1)] {
+        let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+        cfg.method = method.into();
+        cfg.budget = budget;
+        cfg.train_size = 512;
+        cfg.test_size = 128;
+        let mut trainer = NativeTrainer::new(cfg).expect("trainer");
+        let (train_ds, _) = trainer.datasets();
+        let batch = trainer.batch_size();
+        let dim = train_ds.dim;
+        let x = Mat {
+            rows: batch,
+            cols: dim,
+            data: train_ds.x[..batch * dim].to_vec(),
+        };
+        let y = train_ds.y[..batch].to_vec();
+        let mut step = 0usize;
+        let med = time_median(7, || {
+            trainer.step(&x, &y, step);
+            step += 1;
+        });
+        println!(
+            "  {method:<9} p={budget:<4}: {:8.2} ms/step  ({:6.1} steps/s)",
+            med * 1e3,
+            1.0 / med
+        );
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn bench_step_latency(filter: &str) {
+    use uavjp::coordinator::trainer::layer_mask;
+    use uavjp::coordinator::Trainer;
+    use uavjp::data::{self, DatasetKind};
+    use uavjp::runtime::Runtime;
     if !"step_latency".contains(filter) && !filter.is_empty() {
         return;
     }
@@ -99,6 +179,15 @@ fn bench_step_latency(filter: &str) {
             1.0 / med
         );
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_step_latency(filter: &str) {
+    if !"step_latency".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== step_latency ==");
+    println!("  skipped: built without the `pjrt` feature (native benches above cover the CPU path)");
 }
 
 fn bench_eq6_gemm(filter: &str) {
@@ -190,6 +279,8 @@ fn main() {
         .find(|a| !a.starts_with('-'))
         .unwrap_or_default();
     println!("uavjp bench harness (median-of-N, warmup excluded)");
+    bench_native_bwd(&filter);
+    bench_native_step(&filter);
     bench_step_latency(&filter);
     bench_eq6_gemm(&filter);
     bench_pipeline(&filter);

@@ -1,18 +1,13 @@
-//! Quickstart: load the AOT artifacts, train a sketched MLP for a handful of
-//! steps, and compare against the exact-VJP baseline.
+//! Quickstart: train a sketched MLP on the native backend and compare it
+//! against the exact-VJP baseline — no artifacts, no python, no setup.
 //!
 //! Run with:  cargo run --release --example quickstart
-//! (requires `make artifacts` first)
 
 use anyhow::Result;
 use uavjp::config::{Preset, TrainConfig};
-use uavjp::coordinator::Trainer;
-use uavjp::runtime::Runtime;
+use uavjp::native::NativeTrainer;
 
 fn main() -> Result<()> {
-    let rt = Runtime::open_default()?;
-    println!("loaded manifest with {} artifacts", rt.manifest.len());
-
     let mut base: TrainConfig = Preset::Smoke.base("mlp");
     base.steps = 400;
     base.eval_every = 100;
@@ -22,7 +17,7 @@ fn main() -> Result<()> {
         cfg.method = method.to_string();
         cfg.budget = budget;
         cfg.location = if method == "baseline" { "none".into() } else { "all".into() };
-        let trainer = Trainer::new(&rt, cfg)?;
+        let mut trainer = NativeTrainer::new(cfg)?;
         let t0 = std::time::Instant::now();
         let curve = trainer.run()?;
         println!(
@@ -34,6 +29,7 @@ fn main() -> Result<()> {
         );
     }
     println!("\nThe ℓ1 sketch keeps 15% of backward columns yet trains close to baseline —");
-    println!("the paper's headline effect. See `uavjp fig1b` for the full comparison.");
+    println!("the paper's headline effect. See `uavjp fig1b` for the full comparison,");
+    println!("and examples/train_native.rs for the budget sweep.");
     Ok(())
 }

@@ -3,26 +3,79 @@
 //! The `paper` preset mirrors §5's protocol (dataset sizes, epochs, LR
 //! grids); `ci` is the scaled protocol this single-core box actually runs
 //! for EXPERIMENTS.md (DESIGN.md §6). Configs can be loaded from / saved to
-//! JSON so runs are reproducible artifacts.
+//! JSON so runs are reproducible artifacts. The [`Backend`] enum selects
+//! which execution engine a run uses (DESIGN.md §7).
 
 use crate::json::{self, Value};
 
+/// Which engine executes training steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// CPU-native MLP + sketched backward ([`crate::native`]); needs no
+    /// artifacts and is the default everywhere.
+    #[default]
+    Native,
+    /// PJRT execution of AOT-compiled JAX graphs ([`crate::runtime`]);
+    /// requires the `pjrt` cargo feature and a built `artifacts/` dir.
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse `"native"` / `"pjrt"` (panics on anything else, like
+    /// [`Preset::parse`]).
+    pub fn parse(s: &str) -> Backend {
+        match s {
+            "native" => Backend::Native,
+            "pjrt" => Backend::Pjrt,
+            other => panic!("unknown backend {other} (want native|pjrt)"),
+        }
+    }
+
+    /// Canonical name, inverse of [`Backend::parse`].
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// One fully-specified training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Model family: `"mlp"` (both backends) or `"vit"`/`"bagnet"` (pjrt).
     pub model: String,
+    /// Sketch method (`"baseline"` = exact VJPs everywhere).
     pub method: String,
+    /// Kept-column budget p ∈ (0, 1].
     pub budget: f64,
+    /// Base learning rate (see [`TrainConfig::lr_at`] for the schedule).
     pub lr: f64,
+    /// Run seed: init, batch order and sketch gates all derive from it.
     pub seed: u64,
+    /// Training-set size (synthetic generator, shared across methods).
     pub train_size: usize,
+    /// Test-set size.
     pub test_size: usize,
+    /// Number of optimizer steps.
     pub steps: usize,
+    /// Evaluate on the test set every this many steps.
     pub eval_every: usize,
-    /// which sketched layers are active: "all" | "first" | "last"
+    /// which sketched layers are active: "all" | "first" | "last" | "none"
     pub location: String,
     /// cosine decay to lr*0.01 over `steps` when true (bagnet/vit recipe)
     pub cosine: bool,
+    /// Linear LR warmup steps before the schedule proper.
     pub warmup_steps: usize,
+    /// Execution engine for this run.
+    pub backend: Backend,
+    /// Optimizer: "sgd" | "momentum" | "adam" (native backend; PJRT bakes
+    /// the recipe into the artifact).
+    pub optimizer: String,
+    /// Loss head: "ce" | "mse" (native backend).
+    pub loss: String,
+    /// Batch size (PJRT artifacts bake 128; native follows the config).
+    pub batch: usize,
 }
 
 impl Default for TrainConfig {
@@ -40,6 +93,10 @@ impl Default for TrainConfig {
             location: "all".into(),
             cosine: false,
             warmup_steps: 0,
+            backend: Backend::Native,
+            optimizer: "sgd".into(),
+            loss: "ce".into(),
+            batch: 128,
         }
     }
 }
@@ -74,6 +131,10 @@ impl TrainConfig {
             ("location", Value::str(&self.location)),
             ("cosine", Value::Bool(self.cosine)),
             ("warmup_steps", Value::num(self.warmup_steps as f64)),
+            ("backend", Value::str(self.backend.as_str())),
+            ("optimizer", Value::str(&self.optimizer)),
+            ("loss", Value::str(&self.loss)),
+            ("batch", Value::num(self.batch as f64)),
         ])
     }
 
@@ -92,6 +153,14 @@ impl TrainConfig {
             location: v.get("location").as_str().unwrap_or(&d.location).to_string(),
             cosine: v.get("cosine").as_bool().unwrap_or(d.cosine),
             warmup_steps: v.get("warmup_steps").as_usize().unwrap_or(0),
+            backend: v
+                .get("backend")
+                .as_str()
+                .map(Backend::parse)
+                .unwrap_or(d.backend),
+            optimizer: v.get("optimizer").as_str().unwrap_or(&d.optimizer).to_string(),
+            loss: v.get("loss").as_str().unwrap_or(&d.loss).to_string(),
+            batch: v.get("batch").as_usize().unwrap_or(d.batch),
         }
     }
 }
@@ -189,6 +258,14 @@ impl Preset {
             }
             _ => panic!("unknown model {model}"),
         }
+        // optimizer recipes per model (§5 / App B.2); the PJRT artifacts
+        // bake these in, the native backend reads them from the config
+        c.optimizer = match model {
+            "mlp" => "sgd",
+            "bagnet" => "momentum",
+            _ => "adam",
+        }
+        .into();
         c
     }
 
@@ -290,5 +367,50 @@ mod tests {
     #[should_panic]
     fn bad_preset_panics() {
         Preset::parse("warp");
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("native"), Backend::Native);
+        assert_eq!(Backend::parse("pjrt"), Backend::Pjrt);
+        assert_eq!(Backend::default(), Backend::Native);
+        for b in [Backend::Native, Backend::Pjrt] {
+            assert_eq!(Backend::parse(b.as_str()), b);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_backend_panics() {
+        Backend::parse("tpu");
+    }
+
+    #[test]
+    fn new_fields_roundtrip_and_default() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.backend, Backend::Native);
+        assert_eq!(c.batch, 128);
+        c.backend = Backend::Pjrt;
+        c.optimizer = "adam".into();
+        c.loss = "mse".into();
+        c.batch = 64;
+        let c2 = TrainConfig::from_json(&c.to_json());
+        assert_eq!(c2.backend, Backend::Pjrt);
+        assert_eq!(c2.optimizer, "adam");
+        assert_eq!(c2.loss, "mse");
+        assert_eq!(c2.batch, 64);
+        // configs without the new keys fall back to defaults
+        let legacy = crate::json::parse(r#"{"model":"mlp","method":"l1"}"#).unwrap();
+        let c3 = TrainConfig::from_json(&legacy);
+        assert_eq!(c3.backend, Backend::Native);
+        assert_eq!(c3.optimizer, "sgd");
+        assert_eq!(c3.batch, 128);
+    }
+
+    #[test]
+    fn preset_optimizer_recipes() {
+        assert_eq!(Preset::Ci.base("mlp").optimizer, "sgd");
+        assert_eq!(Preset::Ci.base("bagnet").optimizer, "momentum");
+        assert_eq!(Preset::Smoke.base("vit").optimizer, "adam");
     }
 }

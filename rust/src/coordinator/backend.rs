@@ -1,0 +1,179 @@
+//! Backend dispatch: one trait the sweeps / experiments / CLI drive, two
+//! engines behind it (DESIGN.md §7).
+//!
+//! [`NativeBackend`] is always available and needs nothing on disk.
+//! `PjrtBackend` wraps the AOT-artifact runtime and only exists under the
+//! `pjrt` cargo feature; without it, [`open`] returns a helpful error
+//! instead.
+
+use crate::config::{Backend, TrainConfig};
+use crate::metrics::RunCurve;
+use crate::native::NativeTrainer;
+use anyhow::Result;
+
+use super::variance::{self, VarianceReport};
+
+/// A training engine: everything the coordinator needs to run the paper's
+/// protocol (training runs plus the Prop 2.2 / Eq 6 gradient probes).
+pub trait TrainBackend {
+    /// Short name for logs ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Whether this engine implements a sketch method (experiments skip
+    /// unsupported series instead of failing the whole figure).
+    fn supports_method(&self, method: &str) -> bool;
+
+    /// Whether this engine can train a model family (experiments skip
+    /// unsupported models, so `uavjp all` completes on every backend).
+    fn supports_model(&self, model: &str) -> bool;
+
+    /// Execute one full training run.
+    fn train(&self, cfg: &TrainConfig) -> Result<RunCurve>;
+
+    /// Monte-Carlo gradient bias/variance at a fixed parameter point and
+    /// batch (Prop 2.2 validation).
+    fn grad_probe(
+        &self,
+        method: &str,
+        budget: f64,
+        trials: usize,
+        seed: u64,
+    ) -> Result<VarianceReport>;
+
+    /// Minibatch gradient variance σ² at the same point (Eq 6's σ²).
+    fn sigma2(&self, trials: usize) -> Result<f64>;
+}
+
+/// The CPU-native engine ([`crate::native`]).
+pub struct NativeBackend;
+
+impl TrainBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_method(&self, method: &str) -> bool {
+        crate::native::NATIVE_METHODS.contains(&method)
+    }
+
+    fn supports_model(&self, model: &str) -> bool {
+        crate::native::trainer::model_dims(model).is_ok()
+    }
+
+    fn train(&self, cfg: &TrainConfig) -> Result<RunCurve> {
+        NativeTrainer::new(cfg.clone())?.run()
+    }
+
+    fn grad_probe(
+        &self,
+        method: &str,
+        budget: f64,
+        trials: usize,
+        seed: u64,
+    ) -> Result<VarianceReport> {
+        variance::measure_native(method, budget, trials, seed)
+    }
+
+    fn sigma2(&self, trials: usize) -> Result<f64> {
+        variance::sigma2_native(trials)
+    }
+}
+
+/// The PJRT/AOT-artifact engine ([`crate::runtime`]).
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    /// The artifact runtime this backend executes through.
+    pub rt: crate::runtime::Runtime,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    /// Open an artifacts directory (expects `manifest.json` inside).
+    pub fn open(artifacts: &str) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: crate::runtime::Runtime::open(artifacts)? })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl TrainBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports_method(&self, _method: &str) -> bool {
+        // the artifact set covers every method; a missing artifact still
+        // errors with its name at load time
+        true
+    }
+
+    fn supports_model(&self, _model: &str) -> bool {
+        true
+    }
+
+    fn train(&self, cfg: &TrainConfig) -> Result<RunCurve> {
+        super::trainer::Trainer::new(&self.rt, cfg.clone())?.run()
+    }
+
+    fn grad_probe(
+        &self,
+        method: &str,
+        budget: f64,
+        trials: usize,
+        seed: u64,
+    ) -> Result<VarianceReport> {
+        variance::measure(&self.rt, method, budget, trials, seed)
+    }
+
+    fn sigma2(&self, trials: usize) -> Result<f64> {
+        variance::sigma2(&self.rt, trials)
+    }
+}
+
+/// Open the engine selected by `backend`. `artifacts` is the AOT directory
+/// the PJRT engine loads from (ignored by the native engine).
+pub fn open(backend: Backend, artifacts: &str) -> Result<Box<dyn TrainBackend>> {
+    match backend {
+        Backend::Native => {
+            let _ = artifacts;
+            Ok(Box::new(NativeBackend))
+        }
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt => Ok(Box::new(PjrtBackend::open(artifacts)?)),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt => anyhow::bail!(
+            "backend pjrt requires rebuilding with `--features pjrt` \
+             (and a built {artifacts}/ directory); the default build is \
+             native-only (DESIGN.md §7)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+
+    #[test]
+    fn native_backend_trains() {
+        let mut cfg = Preset::Smoke.base("mlp");
+        cfg.method = "l1".into();
+        cfg.budget = 0.5;
+        cfg.train_size = 128;
+        cfg.test_size = 64;
+        cfg.steps = 4;
+        cfg.eval_every = 4;
+        cfg.batch = 32;
+        let be = open(Backend::Native, "artifacts").unwrap();
+        assert_eq!(be.name(), "native");
+        let curve = be.train(&cfg).unwrap();
+        assert_eq!(curve.losses.len(), 4);
+        assert_eq!(curve.evals.len(), 1);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_needs_feature() {
+        let err = open(Backend::Pjrt, "artifacts").unwrap_err();
+        assert!(format!("{err}").contains("--features pjrt"));
+    }
+}

@@ -9,10 +9,10 @@
 use crate::config::Preset;
 use crate::json::{self, Value};
 use crate::metrics::{to_csv, MdTable};
-use crate::runtime::Runtime;
 use anyhow::Result;
 use std::path::Path;
 
+use super::backend::TrainBackend;
 use super::sweeps::{self, SweepPoint};
 use super::variance;
 
@@ -22,18 +22,35 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "fig2a", "fig4", "variance", "eq6", "fig3", "fig2b",
 ];
 
-pub struct ExperimentCtx<'rt> {
-    pub rt: &'rt Runtime,
+/// Everything an experiment needs: the engine plus protocol knobs.
+pub struct ExperimentCtx<'be> {
+    /// The training engine (native or PJRT) all runs go through.
+    pub be: &'be dyn TrainBackend,
+    /// Scale preset (smoke / ci / paper).
     pub preset: Preset,
+    /// Output directory for the CSV/markdown/JSON triples.
     pub out_dir: String,
+    /// Chatty sweep logging.
     pub verbose: bool,
     /// optional budget override (smaller grids for smoke runs)
     pub budgets: Option<Vec<f64>>,
 }
 
-impl<'rt> ExperimentCtx<'rt> {
+impl<'be> ExperimentCtx<'be> {
     fn budgets(&self) -> Vec<f64> {
         self.budgets.clone().unwrap_or_else(|| self.preset.budgets())
+    }
+
+    /// True when the backend implements `method`; logs the skip otherwise.
+    fn method_supported(&self, id: &str, method: &str) -> bool {
+        let ok = self.be.supports_method(method);
+        if !ok {
+            eprintln!(
+                "[{id}] skipping {method}: not implemented by the {} backend",
+                self.be.name()
+            );
+        }
+        ok
     }
 
     fn emit(
@@ -62,12 +79,24 @@ impl<'rt> ExperimentCtx<'rt> {
         model: &str,
         methods: &[(&str, &str)], // (method, location)
     ) -> Result<()> {
+        if !self.be.supports_model(model) {
+            eprintln!(
+                "[{id}] skipping entirely: model {model} not implemented by the {} backend",
+                self.be.name()
+            );
+            return Ok(());
+        }
         let budgets = self.budgets();
-        let baseline = sweeps::baseline_point(self.rt, self.preset, model, self.verbose)?;
+        let baseline = sweeps::baseline_point(self.be, self.preset, model, self.verbose)?;
+        let methods: Vec<(&str, &str)> = methods
+            .iter()
+            .filter(|(m, _)| self.method_supported(id, m))
+            .copied()
+            .collect();
         let mut all: Vec<(String, Vec<SweepPoint>)> = Vec::new();
-        for (method, location) in methods {
+        for (method, location) in &methods {
             let pts = sweeps::budget_sweep(
-                self.rt,
+                self.be,
                 self.preset,
                 model,
                 method,
@@ -250,7 +279,10 @@ pub fn fig4(ctx: &ExperimentCtx) -> Result<()> {
 
 /// Prop 2.2 validation: unbiasedness + variance-vs-budget per method.
 pub fn variance_exp(ctx: &ExperimentCtx) -> Result<()> {
-    let methods = ["per_column", "per_sample", "l1", "ds", "rcs"];
+    let methods: Vec<&str> = ["per_column", "per_sample", "l1", "ds", "rcs"]
+        .into_iter()
+        .filter(|m| ctx.method_supported("variance", m))
+        .collect();
     let budgets = ctx.budgets();
     let trials = match ctx.preset {
         Preset::Smoke => 32,
@@ -270,7 +302,7 @@ pub fn variance_exp(ctx: &ExperimentCtx) -> Result<()> {
     let mut records = Vec::new();
     for method in methods {
         for &b in &budgets {
-            let rep = variance::measure(ctx.rt, method, b, trials, 5)?;
+            let rep = ctx.be.grad_probe(method, b, trials, 5)?;
             // the Monte-Carlo mean of an estimator with relative variance v
             // deviates by ~sqrt(v/trials) even at zero bias; report it so
             // "rel bias ≈ floor" reads as consistent-with-unbiased.
@@ -327,7 +359,7 @@ pub fn eq6(ctx: &ExperimentCtx) -> Result<()> {
         Preset::Ci => 48,
         Preset::Paper => 192,
     };
-    let s2 = variance::sigma2(ctx.rt, trials)?;
+    let s2 = ctx.be.sigma2(trials)?;
     eprintln!("[eq6] measured σ² = {s2:.4e}");
     let methods = ["per_column", "l1", "ds"];
     let budgets = ctx.budgets();
@@ -343,7 +375,7 @@ pub fn eq6(ctx: &ExperimentCtx) -> Result<()> {
     let mut records = Vec::new();
     for method in methods {
         for &b in &budgets {
-            let (rho, v, net, s2m) = variance::eq6_row(ctx.rt, method, b, s2, trials)?;
+            let (rho, v, net, s2m) = variance::eq6_row(ctx.be, method, b, s2, trials)?;
             let win = s2m / net;
             md.row(vec![
                 method.to_string(),

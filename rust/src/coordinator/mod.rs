@@ -1,15 +1,22 @@
 //! L3 coordinator: the training orchestrator.
 //!
-//! This is where the paper's protocol lives: single-run training loops over
-//! AOT-compiled step artifacts ([`trainer`]), learning-rate cross-validation
-//! and (method × budget × seed) sweeps ([`sweeps`]), gradient-variance
+//! This is where the paper's protocol lives: backend selection and dispatch
+//! ([`backend`]), single-run training loops over AOT-compiled step artifacts
+//! ([`trainer`], feature `pjrt`), learning-rate cross-validation and
+//! (method × budget × seed) sweeps ([`sweeps`]), gradient-variance
 //! measurement for the Prop 2.2 / Eq 6 analyses ([`variance`]), and the
 //! per-figure experiment registry ([`experiments`]) that regenerates every
-//! figure/table of §5 as CSV + markdown under `results/`.
+//! figure/table of §5 as CSV + markdown under `results/`. Sweeps,
+//! experiments and variance probes are backend-agnostic: they drive
+//! [`backend::TrainBackend`], so `--backend native` runs the whole protocol
+//! without artifacts (DESIGN.md §7).
 
+pub mod backend;
 pub mod experiments;
 pub mod sweeps;
 pub mod trainer;
 pub mod variance;
 
+pub use backend::{NativeBackend, TrainBackend};
+#[cfg(feature = "pjrt")]
 pub use trainer::Trainer;

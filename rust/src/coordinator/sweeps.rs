@@ -1,37 +1,40 @@
 //! Sweep orchestration: LR cross-validation and (method × budget × seed)
 //! grids — the protocol behind every accuracy-vs-budget figure in §5.
+//! Backend-agnostic: everything runs through [`TrainBackend`], so the same
+//! sweep drives native or PJRT training.
 
 use crate::config::{Preset, TrainConfig};
 use crate::metrics::{mean_std, RunCurve};
-use crate::runtime::Runtime;
 use anyhow::Result;
 
-use super::trainer::Trainer;
+use super::backend::TrainBackend;
 
 /// Result of one fully-specified training run.
 #[derive(Debug, Clone)]
 pub struct RunRecord {
+    /// The configuration that produced this run.
     pub cfg: TrainConfig,
+    /// The loss/eval time series.
     pub curve: RunCurve,
 }
 
 impl RunRecord {
+    /// Final test accuracy (0.0 when the run recorded no evals).
     pub fn final_acc(&self) -> f64 {
         self.curve.final_acc().unwrap_or(0.0)
     }
 }
 
 /// Train once under `cfg`.
-pub fn run_one(rt: &Runtime, cfg: TrainConfig) -> Result<RunRecord> {
-    let t = Trainer::new(rt, cfg.clone())?;
-    let curve = t.run()?;
+pub fn run_one(be: &dyn TrainBackend, cfg: TrainConfig) -> Result<RunRecord> {
+    let curve = be.train(&cfg)?;
     Ok(RunRecord { cfg, curve })
 }
 
 /// Cross-validate the learning rate over `grid`, as the paper does per seed:
 /// train at every LR, keep the best final test accuracy.
 pub fn best_over_lr(
-    rt: &Runtime,
+    be: &dyn TrainBackend,
     base: &TrainConfig,
     grid: &[f64],
     verbose: bool,
@@ -40,7 +43,7 @@ pub fn best_over_lr(
     for &lr in grid {
         let mut cfg = base.clone();
         cfg.lr = lr;
-        let rec = run_one(rt, cfg)?;
+        let rec = run_one(be, cfg)?;
         if verbose {
             eprintln!(
                 "    lr={lr:.4}: acc={:.3} loss={:.3}",
@@ -63,17 +66,23 @@ pub fn best_over_lr(
 /// LR-cross-validated final accuracy.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Sketch method of this series.
     pub method: String,
+    /// Kept-column budget p.
     pub budget: f64,
+    /// Mean final accuracy over seeds.
     pub acc_mean: f64,
+    /// Std of final accuracy over seeds.
     pub acc_std: f64,
+    /// Per-seed accuracies behind the mean.
     pub accs: Vec<f64>,
+    /// LR the cross-validation picked for the last seed.
     pub best_lr: f64,
 }
 
 /// Sweep a method over budgets × seeds with per-seed LR cross-validation.
 pub fn budget_sweep(
-    rt: &Runtime,
+    be: &dyn TrainBackend,
     preset: Preset,
     model: &str,
     method: &str,
@@ -95,7 +104,7 @@ pub fn budget_sweep(
             if verbose {
                 eprintln!("  [{method}] p={budget} seed={seed}");
             }
-            let rec = best_over_lr(rt, &base, &grid, verbose)?;
+            let rec = best_over_lr(be, &base, &grid, verbose)?;
             accs.push(rec.final_acc());
             best_lr = rec.cfg.lr;
         }
@@ -118,18 +127,19 @@ pub fn budget_sweep(
 
 /// Baseline (exact VJP) accuracy for a model under the preset.
 pub fn baseline_point(
-    rt: &Runtime,
+    be: &dyn TrainBackend,
     preset: Preset,
     model: &str,
     verbose: bool,
 ) -> Result<SweepPoint> {
-    let pts = budget_sweep(rt, preset, model, "baseline", &[1.0], "none", verbose)?;
+    let pts = budget_sweep(be, preset, model, "baseline", &[1.0], "none", verbose)?;
     Ok(pts.into_iter().next().unwrap())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::NativeBackend;
 
     #[test]
     fn sweep_point_shape() {
@@ -142,5 +152,19 @@ mod tests {
             best_lr: 0.1,
         };
         assert_eq!(p.accs.len(), 2);
+    }
+
+    #[test]
+    fn best_over_lr_picks_better_run() {
+        let mut base = Preset::Smoke.base("mlp");
+        base.method = "baseline".into();
+        base.train_size = 128;
+        base.test_size = 64;
+        base.steps = 16;
+        base.eval_every = 16;
+        base.batch = 32;
+        // lr 0 cannot learn; a sane lr must win the cross-validation
+        let rec = best_over_lr(&NativeBackend, &base, &[0.0, 0.1], false).unwrap();
+        assert_eq!(rec.cfg.lr, 0.1);
     }
 }

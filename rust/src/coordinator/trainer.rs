@@ -1,16 +1,25 @@
-//! Single-run training loop over AOT step artifacts.
+//! Single-run training loop over AOT step artifacts (feature `pjrt`).
 //!
 //! The trainer owns no python: it executes `init_<model>`,
 //! `train_<model>_<method>` and `eval_<model>` artifacts through the PJRT
 //! runtime, feeding batches from the synthetic dataset generators and
 //! threading (params, opt_state) as raw `xla::Literal`s between steps.
+//! The artifact-free counterpart is [`crate::native::NativeTrainer`];
+//! [`layer_mask`] is shared by both.
 
+#[cfg(feature = "pjrt")]
 use crate::config::TrainConfig;
+#[cfg(feature = "pjrt")]
 use crate::data::{self, BatchIter, Dataset, DatasetKind};
+#[cfg(feature = "pjrt")]
 use crate::metrics::RunCurve;
+#[cfg(feature = "pjrt")]
 use crate::rng::Pcg64;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, HostTensor, Runtime};
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 /// Per-layer sketch gate from the config's `location` field.
@@ -26,8 +35,12 @@ pub fn layer_mask(location: &str, num_sketched: usize) -> Vec<f32> {
     m
 }
 
+/// PJRT training-loop driver over one model/method artifact triple.
+#[cfg(feature = "pjrt")]
 pub struct Trainer<'rt> {
+    /// The artifact runtime executing the steps.
     pub rt: &'rt Runtime,
+    /// The run configuration.
     pub cfg: TrainConfig,
     train_exe: Rc<Executable>,
     eval_exe: Rc<Executable>,
@@ -38,7 +51,9 @@ pub struct Trainer<'rt> {
     num_sketched: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'rt> Trainer<'rt> {
+    /// Load the `train_/eval_/init_` artifacts for `cfg.model` / `cfg.method`.
     pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Trainer<'rt>> {
         let train_name = format!("train_{}_{}", cfg.model, cfg.method);
         let train_exe = rt
@@ -215,6 +230,7 @@ impl<'rt> Trainer<'rt> {
 }
 
 /// Copy a literal (xla::Literal has no Clone; reshape to same dims copies).
+#[cfg(feature = "pjrt")]
 pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
     let shape = l.array_shape()?;
     Ok(l.reshape(shape.dims())?)

@@ -1,17 +1,23 @@
 //! Gradient-variance measurement (Prop 2.2 validation + Eq 6 trade-off).
 //!
-//! Uses the `grads_mlp_<method>` artifacts: a fixed parameter point and a
-//! fixed batch, repeated with fresh sketch keys, give Monte-Carlo estimates
-//! of E[ĝ], E‖ĝ − g‖² and per-coordinate spread — the quantities §2's
-//! theory reasons about.
+//! A fixed parameter point and a fixed batch, repeated with fresh sketch
+//! keys, give Monte-Carlo estimates of E[ĝ], E‖ĝ − g‖² and per-coordinate
+//! spread — the quantities §2's theory reasons about. Both backends expose
+//! the probe: the native path runs [`crate::native::Mlp`] backwards
+//! directly; the PJRT path (feature `pjrt`) drives the `grads_mlp_<method>`
+//! artifacts.
 
 use crate::data::{self, DatasetKind};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{HostTensor, Runtime};
 use anyhow::Result;
 
+/// Monte-Carlo summary of one (method, budget) gradient estimator.
 #[derive(Debug, Clone)]
 pub struct VarianceReport {
+    /// Sketch method measured.
     pub method: String,
+    /// Kept-column budget p.
     pub budget: f64,
     /// ‖mean_k ĝ_k − g‖ / ‖g‖ — should → 0 (unbiasedness, Prop 2.2 i)
     pub bias_rel: f64,
@@ -19,6 +25,7 @@ pub struct VarianceReport {
     pub variance: f64,
     /// ‖g‖² for normalization
     pub grad_norm_sq: f64,
+    /// Monte-Carlo trial count behind the estimates.
     pub trials: usize,
 }
 
@@ -29,7 +36,186 @@ impl VarianceReport {
     }
 }
 
-/// Measure gradient bias/variance for one (method, budget) on a fixed batch.
+/// Accumulate bias/variance statistics from per-trial gradient estimates.
+fn summarize(
+    method: &str,
+    budget: f64,
+    g: &[f32],
+    trials: usize,
+    mut ghat_of: impl FnMut(usize) -> Result<Vec<f32>>,
+) -> Result<VarianceReport> {
+    let dim = g.len();
+    let gnorm2: f64 = g.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let mut mean = vec![0.0f64; dim];
+    let mut sq_err = 0.0f64;
+    for t in 0..trials {
+        let ghat = ghat_of(t)?;
+        debug_assert_eq!(ghat.len(), dim);
+        let mut err = 0.0f64;
+        for i in 0..dim {
+            let d = ghat[i] as f64 - g[i] as f64;
+            err += d * d;
+            mean[i] += ghat[i] as f64;
+        }
+        sq_err += err;
+    }
+    let mut bias2 = 0.0f64;
+    for i in 0..dim {
+        let b = mean[i] / trials as f64 - g[i] as f64;
+        bias2 += b * b;
+    }
+    Ok(VarianceReport {
+        method: method.to_string(),
+        budget,
+        bias_rel: (bias2 / gnorm2.max(1e-30)).sqrt(),
+        variance: sq_err / trials as f64,
+        grad_norm_sq: gnorm2,
+        trials,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Native probes
+// ---------------------------------------------------------------------------
+
+/// The probe's fixed setup: standard MLP at a seeded init + one fixed batch.
+fn native_probe_setup(
+    seed: u64,
+) -> (crate::native::Mlp, crate::tensor::Mat, Vec<i32>) {
+    use crate::native::Mlp;
+    use crate::tensor::Mat;
+    let batch = 128usize;
+    let model = Mlp::new(&[784, 64, 64, 10], seed);
+    let ds = data::generate(DatasetKind::SynthMnist, batch, 99, "train");
+    let x = Mat { rows: batch, cols: ds.dim, data: ds.x.clone() };
+    (model, x, ds.y)
+}
+
+fn native_grad(
+    model: &crate::native::Mlp,
+    x: &crate::tensor::Mat,
+    y: &[i32],
+    spec: &crate::native::SketchSpec,
+    rng: &mut crate::rng::Pcg64,
+) -> Vec<f32> {
+    use crate::native::{loss_and_grad, LossKind};
+    let cache = model.forward(x);
+    let (_, dlogits) = loss_and_grad(LossKind::CrossEntropy, cache.logits(), y);
+    let mask = vec![1.0f32; model.num_layers()];
+    model.backward(&cache, &dlogits, spec, &mask, rng).flatten()
+}
+
+/// Measure gradient bias/variance for one (method, budget) on the native
+/// backend (fixed init + batch, fresh sketch randomness per trial).
+pub fn measure_native(
+    method: &str,
+    budget: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<VarianceReport> {
+    use crate::native::SketchSpec;
+    use crate::rng::Pcg64;
+    if !crate::native::NATIVE_METHODS.contains(&method) {
+        anyhow::bail!("native variance probe: unsupported method {method}");
+    }
+    let (model, x, y) = native_probe_setup(seed);
+    let mut exact_rng = Pcg64::new(0, 0);
+    let g = native_grad(&model, &x, &y, &SketchSpec::exact(), &mut exact_rng);
+    let spec = SketchSpec { method: method.to_string(), budget };
+    summarize(method, budget, &g, trials, |t| {
+        let mut rng = Pcg64::new(seed ^ 0xabcd, t as u64);
+        Ok(native_grad(&model, &x, &y, &spec, &mut rng))
+    })
+}
+
+/// Minibatch gradient variance σ² at the probe's parameter point: resample
+/// batches, exact gradients (native backend).
+pub fn sigma2_native(trials: usize) -> Result<f64> {
+    use crate::native::{Mlp, SketchSpec};
+    use crate::rng::Pcg64;
+    use crate::tensor::Mat;
+    let batch = 128usize;
+    let model = Mlp::new(&[784, 64, 64, 10], 5);
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(trials);
+    for t in 0..trials {
+        let ds = data::generate(DatasetKind::SynthMnist, batch, 500 + t as u64, "train");
+        let x = Mat { rows: batch, cols: ds.dim, data: ds.x.clone() };
+        let mut rng = Pcg64::new(0, 0);
+        grads.push(native_grad(&model, &x, &ds.y, &SketchSpec::exact(), &mut rng));
+    }
+    Ok(spread(&grads))
+}
+
+/// Mean over samples of ‖g − ḡ‖² for a set of flattened gradients.
+fn spread(grads: &[Vec<f32>]) -> f64 {
+    let trials = grads.len();
+    let dim = grads[0].len();
+    let mut mean = vec![0.0f64; dim];
+    for g in grads {
+        for i in 0..dim {
+            mean[i] += g[i] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= trials as f64;
+    }
+    let mut var = 0.0f64;
+    for g in grads {
+        for i in 0..dim {
+            let d = g[i] as f64 - mean[i];
+            var += d * d;
+        }
+    }
+    var / trials as f64
+}
+
+// ---------------------------------------------------------------------------
+// Eq 6 (backend-agnostic)
+// ---------------------------------------------------------------------------
+
+/// Eq 6 check: net-cost comparison ρ(V)(σ²+V) vs ρ(0)σ² for the MLP layers.
+///
+/// σ² (minibatch gradient variance) comes from the backend's exact-gradient
+/// resampling; V from its sketch probe; ρ from the analytic FLOP model in
+/// [`crate::sketch::cost_ratio`] over the MLP's sketched layers. Returns
+/// (ρ, V, net cost, σ²).
+pub fn eq6_row(
+    be: &dyn super::backend::TrainBackend,
+    method: &str,
+    budget: f64,
+    sigma2: f64,
+    trials: usize,
+) -> Result<(f64, f64, f64, f64)> {
+    let rep = be.grad_probe(method, budget, trials, 5)?;
+    // MLP sketched layers (dout, din): 784→64, 64→64, 64→10 at batch 128
+    let layers = [(64usize, 784usize), (64, 64), (10, 64)];
+    let total: f64 = layers
+        .iter()
+        .map(|&(o, i)| 4.0 * 128.0 * o as f64 * i as f64)
+        .sum();
+    let cost: f64 = layers
+        .iter()
+        .map(|&(o, i)| {
+            crate::sketch::cost_ratio(128, o, i, budget)
+                * 4.0
+                * 128.0
+                * o as f64
+                * i as f64
+        })
+        .sum();
+    let rho = cost / total;
+    let v = rep.variance;
+    let net = rho * (sigma2 + v);
+    Ok((rho, v, net, sigma2))
+}
+
+// ---------------------------------------------------------------------------
+// PJRT probes (feature `pjrt`)
+// ---------------------------------------------------------------------------
+
+/// Measure gradient bias/variance for one (method, budget) on a fixed batch
+/// through the `grads_mlp_<method>` artifacts.
+#[cfg(feature = "pjrt")]
 pub fn measure(
     rt: &Runtime,
     method: &str,
@@ -65,79 +251,20 @@ pub fn measure(
     let g_exact = base_exe.run_refs(&refs)?;
     let g = HostTensor::from_literal(&g_exact[0])?;
     let g = g.as_f32()?.to_vec();
-    let gnorm2: f64 = g.iter().map(|&v| (v as f64) * (v as f64)).sum();
 
-    let dim = g.len();
-    let mut mean = vec![0.0f64; dim];
-    let mut sq_err = 0.0f64;
-    for t in 0..trials {
+    summarize(method, budget, &g, trials, |t| {
         let kt = HostTensor::U32(vec![seed as u32 ^ 0xabcd, t as u32], vec![2])
             .to_literal()?;
         let mut refs: Vec<&xla::Literal> = params.iter().collect();
         refs.extend([&x, &y, &kt, &pb, &lm]);
         let out = grads_exe.run_refs(&refs)?;
-        let ghat = HostTensor::from_literal(&out[0])?;
-        let ghat = ghat.as_f32()?;
-        let mut err = 0.0f64;
-        for i in 0..dim {
-            let d = ghat[i] as f64 - g[i] as f64;
-            err += d * d;
-            mean[i] += ghat[i] as f64;
-        }
-        sq_err += err;
-    }
-    let mut bias2 = 0.0f64;
-    for i in 0..dim {
-        let b = mean[i] / trials as f64 - g[i] as f64;
-        bias2 += b * b;
-    }
-    Ok(VarianceReport {
-        method: method.to_string(),
-        budget,
-        bias_rel: (bias2 / gnorm2.max(1e-30)).sqrt(),
-        variance: sq_err / trials as f64,
-        grad_norm_sq: gnorm2,
-        trials,
+        Ok(HostTensor::from_literal(&out[0])?.as_f32()?.to_vec())
     })
 }
 
-/// Eq 6 check: net-cost comparison ρ(V)(σ²+V) vs ρ(0)σ² for the MLP layers.
-///
-/// σ² (minibatch gradient variance) is measured by resampling batches with
-/// the exact gradient; V comes from `measure`; ρ from the analytic FLOP
-/// model in `sketch::cost_ratio` over the MLP's sketched layers.
-pub fn eq6_row(
-    rt: &Runtime,
-    method: &str,
-    budget: f64,
-    sigma2: f64,
-    trials: usize,
-) -> Result<(f64, f64, f64, f64)> {
-    let rep = measure(rt, method, budget, trials, 5)?;
-    // MLP sketched layers (dout, din): 784→64, 64→64, 64→10 at batch 128
-    let layers = [(64usize, 784usize), (64, 64), (10, 64)];
-    let total: f64 = layers
-        .iter()
-        .map(|&(o, i)| 4.0 * 128.0 * o as f64 * i as f64)
-        .sum();
-    let cost: f64 = layers
-        .iter()
-        .map(|&(o, i)| {
-            crate::sketch::cost_ratio(128, o, i, budget)
-                * 4.0
-                * 128.0
-                * o as f64
-                * i as f64
-        })
-        .sum();
-    let rho = cost / total;
-    let v = rep.variance;
-    let net = rho * (sigma2 + v);
-    Ok((rho, v, net, sigma2))
-}
-
 /// Minibatch gradient variance σ² at the same parameter point: resample
-/// batches, exact gradients.
+/// batches, exact gradients (PJRT backend).
+#[cfg(feature = "pjrt")]
 pub fn sigma2(rt: &Runtime, trials: usize) -> Result<f64> {
     let base_exe = rt.load("grads_mlp_baseline")?;
     let init_exe = rt.load("init_mlp")?;
@@ -162,22 +289,44 @@ pub fn sigma2(rt: &Runtime, trials: usize) -> Result<f64> {
         let out = base_exe.run_refs(&refs)?;
         grads.push(HostTensor::from_literal(&out[0])?.as_f32()?.to_vec());
     }
-    let dim = grads[0].len();
-    let mut mean = vec![0.0f64; dim];
-    for g in &grads {
-        for i in 0..dim {
-            mean[i] += g[i] as f64;
-        }
+    Ok(spread(&grads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_probe_unbiased_and_variance_scales() {
+        let lo = measure_native("l1", 0.3, 48, 5).unwrap();
+        let hi = measure_native("l1", 0.8, 48, 5).unwrap();
+        // Monte-Carlo mean deviation consistent with sampling noise
+        let floor_lo = (lo.rel_variance() / lo.trials as f64).sqrt();
+        assert!(
+            lo.bias_rel < 5.0 * floor_lo.max(1e-3),
+            "bias {} vs floor {floor_lo}",
+            lo.bias_rel
+        );
+        // more budget → less injected variance
+        assert!(hi.variance < lo.variance, "{} !< {}", hi.variance, lo.variance);
+        assert!(lo.grad_norm_sq > 0.0);
     }
-    for m in mean.iter_mut() {
-        *m /= trials as f64;
+
+    #[test]
+    fn native_probe_baseline_is_exact() {
+        let rep = measure_native("baseline", 1.0, 3, 1).unwrap();
+        assert!(rep.bias_rel < 1e-6);
+        assert!(rep.variance < 1e-10);
     }
-    let mut var = 0.0f64;
-    for g in &grads {
-        for i in 0..dim {
-            let d = g[i] as f64 - mean[i];
-            var += d * d;
-        }
+
+    #[test]
+    fn native_probe_rejects_unknown_method() {
+        assert!(measure_native("rcs", 0.2, 2, 0).is_err());
     }
-    Ok(var / trials as f64)
+
+    #[test]
+    fn sigma2_native_positive() {
+        let s2 = sigma2_native(6).unwrap();
+        assert!(s2 > 0.0);
+    }
 }

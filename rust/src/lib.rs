@@ -4,15 +4,22 @@
 //! Products for Efficient Backpropagation"* (Bakong, Massoulié, Oyallon,
 //! Scaman, 2026).
 //!
-//! Layering (DESIGN.md):
+//! Layering (DESIGN.md §1):
 //! * **L1/L2 (python, build-time only)** — Pallas sketched-backward kernels
 //!   and JAX model/train graphs, AOT-lowered to `artifacts/*.hlo.txt`.
-//! * **L3 (this crate)** — the training coordinator: loads artifacts via
-//!   PJRT ([`runtime`]), generates data ([`data`]), orchestrates LR/budget
-//!   sweeps and the paper's experiments ([`coordinator`]), simulates
-//!   pipeline-parallel gradient compression ([`pipeline`]), and provides
-//!   the offline substrates ([`json`], [`rng`], [`tensor`], [`pool`],
-//!   [`config`], [`metrics`], [`ptest`], [`cli`], [`sketch`]).
+//! * **L3 (this crate)** — the training coordinator, with two execution
+//!   backends behind one dispatch trait (DESIGN.md §7):
+//!   - [`native`] — CPU-native MLP training whose hand-written backward
+//!     runs the paper's sketched VJPs on real kept-column kernels; needs
+//!     nothing on disk and is the default.
+//!   - [`runtime`] — PJRT execution of the AOT artifacts (cargo feature
+//!     `pjrt`; the offline build links a type-only stub).
+//!
+//!   Around them: data generation ([`data`]), LR/budget sweeps and the
+//!   paper's experiments ([`coordinator`]), pipeline-parallel gradient
+//!   compression ([`pipeline`]), and the offline substrates ([`json`],
+//!   [`rng`], [`tensor`], [`sketch`], [`pool`], [`config`], [`metrics`],
+//!   [`ptest`], [`cli`]).
 
 pub mod cli;
 pub mod config;
@@ -20,6 +27,7 @@ pub mod coordinator;
 pub mod data;
 pub mod json;
 pub mod metrics;
+pub mod native;
 pub mod pipeline;
 pub mod pool;
 pub mod ptest;

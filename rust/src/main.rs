@@ -1,13 +1,14 @@
 //! `uavjp` — leader binary: train, sweep, and regenerate the paper's
-//! figures/tables from AOT artifacts.
+//! figures/tables on the native backend (default) or from AOT artifacts
+//! (`--backend pjrt`, cargo feature `pjrt`).
 
 use anyhow::Result;
 use uavjp::cli::Args;
-use uavjp::config::{Preset, TrainConfig};
-use uavjp::coordinator::{experiments, sweeps, trainer::Trainer};
+use uavjp::config::{Backend, Preset, TrainConfig};
+use uavjp::coordinator::{backend, experiments, sweeps, TrainBackend};
 use uavjp::json;
 use uavjp::pipeline;
-use uavjp::runtime::Runtime;
+use uavjp::runtime::Manifest;
 
 const USAGE: &str = "\
 uavjp — Unbiased Approximate VJPs for Efficient Backpropagation (repro)
@@ -18,6 +19,7 @@ commands:
   train       one training run
               --model mlp|vit|bagnet --method <m> --budget <p> --lr <f>
               --steps <n> --seed <n> --location all|first|last|none
+              --optimizer sgd|momentum|adam --loss ce|mse --batch <n>
               [--preset ci|paper] [--out run.json]
   sweep       budget sweep for one method (LR cross-validated)
               --model <m> --method <m> [--budgets 0.05,0.1,...] [--preset ..]
@@ -30,10 +32,13 @@ commands:
                --bandwidth 1e9 --budgets 0.05,0.1,0.2,0.5,1.0]
   hlo-stats   static op histogram / fusion report for one artifact
   exec-bench  compile+execute latency for one artifact [--hlo-override f]
+              (requires --features pjrt)
   list        list available artifacts
-  methods     list sketch methods per model
+  methods     list sketch methods per backend/model
 
 flags:
+  --backend native|pjrt   execution engine (default: native; pjrt needs the
+                          `pjrt` cargo feature and a built artifacts dir)
   --artifacts DIR   artifact directory (default: artifacts or $UAVJP_ARTIFACTS)
   --verbose         chatty sweeps
 ";
@@ -57,21 +62,25 @@ fn main() -> Result<()> {
         "pipeline-sim" => cmd_pipeline(&args),
         "list" => cmd_list(&artifacts),
         "methods" => {
-            println!("mlp: baseline per_element per_column per_sample l1 l1_sq l2 l2_sq var var_sq ds l1_ind gsv gsv_sq rcs");
-            println!("vit/bagnet: baseline per_element per_column per_sample l1 l1_sq var ds");
+            println!(
+                "native mlp: {}",
+                uavjp::native::NATIVE_METHODS.join(" ")
+            );
+            println!("pjrt mlp: baseline per_element per_column per_sample l1 l1_sq l2 l2_sq var var_sq ds l1_ind gsv gsv_sq rcs");
+            println!("pjrt vit/bagnet: baseline per_element per_column per_sample l1 l1_sq var ds");
             Ok(())
         }
         "all" => {
-            let rt = Runtime::open(&artifacts)?;
-            let ctx = ctx_from(&args, &rt);
+            let be = open_backend(&args, &artifacts)?;
+            let ctx = ctx_from(&args, &*be);
             for id in experiments::ALL_EXPERIMENTS {
                 experiments::run(&ctx, id)?;
             }
             Ok(())
         }
         id if experiments::ALL_EXPERIMENTS.contains(&id) || id == "fig3" => {
-            let rt = Runtime::open(&artifacts)?;
-            let ctx = ctx_from(&args, &rt);
+            let be = open_backend(&args, &artifacts)?;
+            let ctx = ctx_from(&args, &*be);
             experiments::run(&ctx, id)
         }
         other => {
@@ -81,9 +90,17 @@ fn main() -> Result<()> {
     }
 }
 
-fn ctx_from<'rt>(args: &Args, rt: &'rt Runtime) -> experiments::ExperimentCtx<'rt> {
+/// Open the engine named by `--backend` (default native).
+fn open_backend(args: &Args, artifacts: &str) -> Result<Box<dyn TrainBackend>> {
+    backend::open(Backend::parse(&args.str_or("backend", "native")), artifacts)
+}
+
+fn ctx_from<'be>(
+    args: &Args,
+    be: &'be dyn TrainBackend,
+) -> experiments::ExperimentCtx<'be> {
     experiments::ExperimentCtx {
-        rt,
+        be,
         preset: Preset::parse(&args.str_or("preset", "ci")),
         out_dir: args.str_or("out-dir", "results"),
         verbose: args.has("verbose"),
@@ -92,11 +109,12 @@ fn ctx_from<'rt>(args: &Args, rt: &'rt Runtime) -> experiments::ExperimentCtx<'r
 }
 
 /// Static HLO cost analysis of an artifact (L2 profiling, DESIGN.md §8).
+/// Pure text analysis — works without the `pjrt` feature.
 fn cmd_hlo_stats(args: &Args, artifacts: &str) -> Result<()> {
-    let rt = Runtime::open(artifacts)?;
+    let manifest =
+        Manifest::load(std::path::Path::new(&format!("{artifacts}/manifest.json")))?;
     let name = args.str_or("artifact", "train_mlp_l1");
-    let spec = rt
-        .manifest
+    let spec = manifest
         .get(&name)
         .ok_or_else(|| anyhow::anyhow!("no artifact {name}"))?;
     let text = std::fs::read_to_string(format!("{artifacts}/{}", spec.file))?;
@@ -107,8 +125,9 @@ fn cmd_hlo_stats(args: &Args, artifacts: &str) -> Result<()> {
 
 /// Compile+execute latency for one artifact, optionally with an alternative
 /// HLO file sharing the same signature (A/B perf comparisons, §Perf).
+#[cfg(feature = "pjrt")]
 fn cmd_exec_bench(args: &Args, artifacts: &str) -> Result<()> {
-    use uavjp::runtime::HostTensor;
+    use uavjp::runtime::{HostTensor, Runtime};
     let rt = Runtime::open(artifacts)?;
     let name = args.str_or("artifact", "train_mlp_l1");
     let spec = rt
@@ -148,11 +167,21 @@ fn cmd_exec_bench(args: &Args, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_exec_bench(_args: &Args, _artifacts: &str) -> Result<()> {
+    anyhow::bail!(
+        "exec-bench executes AOT artifacts; rebuild with `--features pjrt` \
+         (see DESIGN.md §7). The native backend's equivalent is \
+         `cargo bench native_bwd`."
+    )
+}
+
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
-    let rt = Runtime::open(artifacts)?;
+    let be = open_backend(args, artifacts)?;
     let preset = Preset::parse(&args.str_or("preset", "ci"));
     let model = args.str_or("model", "mlp");
     let mut cfg: TrainConfig = preset.base(&model);
+    cfg.backend = Backend::parse(&args.str_or("backend", "native"));
     cfg.method = args.str_or("method", "baseline");
     cfg.budget = args.f64_or("budget", 0.2);
     cfg.lr = args.f64_or("lr", cfg.lr);
@@ -162,14 +191,21 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.location = args.str_or("location", "all");
     cfg.train_size = args.usize_or("train-size", cfg.train_size);
     cfg.test_size = args.usize_or("test-size", cfg.test_size);
+    cfg.optimizer = args.str_or("optimizer", &cfg.optimizer);
+    cfg.loss = args.str_or("loss", &cfg.loss);
+    cfg.batch = args.usize_or("batch", cfg.batch);
 
     eprintln!(
-        "[train] {} / {} p={} lr={} steps={}",
-        cfg.model, cfg.method, cfg.budget, cfg.lr, cfg.steps
+        "[train:{}] {} / {} p={} lr={} steps={}",
+        be.name(),
+        cfg.model,
+        cfg.method,
+        cfg.budget,
+        cfg.lr,
+        cfg.steps
     );
     let t0 = std::time::Instant::now();
-    let trainer = Trainer::new(&rt, cfg.clone())?;
-    let curve = trainer.run()?;
+    let curve = be.train(&cfg)?;
     let dt = t0.elapsed().as_secs_f64();
     let (el, ea, _) = curve.evals.last().copied().unwrap_or((0, f64::NAN, f64::NAN));
     println!(
@@ -190,13 +226,13 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args, artifacts: &str) -> Result<()> {
-    let rt = Runtime::open(artifacts)?;
+    let be = open_backend(args, artifacts)?;
     let preset = Preset::parse(&args.str_or("preset", "ci"));
     let model = args.str_or("model", "mlp");
     let method = args.str_or("method", "l1");
     let budgets = args.f64_list_or("budgets", &preset.budgets());
     let pts = sweeps::budget_sweep(
-        &rt,
+        &*be,
         preset,
         &model,
         &method,
@@ -243,9 +279,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 }
 
 fn cmd_list(artifacts: &str) -> Result<()> {
-    let rt = Runtime::open(artifacts)?;
-    for name in rt.manifest.names() {
-        let a = rt.manifest.get(name).unwrap();
+    let manifest =
+        Manifest::load(std::path::Path::new(&format!("{artifacts}/manifest.json")))?;
+    for name in manifest.names() {
+        let a = manifest.get(name).unwrap();
         println!(
             "{name}: {} inputs, {} outputs ({})",
             a.inputs.len(),

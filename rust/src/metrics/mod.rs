@@ -1,4 +1,6 @@
 //! Metrics substrate: training curves, summaries, CSV/markdown emitters.
+//! Backend-neutral — both the native and the PJRT trainer emit [`RunCurve`],
+//! which is what keeps sweeps and experiments engine-agnostic.
 
 use crate::json::Value;
 use std::fmt::Write as _;
@@ -6,25 +8,32 @@ use std::fmt::Write as _;
 /// One training run's time series.
 #[derive(Debug, Clone, Default)]
 pub struct RunCurve {
+    /// Step index of every recorded training loss.
     pub steps: Vec<usize>,
+    /// Training loss per recorded step.
     pub losses: Vec<f64>,
-    pub evals: Vec<(usize, f64, f64)>, // (step, eval_loss, eval_acc)
+    /// Periodic test evaluations as (step, eval_loss, eval_acc).
+    pub evals: Vec<(usize, f64, f64)>,
 }
 
 impl RunCurve {
+    /// Append one training-loss sample.
     pub fn record_loss(&mut self, step: usize, loss: f64) {
         self.steps.push(step);
         self.losses.push(loss);
     }
 
+    /// Append one test evaluation.
     pub fn record_eval(&mut self, step: usize, loss: f64, acc: f64) {
         self.evals.push((step, loss, acc));
     }
 
+    /// Test accuracy of the last evaluation, if any.
     pub fn final_acc(&self) -> Option<f64> {
         self.evals.last().map(|e| e.2)
     }
 
+    /// Best test accuracy over all evaluations.
     pub fn best_acc(&self) -> Option<f64> {
         self.evals
             .iter()
@@ -32,6 +41,7 @@ impl RunCurve {
             .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
     }
 
+    /// Last recorded training loss.
     pub fn final_loss(&self) -> Option<f64> {
         self.losses.last().copied()
     }
@@ -47,6 +57,7 @@ impl RunCurve {
         Some(tail.iter().sum::<f64>() / tail.len() as f64)
     }
 
+    /// Serialize the curve for run-record JSON files.
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             (
@@ -90,6 +101,7 @@ pub struct MdTable {
 }
 
 impl MdTable {
+    /// Start a table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         MdTable {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -97,11 +109,13 @@ impl MdTable {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render to GitHub-flavored markdown.
     pub fn render(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "| {} |", self.header.join(" | "));
@@ -128,6 +142,7 @@ pub fn to_csv(header: &[&str], rows: &[Vec<f64>]) -> String {
     out
 }
 
+/// Format `x` with a fixed number of decimal digits.
 pub fn fmt_f(x: f64, digits: usize) -> String {
     format!("{:.*}", digits, x)
 }

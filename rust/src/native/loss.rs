@@ -1,0 +1,154 @@
+//! Loss heads for the native trainer: softmax cross-entropy and MSE.
+
+use crate::tensor::Mat;
+
+/// Which loss head the trainer applies to the logits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// Mean softmax cross-entropy against integer labels (the paper's
+    /// classification head).
+    CrossEntropy,
+    /// Mean squared error against one-hot targets (regression-style head
+    /// for ablations).
+    Mse,
+}
+
+impl LossKind {
+    /// Parse `"ce"` / `"mse"`.
+    pub fn parse(s: &str) -> anyhow::Result<LossKind> {
+        match s {
+            "ce" | "xent" | "cross_entropy" => Ok(LossKind::CrossEntropy),
+            "mse" => Ok(LossKind::Mse),
+            other => anyhow::bail!("unknown loss {other} (want ce|mse)"),
+        }
+    }
+}
+
+/// Row-wise softmax probabilities (numerically stable).
+fn softmax_rows(logits: &Mat) -> Mat {
+    let mut out = logits.clone();
+    for i in 0..out.rows {
+        let row = &mut out.data[i * out.cols..(i + 1) * out.cols];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Mean loss and its gradient w.r.t. the logits.
+pub fn loss_and_grad(kind: LossKind, logits: &Mat, y: &[i32]) -> (f64, Mat) {
+    let (b, c) = (logits.rows, logits.cols);
+    assert_eq!(y.len(), b, "label batch size");
+    match kind {
+        LossKind::CrossEntropy => {
+            let mut g = softmax_rows(logits);
+            let mut loss = 0.0f64;
+            for (i, &yi) in y.iter().enumerate() {
+                let p = g.at(i, yi as usize).max(1e-12);
+                loss -= (p as f64).ln();
+                g.data[i * c + yi as usize] -= 1.0;
+            }
+            for v in &mut g.data {
+                *v /= b as f32;
+            }
+            (loss / b as f64, g)
+        }
+        LossKind::Mse => {
+            let mut g = logits.clone();
+            let mut loss = 0.0f64;
+            for (i, &yi) in y.iter().enumerate() {
+                g.data[i * c + yi as usize] -= 1.0;
+            }
+            let n = (b * c) as f64;
+            for v in &g.data {
+                loss += (*v as f64) * (*v as f64);
+            }
+            let scale = 2.0 / n as f32;
+            for v in &mut g.data {
+                *v *= scale;
+            }
+            (loss / n, g)
+        }
+    }
+}
+
+/// Mean loss only (no gradient) — the evaluation path.
+pub fn loss_value(kind: LossKind, logits: &Mat, y: &[i32]) -> f64 {
+    loss_and_grad(kind, logits, y).0
+}
+
+/// Fraction of rows whose argmax matches the label.
+pub fn accuracy(logits: &Mat, y: &[i32]) -> f64 {
+    let mut correct = 0usize;
+    for (i, &yi) in y.iter().enumerate() {
+        let row = logits.row(i);
+        let mut best = (f32::NEG_INFINITY, 0usize);
+        for (j, &v) in row.iter().enumerate() {
+            if v > best.0 {
+                best = (v, j);
+            }
+        }
+        if best.1 == yi as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / y.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_uniform_logits_is_ln_c() {
+        let logits = Mat::zeros(4, 10);
+        let y = vec![0i32, 3, 7, 9];
+        let (loss, g) = loss_and_grad(LossKind::CrossEntropy, &logits, &y);
+        assert!((loss - (10.0f64).ln()).abs() < 1e-6);
+        // gradient rows sum to zero (softmax minus one-hot over batch)
+        for i in 0..4 {
+            let s: f32 = g.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ce_prefers_correct_class() {
+        let mut logits = Mat::zeros(1, 3);
+        logits.data[1] = 10.0;
+        let (good, _) = loss_and_grad(LossKind::CrossEntropy, &logits, &[1]);
+        let (bad, _) = loss_and_grad(LossKind::CrossEntropy, &logits, &[0]);
+        assert!(good < 1e-3 && bad > 5.0);
+    }
+
+    #[test]
+    fn mse_gradient_is_two_residual_over_n() {
+        let mut logits = Mat::zeros(2, 2);
+        logits.data = vec![1.0, 0.0, 0.0, 0.5];
+        let (loss, g) = loss_and_grad(LossKind::Mse, &logits, &[0, 1]);
+        // residuals: [0,0], [0,-0.5] → loss = 0.25/4
+        assert!((loss - 0.0625).abs() < 1e-6);
+        assert!((g.at(1, 1) - 2.0 * (-0.5) / 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 0.0]]);
+        assert_eq!(accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(LossKind::parse("ce").unwrap(), LossKind::CrossEntropy);
+        assert_eq!(LossKind::parse("mse").unwrap(), LossKind::Mse);
+        assert!(LossKind::parse("hinge").is_err());
+    }
+}

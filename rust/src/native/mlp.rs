@@ -1,0 +1,455 @@
+//! MLP with a hand-written per-layer backward: exact or sketched VJPs.
+//!
+//! Mirrors `python/compile/models/mlp.py` (He init, ReLU between linears,
+//! every linear layer sketchable) and `python/compile/layers.py`'s backward
+//! semantics: the forward is always exact; a sketched layer replaces its
+//! output gradient G by Ĝ = G·diag(z/p) and all three products (dX, dW, db)
+//! are computed from Ĝ touching only the kept columns.
+
+use crate::rng::Pcg64;
+use crate::sketch::{
+    column_scores, correlated_bernoulli, independent_bernoulli, kept_columns,
+    pstar_from_weights,
+};
+use crate::tensor::{matmul, sparse_dw, sparse_dx, Mat};
+
+/// Column-sketch methods the native backward supports (the coordinate and
+/// uniform-column families of §4.2; spectral and row/element masks stay
+/// PJRT-only).
+pub const NATIVE_METHODS: &[&str] = &[
+    "baseline", "per_column", "l1", "l1_ind", "l1_sq", "l2", "l2_sq", "var",
+    "var_sq", "ds",
+];
+
+/// One linear layer: `y = x·Wᵀ + b`, with `W: [d_out, d_in]` row-major.
+pub struct Linear {
+    /// Weight matrix, one row per output unit.
+    pub w: Mat,
+    /// Bias, length `d_out`.
+    pub b: Vec<f32>,
+}
+
+/// Multi-layer perceptron: linears with ReLU between (none after the last).
+pub struct Mlp {
+    /// The linear layers, input to output.
+    pub layers: Vec<Linear>,
+}
+
+/// Activations saved by [`Mlp::forward`] for the backward pass.
+pub struct ForwardCache {
+    /// `acts[0]` is the input batch; `acts[i+1]` the (post-ReLU) output of
+    /// layer `i`. The last entry holds the logits.
+    pub acts: Vec<Mat>,
+    /// Pre-activations `z_i` of each layer (needed for the ReLU derivative).
+    pub zs: Vec<Mat>,
+}
+
+impl ForwardCache {
+    /// The network output (last layer pre-activation = logits).
+    pub fn logits(&self) -> &Mat {
+        self.acts.last().expect("forward cache is never empty")
+    }
+}
+
+/// Per-layer parameter gradients, same shapes as the parameters.
+pub struct Grads {
+    /// `dL/dW` per layer.
+    pub dw: Vec<Mat>,
+    /// `dL/db` per layer.
+    pub db: Vec<Vec<f32>>,
+}
+
+impl Grads {
+    /// Flatten all gradients (layer order, dW then db) into one vector —
+    /// the layout the variance probes reason about.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for (dw, db) in self.dw.iter().zip(&self.db) {
+            out.extend_from_slice(&dw.data);
+            out.extend_from_slice(db);
+        }
+        out
+    }
+
+    /// Global ℓ2 norm over every gradient entry.
+    pub fn global_norm(&self) -> f64 {
+        let mut sq = 0.0f64;
+        for (dw, db) in self.dw.iter().zip(&self.db) {
+            sq += dw.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            sq += db.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        }
+        sq.sqrt()
+    }
+
+    /// Scale every gradient entry by `s` (used by clipping).
+    pub fn scale(&mut self, s: f32) {
+        for dw in &mut self.dw {
+            for v in &mut dw.data {
+                *v *= s;
+            }
+        }
+        for db in &mut self.db {
+            for v in db.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+/// How gated layers approximate their backward pass.
+#[derive(Clone, Debug)]
+pub struct SketchSpec {
+    /// One of [`NATIVE_METHODS`]; `"baseline"` means exact everywhere.
+    pub method: String,
+    /// Kept-column budget p ∈ (0, 1].
+    pub budget: f64,
+}
+
+impl SketchSpec {
+    /// The exact-backward spec.
+    pub fn exact() -> SketchSpec {
+        SketchSpec { method: "baseline".into(), budget: 1.0 }
+    }
+
+    /// True when no sketching happens regardless of the layer mask.
+    pub fn is_exact(&self) -> bool {
+        self.method == "baseline"
+    }
+}
+
+/// `z = x·Wᵀ + b` for row-major `W: [d_out, d_in]`.
+fn affine(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
+    let wt = w.transpose();
+    let mut z = matmul(x, &wt);
+    for i in 0..z.rows {
+        let row = &mut z.data[i * z.cols..(i + 1) * z.cols];
+        for (v, bj) in row.iter_mut().zip(b) {
+            *v += bj;
+        }
+    }
+    z
+}
+
+/// Exact linear backward: (dW, db, dX if requested).
+fn exact_linear_backward(
+    g: &Mat,
+    x: &Mat,
+    w: &Mat,
+    need_dx: bool,
+) -> (Mat, Vec<f32>, Option<Mat>) {
+    let dw = matmul(&g.transpose(), x);
+    let db = column_sums(g);
+    let dx = if need_dx { Some(matmul(g, w)) } else { None };
+    (dw, db, dx)
+}
+
+fn column_sums(g: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.cols];
+    for i in 0..g.rows {
+        for (o, &v) in out.iter_mut().zip(g.row(i)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// The paper's sketched linear backward on native matrices.
+///
+/// Draws keep-probabilities from the method's column scores (waterfilling,
+/// Algorithm 1), gates columns with correlated (systematic, Algorithm 2) or
+/// independent Bernoulli sampling (`per_column` and `*_ind` methods), and
+/// computes dX = Ĝ·W, dW = Ĝᵀ·X, db = Ĝᵀ·1 touching only kept columns with
+/// the unbiased 1/pᵢ rescale. Returns (dW, db, dX if requested).
+pub fn sketched_linear_backward(
+    g: &Mat,
+    x: &Mat,
+    w: &Mat,
+    method: &str,
+    budget: f64,
+    rng: &mut Pcg64,
+    need_dx: bool,
+) -> (Mat, Vec<f32>, Option<Mat>) {
+    let dout = g.cols;
+    let p: Vec<f32> = if method == "per_column" {
+        vec![budget.clamp(1e-6, 1.0) as f32; dout]
+    } else {
+        let scores = column_scores(method, g, Some(w));
+        pstar_from_weights(&scores, budget * dout as f64)
+    };
+    let independent = method == "per_column" || method.ends_with("_ind");
+    let z = if independent {
+        independent_bernoulli(rng, &p)
+    } else {
+        correlated_bernoulli(rng, &p)
+    };
+    let kept = kept_columns(&z, &p);
+    let dw = sparse_dw(g, &kept, x);
+    let mut db = vec![0.0f32; dout];
+    for &(j, inv) in &kept {
+        let mut s = 0.0f32;
+        for i in 0..g.rows {
+            s += g.at(i, j);
+        }
+        db[j] = s * inv;
+    }
+    let dx = if need_dx { Some(sparse_dx(g, &kept, w)) } else { None };
+    (dw, db, dx)
+}
+
+impl Mlp {
+    /// He-initialized MLP over `dims` (e.g. `[784, 64, 64, 10]`),
+    /// deterministic given `seed`.
+    pub fn new(dims: &[usize], seed: u64) -> Mlp {
+        assert!(dims.len() >= 2, "need at least one linear layer");
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for (li, pair) in dims.windows(2).enumerate() {
+            let (din, dout) = (pair[0], pair[1]);
+            let mut rng = Pcg64::new(seed ^ 0x1e57, 300 + li as u64);
+            let std = (2.0 / din as f64).sqrt();
+            let w = Mat::from_fn(dout, din, |_, _| (rng.gaussian() * std) as f32);
+            layers.push(Linear { w, b: vec![0.0; dout] });
+        }
+        Mlp { layers }
+    }
+
+    /// Layer widths, input first.
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.layers[0].w.cols];
+        d.extend(self.layers.iter().map(|l| l.w.rows));
+        d
+    }
+
+    /// Number of linear (sketchable) layers.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.data.len() + l.b.len()).sum()
+    }
+
+    /// Forward pass, caching everything the backward needs.
+    pub fn forward(&self, x: &Mat) -> ForwardCache {
+        let n = self.layers.len();
+        let mut acts = Vec::with_capacity(n + 1);
+        let mut zs = Vec::with_capacity(n);
+        acts.push(x.clone());
+        for (i, layer) in self.layers.iter().enumerate() {
+            let z = affine(acts.last().expect("acts nonempty"), &layer.w, &layer.b);
+            let h = if i + 1 < n {
+                let mut h = z.clone();
+                for v in &mut h.data {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                h
+            } else {
+                z.clone()
+            };
+            zs.push(z);
+            acts.push(h);
+        }
+        ForwardCache { acts, zs }
+    }
+
+    /// Manual backward from the loss gradient `dlogits`.
+    ///
+    /// `mask[i] > 0` enables the sketch on layer `i` (the Fig 4 location
+    /// ablation); a masked-off or `"baseline"` layer takes the exact path
+    /// and consumes no randomness, so `location="none"` reproduces the
+    /// baseline trajectory bit-for-bit.
+    pub fn backward(
+        &self,
+        cache: &ForwardCache,
+        dlogits: &Mat,
+        spec: &SketchSpec,
+        mask: &[f32],
+        rng: &mut Pcg64,
+    ) -> Grads {
+        let n = self.layers.len();
+        assert_eq!(mask.len(), n, "layer mask length");
+        let mut dw_rev: Vec<Mat> = Vec::with_capacity(n);
+        let mut db_rev: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut g = dlogits.clone();
+        for i in (0..n).rev() {
+            let x = &cache.acts[i];
+            let layer = &self.layers[i];
+            let need_dx = i > 0;
+            let sketched = mask[i] > 0.0 && !spec.is_exact();
+            let (dwi, dbi, dx) = if sketched {
+                sketched_linear_backward(
+                    &g, x, &layer.w, &spec.method, spec.budget, rng, need_dx,
+                )
+            } else {
+                exact_linear_backward(&g, x, &layer.w, need_dx)
+            };
+            dw_rev.push(dwi);
+            db_rev.push(dbi);
+            if let Some(mut dx) = dx {
+                // ReLU derivative at the previous layer's pre-activation
+                let z = &cache.zs[i - 1];
+                for (v, &zv) in dx.data.iter_mut().zip(&z.data) {
+                    if zv <= 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                g = dx;
+            }
+        }
+        dw_rev.reverse();
+        db_rev.reverse();
+        Grads { dw: dw_rev, db: db_rev }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = Mlp::new(&[5, 4, 3], 0);
+        let mut rng = Pcg64::new(1, 0);
+        let x = randmat(7, 5, &mut rng);
+        let cache = m.forward(&x);
+        assert_eq!(cache.acts.len(), 3);
+        assert_eq!(cache.zs.len(), 2);
+        assert_eq!((cache.logits().rows, cache.logits().cols), (7, 3));
+        assert_eq!(m.dims(), vec![5, 4, 3]);
+        assert_eq!(m.num_params(), 5 * 4 + 4 + 4 * 3 + 3);
+    }
+
+    #[test]
+    fn relu_applied_between_but_not_after() {
+        let m = Mlp::new(&[3, 4, 8], 1);
+        let mut rng = Pcg64::new(2, 0);
+        let x = randmat(16, 3, &mut rng);
+        let cache = m.forward(&x);
+        assert!(cache.acts[1].data.iter().all(|&v| v >= 0.0));
+        assert!(cache.logits().data.iter().any(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let m = Mlp::new(&[4, 5, 3], 3);
+        let mut rng = Pcg64::new(4, 0);
+        let x = randmat(6, 4, &mut rng);
+        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let cache = m.forward(&x);
+        let (_, dlogits) =
+            crate::native::loss::loss_and_grad(crate::native::LossKind::CrossEntropy, cache.logits(), &y);
+        let grads = m.backward(
+            &cache,
+            &dlogits,
+            &SketchSpec::exact(),
+            &[0.0, 0.0],
+            &mut rng,
+        );
+        // finite-difference a few weight coordinates of each layer
+        let eps = 1e-3f32;
+        let mut m2 = Mlp::new(&[4, 5, 3], 3);
+        for li in 0..2 {
+            for &idx in &[0usize, 3, 7] {
+                let orig = m2.layers[li].w.data[idx];
+                m2.layers[li].w.data[idx] = orig + eps;
+                let lp = loss_of(&m2, &x, &y);
+                m2.layers[li].w.data[idx] = orig - eps;
+                let lm = loss_of(&m2, &x, &y);
+                m2.layers[li].w.data[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                let an = grads.dw[li].data[idx] as f64;
+                // loose bar: f32 forward + ReLU kinks make FD noisy, but a
+                // transposed/missing term would be off by O(|fd|)
+                assert!(
+                    (fd - an).abs() < 1e-2 * (1.0 + fd.abs()),
+                    "layer {li} idx {idx}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    fn loss_of(m: &Mlp, x: &Mat, y: &[i32]) -> f64 {
+        let cache = m.forward(x);
+        crate::native::loss::loss_value(
+            crate::native::LossKind::CrossEntropy,
+            cache.logits(),
+            y,
+        )
+    }
+
+    #[test]
+    fn sketched_full_budget_matches_exact() {
+        let mut rng = Pcg64::new(9, 0);
+        let g = randmat(8, 6, &mut rng);
+        let x = randmat(8, 5, &mut rng);
+        let w = randmat(6, 5, &mut rng);
+        let (dw_e, db_e, dx_e) = exact_linear_backward(&g, &x, &w, true);
+        let (dw_s, db_s, dx_s) =
+            sketched_linear_backward(&g, &x, &w, "l1", 1.0, &mut rng, true);
+        for (a, b) in dw_e.data.iter().zip(&dw_s.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in db_e.iter().zip(&db_s) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in dx_e.unwrap().data.iter().zip(&dx_s.unwrap().data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sketched_budget_drops_columns() {
+        let mut rng = Pcg64::new(11, 0);
+        let g = randmat(16, 32, &mut rng);
+        let x = randmat(16, 8, &mut rng);
+        let w = randmat(32, 8, &mut rng);
+        let (dw, db, _) =
+            sketched_linear_backward(&g, &x, &w, "l1", 0.25, &mut rng, false);
+        // dropped output units have identically-zero dW rows and db entries
+        let zero_rows = (0..32)
+            .filter(|&j| dw.data[j * 8..(j + 1) * 8].iter().all(|&v| v == 0.0))
+            .count();
+        assert!(zero_rows >= 32 - 10, "only {zero_rows} zero rows");
+        assert!(db.iter().filter(|&&v| v == 0.0).count() >= 32 - 10);
+    }
+
+    #[test]
+    fn masked_off_layers_consume_no_rng() {
+        let m = Mlp::new(&[4, 6, 3], 5);
+        let mut rng = Pcg64::new(6, 0);
+        let x = randmat(5, 4, &mut rng);
+        let y = vec![0i32, 1, 2, 0, 1];
+        let cache = m.forward(&x);
+        let (_, dl) = crate::native::loss::loss_and_grad(
+            crate::native::LossKind::CrossEntropy,
+            cache.logits(),
+            &y,
+        );
+        let spec = SketchSpec { method: "l1".into(), budget: 0.3 };
+        let mut r1 = Pcg64::new(77, 0);
+        let g1 = m.backward(&cache, &dl, &spec, &[0.0, 0.0], &mut r1);
+        let mut r2 = Pcg64::new(77, 0);
+        let g2 = m.backward(&cache, &dl, &SketchSpec::exact(), &[1.0, 1.0], &mut r2);
+        for (a, b) in g1.dw[0].data.iter().zip(&g2.dw[0].data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // and the rng stream was untouched by the masked run
+        assert_eq!(r1.next_u64(), Pcg64::new(77, 0).next_u64());
+    }
+
+    #[test]
+    fn grads_flatten_and_norm() {
+        let g = Grads {
+            dw: vec![Mat::from_rows(vec![vec![3.0, 0.0]])],
+            db: vec![vec![4.0]],
+        };
+        assert_eq!(g.flatten(), vec![3.0, 0.0, 4.0]);
+        assert!((g.global_norm() - 5.0).abs() < 1e-9);
+    }
+}

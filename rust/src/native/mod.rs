@@ -1,0 +1,35 @@
+//! CPU-native training backend: the paper's sketched backward, end to end.
+//!
+//! The PJRT path ([`crate::runtime`]) executes AOT-compiled JAX graphs; this
+//! module is the self-contained alternative (DESIGN.md §7): an MLP whose
+//! forward runs on [`crate::tensor::Mat`] and whose backward is written by
+//! hand per layer, so the paper's randomized VJP estimators plug in exactly
+//! where the math says they do —
+//!
+//! 1. column scores on the output gradient ([`crate::sketch::column_scores`]),
+//! 2. waterfilled keep-probabilities ([`crate::sketch::pstar_from_weights`]),
+//! 3. correlated (systematic) or independent Bernoulli gates,
+//! 4. 1/pᵢ-rescaled kept-column GEMMs ([`crate::tensor::sparse_dx`] /
+//!    [`crate::tensor::sparse_dw`]).
+//!
+//! Because the sparse GEMMs really skip dropped columns, wall-clock shrinks
+//! with the budget (Eq. 6's ρ(V)) — `cargo bench native_bwd` measures it —
+//! while unbiasedness keeps SGD convergent (`tests/native_unbiased.rs`
+//! checks E[ĝ] = g by Monte Carlo).
+//!
+//! Submodules: [`mlp`] (model + manual backward), [`loss`] (cross-entropy /
+//! MSE heads), [`optim`] (SGD, momentum, Adam, gradient clipping),
+//! [`trainer`] (the training loop behind `--backend native`).
+
+pub mod loss;
+pub mod mlp;
+pub mod optim;
+pub mod trainer;
+
+pub use loss::{accuracy, loss_and_grad, loss_value, LossKind};
+pub use mlp::{
+    sketched_linear_backward, ForwardCache, Grads, Linear, Mlp, SketchSpec,
+    NATIVE_METHODS,
+};
+pub use optim::{clip_global_norm, Optim};
+pub use trainer::NativeTrainer;

@@ -1,0 +1,206 @@
+//! Optimizers for the native trainer: SGD (± momentum) and Adam, plus
+//! global-norm gradient clipping — the recipes of §5 / Appendix B.2.
+
+use super::mlp::Grads;
+
+/// First-order optimizer with per-slot state (slot = one parameter tensor;
+/// the trainer uses `2·layer` for weights and `2·layer + 1` for biases).
+pub enum Optim {
+    /// SGD; `momentum = 0` is plain gradient descent.
+    Sgd {
+        /// Momentum coefficient µ (heavy-ball: v ← µv + g, p ← p − lr·v).
+        momentum: f64,
+        /// Velocity buffers, lazily sized per slot.
+        vel: Vec<Vec<f32>>,
+    },
+    /// Adam with bias correction (weight decay 0).
+    Adam {
+        /// First-moment decay β₁.
+        beta1: f64,
+        /// Second-moment decay β₂.
+        beta2: f64,
+        /// Denominator fuzz ε.
+        eps: f64,
+        /// Per-slot step counts (bias correction stays right no matter
+        /// what order callers update slots in).
+        t: Vec<f64>,
+        /// First-moment buffers per slot.
+        m: Vec<Vec<f32>>,
+        /// Second-moment buffers per slot.
+        v: Vec<Vec<f32>>,
+    },
+}
+
+impl Optim {
+    /// Plain SGD (the paper's MLP recipe).
+    pub fn sgd() -> Optim {
+        Optim::Sgd { momentum: 0.0, vel: Vec::new() }
+    }
+
+    /// Heavy-ball momentum SGD.
+    pub fn momentum(mu: f64) -> Optim {
+        Optim::Sgd { momentum: mu, vel: Vec::new() }
+    }
+
+    /// Adam with the usual (0.9, 0.999, 1e-8) constants.
+    pub fn adam() -> Optim {
+        Optim::Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Parse an optimizer name from the config (`sgd|momentum|adam`).
+    pub fn parse(name: &str) -> anyhow::Result<Optim> {
+        match name {
+            "sgd" => Ok(Optim::sgd()),
+            "momentum" => Ok(Optim::momentum(0.9)),
+            "adam" | "adamw" => Ok(Optim::adam()),
+            other => anyhow::bail!("unknown optimizer {other} (want sgd|momentum|adam)"),
+        }
+    }
+
+    fn slot_buffer(bufs: &mut Vec<Vec<f32>>, slot: usize, len: usize) -> &mut Vec<f32> {
+        if bufs.len() <= slot {
+            bufs.resize_with(slot + 1, Vec::new);
+        }
+        let buf = &mut bufs[slot];
+        if buf.len() != len {
+            buf.clear();
+            buf.resize(len, 0.0);
+        }
+        buf
+    }
+
+    /// Apply one update to the parameter tensor registered at `slot`.
+    pub fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32], lr: f64) {
+        assert_eq!(param.len(), grad.len(), "param/grad length mismatch");
+        match self {
+            Optim::Sgd { momentum, vel } => {
+                if *momentum == 0.0 {
+                    for (p, &g) in param.iter_mut().zip(grad) {
+                        *p -= (lr * g as f64) as f32;
+                    }
+                } else {
+                    let mu = *momentum as f32;
+                    let v = Self::slot_buffer(vel, slot, param.len());
+                    for ((p, &g), vi) in param.iter_mut().zip(grad).zip(v.iter_mut()) {
+                        *vi = mu * *vi + g;
+                        *p -= (lr * *vi as f64) as f32;
+                    }
+                }
+            }
+            Optim::Adam { beta1, beta2, eps, t, m, v } => {
+                if t.len() <= slot {
+                    t.resize(slot + 1, 0.0);
+                }
+                t[slot] += 1.0;
+                let tcur = t[slot];
+                let (b1, b2, e) = (*beta1 as f32, *beta2 as f32, *eps as f32);
+                let bc1 = (1.0 - beta1.powf(tcur)) as f32;
+                let bc2 = (1.0 - beta2.powf(tcur)) as f32;
+                let lrf = lr as f32;
+                {
+                    let mb = Self::slot_buffer(m, slot, param.len());
+                    for (mi, &g) in mb.iter_mut().zip(grad) {
+                        *mi = b1 * *mi + (1.0 - b1) * g;
+                    }
+                }
+                {
+                    let vb = Self::slot_buffer(v, slot, param.len());
+                    for (vi, &g) in vb.iter_mut().zip(grad) {
+                        *vi = b2 * *vi + (1.0 - b2) * g * g;
+                    }
+                }
+                let (mb, vb) = (&m[slot], &v[slot]);
+                for ((p, mi), vi) in param.iter_mut().zip(mb).zip(vb) {
+                    let mhat = mi / bc1;
+                    let vhat = vi / bc2;
+                    *p -= lrf * mhat / (vhat.sqrt() + e);
+                }
+            }
+        }
+    }
+}
+
+/// Scale `grads` so the global ℓ2 norm is at most `max_norm` (no-op when
+/// `max_norm <= 0`). Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut Grads, max_norm: f64) -> f64 {
+    let norm = grads.global_norm();
+    if max_norm > 0.0 && norm > max_norm {
+        grads.scale((max_norm / norm.max(1e-12)) as f32);
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn sgd_step_is_lr_times_grad() {
+        let mut o = Optim::sgd();
+        let mut p = vec![1.0f32, 2.0];
+        o.update(0, &mut p, &[0.5, -1.0], 0.1);
+        assert!((p[0] - 0.95).abs() < 1e-6);
+        assert!((p[1] - 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut o = Optim::momentum(0.5);
+        let mut p = vec![0.0f32];
+        o.update(0, &mut p, &[1.0], 1.0); // v=1, p=-1
+        o.update(0, &mut p, &[1.0], 1.0); // v=1.5, p=-2.5
+        assert!((p[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        let mut o = Optim::adam();
+        let mut p = vec![0.0f32];
+        o.update(0, &mut p, &[3.0], 0.01);
+        // bias-corrected first step ≈ lr · sign(g)
+        assert!((p[0] + 0.01).abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    fn adam_separate_slots_independent() {
+        let mut o = Optim::adam();
+        let mut a = vec![0.0f32];
+        let mut b = vec![0.0f32, 0.0];
+        o.update(0, &mut a, &[1.0], 0.1);
+        o.update(1, &mut b, &[1.0, -1.0], 0.1);
+        assert!(a[0] < 0.0 && b[0] < 0.0 && b[1] > 0.0);
+    }
+
+    #[test]
+    fn adam_out_of_order_slots_stay_finite() {
+        // per-slot step counts: updating slot 1 before slot 0 must not
+        // divide by a zero bias correction
+        let mut o = Optim::adam();
+        let mut p = vec![0.0f32];
+        o.update(1, &mut p, &[2.0], 0.01);
+        assert!(p[0].is_finite() && (p[0] + 0.01).abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    fn clip_caps_norm() {
+        let mut g = Grads {
+            dw: vec![Mat::from_rows(vec![vec![3.0, 4.0]])],
+            db: vec![vec![0.0]],
+        };
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-9);
+        assert!((g.global_norm() - 1.0).abs() < 1e-6);
+        // under the cap: untouched
+        let pre2 = clip_global_norm(&mut g, 10.0);
+        assert!((pre2 - 1.0).abs() < 1e-6);
+        assert!((g.global_norm() - 1.0).abs() < 1e-6);
+    }
+}

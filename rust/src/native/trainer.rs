@@ -1,0 +1,283 @@
+//! The native training loop: same protocol as the PJRT trainer
+//! ([`crate::coordinator::trainer`]) — same datasets, batch order, LR
+//! schedule and curve format — but every step runs on [`crate::tensor`]
+//! kernels, so it needs no AOT artifacts and the sketched backward's FLOP
+//! saving is real wall-clock.
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::layer_mask;
+use crate::data::{self, BatchIter, Dataset, DatasetKind};
+use crate::metrics::RunCurve;
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+use anyhow::{bail, Result};
+
+use super::loss::{accuracy, loss_and_grad, loss_value, LossKind};
+use super::mlp::{Mlp, SketchSpec, NATIVE_METHODS};
+use super::optim::{clip_global_norm, Optim};
+
+/// Layer widths for a named model (native backend supports the MLP; BagNet /
+/// ViT stay PJRT-only until their native blocks land).
+pub fn model_dims(model: &str) -> Result<Vec<usize>> {
+    match model {
+        "mlp" => Ok(vec![784, 64, 64, 10]),
+        other => bail!(
+            "native backend has no model {other} (supported: mlp; use --backend pjrt for vit/bagnet)"
+        ),
+    }
+}
+
+/// Max gradient norm for the MLP recipe (§B.2: clip 1.0; ≤ 0 disables).
+pub const MLP_CLIP_NORM: f64 = 1.0;
+
+/// CPU-native trainer over [`Mlp`].
+pub struct NativeTrainer {
+    /// The run configuration (steps, LR schedule, sketch method/budget, …).
+    pub cfg: TrainConfig,
+    model: Mlp,
+    opt: Optim,
+    loss: LossKind,
+    spec: SketchSpec,
+    mask: Vec<f32>,
+    sk_rng: Pcg64,
+}
+
+impl NativeTrainer {
+    /// Build a trainer for `cfg.model`'s standard dimensions.
+    pub fn new(cfg: TrainConfig) -> Result<NativeTrainer> {
+        let dims = model_dims(&cfg.model)?;
+        NativeTrainer::with_dims(cfg, &dims)
+    }
+
+    /// Build a trainer over explicit layer widths (tests shrink the net).
+    pub fn with_dims(mut cfg: TrainConfig, dims: &[usize]) -> Result<NativeTrainer> {
+        if cfg.eval_every == 0 {
+            // avoid a remainder-by-zero in the step loop; "never" → run end
+            cfg.eval_every = cfg.steps.max(1);
+        }
+        if !NATIVE_METHODS.contains(&cfg.method.as_str()) {
+            bail!(
+                "native backend does not implement method {} (supported: {})",
+                cfg.method,
+                NATIVE_METHODS.join(" ")
+            );
+        }
+        if cfg.batch == 0 || cfg.train_size < cfg.batch {
+            bail!(
+                "train_size {} must cover at least one batch of {}",
+                cfg.train_size,
+                cfg.batch
+            );
+        }
+        let model = Mlp::new(dims, cfg.seed);
+        let opt = Optim::parse(&cfg.optimizer)?;
+        let loss = LossKind::parse(&cfg.loss)?;
+        let mask = layer_mask(&cfg.location, model.num_layers());
+        let spec = SketchSpec { method: cfg.method.clone(), budget: cfg.budget };
+        let sk_rng = Pcg64::new(cfg.seed ^ 0x9e3779b9, 11);
+        Ok(NativeTrainer { cfg, model, opt, loss, spec, mask, sk_rng })
+    }
+
+    /// Batch size of this run.
+    pub fn batch_size(&self) -> usize {
+        self.cfg.batch
+    }
+
+    /// The model (e.g. for benches driving steps manually).
+    pub fn model(&self) -> &Mlp {
+        &self.model
+    }
+
+    /// Generate this run's datasets — identical protocol to the PJRT
+    /// trainer: contents share a fixed generator seed so method comparisons
+    /// are paired; batch order varies with `cfg.seed`.
+    pub fn datasets(&self) -> (Dataset, Dataset) {
+        let kind = DatasetKind::for_model(&self.cfg.model);
+        let train = data::generate(kind, self.cfg.train_size, 1234, "train");
+        let test = data::generate(kind, self.cfg.test_size, 1234, "test");
+        (train, test)
+    }
+
+    /// One optimizer step on a batch; returns the training loss.
+    pub fn step(&mut self, x: &Mat, y: &[i32], step: usize) -> f64 {
+        let cache = self.model.forward(x);
+        let (loss, dlogits) = loss_and_grad(self.loss, cache.logits(), y);
+        let mut grads = self.model.backward(
+            &cache,
+            &dlogits,
+            &self.spec,
+            &self.mask,
+            &mut self.sk_rng,
+        );
+        clip_global_norm(&mut grads, MLP_CLIP_NORM);
+        let lr = self.cfg.lr_at(step);
+        for (i, layer) in self.model.layers.iter_mut().enumerate() {
+            self.opt.update(2 * i, &mut layer.w.data, &grads.dw[i].data, lr);
+            self.opt.update(2 * i + 1, &mut layer.b, &grads.db[i], lr);
+        }
+        loss
+    }
+
+    /// Evaluate on the full test set; returns (mean loss, accuracy).
+    pub fn evaluate(&self, test: &Dataset) -> Result<(f64, f64)> {
+        let batch = self.cfg.batch;
+        let nb = test.n / batch;
+        if nb == 0 {
+            bail!("test set smaller than one batch");
+        }
+        let dim = test.dim;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for b in 0..nb {
+            let x = Mat {
+                rows: batch,
+                cols: dim,
+                data: test.x[b * batch * dim..(b + 1) * batch * dim].to_vec(),
+            };
+            let y = &test.y[b * batch..(b + 1) * batch];
+            let cache = self.model.forward(&x);
+            loss_sum += loss_value(self.loss, cache.logits(), y) * batch as f64;
+            correct += accuracy(cache.logits(), y) * batch as f64;
+        }
+        let seen = (nb * batch) as f64;
+        Ok((loss_sum / seen, correct / seen))
+    }
+
+    /// Full training run; returns the loss/eval curve (same shape as the
+    /// PJRT trainer's so sweeps and experiments are backend-agnostic).
+    pub fn run(&mut self) -> Result<RunCurve> {
+        let (train_ds, test_ds) = self.datasets();
+        let mut curve = RunCurve::default();
+        let mut rng = Pcg64::new(self.cfg.seed.wrapping_add(77), 3);
+
+        let batch = self.cfg.batch;
+        let dim = train_ds.dim;
+        // staged batch reused across steps (no per-step allocation)
+        let mut xmat = Mat::zeros(batch, dim);
+        let mut ybuf = vec![0i32; batch];
+
+        let mut step = 0usize;
+        'outer: loop {
+            let mut iter = BatchIter::new(&train_ds, batch, &mut rng);
+            while iter.next_into(&mut xmat.data, &mut ybuf) {
+                if step >= self.cfg.steps {
+                    break 'outer;
+                }
+                let loss = self.step(&xmat, &ybuf, step);
+                if !loss.is_finite() {
+                    curve.record_loss(step, f64::INFINITY);
+                    break 'outer;
+                }
+                curve.record_loss(step, loss);
+                step += 1;
+                if step % self.cfg.eval_every == 0 || step == self.cfg.steps {
+                    let (el, ea) = self.evaluate(&test_ds)?;
+                    curve.record_eval(step, el, ea);
+                }
+            }
+            if step >= self.cfg.steps {
+                break;
+            }
+        }
+        if curve.evals.is_empty() {
+            let (el, ea) = self.evaluate(&test_ds)?;
+            curve.record_eval(step, el, ea);
+        }
+        Ok(curve)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+
+    fn tiny_cfg(method: &str, budget: f64) -> TrainConfig {
+        let mut cfg = Preset::Smoke.base("mlp");
+        cfg.method = method.into();
+        cfg.budget = budget;
+        cfg.train_size = 256;
+        cfg.test_size = 128;
+        cfg.steps = 24;
+        cfg.eval_every = 24;
+        cfg.batch = 32;
+        cfg
+    }
+
+    #[test]
+    fn rejects_unknown_method_and_model() {
+        let mut cfg = tiny_cfg("rcs", 0.2);
+        assert!(NativeTrainer::new(cfg.clone()).is_err());
+        cfg.method = "l1".into();
+        cfg.model = "vit".into();
+        assert!(NativeTrainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn loss_decreases_exact_and_sketched() {
+        for (method, budget) in [("baseline", 1.0), ("l1", 0.3)] {
+            let mut t = NativeTrainer::with_dims(
+                tiny_cfg(method, budget),
+                &[784, 16, 10],
+            )
+            .unwrap();
+            let curve = t.run().unwrap();
+            let first = curve.losses[0];
+            let last = curve.tail_loss(6).unwrap();
+            assert!(
+                last < first,
+                "{method}: loss {first} → {last} did not decrease"
+            );
+            assert!(curve.final_acc().is_some());
+        }
+    }
+
+    #[test]
+    fn determinism_same_seed_same_curve() {
+        let cfg = tiny_cfg("l1", 0.25);
+        let c1 = NativeTrainer::with_dims(cfg.clone(), &[784, 12, 10])
+            .unwrap()
+            .run()
+            .unwrap();
+        let c2 = NativeTrainer::with_dims(cfg, &[784, 12, 10])
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(c1.losses, c2.losses);
+    }
+
+    #[test]
+    fn location_none_matches_baseline_exactly() {
+        let mut cfg = tiny_cfg("l1", 0.1);
+        cfg.location = "none".into();
+        let sketched = NativeTrainer::with_dims(cfg.clone(), &[784, 12, 10])
+            .unwrap()
+            .run()
+            .unwrap();
+        cfg.method = "baseline".into();
+        cfg.location = "all".into();
+        let baseline = NativeTrainer::with_dims(cfg, &[784, 12, 10])
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(sketched.losses, baseline.losses);
+    }
+
+    #[test]
+    fn adam_and_mse_paths_train() {
+        let mut cfg = tiny_cfg("l1", 0.5);
+        cfg.optimizer = "adam".into();
+        cfg.loss = "mse".into();
+        cfg.lr = 1e-2;
+        cfg.steps = 48;
+        cfg.eval_every = 48;
+        let mut t = NativeTrainer::with_dims(cfg, &[784, 12, 10]).unwrap();
+        let curve = t.run().unwrap();
+        assert!(
+            curve.tail_loss(8).unwrap() < curve.losses[0],
+            "MSE/Adam loss {} → {}",
+            curve.losses[0],
+            curve.tail_loss(8).unwrap()
+        );
+    }
+}

@@ -2,7 +2,10 @@
 //!
 //! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): one process-wide
 //! client, an executable cache keyed by artifact name, and typed host
-//! tensors (`HostTensor`) that mirror the manifest dtypes.
+//! tensors (`HostTensor`) that mirror the manifest dtypes. Everything that
+//! touches `xla` sits behind the `pjrt` cargo feature (DESIGN.md §7); the
+//! manifest parser, [`hlo_stats`] and the [`HostTensor`] container stay
+//! available in every build.
 //!
 //! Interchange is HLO **text** — `HloModuleProto::from_text_file` reassigns
 //! instruction ids, which is what makes jax≥0.5 modules loadable on this
@@ -20,10 +23,16 @@ mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 /// dtype tags used by the manifest (subset we actually emit).
@@ -100,10 +109,20 @@ impl HostTensor {
         Ok(d[0])
     }
 
+    /// Byte size of one element of this dtype (4 for every supported one).
+    pub fn elem_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Literal conversions (device interchange) — PJRT builds only.
+#[cfg(feature = "pjrt")]
+impl HostTensor {
     fn dims_i64(shape: &[usize]) -> Vec<i64> {
         shape.iter().map(|&d| d as i64).collect()
     }
 
+    /// Convert to an `xla::Literal` for execution.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             HostTensor::F32(d, s) => {
@@ -137,11 +156,14 @@ impl HostTensor {
 // used only for CPU-native work (pipeline sim, tensor benches).
 
 /// A compiled artifact ready to run.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
+    /// The manifest entry this executable was compiled from.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with host tensors; returns one HostTensor per manifest output.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -199,13 +221,17 @@ impl Executable {
 }
 
 /// Artifact loader + executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
+    /// Artifact directory this runtime loads from.
     pub dir: PathBuf,
+    /// Parsed `manifest.json`.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open an artifacts directory (expects `manifest.json` inside).
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
@@ -265,6 +291,7 @@ impl Runtime {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn host_tensor_roundtrip_f32() {
         let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
@@ -274,6 +301,7 @@ mod tests {
         assert_eq!(t2.as_f32().unwrap(), t.as_f32().unwrap());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn host_tensor_roundtrip_ints() {
         let t = HostTensor::S32(vec![-1, 2, 7], vec![3]);
@@ -298,9 +326,9 @@ mod tests {
         let s = HostTensor::scalar_f32(0.25);
         assert_eq!(s.f32_scalar().unwrap(), 0.25);
         assert!(s.shape().is_empty());
-        let lit = s.to_literal().unwrap();
-        let s2 = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(s2.f32_scalar().unwrap(), 0.25);
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_empty());
+        assert_eq!(s.elem_bytes(), 4);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //!
 //! All tests skip gracefully when `artifacts/` hasn't been built (run
 //! `make artifacts` first); CI treats missing artifacts as a failure via
-//! `make test`.
+//! `make test`. The whole file is gated on the `pjrt` cargo feature — the
+//! default (native-only) build compiles none of it (DESIGN.md §7).
+
+#![cfg(feature = "pjrt")]
 
 use uavjp::config::{Preset, TrainConfig};
 use uavjp::coordinator::trainer::layer_mask;

@@ -1,0 +1,162 @@
+//! Unbiasedness of the native sketched backward (Prop 2.2 i on real
+//! kernels): the Monte-Carlo mean of sketched dX / dW / db over fresh gate
+//! draws must match the exact backward, for both correlated (systematic)
+//! and independent Bernoulli gates, across methods and budgets.
+//!
+//! Tolerances were calibrated against the estimator's own MC noise: with
+//! p_i ≳ 0.15 and ~3000 trials the relative Frobenius deviation of the mean
+//! sits near 1.5–3%, so the 12% bar gives ≳4× headroom while still catching
+//! any systematic bias (a missing 1/p rescale shows up at O(1)).
+
+use uavjp::native::sketched_linear_backward;
+use uavjp::ptest::{check, gen};
+use uavjp::rng::Pcg64;
+use uavjp::tensor::{dense_backward, Mat};
+
+fn mc_mean_matches_exact(
+    method: &str,
+    budget: f64,
+    b: usize,
+    dout: usize,
+    din: usize,
+    trials: usize,
+    data_seed: u64,
+) -> Result<(), String> {
+    let mut rng = Pcg64::new(data_seed, 0);
+    let g = Mat::from_fn(b, dout, |_, _| rng.gaussian() as f32);
+    let x = Mat::from_fn(b, din, |_, _| rng.gaussian() as f32);
+    let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
+    let (dx_exact, dw_exact) = dense_backward(&g, &x, &w);
+    let db_exact: Vec<f64> = (0..dout)
+        .map(|j| (0..b).map(|i| g.at(i, j) as f64).sum())
+        .collect();
+
+    let mut acc_dx = vec![0.0f64; b * din];
+    let mut acc_dw = vec![0.0f64; dout * din];
+    let mut acc_db = vec![0.0f64; dout];
+    let mut gate_rng = Pcg64::new(data_seed ^ 0x5eed, 1);
+    for _ in 0..trials {
+        let (dw, db, dx) = sketched_linear_backward(
+            &g, &x, &w, method, budget, &mut gate_rng, true,
+        );
+        for (a, v) in acc_dw.iter_mut().zip(&dw.data) {
+            *a += *v as f64;
+        }
+        for (a, v) in acc_db.iter_mut().zip(&db) {
+            *a += *v as f64;
+        }
+        for (a, v) in acc_dx.iter_mut().zip(&dx.expect("asked for dx").data) {
+            *a += *v as f64;
+        }
+    }
+    let t = trials as f64;
+    let rel = |acc: &[f64], exact: &[f64]| -> f64 {
+        let mut err = 0.0f64;
+        let mut norm = 0.0f64;
+        for (a, e) in acc.iter().zip(exact) {
+            let d = a / t - e;
+            err += d * d;
+            norm += e * e;
+        }
+        (err / norm.max(1e-12)).sqrt()
+    };
+    let dw64: Vec<f64> = dw_exact.data.iter().map(|&v| v as f64).collect();
+    let dx64: Vec<f64> = dx_exact.data.iter().map(|&v| v as f64).collect();
+    let (edw, edx, edb) = (
+        rel(&acc_dw, &dw64),
+        rel(&acc_dx, &dx64),
+        rel(&acc_db, &db_exact),
+    );
+    let tol = 0.12;
+    if edw > tol || edx > tol || edb > tol {
+        return Err(format!(
+            "{method} p={budget}: MC mean deviates — dW {edw:.4}, dX {edx:.4}, db {edb:.4} (tol {tol})"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn correlated_gates_unbiased_l1() {
+    mc_mean_matches_exact("l1", 0.4, 8, 12, 6, 3000, 3).unwrap();
+}
+
+#[test]
+fn independent_gates_unbiased_l1_ind() {
+    mc_mean_matches_exact("l1_ind", 0.4, 8, 12, 6, 3000, 4).unwrap();
+}
+
+#[test]
+fn independent_gates_unbiased_per_column() {
+    // uniform keep-probability p = budget, independent gates
+    mc_mean_matches_exact("per_column", 0.5, 8, 12, 6, 3000, 5).unwrap();
+}
+
+#[test]
+fn correlated_gates_unbiased_ds_scores() {
+    mc_mean_matches_exact("ds", 0.5, 8, 12, 6, 3000, 6).unwrap();
+}
+
+#[test]
+fn unbiased_across_random_shapes_and_budgets() {
+    // property-style: random small layer shapes and budgets, fewer trials,
+    // both gate families via the method name
+    check(
+        7,
+        4,
+        |rng| {
+            let b = gen::usize_in(rng, 4, 10);
+            let dout = gen::usize_in(rng, 6, 16);
+            (b, dout)
+        },
+        |&(b, dout)| {
+            let din = 5usize;
+            for (method, budget) in [("l1", 0.45), ("l1_ind", 0.45)] {
+                mc_mean_matches_exact(
+                    method,
+                    budget,
+                    b,
+                    dout,
+                    din,
+                    2500,
+                    (b * 31 + dout) as u64,
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sketched_mean_differs_from_exact_without_rescale_sanity() {
+    // negative control for the tolerance: a deliberately biased estimator
+    // (keep columns but skip the 1/p rescale) must FAIL the same bar,
+    // proving the test has teeth.
+    let (b, dout, din, trials) = (8usize, 12usize, 6usize, 1500usize);
+    let mut rng = Pcg64::new(9, 0);
+    let g = Mat::from_fn(b, dout, |_, _| rng.gaussian() as f32);
+    let x = Mat::from_fn(b, din, |_, _| rng.gaussian() as f32);
+    let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
+    let (_, dw_exact) = dense_backward(&g, &x, &w);
+    let mut acc = vec![0.0f64; dout * din];
+    let mut gate_rng = Pcg64::new(10, 1);
+    for _ in 0..trials {
+        let (dw, _, _) = sketched_linear_backward(
+            &g, &x, &w, "l1", 0.4, &mut gate_rng, false,
+        );
+        // undo the rescale imperfectly: halve (simulates a biased estimator)
+        for (a, v) in acc.iter_mut().zip(&dw.data) {
+            *a += (*v as f64) * 0.5;
+        }
+    }
+    let t = trials as f64;
+    let mut err = 0.0f64;
+    let mut norm = 0.0f64;
+    for (a, e) in acc.iter().zip(&dw_exact.data) {
+        let d = a / t - *e as f64;
+        err += d * d;
+        norm += (*e as f64) * (*e as f64);
+    }
+    let rel = (err / norm).sqrt();
+    assert!(rel > 0.12, "biased control passed the bar: {rel}");
+}

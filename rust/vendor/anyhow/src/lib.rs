@@ -1,0 +1,171 @@
+//! Offline stand-in for the `anyhow` crate (DESIGN.md §6).
+//!
+//! The build environment has no network access and no vendored registry, so
+//! this path dependency provides the slice of anyhow's API the crate uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros and the
+//! [`Context`] extension trait. Errors are string-backed: source chains are
+//! flattened into the message at conversion time, which is all the binaries
+//! ever do with them (print and exit).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// String-backed error type. Like `anyhow::Error` it deliberately does NOT
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context line: `"{context}: {inner}"`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug is what `fn main() -> Result<()>` prints on exit; keep it readable.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut msg = err.to_string();
+        let mut src = err.source();
+        while let Some(cause) = src {
+            msg.push_str(": ");
+            msg.push_str(&cause.to_string());
+            src = cause.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Drop-in for `anyhow::Result`: the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::{Error, StdError};
+
+    /// Sealed conversion helper so [`super::Context`] has a single impl that
+    /// covers both `Result<T, impl std::error::Error>` and
+    /// `Result<T, Error>` without overlapping.
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Attach human context to a failing `Result` or empty `Option`.
+pub trait Context<T, E> {
+    /// Eagerly-evaluated context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Lazily-evaluated context (use when formatting is nontrivial).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!`: build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!`: early-return `Err(anyhow!(...))` from the enclosing function.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let err = fails_io().context("loading config").unwrap_err();
+        let text = format!("{err}");
+        assert!(text.starts_with("loading config: "), "{text}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let base: Result<()> = Err(anyhow!("inner {}", 7));
+        let err = base.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{err}"), "outer 1: inner 7");
+        let none: Option<u32> = None;
+        let err = none.context("missing").unwrap_err();
+        assert_eq!(format!("{err}"), "missing");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(3)
+        }
+        assert_eq!(f(false).unwrap(), 3);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+    }
+}

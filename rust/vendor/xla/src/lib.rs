@@ -1,0 +1,180 @@
+//! Offline stub of the `xla` crate (xla_extension PJRT bindings).
+//!
+//! The real crate links libxla_extension, which this build environment does
+//! not ship (DESIGN.md §7). This stub reproduces exactly the API surface the
+//! `pjrt` feature of `uavjp` compiles against so the PJRT code paths stay
+//! type-checked; every runtime entry point returns an [`Error`] explaining
+//! that PJRT is unavailable. Swap this path dependency for the real
+//! `xla = "0.5"` on a machine with the toolchain to actually execute AOT
+//! artifacts.
+
+use std::fmt;
+
+/// Stub error: carries the "PJRT unavailable" message.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT unavailable — uavjp was built against the offline `xla` \
+         stub (rust/vendor/xla). Point Cargo at the real xla crate to run \
+         AOT artifacts (DESIGN.md §7)."
+    )))
+}
+
+/// Element dtypes of the artifacts we emit (subset of the real enum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Host-side scalar types accepted by [`Literal::vec1`] / [`Literal::to_vec`].
+pub trait NativeType: Copy {
+    /// dtype tag of this host type.
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+/// Array shape: dtype + dims.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element dtype.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal (stub: shape metadata only, no buffer).
+#[derive(Debug)]
+pub struct Literal {
+    shape: Option<ArrayShape>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            shape: Some(ArrayShape { ty: T::TY, dims: vec![data.len() as i64] }),
+        }
+    }
+
+    /// Reshape to `dims` (stub: metadata-only copy).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let ty = self.shape.as_ref().map(|s| s.ty).unwrap_or(ElementType::F32);
+        Ok(Literal { shape: Some(ArrayShape { ty, dims: dims.to_vec() }) })
+    }
+
+    /// Shape of an array (non-tuple) literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.shape {
+            Some(s) => Ok(s.clone()),
+            None => unavailable("Literal::array_shape"),
+        }
+    }
+
+    /// Copy out as a host vector. Always errors in the stub.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Decompose a tuple literal. Always errors in the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file. Always errors in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Synchronize to a host literal. Always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute on device. Always errors in the stub.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Open the CPU client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation. Always errors in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
