@@ -1,0 +1,747 @@
+"""Faithful Python port of the rust composable-layer backend (same RNG
+streams, same call order) to pre-verify the module-system test assertions:
+finite-difference gradient checks for PatchConv / LayerNorm / Attention,
+Monte-Carlo unbiasedness of the sketched PatchConv backward, and the
+BagNet-lite / ViT-lite convergence bars used by rust/tests.
+
+Companion to native_sim.py (PR 1), which covers the MLP path.
+"""
+import math
+import sys
+
+import numpy as np
+
+from native_sim import (
+    Pcg64,
+    column_scores,
+    sketched_linear_backward,
+)
+
+F = np.float32
+
+
+def dense_linear_backward(g, x, w, need_dx):
+    dw = (g.T @ x).astype(F)
+    db = g.sum(0).astype(F)
+    dx = (g @ w).astype(F) if need_dx else None
+    return dw, db, dx
+
+
+# ---------------------------------------------------------------------------
+# layers — forward caches exactly what the rust Layer impls cache
+# ---------------------------------------------------------------------------
+def he_linear(din, dout, seed, stream):
+    rng = Pcg64(seed ^ 0x1E57, stream)
+    std = math.sqrt(2.0 / din)
+    w = np.array(
+        [F(rng.gaussian() * std) for _ in range(dout * din)], F
+    ).reshape(dout, din)
+    return [w, np.zeros(dout, F)]
+
+
+def scaled_linear(din, dout, std, seed, stream):
+    rng = Pcg64(seed ^ 0x1E57, stream)
+    w = np.array(
+        [F(rng.gaussian() * std) for _ in range(dout * din)], F
+    ).reshape(dout, din)
+    return [w, np.zeros(dout, F)]
+
+
+class Linear:
+    sketchable = True
+
+    def __init__(self, din, dout, seed, stream, std=None):
+        if std is None:
+            self.w, self.b = he_linear(din, dout, seed, stream)
+        else:
+            self.w, self.b = scaled_linear(din, dout, std, seed, stream)
+
+    def params(self):
+        return [self.w, self.b]
+
+    def set_params(self, ps):
+        self.w, self.b = ps
+
+    def forward(self, x):
+        return (x @ self.w.T + self.b).astype(F), [x.copy()]
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        x = cache[0]
+        if sketch is not None:
+            dw, db, gx = sketched_linear_backward(
+                gy, x, self.w, sketch[0], sketch[1], rng, need_gx
+            )
+        else:
+            dw, db, gx = dense_linear_backward(gy, x, self.w, need_gx)
+        return gx, [dw, db]
+
+
+class Relu:
+    sketchable = False
+
+    def params(self):
+        return []
+
+    def set_params(self, ps):
+        pass
+
+    def forward(self, x):
+        return np.maximum(x, 0).astype(F), [x.copy()]
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        gx = gy.copy()
+        gx[cache[0] <= 0] = 0
+        return gx, []
+
+
+class Patchify:
+    sketchable = False
+
+    def __init__(self, h, w, c, q):
+        self.h, self.w, self.c, self.q = h, w, c, q
+        self.patches = (h // q) * (w // q)
+        self.dp = q * q * c
+        src = np.zeros(h * w * c, np.int64)
+        j = 0
+        for pr in range(h // q):
+            for pc in range(w // q):
+                for dr in range(q):
+                    for dc in range(q):
+                        for ch in range(c):
+                            src[j] = ((pr * q + dr) * w + (pc * q + dc)) * c + ch
+                            j += 1
+        self.src = src
+
+    def params(self):
+        return []
+
+    def set_params(self, ps):
+        pass
+
+    def forward(self, x):
+        return x[:, self.src].astype(F), []
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        gx = np.zeros_like(gy)
+        gx[:, self.src] = gy
+        return gx, []
+
+
+class PatchConv:
+    sketchable = True
+
+    def __init__(self, patches, din, dout, seed, stream):
+        self.p, self.din, self.dout = patches, din, dout
+        self.w, self.b = he_linear(din, dout, seed, stream)
+
+    def params(self):
+        return [self.w, self.b]
+
+    def set_params(self, ps):
+        self.w, self.b = ps
+
+    def forward(self, x):
+        bsz = x.shape[0]
+        xp = x.reshape(bsz * self.p, self.din)
+        z = (xp @ self.w.T + self.b).astype(F)
+        return z.reshape(bsz, self.p * self.dout), [xp.copy()]
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        xp = cache[0]
+        g = gy.reshape(-1, self.dout)
+        if sketch is not None:
+            dw, db, gx = sketched_linear_backward(
+                g, xp, self.w, sketch[0], sketch[1], rng, need_gx
+            )
+        else:
+            dw, db, gx = dense_linear_backward(g, xp, self.w, need_gx)
+        if gx is not None:
+            gx = gx.reshape(gy.shape[0], self.p * self.din)
+        return gx, [dw, db]
+
+
+class PatchMeanPool:
+    sketchable = False
+
+    def __init__(self, patches, dim):
+        self.p, self.d = patches, dim
+
+    def params(self):
+        return []
+
+    def set_params(self, ps):
+        pass
+
+    def forward(self, x):
+        bsz = x.shape[0]
+        return x.reshape(bsz, self.p, self.d).mean(1).astype(F), []
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        scale = F(1.0 / self.p)
+        gx = np.repeat((gy * scale)[:, None, :], self.p, axis=1)
+        return gx.reshape(gy.shape[0], self.p * self.d).astype(F), []
+
+
+class PosEmbed:
+    sketchable = False
+
+    def __init__(self, patches, dim, seed, stream):
+        rng = Pcg64(seed ^ 0x1E57, stream)
+        self.p, self.d = patches, dim
+        self.table = np.array(
+            [F(rng.gaussian() * 0.02) for _ in range(patches * dim)], F
+        )
+
+    def params(self):
+        return [self.table]
+
+    def set_params(self, ps):
+        (self.table,) = ps
+
+    def forward(self, x):
+        return (x + self.table[None, :]).astype(F), []
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        return gy.copy(), [gy.sum(0).astype(F)]
+
+
+class LayerNorm:
+    sketchable = False
+    EPS = 1e-5
+
+    def __init__(self, dim):
+        self.d = dim
+        self.gamma = np.ones(dim, F)
+        self.beta = np.zeros(dim, F)
+
+    def params(self):
+        return [self.gamma, self.beta]
+
+    def set_params(self, ps):
+        self.gamma, self.beta = ps
+
+    def forward(self, x):
+        rows = x.reshape(-1, self.d)
+        mu = rows.mean(1, keepdims=True).astype(F)
+        var = ((rows - mu) ** 2).mean(1, keepdims=True).astype(F)
+        invstd = (1.0 / np.sqrt(var + F(self.EPS))).astype(F)
+        xhat = ((rows - mu) * invstd).astype(F)
+        y = (self.gamma * xhat + self.beta).astype(F)
+        return y.reshape(x.shape), [xhat.copy(), invstd.copy()]
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        xhat, invstd = cache
+        g = gy.reshape(-1, self.d)
+        dgamma = (g * xhat).sum(0).astype(F)
+        dbeta = g.sum(0).astype(F)
+        gxhat = (g * self.gamma).astype(F)
+        m1 = gxhat.mean(1, keepdims=True).astype(F)
+        m2 = (gxhat * xhat).mean(1, keepdims=True).astype(F)
+        gx = (invstd * (gxhat - m1 - xhat * m2)).astype(F)
+        return gx.reshape(gy.shape), [dgamma, dbeta]
+
+
+class FfnBlock:
+    sketchable = True
+
+    def __init__(self, dim, hidden, seed, stream0):
+        self.d = dim
+        self.w1, self.b1 = he_linear(dim, hidden, seed, stream0)
+        self.w2, self.b2 = he_linear(hidden, dim, seed, stream0 + 1)
+
+    def params(self):
+        return [self.w1, self.b1, self.w2, self.b2]
+
+    def set_params(self, ps):
+        self.w1, self.b1, self.w2, self.b2 = ps
+
+    def forward(self, x):
+        xs = x.reshape(-1, self.d)
+        h = (xs @ self.w1.T + self.b1).astype(F)
+        hr = np.maximum(h, 0).astype(F)
+        y = (hr @ self.w2.T + self.b2 + xs).astype(F)
+        return y.reshape(x.shape), [xs.copy(), h, hr]
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        xs, h, hr = cache
+        g = gy.reshape(-1, self.d)
+        if sketch is not None:
+            dw2, db2, gh = sketched_linear_backward(
+                g, hr, self.w2, sketch[0], sketch[1], rng, True)
+        else:
+            dw2, db2, gh = dense_linear_backward(g, hr, self.w2, True)
+        gh = gh.copy()
+        gh[h <= 0] = 0
+        if sketch is not None:
+            dw1, db1, gx1 = sketched_linear_backward(
+                gh, xs, self.w1, sketch[0], sketch[1], rng, need_gx)
+        else:
+            dw1, db1, gx1 = dense_linear_backward(gh, xs, self.w1, need_gx)
+        gx = (g + gx1).astype(F).reshape(gy.shape) if need_gx else None
+        return gx, [dw1, db1, dw2, db2]
+
+
+class Attention:
+    sketchable = True
+
+    def __init__(self, patches, dim, heads, seed, streams):
+        self.p, self.d, self.h = patches, dim, heads
+        self.dh = dim // heads
+        std = math.sqrt(1.0 / dim)
+        self.wq, self.bq = scaled_linear(dim, dim, std, seed, streams[0])
+        self.wk, self.bk = scaled_linear(dim, dim, std, seed, streams[1])
+        self.wv, self.bv = scaled_linear(dim, dim, std, seed, streams[2])
+        self.wo, self.bo = scaled_linear(dim, dim, std, seed, streams[3])
+
+    def params(self):
+        return [self.wq, self.bq, self.wk, self.bk,
+                self.wv, self.bv, self.wo, self.bo]
+
+    def set_params(self, ps):
+        (self.wq, self.bq, self.wk, self.bk,
+         self.wv, self.bv, self.wo, self.bo) = ps
+
+    def forward(self, x):
+        bsz = x.shape[0]
+        xs = x.reshape(bsz * self.p, self.d)
+        q = (xs @ self.wq.T + self.bq).astype(F)
+        k = (xs @ self.wk.T + self.bk).astype(F)
+        v = (xs @ self.wv.T + self.bv).astype(F)
+        scale = F(1.0 / math.sqrt(self.dh))
+        o = np.zeros_like(q)
+        attn = []
+        for b in range(bsz):
+            rows = slice(b * self.p, (b + 1) * self.p)
+            for h in range(self.h):
+                cols = slice(h * self.dh, (h + 1) * self.dh)
+                s = (q[rows, cols] @ k[rows, cols].T * scale).astype(F)
+                m = s.max(1, keepdims=True)
+                e = np.exp((s - m).astype(F)).astype(F)
+                a = (e / e.sum(1, keepdims=True)).astype(F)
+                attn.append(a)
+                o[rows, cols] = (a @ v[rows, cols]).astype(F)
+        y = (o @ self.wo.T + self.bo + xs).astype(F)
+        return y.reshape(bsz, self.p * self.d), [xs.copy(), q, k, v, o, attn]
+
+    def backward(self, gy, cache, sketch, rng, need_gx):
+        xs, q, k, v, o, attn = cache
+        bsz = gy.shape[0]
+        g = gy.reshape(bsz * self.p, self.d)
+        if sketch is not None:
+            dwo, dbo, go = sketched_linear_backward(
+                g, o, self.wo, sketch[0], sketch[1], rng, True)
+        else:
+            dwo, dbo, go = dense_linear_backward(g, o, self.wo, True)
+        gx = g.copy()  # residual
+        gq = np.zeros_like(q)
+        gk = np.zeros_like(k)
+        gv = np.zeros_like(v)
+        scale = F(1.0 / math.sqrt(self.dh))
+        for b in range(bsz):
+            rows = slice(b * self.p, (b + 1) * self.p)
+            for h in range(self.h):
+                cols = slice(h * self.dh, (h + 1) * self.dh)
+                a = attn[b * self.h + h]
+                goh = go[rows, cols]
+                ga = (goh @ v[rows, cols].T).astype(F)
+                gv[rows, cols] = (a.T @ goh).astype(F)
+                rowdot = (ga * a).sum(1, keepdims=True).astype(F)
+                gs = (a * (ga - rowdot)).astype(F)
+                gq[rows, cols] = (gs @ k[rows, cols] * scale).astype(F)
+                gk[rows, cols] = (gs.T @ q[rows, cols] * scale).astype(F)
+        grads = []
+        for gmat, w in [(gq, self.wq), (gk, self.wk), (gv, self.wv)]:
+            if sketch is not None:
+                dw, db, gxi = sketched_linear_backward(
+                    gmat, xs, w, sketch[0], sketch[1], rng, need_gx)
+            else:
+                dw, db, gxi = dense_linear_backward(gmat, xs, w, need_gx)
+            grads.append((dw, db))
+            if need_gx:
+                gx = (gx + gxi).astype(F)
+        (dwq, dbq), (dwk, dbk), (dwv, dbv) = grads
+        gxout = gx.reshape(bsz, self.p * self.d) if need_gx else None
+        return gxout, [dwq, dbq, dwk, dbk, dwv, dbv, dwo, dbo]
+
+
+# ---------------------------------------------------------------------------
+# sequential + models + trainer (mirrors rust/src/native/{sequential,models})
+# ---------------------------------------------------------------------------
+def bagnet(seed):
+    return [
+        Patchify(32, 32, 3, 8),
+        PatchConv(16, 192, 64, seed, 300),
+        Relu(),
+        PatchConv(16, 64, 64, seed, 301),
+        Relu(),
+        PatchMeanPool(16, 64),
+        Linear(64, 10, seed, 302),
+    ]
+
+
+def vit(seed):
+    return [
+        Patchify(32, 32, 3, 8),
+        PatchConv(16, 192, 64, seed, 300),
+        PosEmbed(16, 64, seed, 301),
+        Attention(16, 64, 4, seed, [302, 303, 304, 305]),
+        LayerNorm(64),
+        FfnBlock(64, 128, seed, 306),
+        LayerNorm(64),
+        PatchMeanPool(16, 64),
+        Linear(64, 10, seed, 308),
+    ]
+
+
+def seq_forward(layers, x):
+    caches = []
+    h = x
+    for layer in layers:
+        h, c = layer.forward(h)
+        caches.append(c)
+    return h, caches
+
+
+def seq_backward(layers, caches, dout, plan, rng):
+    grads = [None] * len(layers)
+    g = dout
+    for i in range(len(layers) - 1, -1, -1):
+        need_gx = i > 0
+        gx, pg = layers[i].backward(g, caches[i], plan[i], rng, need_gx)
+        grads[i] = pg
+        if need_gx:
+            g = gx
+    return grads
+
+
+def make_plan(layers, method, budget, location):
+    sites = [i for i, l in enumerate(layers) if l.sketchable]
+    mask = [False] * len(sites)
+    if location == "all":
+        mask = [True] * len(sites)
+    elif location == "first":
+        mask[0] = True
+    elif location == "last":
+        mask[-1] = True
+    plan = [None] * len(layers)
+    if method != "baseline":
+        for si, li in enumerate(sites):
+            if mask[si]:
+                plan[li] = (method, budget)
+    return plan
+
+
+def ce_loss_grad(logits, y):
+    m = logits.max(1, keepdims=True)
+    e = np.exp((logits - m).astype(F))
+    sm = e / e.sum(1, keepdims=True)
+    bsz = len(y)
+    loss = -np.log(np.maximum(sm[np.arange(bsz), y], 1e-12)).mean()
+    g = sm.copy()
+    g[np.arange(bsz), y] -= 1.0
+    return float(loss), (g / bsz).astype(F)
+
+
+def clip_all(grads, maxn=1.0):
+    sq = 0.0
+    for pg in grads:
+        for t in pg:
+            sq += float((t.astype(np.float64) ** 2).sum())
+    norm = math.sqrt(sq)
+    if norm > maxn:
+        s = F(maxn / max(norm, 1e-12))
+        grads = [[t * s for t in pg] for pg in grads]
+    return grads
+
+
+class Momentum:
+    def __init__(self, mu):
+        self.mu = F(mu)
+        self.vel = {}
+
+    def update(self, slot, p, g, lr):
+        v = self.vel.get(slot)
+        if v is None:
+            v = np.zeros_like(p)
+        v = (self.mu * v + g).astype(F)
+        self.vel[slot] = v
+        return (p - F(lr) * v).astype(F)
+
+
+class Adam:
+    def __init__(self):
+        self.m, self.v, self.t = {}, {}, {}
+
+    def update(self, slot, p, g, lr):
+        t = self.t.get(slot, 0.0) + 1.0
+        self.t[slot] = t
+        m = self.m.get(slot, np.zeros_like(p))
+        v = self.v.get(slot, np.zeros_like(p))
+        m = (F(0.9) * m + F(0.1) * g).astype(F)
+        v = (F(0.999) * v + F(0.001) * g * g).astype(F)
+        self.m[slot], self.v[slot] = m, v
+        bc1 = F(1.0 - 0.9 ** t)
+        bc2 = F(1.0 - 0.999 ** t)
+        mhat = m / bc1
+        vhat = v / bc2
+        return (p - F(lr) * mhat / (np.sqrt(vhat) + F(1e-8))).astype(F)
+
+
+def lr_at(base_lr, step, steps, warmup, cosine):
+    if warmup > 0 and step < warmup:
+        return base_lr * (step + 1) / warmup
+    if cosine:
+        t = (step - warmup) / max(steps - warmup, 1)
+        floor = 0.01 * base_lr
+        return floor + (base_lr - floor) * 0.5 * (1.0 + math.cos(math.pi * t))
+    return base_lr
+
+
+# ---------------------------------------------------------------------------
+# synth-CIFAR generator (port of rust/src/data sample_cifar path)
+# ---------------------------------------------------------------------------
+def cifar_anchors(seed):
+    anchors = []
+    for cls in range(10):
+        rng = Pcg64(seed ^ 0xC1FA, 200 + cls)
+        img = np.zeros(32 * 32 * 3, F)
+        color = [rng.f32(), rng.f32(), rng.f32()]
+        fx = 1.0 + rng.below(4)
+        fy = 1.0 + rng.below(4)
+        phase = rng.f32() * np.float32(6.28)
+        blobs = [
+            (rng.f32() * np.float32(32.0), rng.f32() * np.float32(32.0),
+             np.float32(4.0) + rng.f32() * np.float32(6.0))
+            for _ in range(3)
+        ]
+        for r in range(32):
+            for c in range(32):
+                stripes = F(math.sin(
+                    (fx * F(r) / F(32.0) + fy * F(c) / F(32.0)) * F(6.28)
+                    + phase) * 0.3)
+                blob = F(0.0)
+                for br, bc, rad in blobs:
+                    d2 = (F(r) - br) ** 2 + (F(c) - bc) ** 2
+                    blob = F(blob + math.exp(-d2 / (rad * rad)))
+                for ch in range(3):
+                    img[(r * 32 + c) * 3 + ch] = F(
+                        color[ch] * min(F(0.4) + blob, F(1.2)) + stripes)
+        anchors.append(img)
+    return anchors
+
+
+def generate_cifar(n, seed, split):
+    stream = 1 if split == "train" else 2
+    rng = Pcg64(seed, stream)
+    anchors = cifar_anchors(seed)
+    x = np.zeros((n, 3072), F)
+    y = np.zeros(n, np.int64)
+    for i in range(n):
+        cls = rng.below(10)
+        y[i] = cls
+        a = anchors[cls]
+        white = np.array([F(rng.gaussian()) for _ in range(32 * 32)], F)
+        flip = rng.bernoulli(0.5)
+        bright = F(0.85) + F(0.3) * rng.f32()
+        row = np.zeros(3072, F)
+        wg = white.reshape(32, 32)
+        for r in range(32):
+            for c in range(32):
+                r0, r1 = max(r - 1, 0), min(r + 1, 31)
+                c0, c1 = max(c - 1, 0), min(c + 1, 31)
+                box = wg[r0:r1 + 1, c0:c1 + 1]
+                noise = F(box.sum() / box.size * 0.35)
+                src_c = 31 - c if flip else c
+                for ch in range(3):
+                    row[(r * 32 + c) * 3 + ch] = F(
+                        min(max(a[(r * 32 + src_c) * 3 + ch] * bright + noise,
+                                F(-1.0)), F(2.0)))
+        x[i] = row
+    return x, y
+
+
+def run_trainer(layers, xtr, ytr, xte, yte, plan, opt, lr, steps, batch,
+                warmup=0, cosine=False, seed=0):
+    sk_rng = Pcg64(seed ^ 0x9E3779B9, 11)
+    rng = Pcg64(seed + 77, 3)
+    losses = []
+    step = 0
+    n = len(xtr)
+    while step < steps:
+        order = list(range(n))
+        rng.shuffle(order)
+        cursor = 0
+        while cursor + batch <= n and step < steps:
+            idx = order[cursor:cursor + batch]
+            cursor += batch
+            xb, yb = xtr[idx], ytr[idx]
+            out, caches = seq_forward(layers, xb)
+            loss, dl = ce_loss_grad(out, yb)
+            grads = seq_backward(layers, caches, dl, plan, sk_rng)
+            grads = clip_all(grads)
+            cur_lr = lr_at(lr, step, steps, warmup, cosine)
+            slot = 0
+            for li, layer in enumerate(layers):
+                ps = layer.params()
+                new_ps = []
+                for t, g in zip(ps, grads[li]):
+                    new_ps.append(opt.update(slot, t, g, cur_lr))
+                    slot += 1
+                layer.set_params(new_ps)
+            losses.append(loss)
+            step += 1
+    nb = len(xte) // batch
+    lsum = 0.0
+    correct = 0.0
+    for b in range(nb):
+        xb = xte[b * batch:(b + 1) * batch]
+        yb = yte[b * batch:(b + 1) * batch]
+        out, _ = seq_forward(layers, xb)
+        l, _ = ce_loss_grad(out, yb)
+        lsum += l * batch
+        correct += (out.argmax(1) == yb).sum()
+    return losses, lsum / (nb * batch), correct / (nb * batch)
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+def fd_check_layer(layer, x, eps=1e-4, tol=2e-4):
+    """f64 finite-difference check of layer.backward against a random
+    projection loss L = sum(out * R)."""
+    rng = np.random.default_rng(0)
+    out, cache = layer.forward(x)
+    r = rng.standard_normal(out.shape).astype(F)
+    gx, pgrads = layer.backward(r, cache, None, None, True)
+    worst = 0.0
+    # input gradient
+    for idx in [0, x.size // 3, x.size - 1]:
+        i, j = divmod(idx, x.shape[1])
+        orig = x[i, j]
+        x[i, j] = orig + eps
+        lp = float((layer.forward(x)[0].astype(np.float64) * r).sum())
+        x[i, j] = orig - eps
+        lm = float((layer.forward(x)[0].astype(np.float64) * r).sum())
+        x[i, j] = orig
+        fd = (lp - lm) / (2 * eps)
+        an = float(gx[i, j])
+        worst = max(worst, abs(fd - an) / (1.0 + abs(fd)))
+    # parameter gradients
+    for ti, t in enumerate(layer.params()):
+        flat = t.reshape(-1)
+        for idx in [0, flat.size // 2, flat.size - 1]:
+            orig = flat[idx]
+            flat[idx] = orig + eps
+            lp = float((layer.forward(x)[0].astype(np.float64) * r).sum())
+            flat[idx] = orig - eps
+            lm = float((layer.forward(x)[0].astype(np.float64) * r).sum())
+            flat[idx] = orig
+            fd = (lp - lm) / (2 * eps)
+            an = float(pgrads[ti].reshape(-1)[idx])
+            worst = max(worst, abs(fd - an) / (1.0 + abs(fd)))
+    return worst
+
+
+def check_fd():
+    rng = np.random.default_rng(7)
+    print("== finite-difference checks (f32 forward, eps per layer) ==")
+    x = rng.standard_normal((3, 4 * 6)).astype(F)
+    worst = fd_check_layer(PatchConv(4, 6, 5, 1, 300), x, eps=1e-2)
+    print(f"  PatchConv  worst rel dev: {worst:.2e}")
+    assert worst < 5e-3, worst
+    x = rng.standard_normal((3, 4 * 6)).astype(F)
+    worst = fd_check_layer(LayerNorm(6), x, eps=1e-2)
+    print(f"  LayerNorm  worst rel dev: {worst:.2e}")
+    assert worst < 5e-3, worst
+    x = (rng.standard_normal((2, 4 * 8)) * 0.5).astype(F)
+    worst = fd_check_layer(Attention(4, 8, 2, 1, [302, 303, 304, 305]), x,
+                           eps=1e-2)
+    print(f"  Attention  worst rel dev: {worst:.2e}")
+    assert worst < 5e-3, worst
+    x = rng.standard_normal((2, 4 * 6)).astype(F)
+    worst = fd_check_layer(FfnBlock(6, 10, 1, 306), x, eps=1e-2)
+    print(f"  FfnBlock   worst rel dev: {worst:.2e}")
+    assert worst < 5e-3, worst
+    x = rng.standard_normal((2, 4 * 6)).astype(F)
+    worst = fd_check_layer(PosEmbed(4, 6, 1, 301), x, eps=1e-2)
+    print(f"  PosEmbed   worst rel dev: {worst:.2e}")
+    assert worst < 5e-3, worst
+    x = rng.standard_normal((2, 2 * 2 * 3 * 4)).astype(F)
+    worst = fd_check_layer(Patchify(4, 4, 3, 2), x, eps=1e-2)
+    print(f"  Patchify   worst rel dev: {worst:.2e}")
+    assert worst < 5e-3, worst
+    x = rng.standard_normal((2, 4 * 6)).astype(F)
+    worst = fd_check_layer(PatchMeanPool(4, 6), x, eps=1e-2)
+    print(f"  MeanPool   worst rel dev: {worst:.2e}")
+    assert worst < 5e-3, worst
+
+
+def check_patchconv_unbiased(method="l1", budget=0.45, trials=2500):
+    print(f"== MC unbiasedness: sketched PatchConv ({method} p={budget}, "
+          f"{trials} trials) ==")
+    layer = PatchConv(4, 6, 12, 3, 300)
+    rng_data = Pcg64(3, 0)
+    x = np.array([F(rng_data.gaussian()) for _ in range(4 * 4 * 6)],
+                 F).reshape(4, 24)
+    out, cache = layer.forward(x)
+    gy = np.array([F(rng_data.gaussian()) for _ in range(out.size)],
+                  F).reshape(out.shape)
+    gx_e, (dw_e, db_e) = layer.backward(gy, cache, None, None, True)
+    acc_dw = np.zeros(dw_e.shape, np.float64)
+    acc_db = np.zeros(db_e.shape, np.float64)
+    acc_gx = np.zeros(gx_e.shape, np.float64)
+    gate_rng = Pcg64(3 ^ 0x5EED, 1)
+    for _ in range(trials):
+        gx, (dw, db) = layer.backward(gy, cache, (method, budget), gate_rng,
+                                      True)
+        acc_dw += dw
+        acc_db += db
+        acc_gx += gx
+    def rel(acc, exact):
+        d = acc / trials - exact.astype(np.float64)
+        return math.sqrt(float((d ** 2).sum()) /
+                         max(float((exact.astype(np.float64) ** 2).sum()),
+                             1e-12))
+    rdw, rdb, rgx = rel(acc_dw, dw_e), rel(acc_db, db_e), rel(acc_gx, gx_e)
+    print(f"  rel MC dev: dW {rdw:.4f}  db {rdb:.4f}  dX {rgx:.4f}")
+    return rdw, rdb, rgx
+
+
+def check_training(model_name, steps, opt_name, lr, warmup, budget_runs):
+    print(f"== {model_name} training (steps={steps}, {opt_name} lr={lr}) ==")
+    xtr, ytr = DATA["train"]
+    xte, yte = DATA["test"]
+    results = {}
+    for method, budget in budget_runs:
+        layers = bagnet(0) if model_name == "bagnet" else vit(0)
+        plan = make_plan(layers, method, budget,
+                         "all" if method != "baseline" else "none")
+        opt = Momentum(0.9) if opt_name == "momentum" else Adam()
+        losses, el, ea = run_trainer(
+            layers, xtr, ytr, xte, yte, plan, opt, lr, steps, 32,
+            warmup=warmup, cosine=True, seed=0)
+        tail = sum(losses[-8:]) / 8
+        print(f"  {method:>9} p={budget}: loss {losses[0]:.3f} -> tail "
+              f"{tail:.3f}, eval loss {el:.3f}, acc {ea:.3f}")
+        results[(method, budget)] = (losses[0], tail, el, ea)
+    return results
+
+
+DATA = {}
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("fd", "all"):
+        check_fd()
+    if which in ("mc", "all"):
+        check_patchconv_unbiased("l1", 0.45)
+        check_patchconv_unbiased("l1_ind", 0.45)
+        check_patchconv_unbiased("per_column", 0.5)
+    if which in ("train", "all"):
+        print("generating synth-CIFAR (pure-python PCG64, ~1 min)...")
+        DATA["train"] = generate_cifar(256, 1234, "train")
+        DATA["test"] = generate_cifar(128, 1234, "test")
+        check_training("bagnet", 60, "momentum", 0.032, 0,
+                       [("baseline", 1.0), ("l1", 0.25)])
+        check_training("vit", 80, "adam", 1e-3, 8,
+                       [("baseline", 1.0), ("l1", 0.25)])

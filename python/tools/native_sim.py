@@ -130,7 +130,8 @@ def independent_bernoulli(rng, p):
     return np.array([rng.bernoulli(float(pi)) for pi in p])
 
 def column_scores(method, g, w):
-    abss = np.abs(g).sum(0).astype(np.float64)
+    # f64 accumulation over f32 entries, matching rust sketch::column_scores
+    abss = np.abs(g.astype(np.float64)).sum(0)
     sq = (g.astype(np.float64) ** 2).sum(0)
     if method in ("l1", "l1_ind"): return (abss * abss).astype(np.float32)
     if method == "ds":
@@ -201,7 +202,12 @@ def backward(layers, acts, zs, dlogits, method, budget, mask, rng):
     return dws, dbs
 
 def clip(dws, dbs, maxn=1.0):
-    sq = sum(float((d.astype(np.float64) ** 2).sum()) for d in dws + dbs)
+    # interleaved (w0, b0, w1, b1, ...) f64 sum order, matching the rust
+    # Grads::global_norm slot order
+    sq = 0.0
+    for dw, db in zip(dws, dbs):
+        sq += float((dw.astype(np.float64) ** 2).sum())
+        sq += float((db.astype(np.float64) ** 2).sum())
     norm = math.sqrt(sq)
     if norm > maxn:
         s = np.float32(maxn / max(norm, 1e-12))

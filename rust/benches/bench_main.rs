@@ -6,6 +6,8 @@
 //!                    + sampling + kept-column GEMMs) across budgets and
 //!                    widths: the ρ(V) wall-clock of Eq 6 on real kernels
 //!   native_step    — full native train-step wall time, exact vs sketched
+//!   native_models  — train-step wall time per model family (mlp, bagnet,
+//!                    vit), exact vs l1-sketched
 //!   step_latency   — AOT train-step wall time per (model, method) through
 //!                    PJRT (requires --features pjrt + built artifacts)
 //!   eq6_gemm       — dense vs kept-column backward GEMMs (kernel-only view)
@@ -13,11 +15,13 @@
 //!   substrates     — pstar / correlated sampling / JSON parse throughput
 //!
 //! Run all:  cargo bench    Filter:  cargo bench -- native_bwd
-//! Results append-logged by `make bench` into bench_output.txt.
+//! Machine-readable medians:  cargo bench -- --json results/BENCH_native.json
+//! (writes {group, case, median_ms} records for the perf trajectory).
 
 use std::time::Instant;
 
 use uavjp::config::{Preset, TrainConfig};
+use uavjp::json::Value;
 use uavjp::native::{sketched_linear_backward, NativeTrainer};
 use uavjp::pipeline::{simulate, PipelineConfig};
 use uavjp::rng::Pcg64;
@@ -38,10 +42,38 @@ fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     times[times.len() / 2]
 }
 
+/// Collected (group, case, median seconds) records, printed as we go and
+/// optionally dumped as JSON for the perf trajectory.
+#[derive(Default)]
+struct Report {
+    records: Vec<(String, String, f64)>,
+}
+
+impl Report {
+    fn rec(&mut self, group: &str, case: impl Into<String>, secs: f64) {
+        self.records.push((group.to_string(), case.into(), secs));
+    }
+
+    fn to_json(&self) -> Value {
+        Value::Arr(
+            self.records
+                .iter()
+                .map(|(g, c, s)| {
+                    Value::obj(vec![
+                        ("group", Value::str(g)),
+                        ("case", Value::str(c)),
+                        ("median_ms", Value::num(s * 1e3)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
 /// Exact vs sketched native layer backward, *including* the sketch overhead
 /// (scores, waterfilling, sampling) the analytic model in `sketch::
 /// backward_flops` accounts for — the honest ρ wall-clock.
-fn bench_native_bwd(filter: &str) {
+fn bench_native_bwd(filter: &str, rep: &mut Report) {
     if !"native_bwd".contains(filter) && !filter.is_empty() {
         return;
     }
@@ -56,10 +88,8 @@ fn bench_native_bwd(filter: &str) {
         let dense = time_median(5, || {
             let _ = dense_backward(&g, &x, &w);
         });
-        println!(
-            "  d_out={dout:<5} exact: {:8.2} ms",
-            dense * 1e3
-        );
+        println!("  d_out={dout:<5} exact: {:8.2} ms", dense * 1e3);
+        rep.rec("native_bwd", format!("d{dout}_exact"), dense);
         for budget in [0.05, 0.1, 0.2, 0.5] {
             let mut srng = Pcg64::new(11, dout as u64);
             let t = time_median(5, || {
@@ -73,19 +103,20 @@ fn bench_native_bwd(filter: &str) {
                 dense / t,
                 t / dense
             );
+            rep.rec("native_bwd", format!("d{dout}_l1_p{budget}"), t);
         }
     }
 }
 
 /// Whole native train-step (forward + backward + clip + SGD), exact vs
 /// sketched, at the paper's MLP shape.
-fn bench_native_step(filter: &str) {
+fn bench_native_step(filter: &str, rep: &mut Report) {
     if !"native_step".contains(filter) && !filter.is_empty() {
         return;
     }
     println!("\n== native_step (full train-step wall time, MLP 784-64-64-10) ==");
     for (method, budget) in [("baseline", 1.0), ("l1", 0.25), ("l1", 0.1)] {
-        let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+        let mut cfg: TrainConfig = Preset::Smoke.base("mlp").expect("preset");
         cfg.method = method.into();
         cfg.budget = budget;
         cfg.train_size = 512;
@@ -110,11 +141,54 @@ fn bench_native_step(filter: &str) {
             med * 1e3,
             1.0 / med
         );
+        rep.rec("native_step", format!("mlp_{method}_p{budget}"), med);
+    }
+}
+
+/// Train-step wall time across the registered model families — the
+/// module-API models (BagNet-lite, ViT-lite) next to the MLP.
+fn bench_native_models(filter: &str, rep: &mut Report) {
+    if !"native_models".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== native_models (train-step wall time per model family) ==");
+    for model in ["mlp", "bagnet", "vit"] {
+        for (method, budget) in [("baseline", 1.0), ("l1", 0.25)] {
+            let mut cfg: TrainConfig = Preset::Smoke.base(model).expect("preset");
+            cfg.method = method.into();
+            cfg.budget = budget;
+            cfg.location =
+                if method == "baseline" { "none".into() } else { "all".into() };
+            cfg.train_size = 256;
+            cfg.test_size = 64;
+            cfg.batch = 64;
+            let mut trainer = NativeTrainer::new(cfg).expect("trainer");
+            let (train_ds, _) = trainer.datasets();
+            let batch = trainer.batch_size();
+            let dim = train_ds.dim;
+            let x = Mat {
+                rows: batch,
+                cols: dim,
+                data: train_ds.x[..batch * dim].to_vec(),
+            };
+            let y = train_ds.y[..batch].to_vec();
+            let mut step = 0usize;
+            let med = time_median(5, || {
+                trainer.step(&x, &y, step);
+                step += 1;
+            });
+            println!(
+                "  {model:>7}/{method:<9} p={budget:<4}: {:8.2} ms/step  ({:6.1} steps/s)",
+                med * 1e3,
+                1.0 / med
+            );
+            rep.rec("native_models", format!("{model}_{method}_p{budget}"), med);
+        }
     }
 }
 
 #[cfg(feature = "pjrt")]
-fn bench_step_latency(filter: &str) {
+fn bench_step_latency(filter: &str, rep: &mut Report) {
     use uavjp::coordinator::trainer::layer_mask;
     use uavjp::coordinator::Trainer;
     use uavjp::data::{self, DatasetKind};
@@ -142,7 +216,7 @@ fn bench_step_latency(filter: &str) {
         ("bagnet", "l1", 0.2),
     ];
     for (model, method, budget) in cases {
-        let mut cfg: TrainConfig = Preset::Smoke.base(model);
+        let mut cfg: TrainConfig = Preset::Smoke.base(model).expect("preset");
         cfg.method = method.into();
         cfg.budget = budget;
         let trainer = match Trainer::new(&rt, cfg.clone()) {
@@ -153,7 +227,7 @@ fn bench_step_latency(filter: &str) {
             }
         };
         let mut state = trainer.init_state().expect("init");
-        let kind = DatasetKind::for_model(model);
+        let kind = DatasetKind::for_model(model).expect("model");
         let batch = trainer.batch_size();
         let ds = data::generate(kind, batch, 1, "train");
         let spec = rt.manifest.get(&format!("train_{model}_{method}")).unwrap();
@@ -165,7 +239,7 @@ fn bench_step_latency(filter: &str) {
             .shape
             .clone();
         let n_sk = spec.meta_usize("num_sketched").unwrap();
-        let mask = layer_mask("all", n_sk);
+        let mask = layer_mask("all", n_sk).expect("mask");
         let mut step = 0usize;
         let med = time_median(7, || {
             trainer
@@ -178,11 +252,12 @@ fn bench_step_latency(filter: &str) {
             med * 1e3,
             1.0 / med
         );
+        rep.rec("step_latency", format!("{model}_{method}_p{budget}"), med);
     }
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn bench_step_latency(filter: &str) {
+fn bench_step_latency(filter: &str, _rep: &mut Report) {
     if !"step_latency".contains(filter) && !filter.is_empty() {
         return;
     }
@@ -190,7 +265,7 @@ fn bench_step_latency(filter: &str) {
     println!("  skipped: built without the `pjrt` feature (native benches above cover the CPU path)");
 }
 
-fn bench_eq6_gemm(filter: &str) {
+fn bench_eq6_gemm(filter: &str, rep: &mut Report) {
     if !"eq6_gemm".contains(filter) && !filter.is_empty() {
         return;
     }
@@ -205,6 +280,7 @@ fn bench_eq6_gemm(filter: &str) {
         let _ = dense_backward(&g, &x, &w);
     });
     println!("  dense backward (B={b}, {dout}×{din}): {:.2} ms", dense * 1e3);
+    rep.rec("eq6_gemm", "dense", dense);
     for budget in [0.05, 0.1, 0.2, 0.5] {
         let scores = uavjp::sketch::column_scores("l1", &g, None);
         let p = pstar_from_weights(&scores, budget * dout as f64);
@@ -220,10 +296,11 @@ fn bench_eq6_gemm(filter: &str) {
             t * 1e3,
             t / dense
         );
+        rep.rec("eq6_gemm", format!("sketched_p{budget}"), t);
     }
 }
 
-fn bench_pipeline(filter: &str) {
+fn bench_pipeline(filter: &str, rep: &mut Report) {
     if !"pipeline".contains(filter) && !filter.is_empty() {
         return;
     }
@@ -233,17 +310,18 @@ fn bench_pipeline(filter: &str) {
     let exact = simulate(&cfg);
     for budget in [0.05, 0.1, 0.2, 0.5, 1.0] {
         cfg.budget = budget;
-        let rep = simulate(&cfg);
+        let r = simulate(&cfg);
         println!(
             "  p={budget:<4}: step {:8.3} ms, bwd traffic {:7.2} MB, speedup {:.2}x",
-            rep.total_time * 1e3,
-            rep.backward_bytes / 1e6,
-            exact.total_time / rep.total_time
+            r.total_time * 1e3,
+            r.backward_bytes / 1e6,
+            exact.total_time / r.total_time
         );
+        rep.rec("pipeline", format!("p{budget}"), r.total_time);
     }
 }
 
-fn bench_substrates(filter: &str) {
+fn bench_substrates(filter: &str, rep: &mut Report) {
     if !"substrates".contains(filter) && !filter.is_empty() {
         return;
     }
@@ -254,11 +332,13 @@ fn bench_substrates(filter: &str) {
         let _ = pstar_from_weights(&w, 409.6);
     });
     println!("  pstar_from_weights(n=4096): {:.1} µs", t * 1e6);
+    rep.rec("substrates", "pstar_4096", t);
     let p = pstar_from_weights(&w, 409.6);
     let t = time_median(20, || {
         let _ = correlated_bernoulli(&mut rng, &p);
     });
     println!("  correlated_bernoulli(n=4096): {:.1} µs", t * 1e6);
+    rep.rec("substrates", "correlated_4096", t);
     // JSON parse throughput on the manifest
     if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
         let t = time_median(10, || {
@@ -270,19 +350,47 @@ fn bench_substrates(filter: &str) {
             t * 1e3,
             text.len() as f64 / t / 1e6
         );
+        rep.rec("substrates", "json_parse_manifest", t);
     }
 }
 
 fn main() {
-    let filter = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
-        .unwrap_or_default();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut filter = String::new();
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--json" {
+            if i + 1 < argv.len() {
+                json_path = Some(argv[i + 1].clone());
+                i += 2;
+                continue;
+            }
+            eprintln!("--json expects a path, e.g. --json results/BENCH_native.json");
+            std::process::exit(2);
+        }
+        if !argv[i].starts_with('-') && filter.is_empty() {
+            filter = argv[i].clone();
+        }
+        i += 1;
+    }
     println!("uavjp bench harness (median-of-N, warmup excluded)");
-    bench_native_bwd(&filter);
-    bench_native_step(&filter);
-    bench_step_latency(&filter);
-    bench_eq6_gemm(&filter);
-    bench_pipeline(&filter);
-    bench_substrates(&filter);
+    let mut rep = Report::default();
+    bench_native_bwd(&filter, &mut rep);
+    bench_native_step(&filter, &mut rep);
+    bench_native_models(&filter, &mut rep);
+    bench_step_latency(&filter, &mut rep);
+    bench_eq6_gemm(&filter, &mut rep);
+    bench_pipeline(&filter, &mut rep);
+    bench_substrates(&filter, &mut rep);
+    if let Some(path) = json_path {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).expect("create results dir");
+            }
+        }
+        std::fs::write(&path, uavjp::json::to_string_pretty(&rep.to_json()))
+            .expect("write bench json");
+        println!("\nwrote {} bench records to {path}", rep.records.len());
+    }
 }

@@ -1,5 +1,8 @@
-//! Quickstart: train a sketched MLP on the native backend and compare it
+//! Quickstart: train sketched models on the native backend and compare
 //! against the exact-VJP baseline — no artifacts, no python, no setup.
+//!
+//! Trains the MLP (synth-MNIST) and then BagNet-lite (synth-CIFAR) through
+//! the same `Layer`/`SketchPolicy` module API.
 //!
 //! Run with:  cargo run --release --example quickstart
 
@@ -8,28 +11,47 @@ use uavjp::config::{Preset, TrainConfig};
 use uavjp::native::NativeTrainer;
 
 fn main() -> Result<()> {
-    let mut base: TrainConfig = Preset::Smoke.base("mlp");
+    let mut base: TrainConfig = Preset::Smoke.base("mlp")?;
     base.steps = 400;
     base.eval_every = 100;
 
+    println!("— mlp (synth-MNIST) —");
     for (method, budget) in [("baseline", 1.0), ("l1", 0.15)] {
-        let mut cfg = base.clone();
-        cfg.method = method.to_string();
-        cfg.budget = budget;
-        cfg.location = if method == "baseline" { "none".into() } else { "all".into() };
-        let mut trainer = NativeTrainer::new(cfg)?;
-        let t0 = std::time::Instant::now();
-        let curve = trainer.run()?;
-        println!(
-            "{method:>9} (p={budget}): loss {:.3} → {:.3}, test acc {:.3}  [{:.1}s]",
-            curve.losses.first().copied().unwrap_or(f64::NAN),
-            curve.tail_loss(10).unwrap_or(f64::NAN),
-            curve.final_acc().unwrap_or(f64::NAN),
-            t0.elapsed().as_secs_f64(),
-        );
+        run_one(&base, method, budget)?;
     }
-    println!("\nThe ℓ1 sketch keeps 15% of backward columns yet trains close to baseline —");
-    println!("the paper's headline effect. See `uavjp fig1b` for the full comparison,");
-    println!("and examples/train_native.rs for the budget sweep.");
+
+    let mut bag: TrainConfig = Preset::Smoke.base("bagnet")?;
+    bag.train_size = 512;
+    bag.test_size = 128;
+    bag.steps = 120;
+    bag.eval_every = 60;
+    bag.batch = 32;
+    println!("\n— bagnet (synth-CIFAR, 8×8 patch convs) —");
+    for (method, budget) in [("baseline", 1.0), ("l1", 0.25)] {
+        run_one(&bag, method, budget)?;
+    }
+
+    println!("\nSketched runs keep a fraction of backward columns yet track the exact");
+    println!("baseline — the paper's headline effect, here on two of its three");
+    println!("architectures. Try `--model vit` via examples/train_native.rs, and");
+    println!("`uavjp fig1b` / `uavjp fig3` for the full figure protocol.");
+    Ok(())
+}
+
+fn run_one(base: &TrainConfig, method: &str, budget: f64) -> Result<()> {
+    let mut cfg = base.clone();
+    cfg.method = method.to_string();
+    cfg.budget = budget;
+    cfg.location = if method == "baseline" { "none".into() } else { "all".into() };
+    let mut trainer = NativeTrainer::new(cfg)?;
+    let t0 = std::time::Instant::now();
+    let curve = trainer.run()?;
+    println!(
+        "{method:>9} (p={budget}): loss {:.3} → {:.3}, test acc {:.3}  [{:.1}s]",
+        curve.losses.first().copied().unwrap_or(f64::NAN),
+        curve.tail_loss(10).unwrap_or(f64::NAN),
+        curve.final_acc().unwrap_or(f64::NAN),
+        t0.elapsed().as_secs_f64(),
+    );
     Ok(())
 }

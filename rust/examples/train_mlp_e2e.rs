@@ -20,14 +20,14 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let rt = Runtime::open_default()?;
 
-    let mut cfg: TrainConfig = Preset::Ci.base("mlp");
+    let mut cfg: TrainConfig = Preset::Ci.base("mlp")?;
     cfg.method = "l1".into();
     cfg.budget = 0.1;
-    cfg.steps = args.usize_or("steps", 480);
-    cfg.eval_every = args.usize_or("eval-every", 96);
+    cfg.steps = args.usize_or("steps", 480)?;
+    cfg.eval_every = args.usize_or("eval-every", 96)?;
     cfg.train_size = 4096;
     cfg.test_size = 1024;
-    cfg.lr = args.f64_or("lr", 0.1);
+    cfg.lr = args.f64_or("lr", 0.1)?;
 
     eprintln!(
         "[e2e] training {} / {} (p={}) for {} steps on synth-MNIST (4096 train / 1024 test)",

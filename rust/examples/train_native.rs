@@ -1,9 +1,10 @@
-//! Native-backend driver: train the MLP across sketch budgets and report
-//! the accuracy/loss/wall-clock trade-off — the paper's headline table,
-//! entirely on CPU-native kernels (no artifacts, no python).
+//! Native-backend driver: train any registered model across sketch budgets
+//! and report the accuracy/loss/wall-clock trade-off — the paper's headline
+//! table, entirely on CPU-native kernels (no artifacts, no python).
 //!
 //! Run with:  cargo run --release --example train_native
-//!            [-- --method l1 --budgets 0.1,0.25,0.5 --steps 400 --seed 0]
+//!            [-- --model mlp|bagnet|vit --method l1 --budgets 0.1,0.25,0.5
+//!                --steps 400 --seed 0]
 
 use anyhow::Result;
 use uavjp::cli::Args;
@@ -12,14 +13,15 @@ use uavjp::native::NativeTrainer;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
+    let model = args.str_or("model", "mlp");
     let method = args.str_or("method", "l1");
-    let budgets = args.f64_list_or("budgets", &[0.1, 0.25, 0.5]);
+    let budgets = args.f64_list_or("budgets", &[0.1, 0.25, 0.5])?;
 
-    let mut base: TrainConfig = Preset::Smoke.base("mlp");
-    base.steps = args.usize_or("steps", 400);
+    let mut base: TrainConfig = Preset::Smoke.base(&model)?;
+    base.steps = args.usize_or("steps", if model == "mlp" { 400 } else { 120 })?;
     base.eval_every = (base.steps / 4).max(1);
-    base.seed = args.usize_or("seed", 0) as u64;
-    base.lr = args.f64_or("lr", base.lr);
+    base.seed = args.usize_or("seed", 0)? as u64;
+    base.lr = args.f64_or("lr", base.lr)?;
 
     // exact-backward reference
     let mut cfg = base.clone();
@@ -28,7 +30,7 @@ fn main() -> Result<()> {
     let (exact_curve, exact_secs) = timed_run(cfg)?;
     let exact_loss = exact_curve.evals.last().map(|e| e.1).unwrap_or(f64::NAN);
     println!(
-        "{:>10} {:>8} {:>10} {:>9} {:>9} {:>9}",
+        "model: {model}\n{:>10} {:>8} {:>10} {:>9} {:>9} {:>9}",
         "method", "budget", "eval_loss", "acc", "seconds", "vs exact"
     );
     println!(

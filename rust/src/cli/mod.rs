@@ -1,8 +1,11 @@
 //! Tiny CLI substrate (`clap` unavailable offline).
 //!
 //! Supports `binary <subcommand> [--flag value] [--switch] [positional...]`
-//! with typed accessors, defaults, and a generated usage string.
+//! with typed accessors, defaults, and a generated usage string. Typed
+//! accessors return `Result` with a usage hint — a typo'd value surfaces
+//! as a clean error instead of a panic/unwind.
 
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone)]
@@ -61,29 +64,52 @@ impl Args {
         self.str_opt(name).unwrap_or(default).to_string()
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.str_opt(name)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s}")))
-            .unwrap_or(default)
+    /// Float flag with default; a non-numeric value is a clean error.
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!(
+                    "--{name} expects a number, got `{s}` (run with no \
+                     arguments for usage)"
+                ),
+            },
+        }
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.str_opt(name)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s}")))
-            .unwrap_or(default)
+    /// Integer flag with default; a non-integer value is a clean error.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!(
+                    "--{name} expects an integer, got `{s}` (run with no \
+                     arguments for usage)"
+                ),
+            },
+        }
     }
 
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
 
-    /// Comma-separated list flag → Vec<f64>.
-    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+    /// Comma-separated list flag → Vec<f64>; a bad element is a clean error.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
         match self.str_opt(name) {
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
             Some(s) => s
                 .split(',')
-                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number {x}")))
+                .map(|x| {
+                    x.trim().parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "--{name}: bad number `{x}` (want a \
+                             comma-separated list like 0.05,0.1,0.5)"
+                        )
+                    })
+                })
                 .collect(),
         }
     }
@@ -111,7 +137,7 @@ mod tests {
         let a = parse("train --model mlp --lr 0.1 extra --quiet");
         assert_eq!(a.subcommand.as_deref(), Some("train"));
         assert_eq!(a.str_or("model", "x"), "mlp");
-        assert_eq!(a.f64_or("lr", 0.0), 0.1);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
         assert!(a.has("quiet"));
         assert_eq!(a.positional, vec!["extra"]);
     }
@@ -119,15 +145,26 @@ mod tests {
     #[test]
     fn equals_form() {
         let a = parse("fig1a --budgets=0.05,0.1,0.5");
-        assert_eq!(a.f64_list_or("budgets", &[]), vec![0.05, 0.1, 0.5]);
+        assert_eq!(a.f64_list_or("budgets", &[]).unwrap(), vec![0.05, 0.1, 0.5]);
     }
 
     #[test]
     fn defaults() {
         let a = parse("x");
-        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
         assert_eq!(a.str_or("m", "d"), "d");
-        assert_eq!(a.f64_list_or("l", &[1.0]), vec![1.0]);
+        assert_eq!(a.f64_list_or("l", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn bad_values_error_cleanly_with_hint() {
+        let a = parse("train --lr fast --steps many --budgets 0.1,zz");
+        let err = format!("{}", a.f64_or("lr", 0.0).unwrap_err());
+        assert!(err.contains("--lr") && err.contains("fast"), "{err}");
+        let err = format!("{}", a.usize_or("steps", 1).unwrap_err());
+        assert!(err.contains("integer"), "{err}");
+        let err = format!("{}", a.f64_list_or("budgets", &[]).unwrap_err());
+        assert!(err.contains("zz"), "{err}");
     }
 
     #[test]

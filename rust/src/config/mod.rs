@@ -4,15 +4,23 @@
 //! grids); `ci` is the scaled protocol this single-core box actually runs
 //! for EXPERIMENTS.md (DESIGN.md §6). Configs can be loaded from / saved to
 //! JSON so runs are reproducible artifacts. The [`Backend`] enum selects
-//! which execution engine a run uses (DESIGN.md §7).
+//! which execution engine a run uses (DESIGN.md §7). All parsers return
+//! `Result` with a usage hint — a typo'd flag exits cleanly instead of
+//! unwinding.
 
 use crate::json::{self, Value};
+use anyhow::{bail, Result};
+
+/// Model families every preset knows a recipe for. Whether a *backend*
+/// can train one is a separate question — `TrainBackend::supports_model`
+/// queries the native model registry (`crate::native::models`).
+pub const KNOWN_MODELS: &[&str] = &["mlp", "bagnet", "vit"];
 
 /// Which engine executes training steps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Backend {
-    /// CPU-native MLP + sketched backward ([`crate::native`]); needs no
-    /// artifacts and is the default everywhere.
+    /// CPU-native module stacks + sketched backward ([`crate::native`]);
+    /// needs no artifacts and is the default everywhere.
     #[default]
     Native,
     /// PJRT execution of AOT-compiled JAX graphs ([`crate::runtime`]);
@@ -21,13 +29,12 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Parse `"native"` / `"pjrt"` (panics on anything else, like
-    /// [`Preset::parse`]).
-    pub fn parse(s: &str) -> Backend {
+    /// Parse `"native"` / `"pjrt"`.
+    pub fn parse(s: &str) -> Result<Backend> {
         match s {
-            "native" => Backend::Native,
-            "pjrt" => Backend::Pjrt,
-            other => panic!("unknown backend {other} (want native|pjrt)"),
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => bail!("unknown backend {other} (want native|pjrt)"),
         }
     }
 
@@ -43,7 +50,7 @@ impl Backend {
 /// One fully-specified training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
-    /// Model family: `"mlp"` (both backends) or `"vit"`/`"bagnet"` (pjrt).
+    /// Model family, one of [`KNOWN_MODELS`].
     pub model: String,
     /// Sketch method (`"baseline"` = exact VJPs everywhere).
     pub method: String,
@@ -76,6 +83,10 @@ pub struct TrainConfig {
     pub loss: String,
     /// Batch size (PJRT artifacts bake 128; native follows the config).
     pub batch: usize,
+    /// Optional per-depth budget schedule: one budget per sketch site
+    /// (forward order), overriding `budget` when non-empty. The native
+    /// `SketchPolicy` validates its length against the model's site count.
+    pub budget_schedule: Vec<f64>,
 }
 
 impl Default for TrainConfig {
@@ -97,6 +108,7 @@ impl Default for TrainConfig {
             optimizer: "sgd".into(),
             loss: "ce".into(),
             batch: 128,
+            budget_schedule: Vec::new(),
         }
     }
 }
@@ -135,12 +147,34 @@ impl TrainConfig {
             ("optimizer", Value::str(&self.optimizer)),
             ("loss", Value::str(&self.loss)),
             ("batch", Value::num(self.batch as f64)),
+            ("budget_schedule", Value::arr_f64(&self.budget_schedule)),
         ])
     }
 
-    pub fn from_json(v: &Value) -> TrainConfig {
+    /// Parse a config object; missing keys fall back to defaults, but a
+    /// *present* key with an invalid value (unknown backend, non-numeric
+    /// budget-schedule entry) is a clean error rather than a silent
+    /// fallback.
+    pub fn from_json(v: &Value) -> Result<TrainConfig> {
         let d = TrainConfig::default();
-        TrainConfig {
+        let backend = match v.get("backend").as_str() {
+            Some(s) => Backend::parse(s)?,
+            None => d.backend,
+        };
+        let budget_schedule = match v.get("budget_schedule").as_arr() {
+            Some(xs) => xs
+                .iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "budget_schedule entries must be numbers"
+                        )
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?,
+            None => Vec::new(),
+        };
+        Ok(TrainConfig {
             model: v.get("model").as_str().unwrap_or(&d.model).to_string(),
             method: v.get("method").as_str().unwrap_or(&d.method).to_string(),
             budget: v.get("budget").as_f64().unwrap_or(d.budget),
@@ -153,15 +187,12 @@ impl TrainConfig {
             location: v.get("location").as_str().unwrap_or(&d.location).to_string(),
             cosine: v.get("cosine").as_bool().unwrap_or(d.cosine),
             warmup_steps: v.get("warmup_steps").as_usize().unwrap_or(0),
-            backend: v
-                .get("backend")
-                .as_str()
-                .map(Backend::parse)
-                .unwrap_or(d.backend),
+            backend,
             optimizer: v.get("optimizer").as_str().unwrap_or(&d.optimizer).to_string(),
             loss: v.get("loss").as_str().unwrap_or(&d.loss).to_string(),
             batch: v.get("batch").as_usize().unwrap_or(d.batch),
-        }
+            budget_schedule,
+        })
     }
 }
 
@@ -176,19 +207,24 @@ pub enum Preset {
 }
 
 impl Preset {
-    pub fn parse(s: &str) -> Preset {
+    /// Parse `"smoke"` / `"ci"` / `"paper"`.
+    pub fn parse(s: &str) -> Result<Preset> {
         match s {
-            "smoke" => Preset::Smoke,
-            "ci" => Preset::Ci,
-            "paper" => Preset::Paper,
-            other => panic!("unknown preset {other} (want smoke|ci|paper)"),
+            "smoke" => Ok(Preset::Smoke),
+            "ci" => Ok(Preset::Ci),
+            "paper" => Ok(Preset::Paper),
+            other => bail!("unknown preset {other} (want smoke|ci|paper)"),
         }
     }
 
-    /// Base config for a model under this preset.
-    pub fn base(self, model: &str) -> TrainConfig {
+    /// Base config for a model under this preset; errors on a model no
+    /// preset has a recipe for (see [`KNOWN_MODELS`]).
+    pub fn base(self, model: &str) -> Result<TrainConfig> {
+        if !KNOWN_MODELS.contains(&model) {
+            bail!("unknown model {model} (want {})", KNOWN_MODELS.join("|"));
+        }
         if self == Preset::Smoke {
-            let mut c = Preset::Ci.base(model);
+            let mut c = Preset::Ci.base(model)?;
             match model {
                 "mlp" => {
                     c.train_size = 2048;
@@ -204,7 +240,7 @@ impl Preset {
                     c.warmup_steps = c.warmup_steps.min(8);
                 }
             }
-            return c;
+            return Ok(c);
         }
         let mut c = TrainConfig { model: model.to_string(), ..Default::default() };
         match (self, model) {
@@ -243,7 +279,7 @@ impl Preset {
                 c.test_size = 512;
                 c.steps = 384;
                 c.eval_every = 96;
-                c.lr = 3e-4;
+                c.lr = 1e-3;
                 c.cosine = true;
                 c.warmup_steps = 32;
             }
@@ -256,7 +292,7 @@ impl Preset {
                 c.cosine = true;
                 c.warmup_steps = 10 * (50000 / 64);
             }
-            _ => panic!("unknown model {model}"),
+            _ => unreachable!("KNOWN_MODELS is checked above"),
         }
         // optimizer recipes per model (§5 / App B.2); the PJRT artifacts
         // bake these in, the native backend reads them from the config
@@ -266,15 +302,15 @@ impl Preset {
             _ => "adam",
         }
         .into();
-        c
+        Ok(c)
     }
 
     /// LR cross-validation grid around the base LR. The paper uses 13 points
     /// for MLP (10^{-0.25 i}) and 5 log-spaced points for the larger nets;
     /// `ci` trims both.
-    pub fn lr_grid(self, model: &str) -> Vec<f64> {
-        let base = self.base(model).lr;
-        match self {
+    pub fn lr_grid(self, model: &str) -> Result<Vec<f64>> {
+        let base = self.base(model)?.lr;
+        Ok(match self {
             // smoke: 2-point grid (the sketched variants often need the
             // cooler LR — momentum+no-clip BagNet diverges at the recipe LR
             // under small budgets); ViT/AdamW is LR-robust, 1 point suffices
@@ -288,7 +324,7 @@ impl Preset {
                     vec![base * 0.1, base * 0.32, base, base * 3.2, base * 10.0]
                 }
             }
-        }
+        })
     }
 
     pub fn seeds(self) -> Vec<u64> {
@@ -311,10 +347,10 @@ impl Preset {
 }
 
 /// Load a JSON config file into a TrainConfig.
-pub fn load_config(path: &str) -> anyhow::Result<TrainConfig> {
+pub fn load_config(path: &str) -> Result<TrainConfig> {
     let text = std::fs::read_to_string(path)?;
     let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-    Ok(TrainConfig::from_json(&v))
+    TrainConfig::from_json(&v)
 }
 
 #[cfg(test)]
@@ -327,26 +363,28 @@ mod tests {
         c.method = "l1".into();
         c.budget = 0.2;
         c.cosine = true;
+        c.budget_schedule = vec![0.5, 0.25, 0.1];
         let v = c.to_json();
-        let c2 = TrainConfig::from_json(&v);
+        let c2 = TrainConfig::from_json(&v).unwrap();
         assert_eq!(c2.method, "l1");
         assert_eq!(c2.budget, 0.2);
         assert!(c2.cosine);
         assert_eq!(c2.steps, c.steps);
+        assert_eq!(c2.budget_schedule, vec![0.5, 0.25, 0.1]);
     }
 
     #[test]
     fn presets_scale() {
-        let ci = Preset::Ci.base("mlp");
-        let paper = Preset::Paper.base("mlp");
+        let ci = Preset::Ci.base("mlp").unwrap();
+        let paper = Preset::Paper.base("mlp").unwrap();
         assert!(paper.steps > 10 * ci.steps);
-        assert_eq!(Preset::Paper.lr_grid("mlp").len(), 13);
-        assert_eq!(Preset::Ci.lr_grid("mlp").len(), 3);
+        assert_eq!(Preset::Paper.lr_grid("mlp").unwrap().len(), 13);
+        assert_eq!(Preset::Ci.lr_grid("mlp").unwrap().len(), 3);
     }
 
     #[test]
     fn cosine_schedule_decays() {
-        let mut c = Preset::Ci.base("vit");
+        let mut c = Preset::Ci.base("vit").unwrap();
         c.steps = 100;
         c.warmup_steps = 10;
         let warm = c.lr_at(0);
@@ -358,31 +396,34 @@ mod tests {
 
     #[test]
     fn flat_schedule_for_mlp() {
-        let c = Preset::Ci.base("mlp");
+        let c = Preset::Ci.base("mlp").unwrap();
         assert_eq!(c.lr_at(0), c.lr);
         assert_eq!(c.lr_at(500), c.lr);
     }
 
     #[test]
-    #[should_panic]
-    fn bad_preset_panics() {
-        Preset::parse("warp");
+    fn bad_preset_and_model_error_with_hint() {
+        let err = format!("{}", Preset::parse("warp").unwrap_err());
+        assert!(err.contains("smoke|ci|paper"), "{err}");
+        let err = format!("{}", Preset::Ci.base("resnet").unwrap_err());
+        assert!(err.contains("mlp|bagnet|vit"), "{err}");
+        assert!(Preset::Ci.lr_grid("resnet").is_err());
     }
 
     #[test]
     fn backend_parse_roundtrip() {
-        assert_eq!(Backend::parse("native"), Backend::Native);
-        assert_eq!(Backend::parse("pjrt"), Backend::Pjrt);
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
         assert_eq!(Backend::default(), Backend::Native);
         for b in [Backend::Native, Backend::Pjrt] {
-            assert_eq!(Backend::parse(b.as_str()), b);
+            assert_eq!(Backend::parse(b.as_str()).unwrap(), b);
         }
     }
 
     #[test]
-    #[should_panic]
-    fn bad_backend_panics() {
-        Backend::parse("tpu");
+    fn bad_backend_errors_with_hint() {
+        let err = format!("{}", Backend::parse("tpu").unwrap_err());
+        assert!(err.contains("native|pjrt"), "{err}");
     }
 
     #[test]
@@ -390,27 +431,35 @@ mod tests {
         let mut c = TrainConfig::default();
         assert_eq!(c.backend, Backend::Native);
         assert_eq!(c.batch, 128);
+        assert!(c.budget_schedule.is_empty());
         c.backend = Backend::Pjrt;
         c.optimizer = "adam".into();
         c.loss = "mse".into();
         c.batch = 64;
-        let c2 = TrainConfig::from_json(&c.to_json());
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.backend, Backend::Pjrt);
         assert_eq!(c2.optimizer, "adam");
         assert_eq!(c2.loss, "mse");
         assert_eq!(c2.batch, 64);
         // configs without the new keys fall back to defaults
         let legacy = crate::json::parse(r#"{"model":"mlp","method":"l1"}"#).unwrap();
-        let c3 = TrainConfig::from_json(&legacy);
+        let c3 = TrainConfig::from_json(&legacy).unwrap();
         assert_eq!(c3.backend, Backend::Native);
         assert_eq!(c3.optimizer, "sgd");
         assert_eq!(c3.batch, 128);
+        assert!(c3.budget_schedule.is_empty());
+        // present-but-invalid values are loud errors, not silent fallbacks
+        let bad = crate::json::parse(r#"{"backend":"pjtr"}"#).unwrap();
+        assert!(TrainConfig::from_json(&bad).is_err());
+        let bad =
+            crate::json::parse(r#"{"budget_schedule":[0.5,"x"]}"#).unwrap();
+        assert!(TrainConfig::from_json(&bad).is_err());
     }
 
     #[test]
     fn preset_optimizer_recipes() {
-        assert_eq!(Preset::Ci.base("mlp").optimizer, "sgd");
-        assert_eq!(Preset::Ci.base("bagnet").optimizer, "momentum");
-        assert_eq!(Preset::Smoke.base("vit").optimizer, "adam");
+        assert_eq!(Preset::Ci.base("mlp").unwrap().optimizer, "sgd");
+        assert_eq!(Preset::Ci.base("bagnet").unwrap().optimizer, "momentum");
+        assert_eq!(Preset::Smoke.base("vit").unwrap().optimizer, "adam");
     }
 }

@@ -57,7 +57,7 @@ impl TrainBackend for NativeBackend {
     }
 
     fn supports_model(&self, model: &str) -> bool {
-        crate::native::trainer::model_dims(model).is_ok()
+        crate::native::models::is_supported(model)
     }
 
     fn train(&self, cfg: &TrainConfig) -> Result<RunCurve> {
@@ -155,7 +155,7 @@ mod tests {
 
     #[test]
     fn native_backend_trains() {
-        let mut cfg = Preset::Smoke.base("mlp");
+        let mut cfg = Preset::Smoke.base("mlp").unwrap();
         cfg.method = "l1".into();
         cfg.budget = 0.5;
         cfg.train_size = 128;

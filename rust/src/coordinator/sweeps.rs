@@ -91,12 +91,12 @@ pub fn budget_sweep(
     verbose: bool,
 ) -> Result<Vec<SweepPoint>> {
     let mut points = Vec::new();
-    let grid = preset.lr_grid(model);
+    let grid = preset.lr_grid(model)?;
     for &budget in budgets {
         let mut accs = Vec::new();
         let mut best_lr = 0.0;
         for &seed in &preset.seeds() {
-            let mut base = preset.base(model);
+            let mut base = preset.base(model)?;
             base.method = method.to_string();
             base.budget = budget;
             base.seed = seed;
@@ -156,7 +156,7 @@ mod tests {
 
     #[test]
     fn best_over_lr_picks_better_run() {
-        let mut base = Preset::Smoke.base("mlp");
+        let mut base = Preset::Smoke.base("mlp").unwrap();
         base.method = "baseline".into();
         base.train_size = 128;
         base.test_size = 64;

@@ -22,17 +22,13 @@ use anyhow::{bail, Context, Result};
 #[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
-/// Per-layer sketch gate from the config's `location` field.
-pub fn layer_mask(location: &str, num_sketched: usize) -> Vec<f32> {
-    let mut m = vec![0.0f32; num_sketched];
-    match location {
-        "all" => m.iter_mut().for_each(|v| *v = 1.0),
-        "first" => m[0] = 1.0,
-        "last" => *m.last_mut().expect("no sketched layers") = 1.0,
-        "none" => {}
-        other => panic!("unknown location {other} (want all|first|last|none)"),
-    }
-    m
+/// Per-layer sketch gate from the config's `location` field, as the f32
+/// mask vector the PJRT artifacts take. Delegates to the native
+/// [`crate::native::SketchPolicy`] site-mask so both backends agree on the
+/// location grammar; errors (instead of panicking) on an unknown location.
+pub fn layer_mask(location: &str, num_sketched: usize) -> anyhow::Result<Vec<f32>> {
+    let mask = crate::native::SketchPolicy::site_mask(location, num_sketched)?;
+    Ok(mask.into_iter().map(|on| if on { 1.0 } else { 0.0 }).collect())
 }
 
 /// PJRT training-loop driver over one model/method artifact triple.
@@ -104,18 +100,18 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Generate this run's datasets.
-    pub fn datasets(&self) -> (Dataset, Dataset) {
-        let kind = DatasetKind::for_model(&self.cfg.model);
+    pub fn datasets(&self) -> Result<(Dataset, Dataset)> {
+        let kind = DatasetKind::for_model(&self.cfg.model)?;
         // dataset contents are shared across methods/seeds (generator seed
         // fixed) so comparisons are paired; batch order varies with cfg.seed.
         let train = data::generate(kind, self.cfg.train_size, 1234, "train");
         let test = data::generate(kind, self.cfg.test_size, 1234, "test");
-        (train, test)
+        Ok((train, test))
     }
 
     /// Full training run; returns the loss/eval curve.
     pub fn run(&self) -> Result<RunCurve> {
-        let (train_ds, test_ds) = self.datasets();
+        let (train_ds, test_ds) = self.datasets()?;
         let mut state = self.init_state()?;
         let mut curve = RunCurve::default();
         let mut rng = Pcg64::new(self.cfg.seed.wrapping_add(77), 3);
@@ -123,7 +119,7 @@ impl<'rt> Trainer<'rt> {
         let dim = train_ds.dim;
         let mut xbuf = vec![0.0f32; self.batch * dim];
         let mut ybuf = vec![0i32; self.batch];
-        let mask = layer_mask(&self.cfg.location, self.num_sketched);
+        let mask = layer_mask(&self.cfg.location, self.num_sketched)?;
         let x_shape = self.train_exe.spec.inputs[self.n_state].shape.clone();
 
         let mut step = 0usize;
@@ -242,15 +238,15 @@ mod tests {
 
     #[test]
     fn layer_mask_variants() {
-        assert_eq!(layer_mask("all", 3), vec![1.0, 1.0, 1.0]);
-        assert_eq!(layer_mask("first", 3), vec![1.0, 0.0, 0.0]);
-        assert_eq!(layer_mask("last", 3), vec![0.0, 0.0, 1.0]);
-        assert_eq!(layer_mask("none", 2), vec![0.0, 0.0]);
+        assert_eq!(layer_mask("all", 3).unwrap(), vec![1.0, 1.0, 1.0]);
+        assert_eq!(layer_mask("first", 3).unwrap(), vec![1.0, 0.0, 0.0]);
+        assert_eq!(layer_mask("last", 3).unwrap(), vec![0.0, 0.0, 1.0]);
+        assert_eq!(layer_mask("none", 2).unwrap(), vec![0.0, 0.0]);
     }
 
     #[test]
-    #[should_panic]
-    fn layer_mask_bad_location() {
-        layer_mask("middle", 3);
+    fn layer_mask_bad_location_errors() {
+        let err = format!("{}", layer_mask("middle", 3).unwrap_err());
+        assert!(err.contains("all|first|last|none"), "{err}");
     }
 }

@@ -3,9 +3,9 @@
 //! A fixed parameter point and a fixed batch, repeated with fresh sketch
 //! keys, give Monte-Carlo estimates of E[ĝ], E‖ĝ − g‖² and per-coordinate
 //! spread — the quantities §2's theory reasons about. Both backends expose
-//! the probe: the native path runs [`crate::native::Mlp`] backwards
-//! directly; the PJRT path (feature `pjrt`) drives the `grads_mlp_<method>`
-//! artifacts.
+//! the probe: the native path runs the registry MLP
+//! ([`crate::native::models::mlp`]) backwards directly; the PJRT path
+//! (feature `pjrt`) drives the `grads_mlp_<method>` artifacts.
 
 use crate::data::{self, DatasetKind};
 #[cfg(feature = "pjrt")]
@@ -81,28 +81,28 @@ fn summarize(
 /// The probe's fixed setup: standard MLP at a seeded init + one fixed batch.
 fn native_probe_setup(
     seed: u64,
-) -> (crate::native::Mlp, crate::tensor::Mat, Vec<i32>) {
-    use crate::native::Mlp;
+) -> (crate::native::Sequential, crate::tensor::Mat, Vec<i32>) {
+    use crate::native::models;
     use crate::tensor::Mat;
     let batch = 128usize;
-    let model = Mlp::new(&[784, 64, 64, 10], seed);
+    let model = models::mlp(models::MLP_DIMS, seed);
     let ds = data::generate(DatasetKind::SynthMnist, batch, 99, "train");
     let x = Mat { rows: batch, cols: ds.dim, data: ds.x.clone() };
     (model, x, ds.y)
 }
 
 fn native_grad(
-    model: &crate::native::Mlp,
+    model: &crate::native::Sequential,
     x: &crate::tensor::Mat,
     y: &[i32],
-    spec: &crate::native::SketchSpec,
+    policy: &crate::native::SketchPolicy,
     rng: &mut crate::rng::Pcg64,
-) -> Vec<f32> {
+) -> Result<Vec<f32>> {
     use crate::native::{loss_and_grad, LossKind};
-    let cache = model.forward(x);
-    let (_, dlogits) = loss_and_grad(LossKind::CrossEntropy, cache.logits(), y);
-    let mask = vec![1.0f32; model.num_layers()];
-    model.backward(&cache, &dlogits, spec, &mask, rng).flatten()
+    let tape = model.forward(x);
+    let (_, dlogits) = loss_and_grad(LossKind::CrossEntropy, &tape.output, y);
+    let plan = model.plan(policy)?;
+    Ok(model.backward(&tape, &dlogits, &plan, rng).flatten())
 }
 
 /// Measure gradient bias/variance for one (method, budget) on the native
@@ -113,35 +113,40 @@ pub fn measure_native(
     trials: usize,
     seed: u64,
 ) -> Result<VarianceReport> {
-    use crate::native::SketchSpec;
+    use crate::native::SketchPolicy;
     use crate::rng::Pcg64;
     if !crate::native::NATIVE_METHODS.contains(&method) {
         anyhow::bail!("native variance probe: unsupported method {method}");
     }
     let (model, x, y) = native_probe_setup(seed);
     let mut exact_rng = Pcg64::new(0, 0);
-    let g = native_grad(&model, &x, &y, &SketchSpec::exact(), &mut exact_rng);
-    let spec = SketchSpec { method: method.to_string(), budget };
+    let g = native_grad(&model, &x, &y, &SketchPolicy::exact(), &mut exact_rng)?;
+    let policy = SketchPolicy {
+        method: method.to_string(),
+        budget,
+        location: "all".into(),
+        schedule: None,
+    };
     summarize(method, budget, &g, trials, |t| {
         let mut rng = Pcg64::new(seed ^ 0xabcd, t as u64);
-        Ok(native_grad(&model, &x, &y, &spec, &mut rng))
+        native_grad(&model, &x, &y, &policy, &mut rng)
     })
 }
 
 /// Minibatch gradient variance σ² at the probe's parameter point: resample
 /// batches, exact gradients (native backend).
 pub fn sigma2_native(trials: usize) -> Result<f64> {
-    use crate::native::{Mlp, SketchSpec};
+    use crate::native::{models, SketchPolicy};
     use crate::rng::Pcg64;
     use crate::tensor::Mat;
     let batch = 128usize;
-    let model = Mlp::new(&[784, 64, 64, 10], 5);
+    let model = models::mlp(models::MLP_DIMS, 5);
     let mut grads: Vec<Vec<f32>> = Vec::with_capacity(trials);
     for t in 0..trials {
         let ds = data::generate(DatasetKind::SynthMnist, batch, 500 + t as u64, "train");
         let x = Mat { rows: batch, cols: ds.dim, data: ds.x.clone() };
         let mut rng = Pcg64::new(0, 0);
-        grads.push(native_grad(&model, &x, &ds.y, &SketchSpec::exact(), &mut rng));
+        grads.push(native_grad(&model, &x, &ds.y, &SketchPolicy::exact(), &mut rng)?);
     }
     Ok(spread(&grads))
 }

@@ -24,11 +24,16 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
-    pub fn for_model(model: &str) -> DatasetKind {
+    /// Dataset a model family trains on; errors on an unknown model so a
+    /// typo'd `--model` exits cleanly instead of unwinding.
+    pub fn for_model(model: &str) -> anyhow::Result<DatasetKind> {
         match model {
-            "mlp" => DatasetKind::SynthMnist,
-            "vit" | "bagnet" => DatasetKind::SynthCifar,
-            other => panic!("unknown model {other}"),
+            "mlp" => Ok(DatasetKind::SynthMnist),
+            "vit" | "bagnet" => Ok(DatasetKind::SynthCifar),
+            other => anyhow::bail!(
+                "no dataset for model {other} (want {})",
+                crate::config::KNOWN_MODELS.join("|")
+            ),
         }
     }
 

@@ -9,8 +9,9 @@
 //!   and JAX model/train graphs, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3 (this crate)** — the training coordinator, with two execution
 //!   backends behind one dispatch trait (DESIGN.md §7):
-//!   - [`native`] — CPU-native MLP training whose hand-written backward
-//!     runs the paper's sketched VJPs on real kept-column kernels; needs
+//!   - [`native`] — CPU-native training over a composable `Layer` module
+//!     API (MLP, BagNet-lite, ViT-lite) whose hand-written backwards run
+//!     the paper's sketched VJPs on real kept-column kernels; needs
 //!     nothing on disk and is the default.
 //!   - [`runtime`] — PJRT execution of the AOT artifacts (cargo feature
 //!     `pjrt`; the offline build links a type-only stub).

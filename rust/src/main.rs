@@ -17,10 +17,11 @@ USAGE: uavjp <command> [flags]
 
 commands:
   train       one training run
-              --model mlp|vit|bagnet --method <m> --budget <p> --lr <f>
+              --model mlp|bagnet|vit --method <m> --budget <p> --lr <f>
               --steps <n> --seed <n> --location all|first|last|none
+              --budget-schedule p1,p2,..  (one budget per sketch site)
               --optimizer sgd|momentum|adam --loss ce|mse --batch <n>
-              [--preset ci|paper] [--out run.json]
+              [--preset smoke|ci|paper] [--out run.json]
   sweep       budget sweep for one method (LR cross-validated)
               --model <m> --method <m> [--budgets 0.05,0.1,...] [--preset ..]
   fig1a|fig1b|fig2a|fig2b|fig3|fig4|variance|eq6
@@ -34,7 +35,7 @@ commands:
   exec-bench  compile+execute latency for one artifact [--hlo-override f]
               (requires --features pjrt)
   list        list available artifacts
-  methods     list sketch methods per backend/model
+  methods     list sketch methods and models per backend
 
 flags:
   --backend native|pjrt   execution engine (default: native; pjrt needs the
@@ -62,17 +63,18 @@ fn main() -> Result<()> {
         "pipeline-sim" => cmd_pipeline(&args),
         "list" => cmd_list(&artifacts),
         "methods" => {
-            println!(
-                "native mlp: {}",
-                uavjp::native::NATIVE_METHODS.join(" ")
-            );
+            println!("native methods: {}", uavjp::native::NATIVE_METHODS.join(" "));
+            println!("native models (registry):");
+            for e in uavjp::native::models::REGISTRY {
+                println!("  {:<8} {}", e.name, e.about);
+            }
             println!("pjrt mlp: baseline per_element per_column per_sample l1 l1_sq l2 l2_sq var var_sq ds l1_ind gsv gsv_sq rcs");
             println!("pjrt vit/bagnet: baseline per_element per_column per_sample l1 l1_sq var ds");
             Ok(())
         }
         "all" => {
             let be = open_backend(&args, &artifacts)?;
-            let ctx = ctx_from(&args, &*be);
+            let ctx = ctx_from(&args, &*be)?;
             for id in experiments::ALL_EXPERIMENTS {
                 experiments::run(&ctx, id)?;
             }
@@ -80,7 +82,7 @@ fn main() -> Result<()> {
         }
         id if experiments::ALL_EXPERIMENTS.contains(&id) || id == "fig3" => {
             let be = open_backend(&args, &artifacts)?;
-            let ctx = ctx_from(&args, &*be);
+            let ctx = ctx_from(&args, &*be)?;
             experiments::run(&ctx, id)
         }
         other => {
@@ -92,20 +94,24 @@ fn main() -> Result<()> {
 
 /// Open the engine named by `--backend` (default native).
 fn open_backend(args: &Args, artifacts: &str) -> Result<Box<dyn TrainBackend>> {
-    backend::open(Backend::parse(&args.str_or("backend", "native")), artifacts)
+    backend::open(Backend::parse(&args.str_or("backend", "native"))?, artifacts)
 }
 
 fn ctx_from<'be>(
     args: &Args,
     be: &'be dyn TrainBackend,
-) -> experiments::ExperimentCtx<'be> {
-    experiments::ExperimentCtx {
+) -> Result<experiments::ExperimentCtx<'be>> {
+    let budgets = match args.str_opt("budgets") {
+        Some(_) => Some(args.f64_list_or("budgets", &[])?),
+        None => None,
+    };
+    Ok(experiments::ExperimentCtx {
         be,
-        preset: Preset::parse(&args.str_or("preset", "ci")),
+        preset: Preset::parse(&args.str_or("preset", "ci"))?,
         out_dir: args.str_or("out-dir", "results"),
         verbose: args.has("verbose"),
-        budgets: args.str_opt("budgets").map(|_| args.f64_list_or("budgets", &[])),
-    }
+        budgets,
+    })
 }
 
 /// Static HLO cost analysis of an artifact (L2 profiling, DESIGN.md §8).
@@ -149,7 +155,7 @@ fn cmd_exec_bench(args: &Args, artifacts: &str) -> Result<()> {
         .iter()
         .map(|t| HostTensor::zeros(t).to_literal())
         .collect::<Result<_>>()?;
-    let reps = args.usize_or("reps", 5);
+    let reps = args.usize_or("reps", 5)?;
     // warmup
     let _ = exe.execute::<xla::Literal>(&lits)?;
     let mut times = Vec::new();
@@ -178,22 +184,23 @@ fn cmd_exec_bench(_args: &Args, _artifacts: &str) -> Result<()> {
 
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     let be = open_backend(args, artifacts)?;
-    let preset = Preset::parse(&args.str_or("preset", "ci"));
+    let preset = Preset::parse(&args.str_or("preset", "ci"))?;
     let model = args.str_or("model", "mlp");
-    let mut cfg: TrainConfig = preset.base(&model);
-    cfg.backend = Backend::parse(&args.str_or("backend", "native"));
+    let mut cfg: TrainConfig = preset.base(&model)?;
+    cfg.backend = Backend::parse(&args.str_or("backend", "native"))?;
     cfg.method = args.str_or("method", "baseline");
-    cfg.budget = args.f64_or("budget", 0.2);
-    cfg.lr = args.f64_or("lr", cfg.lr);
-    cfg.steps = args.usize_or("steps", cfg.steps);
-    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
-    cfg.seed = args.usize_or("seed", 0) as u64;
+    cfg.budget = args.f64_or("budget", 0.2)?;
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.seed = args.usize_or("seed", 0)? as u64;
     cfg.location = args.str_or("location", "all");
-    cfg.train_size = args.usize_or("train-size", cfg.train_size);
-    cfg.test_size = args.usize_or("test-size", cfg.test_size);
+    cfg.train_size = args.usize_or("train-size", cfg.train_size)?;
+    cfg.test_size = args.usize_or("test-size", cfg.test_size)?;
     cfg.optimizer = args.str_or("optimizer", &cfg.optimizer);
     cfg.loss = args.str_or("loss", &cfg.loss);
-    cfg.batch = args.usize_or("batch", cfg.batch);
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.budget_schedule = args.f64_list_or("budget-schedule", &[])?;
 
     eprintln!(
         "[train:{}] {} / {} p={} lr={} steps={}",
@@ -227,10 +234,10 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
 
 fn cmd_sweep(args: &Args, artifacts: &str) -> Result<()> {
     let be = open_backend(args, artifacts)?;
-    let preset = Preset::parse(&args.str_or("preset", "ci"));
+    let preset = Preset::parse(&args.str_or("preset", "ci"))?;
     let model = args.str_or("model", "mlp");
     let method = args.str_or("method", "l1");
-    let budgets = args.f64_list_or("budgets", &preset.budgets());
+    let budgets = args.f64_list_or("budgets", &preset.budgets())?;
     let pts = sweeps::budget_sweep(
         &*be,
         preset,
@@ -248,21 +255,19 @@ fn cmd_sweep(args: &Args, artifacts: &str) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
+    let width = args.usize_or("width", 512)?;
     let cfg = pipeline::PipelineConfig {
-        stages: (0..args.usize_or("stages", 4))
-            .map(|_| pipeline::Stage {
-                dout: args.usize_or("width", 512),
-                din: args.usize_or("width", 512),
-            })
+        stages: (0..args.usize_or("stages", 4)?)
+            .map(|_| pipeline::Stage { dout: width, din: width })
             .collect(),
-        microbatch: args.usize_or("microbatch", 32),
-        num_microbatches: args.usize_or("mb-count", 8),
-        bandwidth: args.f64_or("bandwidth", 1e9),
-        latency: args.f64_or("latency", 5e-6),
-        flops_per_sec: args.f64_or("flops", 1e11),
+        microbatch: args.usize_or("microbatch", 32)?,
+        num_microbatches: args.usize_or("mb-count", 8)?,
+        bandwidth: args.f64_or("bandwidth", 1e9)?,
+        latency: args.f64_or("latency", 5e-6)?,
+        flops_per_sec: args.f64_or("flops", 1e11)?,
         budget: 1.0,
     };
-    let budgets = args.f64_list_or("budgets", &[0.05, 0.1, 0.2, 0.5, 1.0]);
+    let budgets = args.f64_list_or("budgets", &[0.05, 0.1, 0.2, 0.5, 1.0])?;
     println!("budget,step_time_s,bubble,backward_MB,speedup_vs_exact");
     let exact = pipeline::simulate(&cfg);
     for (b, rep) in pipeline::budget_sweep(&cfg, &budgets) {

@@ -1,0 +1,607 @@
+//! Transformer blocks for the ViT-lite model: token-wise [`LayerNorm`],
+//! learned [`PosEmbed`], multi-head self-[`Attention`] whose QKV and
+//! output-projection linears are the sketch sites, and the residual
+//! feed-forward sublayer [`FfnBlock`].
+//!
+//! Token layout: a `[B, P·d]` batch matrix is reinterpreted as `B·P` token
+//! rows of width `d` (row-major buffers coincide, no copies). The four
+//! attention projections run as single GEMMs over the stacked tokens, so
+//! their backward gradients are `[B·P, d]` matrices — exactly the shape
+//! the §4.2 column estimator gates, with model channels as columns. The
+//! softmax core stays exact: it holds no parameters and its FLOPs are
+//! `O(P²d)` per image versus the projections' `O(P d²)`.
+
+use crate::tensor::Mat;
+
+use super::layer::{affine, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
+
+/// Per-token layer normalization over the channel axis with learned scale
+/// and shift: rows of width `dim` are normalized to zero mean / unit
+/// variance, then mapped through `γ ⊙ x̂ + β`.
+pub struct LayerNorm {
+    /// Channel width `d` each token row is normalized over.
+    pub dim: usize,
+    /// Learned scale γ, length `d` (init 1).
+    pub gamma: Vec<f32>,
+    /// Learned shift β, length `d` (init 0).
+    pub beta: Vec<f32>,
+}
+
+/// Variance fuzz of [`LayerNorm`].
+const LN_EPS: f32 = 1e-5;
+
+impl LayerNorm {
+    /// Identity-initialized layer norm over `dim` channels.
+    pub fn new(dim: usize) -> LayerNorm {
+        LayerNorm { dim, gamma: vec![1.0; dim], beta: vec![0.0; dim] }
+    }
+}
+
+impl Layer for LayerNorm {
+    fn name(&self) -> &'static str {
+        "layer_norm"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        assert_eq!(x.cols % self.dim, 0, "layer_norm input width");
+        let d = self.dim;
+        let rows = x.rows * (x.cols / d);
+        let mut xhat = Mat::zeros(rows, d);
+        let mut invstd = Mat::zeros(rows, 1);
+        let mut y = Mat::zeros(x.rows, x.cols);
+        for r in 0..rows {
+            let xin = &x.data[r * d..(r + 1) * d];
+            let mut mu = 0.0f32;
+            for &v in xin {
+                mu += v;
+            }
+            mu /= d as f32;
+            let mut var = 0.0f32;
+            for &v in xin {
+                var += (v - mu) * (v - mu);
+            }
+            var /= d as f32;
+            let is = 1.0 / (var + LN_EPS).sqrt();
+            invstd.data[r] = is;
+            let xh = &mut xhat.data[r * d..(r + 1) * d];
+            let yr = &mut y.data[r * d..(r + 1) * d];
+            for j in 0..d {
+                xh[j] = (xin[j] - mu) * is;
+                yr[j] = self.gamma[j] * xh[j] + self.beta[j];
+            }
+        }
+        (y, Cache { mats: vec![xhat, invstd] })
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        cache: &Cache,
+        _ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        let d = self.dim;
+        let (xhat, invstd) = (&cache.mats[0], &cache.mats[1]);
+        let rows = xhat.rows;
+        let mut dgamma = vec![0.0f32; d];
+        let mut dbeta = vec![0.0f32; d];
+        let mut gx = if need_gx { Some(Mat::zeros(gy.rows, gy.cols)) } else { None };
+        for r in 0..rows {
+            let g = &gy.data[r * d..(r + 1) * d];
+            let xh = &xhat.data[r * d..(r + 1) * d];
+            for j in 0..d {
+                dgamma[j] += g[j] * xh[j];
+                dbeta[j] += g[j];
+            }
+            if let Some(gx) = gx.as_mut() {
+                // gx = invstd · (ĝ − mean(ĝ) − x̂ · mean(ĝ ⊙ x̂)), ĝ = γ ⊙ g
+                let mut m1 = 0.0f32;
+                let mut m2 = 0.0f32;
+                for j in 0..d {
+                    let gh = self.gamma[j] * g[j];
+                    m1 += gh;
+                    m2 += gh * xh[j];
+                }
+                m1 /= d as f32;
+                m2 /= d as f32;
+                let is = invstd.data[r];
+                let out = &mut gx.data[r * d..(r + 1) * d];
+                for j in 0..d {
+                    let gh = self.gamma[j] * g[j];
+                    out[j] = is * (gh - m1 - xh[j] * m2);
+                }
+            }
+        }
+        (gx, vec![dgamma, dbeta])
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        vec![&self.gamma, &self.beta]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        vec![&mut self.gamma, &mut self.beta]
+    }
+}
+
+/// Learned additive positional embedding over `P` token slots of width `d`.
+pub struct PosEmbed {
+    /// The embedding table, flattened `[P·d]` (one row per token slot).
+    pub table: Vec<f32>,
+}
+
+impl PosEmbed {
+    /// Gaussian(0, 0.02²)-initialized table, deterministic given
+    /// `(seed, stream)`.
+    pub fn new(patches: usize, dim: usize, seed: u64, stream: u64) -> PosEmbed {
+        let mut rng = crate::rng::Pcg64::new(seed ^ 0x1e57, stream);
+        let table =
+            (0..patches * dim).map(|_| (rng.gaussian() * 0.02) as f32).collect();
+        PosEmbed { table }
+    }
+}
+
+impl Layer for PosEmbed {
+    fn name(&self) -> &'static str {
+        "pos_embed"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        assert_eq!(x.cols, self.table.len(), "pos_embed input width");
+        let mut y = x.clone();
+        for i in 0..y.rows {
+            let row = &mut y.data[i * y.cols..(i + 1) * y.cols];
+            for (v, &t) in row.iter_mut().zip(&self.table) {
+                *v += t;
+            }
+        }
+        (y, Cache::default())
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        _cache: &Cache,
+        _ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        let mut dt = vec![0.0f32; self.table.len()];
+        for i in 0..gy.rows {
+            for (d, &g) in dt.iter_mut().zip(gy.row(i)) {
+                *d += g;
+            }
+        }
+        let gx = if need_gx { Some(gy.clone()) } else { None };
+        (gx, vec![dt])
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        vec![&self.table]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        vec![&mut self.table]
+    }
+}
+
+/// Multi-head self-attention over `P` tokens of width `d` with a residual
+/// connection: `y = x + W_o·MHSA(x)`. The QKV and output projections are
+/// the sketch sites; when the site is gated, all four backward GEMMs use
+/// the kept-column estimator at the site's budget.
+pub struct Attention {
+    /// Tokens per image `P`.
+    pub patches: usize,
+    /// Model width `d` (must be divisible by `heads`).
+    pub dim: usize,
+    /// Number of attention heads.
+    pub heads: usize,
+    /// Query projection.
+    pub q: Linear,
+    /// Key projection.
+    pub k: Linear,
+    /// Value projection.
+    pub v: Linear,
+    /// Output projection.
+    pub o: Linear,
+}
+
+impl Attention {
+    /// Gaussian(0, 1/d)-initialized attention block; the four projections
+    /// draw from consecutive streams `stream0..stream0+4`.
+    pub fn new(
+        patches: usize,
+        dim: usize,
+        heads: usize,
+        seed: u64,
+        stream0: u64,
+    ) -> Attention {
+        assert!(dim % heads == 0, "dim {dim} not divisible by {heads} heads");
+        let std = (1.0 / dim as f64).sqrt();
+        Attention {
+            patches,
+            dim,
+            heads,
+            q: Linear::init(dim, dim, std, seed, stream0),
+            k: Linear::init(dim, dim, std, seed, stream0 + 1),
+            v: Linear::init(dim, dim, std, seed, stream0 + 2),
+            o: Linear::init(dim, dim, std, seed, stream0 + 3),
+        }
+    }
+
+    fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+}
+
+impl Layer for Attention {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        let (p, d, h) = (self.patches, self.dim, self.heads);
+        assert_eq!(x.cols, p * d, "attention input width");
+        let bsz = x.rows;
+        let xs = Mat { rows: bsz * p, cols: d, data: x.data.clone() };
+        let q = affine(&xs, &self.q.w, &self.q.b);
+        let k = affine(&xs, &self.k.w, &self.k.b);
+        let v = affine(&xs, &self.v.w, &self.v.b);
+        let dh = self.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut o = Mat::zeros(bsz * p, d);
+        // attention probabilities, stacked [(b·h + head)·P, P]
+        let mut attn = Mat::zeros(bsz * h * p, p);
+        for b in 0..bsz {
+            let r0 = b * p;
+            for head in 0..h {
+                let c0 = head * dh;
+                let a0 = (b * h + head) * p;
+                // scores s[i][j] = <q_i, k_j> · scale, softmaxed per row
+                for i in 0..p {
+                    let arow = &mut attn.data[(a0 + i) * p..(a0 + i + 1) * p];
+                    let mut m = f32::NEG_INFINITY;
+                    for (j, aj) in arow.iter_mut().enumerate() {
+                        let mut s = 0.0f32;
+                        for c in 0..dh {
+                            s += q.at(r0 + i, c0 + c) * k.at(r0 + j, c0 + c);
+                        }
+                        *aj = s * scale;
+                        if *aj > m {
+                            m = *aj;
+                        }
+                    }
+                    let mut sum = 0.0f32;
+                    for aj in arow.iter_mut() {
+                        *aj = (*aj - m).exp();
+                        sum += *aj;
+                    }
+                    for aj in arow.iter_mut() {
+                        *aj /= sum;
+                    }
+                }
+                // o_i = Σ_j a[i][j] · v_j  (head slice)
+                for i in 0..p {
+                    let arow = &attn.data[(a0 + i) * p..(a0 + i + 1) * p];
+                    for c in 0..dh {
+                        let mut s = 0.0f32;
+                        for (j, &aij) in arow.iter().enumerate() {
+                            s += aij * v.at(r0 + j, c0 + c);
+                        }
+                        o.data[(r0 + i) * d + c0 + c] = s;
+                    }
+                }
+            }
+        }
+        let mut y = affine(&o, &self.o.w, &self.o.b);
+        for (yv, &xv) in y.data.iter_mut().zip(&xs.data) {
+            *yv += xv; // residual
+        }
+        let out = Mat { rows: bsz, cols: p * d, data: y.data };
+        (out, Cache { mats: vec![xs, q, k, v, o, attn] })
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        cache: &Cache,
+        ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        let (p, d, h) = (self.patches, self.dim, self.heads);
+        let bsz = gy.rows;
+        let (xs, q, k, v, o, attn) = (
+            &cache.mats[0],
+            &cache.mats[1],
+            &cache.mats[2],
+            &cache.mats[3],
+            &cache.mats[4],
+            &cache.mats[5],
+        );
+        let g = Mat { rows: bsz * p, cols: d, data: gy.data.clone() };
+        let (dwo, dbo, go) = linear_backward_ctx(&g, o, &self.o.w, ctx, true);
+        let go = go.expect("attention output projection always needs dX");
+        let mut gx = g; // residual path
+        let dh = self.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut gq = Mat::zeros(bsz * p, d);
+        let mut gk = Mat::zeros(bsz * p, d);
+        let mut gv = Mat::zeros(bsz * p, d);
+        let mut ga = vec![0.0f32; p * p];
+        let mut gs = vec![0.0f32; p * p];
+        for b in 0..bsz {
+            let r0 = b * p;
+            for head in 0..h {
+                let c0 = head * dh;
+                let a0 = (b * h + head) * p;
+                // gA[i][j] = <go_i, v_j>;  gV_j += Σ_i a[i][j]·go_i
+                for i in 0..p {
+                    for j in 0..p {
+                        let mut s = 0.0f32;
+                        for c in 0..dh {
+                            s += go.at(r0 + i, c0 + c) * v.at(r0 + j, c0 + c);
+                        }
+                        ga[i * p + j] = s;
+                    }
+                }
+                for j in 0..p {
+                    for c in 0..dh {
+                        let mut s = 0.0f32;
+                        for i in 0..p {
+                            s += attn.at(a0 + i, j) * go.at(r0 + i, c0 + c);
+                        }
+                        gv.data[(r0 + j) * d + c0 + c] = s;
+                    }
+                }
+                // softmax backward: gS = A ⊙ (gA − rowsum(gA ⊙ A))
+                for i in 0..p {
+                    let arow = &attn.data[(a0 + i) * p..(a0 + i + 1) * p];
+                    let mut dot = 0.0f32;
+                    for j in 0..p {
+                        dot += ga[i * p + j] * arow[j];
+                    }
+                    for j in 0..p {
+                        gs[i * p + j] = arow[j] * (ga[i * p + j] - dot);
+                    }
+                }
+                // gQ_i = scale · Σ_j gS[i][j]·k_j;  gK_j = scale · Σ_i gS[i][j]·q_i
+                for i in 0..p {
+                    for c in 0..dh {
+                        let mut s = 0.0f32;
+                        for j in 0..p {
+                            s += gs[i * p + j] * k.at(r0 + j, c0 + c);
+                        }
+                        gq.data[(r0 + i) * d + c0 + c] = s * scale;
+                    }
+                }
+                for j in 0..p {
+                    for c in 0..dh {
+                        let mut s = 0.0f32;
+                        for i in 0..p {
+                            s += gs[i * p + j] * q.at(r0 + i, c0 + c);
+                        }
+                        gk.data[(r0 + j) * d + c0 + c] = s * scale;
+                    }
+                }
+            }
+        }
+        let (dwq, dbq, gxq) = linear_backward_ctx(&gq, xs, &self.q.w, ctx, need_gx);
+        let (dwk, dbk, gxk) = linear_backward_ctx(&gk, xs, &self.k.w, ctx, need_gx);
+        let (dwv, dbv, gxv) = linear_backward_ctx(&gv, xs, &self.v.w, ctx, need_gx);
+        let gx = if need_gx {
+            for part in [gxq, gxk, gxv].into_iter().flatten() {
+                for (a, &b) in gx.data.iter_mut().zip(&part.data) {
+                    *a += b;
+                }
+            }
+            Some(Mat { rows: bsz, cols: p * d, data: gx.data })
+        } else {
+            None
+        };
+        (
+            gx,
+            vec![dwq.data, dbq, dwk.data, dbk, dwv.data, dbv, dwo.data, dbo],
+        )
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        vec![
+            &self.q.w.data,
+            &self.q.b,
+            &self.k.w.data,
+            &self.k.b,
+            &self.v.w.data,
+            &self.v.b,
+            &self.o.w.data,
+            &self.o.b,
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        vec![
+            &mut self.q.w.data,
+            &mut self.q.b,
+            &mut self.k.w.data,
+            &mut self.k.b,
+            &mut self.v.w.data,
+            &mut self.v.b,
+            &mut self.o.w.data,
+            &mut self.o.b,
+        ]
+    }
+
+    fn sketchable(&self) -> bool {
+        true
+    }
+}
+
+/// Per-token feed-forward sublayer with its own residual:
+/// `y = x + W₂·relu(W₁·x)` applied to every token row of width `d`.
+/// One sketch site; when gated, both backward GEMMs use the kept-column
+/// estimator. Together with [`Attention`] (whose residual is internal too)
+/// and a following [`LayerNorm`], this composes the standard post-LN
+/// transformer encoder block `LN(x + sublayer(x))`.
+pub struct FfnBlock {
+    /// Up projection `d → hidden`.
+    pub w1: Linear,
+    /// Down projection `hidden → d`.
+    pub w2: Linear,
+}
+
+impl FfnBlock {
+    /// He-initialized FFN; the two projections draw from streams
+    /// `stream0` and `stream0 + 1`.
+    pub fn he(dim: usize, hidden: usize, seed: u64, stream0: u64) -> FfnBlock {
+        FfnBlock {
+            w1: Linear::he(dim, hidden, seed, stream0),
+            w2: Linear::he(hidden, dim, seed, stream0 + 1),
+        }
+    }
+}
+
+impl Layer for FfnBlock {
+    fn name(&self) -> &'static str {
+        "ffn_block"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        let d = self.w1.din();
+        assert_eq!(x.cols % d, 0, "ffn_block input width");
+        let rows = x.rows * (x.cols / d);
+        let xs = Mat { rows, cols: d, data: x.data.clone() };
+        let h = affine(&xs, &self.w1.w, &self.w1.b);
+        let mut hr = h.clone();
+        for v in &mut hr.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let mut y = affine(&hr, &self.w2.w, &self.w2.b);
+        for (yv, &xv) in y.data.iter_mut().zip(&xs.data) {
+            *yv += xv; // residual
+        }
+        let out = Mat { rows: x.rows, cols: x.cols, data: y.data };
+        (out, Cache { mats: vec![xs, h, hr] })
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        cache: &Cache,
+        ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        let (xs, h, hr) = (&cache.mats[0], &cache.mats[1], &cache.mats[2]);
+        let g = Mat { rows: xs.rows, cols: xs.cols, data: gy.data.clone() };
+        let (dw2, db2, gh) = linear_backward_ctx(&g, hr, &self.w2.w, ctx, true);
+        let mut gh = gh.expect("ffn down projection always needs dX");
+        for (v, &hv) in gh.data.iter_mut().zip(&h.data) {
+            if hv <= 0.0 {
+                *v = 0.0;
+            }
+        }
+        let (dw1, db1, gx1) = linear_backward_ctx(&gh, xs, &self.w1.w, ctx, need_gx);
+        let gx = gx1.map(|gx1| {
+            let mut data = g.data;
+            for (a, &b) in data.iter_mut().zip(&gx1.data) {
+                *a += b; // residual
+            }
+            Mat { rows: gy.rows, cols: gy.cols, data }
+        });
+        (gx, vec![dw1.data, db1, dw2.data, db2])
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        vec![&self.w1.w.data, &self.w1.b, &self.w2.w.data, &self.w2.b]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        vec![
+            &mut self.w1.w.data,
+            &mut self.w1.b,
+            &mut self.w2.w.data,
+            &mut self.w2.b,
+        ]
+    }
+
+    fn sketchable(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn layer_norm_rows_are_normalized() {
+        let ln = LayerNorm::new(6);
+        let mut rng = Pcg64::new(4, 0);
+        let x = randmat(3, 12, &mut rng); // 6 token rows of width 6
+        let (y, _) = ln.forward(&x);
+        for r in 0..6 {
+            let row = &y.data[r * 6..(r + 1) * 6];
+            let mu: f32 = row.iter().sum::<f32>() / 6.0;
+            let var: f32 =
+                row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / 6.0;
+            assert!(mu.abs() < 1e-5, "row {r} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn layer_norm_param_grads_accumulate_over_tokens() {
+        let ln = LayerNorm::new(4);
+        let mut rng = Pcg64::new(7, 0);
+        let x = randmat(2, 8, &mut rng);
+        let (_, cache) = ln.forward(&x);
+        let gy = Mat::from_fn(2, 8, |_, _| 1.0);
+        let mut g = Pcg64::new(0, 0);
+        let mut ctx = SketchCtx { sketch: None, rng: &mut g };
+        let (_, pg) = ln.backward(&gy, &cache, &mut ctx, false);
+        // dbeta sums gy over all 4 token rows
+        for &v in &pg[1] {
+            assert!((v - 4.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_rows_mix_tokens_and_residual_passes_through() {
+        let at = Attention::new(3, 8, 2, 1, 302);
+        let mut rng = Pcg64::new(9, 0);
+        let x = randmat(2, 24, &mut rng);
+        let (y, cache) = at.forward(&x);
+        assert_eq!((y.rows, y.cols), (2, 24));
+        // attention probabilities are a distribution per row
+        let attn = &cache.mats[5];
+        for r in 0..attn.rows {
+            let s: f32 = attn.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(attn.row(r).iter().all(|&a| a >= 0.0));
+        }
+    }
+
+    #[test]
+    fn pos_embed_adds_table_and_sums_gradient() {
+        let pe = PosEmbed::new(2, 3, 1, 301);
+        let x = Mat::zeros(4, 6);
+        let (y, cache) = pe.forward(&x);
+        for i in 0..4 {
+            for (a, b) in y.row(i).iter().zip(&pe.table) {
+                assert_eq!(a, b);
+            }
+        }
+        let gy = Mat::from_fn(4, 6, |_, _| 0.5);
+        let mut g = Pcg64::new(0, 0);
+        let mut ctx = SketchCtx { sketch: None, rng: &mut g };
+        let (gx, pg) = pe.backward(&gy, &cache, &mut ctx, true);
+        assert_eq!(gx.unwrap().data, gy.data);
+        for &v in &pg[0] {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+}

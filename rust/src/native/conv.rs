@@ -1,0 +1,338 @@
+//! Patch-based convolutional layers for the BagNet-lite / ViT-lite models.
+//!
+//! The paper (and XConv, Thatipelli et al. 2021) applies the §4.2 column
+//! estimator to convolutions by lowering them to GEMMs: a non-overlapping
+//! patch conv is exactly a linear layer applied to every patch, so its
+//! backward is the same kept-column sketch with `B·P` effective batch rows
+//! and the output channels as gated columns. Three layers implement that
+//! lowering:
+//!
+//! * [`Patchify`] — im2col for non-overlapping patches: channel-last image
+//!   rows → patch-major rows (pure permutation, exact backward).
+//! * [`PatchConv`] — a [`Linear`] applied per patch; the sketch site.
+//! * [`PatchMeanPool`] — mean over patches, the bag-of-features head.
+
+use crate::tensor::Mat;
+
+use super::layer::{affine, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
+
+/// Non-overlapping-patch im2col: `[B, H·W·C]` channel-last images to
+/// `[B, P·(q·q·C)]` patch-major rows (patch index `p = pr·(W/q) + pc`,
+/// within-patch offset `(dr·q + dc)·C + ch`). No parameters; the backward
+/// is the inverse permutation.
+pub struct Patchify {
+    /// Number of patches `(H/q)·(W/q)`.
+    pub patches: usize,
+    /// Flattened per-patch width `q·q·C`.
+    pub patch_dim: usize,
+    src: Vec<usize>,
+}
+
+impl Patchify {
+    /// Build the index map for an `h × w × c` image cut into `q × q`
+    /// patches (`h` and `w` must be multiples of `q`).
+    pub fn new(h: usize, w: usize, c: usize, q: usize) -> Patchify {
+        assert!(h % q == 0 && w % q == 0, "image {h}x{w} not divisible by {q}");
+        let mut src = Vec::with_capacity(h * w * c);
+        for pr in 0..h / q {
+            for pc in 0..w / q {
+                for dr in 0..q {
+                    for dc in 0..q {
+                        for ch in 0..c {
+                            src.push(((pr * q + dr) * w + (pc * q + dc)) * c + ch);
+                        }
+                    }
+                }
+            }
+        }
+        Patchify { patches: (h / q) * (w / q), patch_dim: q * q * c, src }
+    }
+}
+
+impl Layer for Patchify {
+    fn name(&self) -> &'static str {
+        "patchify"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        assert_eq!(x.cols, self.src.len(), "patchify input width");
+        let n = self.src.len();
+        let mut y = Mat::zeros(x.rows, n);
+        for i in 0..x.rows {
+            let xin = x.row(i);
+            let yr = &mut y.data[i * n..(i + 1) * n];
+            for (o, &s) in yr.iter_mut().zip(&self.src) {
+                *o = xin[s];
+            }
+        }
+        (y, Cache::default())
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        _cache: &Cache,
+        _ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        if !need_gx {
+            return (None, Vec::new());
+        }
+        let n = self.src.len();
+        let mut gx = Mat::zeros(gy.rows, n);
+        for i in 0..gy.rows {
+            let grow = gy.row(i);
+            let out = &mut gx.data[i * n..(i + 1) * n];
+            for (g, &s) in grow.iter().zip(&self.src) {
+                out[s] = *g;
+            }
+        }
+        (Some(gx), Vec::new())
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        Vec::new()
+    }
+}
+
+/// A linear layer applied independently to each of `P` patches: input
+/// `[B, P·d_in]` (patch-major, from [`Patchify`] or a previous
+/// `PatchConv`), output `[B, P·d_out]`. Internally one GEMM over the
+/// stacked `[B·P, d_in]` rows, which is where the kept-column sketch
+/// plugs in — the output gradient seen by the estimator is `[B·P, d_out]`
+/// with output channels as columns.
+pub struct PatchConv {
+    /// Patches per image `P`.
+    pub patches: usize,
+    /// The shared per-patch linear map.
+    pub lin: Linear,
+}
+
+impl PatchConv {
+    /// He-initialized patch conv, deterministic given `(seed, stream)`.
+    pub fn he(
+        patches: usize,
+        din: usize,
+        dout: usize,
+        seed: u64,
+        stream: u64,
+    ) -> PatchConv {
+        PatchConv { patches, lin: Linear::he(din, dout, seed, stream) }
+    }
+}
+
+impl Layer for PatchConv {
+    fn name(&self) -> &'static str {
+        "patch_conv"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        let (din, dout) = (self.lin.din(), self.lin.dout());
+        assert_eq!(x.cols, self.patches * din, "patch_conv input width");
+        // [B, P·din] and [B·P, din] share one row-major buffer
+        let xp = Mat { rows: x.rows * self.patches, cols: din, data: x.data.clone() };
+        let y = affine(&xp, &self.lin.w, &self.lin.b);
+        let out = Mat { rows: x.rows, cols: self.patches * dout, data: y.data };
+        (out, Cache { mats: vec![xp] })
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        cache: &Cache,
+        ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        let (din, dout) = (self.lin.din(), self.lin.dout());
+        let xp = &cache.mats[0];
+        let g = Mat {
+            rows: gy.rows * self.patches,
+            cols: dout,
+            data: gy.data.clone(),
+        };
+        let (dw, db, gx) = linear_backward_ctx(&g, xp, &self.lin.w, ctx, need_gx);
+        let gx = gx.map(|m| Mat {
+            rows: gy.rows,
+            cols: self.patches * din,
+            data: m.data,
+        });
+        (gx, vec![dw.data, db])
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        vec![&self.lin.w.data, &self.lin.b]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        vec![&mut self.lin.w.data, &mut self.lin.b]
+    }
+
+    fn sketchable(&self) -> bool {
+        true
+    }
+}
+
+/// Mean over the patch axis: `[B, P·d] → [B, d]` — the bag-of-local-
+/// features head of BagNet and the token pooling of the ViT-lite.
+pub struct PatchMeanPool {
+    /// Patches per image `P`.
+    pub patches: usize,
+    /// Per-patch feature width `d`.
+    pub dim: usize,
+}
+
+impl Layer for PatchMeanPool {
+    fn name(&self) -> &'static str {
+        "patch_mean_pool"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        assert_eq!(x.cols, self.patches * self.dim, "pool input width");
+        let inv = 1.0 / self.patches as f32;
+        let mut y = Mat::zeros(x.rows, self.dim);
+        for i in 0..x.rows {
+            let xin = x.row(i);
+            let yr = &mut y.data[i * self.dim..(i + 1) * self.dim];
+            for p in 0..self.patches {
+                let chunk = &xin[p * self.dim..(p + 1) * self.dim];
+                for (o, &v) in yr.iter_mut().zip(chunk) {
+                    *o += v;
+                }
+            }
+            for o in yr.iter_mut() {
+                *o *= inv;
+            }
+        }
+        (y, Cache::default())
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        _cache: &Cache,
+        _ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        if !need_gx {
+            return (None, Vec::new());
+        }
+        let inv = 1.0 / self.patches as f32;
+        let mut gx = Mat::zeros(gy.rows, self.patches * self.dim);
+        for i in 0..gy.rows {
+            let grow = gy.row(i);
+            let out = &mut gx.data
+                [i * self.patches * self.dim..(i + 1) * self.patches * self.dim];
+            for p in 0..self.patches {
+                let chunk = &mut out[p * self.dim..(p + 1) * self.dim];
+                for (o, &g) in chunk.iter_mut().zip(grow) {
+                    *o = g * inv;
+                }
+            }
+        }
+        (Some(gx), Vec::new())
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
+    }
+
+    fn exact_ctx(rng: &mut Pcg64) -> SketchCtx<'_> {
+        SketchCtx { sketch: None, rng }
+    }
+
+    #[test]
+    fn patchify_is_a_permutation_and_backward_inverts_it() {
+        let pf = Patchify::new(4, 4, 3, 2);
+        assert_eq!(pf.patches, 4);
+        assert_eq!(pf.patch_dim, 12);
+        let mut rng = Pcg64::new(1, 0);
+        let x = randmat(2, 48, &mut rng);
+        let (y, cache) = pf.forward(&x);
+        // same multiset of values per row
+        let mut a = x.row(0).to_vec();
+        let mut b = y.row(0).to_vec();
+        a.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        b.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        assert_eq!(a, b);
+        // top-left patch of row 0 comes first
+        assert_eq!(y.at(0, 0), x.at(0, 0)); // (0,0,ch0)
+        assert_eq!(y.at(0, 3), x.at(0, 3)); // (0,1,ch0) = in-index 1*3
+        assert_eq!(y.at(0, 6), x.at(0, 12)); // (1,0,ch0) = in-index 4*3
+        // backward(forward-output) restores the input ordering
+        let mut g = Pcg64::new(0, 0);
+        let (gx, _) = pf.backward(&y, &cache, &mut exact_ctx(&mut g), true);
+        assert_eq!(gx.unwrap().data, x.data);
+    }
+
+    #[test]
+    fn patch_conv_equals_per_patch_linear() {
+        let pc = PatchConv::he(3, 4, 5, 9, 300);
+        let mut rng = Pcg64::new(2, 0);
+        let x = randmat(2, 12, &mut rng);
+        let (y, _) = pc.forward(&x);
+        assert_eq!((y.rows, y.cols), (2, 15));
+        // manual: patch p of sample i maps through the same linear
+        for i in 0..2 {
+            for p in 0..3 {
+                for o in 0..5 {
+                    let mut z = pc.lin.b[o];
+                    for k in 0..4 {
+                        z += x.at(i, p * 4 + k) * pc.lin.w.at(o, k);
+                    }
+                    assert!((y.at(i, p * 5 + o) - z).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn patch_conv_full_budget_sketch_matches_exact() {
+        let pc = PatchConv::he(4, 6, 8, 3, 300);
+        let mut rng = Pcg64::new(5, 0);
+        let x = randmat(3, 24, &mut rng);
+        let (y, cache) = pc.forward(&x);
+        let gy = randmat(y.rows, y.cols, &mut rng);
+        let mut g1 = Pcg64::new(0, 0);
+        let (gx_e, pg_e) = pc.backward(&gy, &cache, &mut exact_ctx(&mut g1), true);
+        let site = super::super::layer::SiteSketch { method: "l1".into(), budget: 1.0 };
+        let mut g2 = Pcg64::new(0, 0);
+        let mut ctx = SketchCtx { sketch: Some(&site), rng: &mut g2 };
+        let (gx_s, pg_s) = pc.backward(&gy, &cache, &mut ctx, true);
+        for (a, b) in pg_e[0].iter().zip(&pg_s[0]) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in gx_e.unwrap().data.iter().zip(&gx_s.unwrap().data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mean_pool_averages_and_spreads_gradient() {
+        let pool = PatchMeanPool { patches: 2, dim: 3 };
+        let x = Mat::from_rows(vec![vec![1.0, 2.0, 3.0, 3.0, 4.0, 5.0]]);
+        let (y, cache) = pool.forward(&x);
+        assert_eq!(y.data, vec![2.0, 3.0, 4.0]);
+        let gy = Mat::from_rows(vec![vec![2.0, 4.0, 6.0]]);
+        let mut g = Pcg64::new(0, 0);
+        let (gx, _) = pool.backward(&gy, &cache, &mut exact_ctx(&mut g), true);
+        assert_eq!(gx.unwrap().data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+}

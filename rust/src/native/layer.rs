@@ -1,0 +1,454 @@
+//! The composable module API of the native backend: the [`Layer`] trait,
+//! its per-layer forward [`Cache`], the [`SketchCtx`] handed to every
+//! backward call, the flat [`Grads`] parameter-gradient registry, and the
+//! two primitive layers everything else is built from ([`Linear`],
+//! [`Relu`]).
+//!
+//! A layer is a pure function plus parameters: `forward` maps a batch
+//! matrix to a batch matrix and records whatever the backward needs in a
+//! [`Cache`]; `backward` maps the output gradient back to an input gradient
+//! and per-parameter gradients. Layers that support the paper's column
+//! sketch report `sketchable() == true` and read their per-site decision
+//! from the [`SketchCtx`] — exact when `ctx.sketch` is `None`, the §4.2
+//! column estimator otherwise. [`crate::native::Sequential`] owns the tape
+//! and drives the reverse sweep.
+
+use crate::rng::Pcg64;
+use crate::sketch::{
+    column_scores, correlated_bernoulli, independent_bernoulli, kept_columns,
+    pstar_from_weights,
+};
+use crate::tensor::{matmul, sparse_dw, sparse_dx, Mat};
+
+/// Column-sketch methods the native backward supports (the coordinate and
+/// uniform-column families of §4.2; spectral and row/element masks stay
+/// PJRT-only).
+pub const NATIVE_METHODS: &[&str] = &[
+    "baseline", "per_column", "l1", "l1_ind", "l1_sq", "l2", "l2_sq", "var",
+    "var_sq", "ds",
+];
+
+/// Forward intermediates one layer saves for its backward pass. A plain bag
+/// of matrices: each layer documents what it stores at which index.
+#[derive(Default)]
+pub struct Cache {
+    /// The cached matrices, in the order the layer's `forward` pushed them.
+    pub mats: Vec<Mat>,
+}
+
+/// The resolved sketch decision for one backward site: which score method
+/// gates the columns and at what kept-column budget. Gate coupling
+/// (correlated vs independent Bernoulli) is carried by the method name
+/// (`per_column` and `*_ind` sample independently, Lemma 3.4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SiteSketch {
+    /// One of [`NATIVE_METHODS`] (never `"baseline"` — exact sites resolve
+    /// to `None` instead).
+    pub method: String,
+    /// Kept-column budget p ∈ (0, 1] for this site.
+    pub budget: f64,
+}
+
+/// Per-layer context for one backward call: the site's sketch decision (or
+/// `None` for the exact path) and the run's gate-randomness stream. Exact
+/// sites consume no randomness, which is what keeps `location="none"` runs
+/// bit-identical to the baseline.
+pub struct SketchCtx<'a> {
+    /// Sketch decision for this site; `None` means exact backward.
+    pub sketch: Option<&'a SiteSketch>,
+    /// The trainer's gate-randomness stream.
+    pub rng: &'a mut Pcg64,
+}
+
+/// One differentiable module in a [`crate::native::Sequential`] stack.
+///
+/// Implementations must uphold two contracts the container relies on:
+/// the order of tensors returned by [`Layer::params`],
+/// [`Layer::params_mut`] and the param-gradient list of
+/// [`Layer::backward`] must agree, and a backward with `ctx.sketch ==
+/// None` must consume no randomness from `ctx.rng`.
+pub trait Layer {
+    /// Short name for logs and debugging ("linear", "attention", …).
+    fn name(&self) -> &'static str;
+
+    /// Forward pass on a batch: returns the output and the cache the
+    /// backward needs.
+    fn forward(&self, x: &Mat) -> (Mat, Cache);
+
+    /// Backward pass: maps the output gradient `gy` to the input gradient
+    /// (when `need_gx`; the first layer of a stack skips it) and one flat
+    /// gradient per parameter tensor, in [`Layer::params`] order.
+    fn backward(
+        &self,
+        gy: &Mat,
+        cache: &Cache,
+        ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>);
+
+    /// Flat views of this layer's parameter tensors (empty if none).
+    fn params(&self) -> Vec<&[f32]>;
+
+    /// Mutable flat views, same order as [`Layer::params`].
+    fn params_mut(&mut self) -> Vec<&mut [f32]>;
+
+    /// Whether this layer is a sketch site (reads `ctx.sketch`).
+    fn sketchable(&self) -> bool {
+        false
+    }
+
+    /// Total parameter count.
+    fn num_params(&self) -> usize {
+        self.params().iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Per-parameter-tensor gradients in the model's global slot order (layer
+/// order, each layer's tensors in [`Layer::params`] order) — the one flat
+/// layout optimizers, clipping and the variance probes see.
+pub struct Grads {
+    /// One flat gradient per parameter tensor.
+    pub slots: Vec<Vec<f32>>,
+}
+
+impl Grads {
+    /// Concatenate every slot into one vector (the layout the variance
+    /// probes reason about).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for s in &self.slots {
+            out.extend_from_slice(s);
+        }
+        out
+    }
+
+    /// Global ℓ2 norm over every gradient entry.
+    pub fn global_norm(&self) -> f64 {
+        let mut sq = 0.0f64;
+        for s in &self.slots {
+            sq += s.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        }
+        sq.sqrt()
+    }
+
+    /// Scale every gradient entry by `s` (used by clipping).
+    pub fn scale(&mut self, s: f32) {
+        for slot in &mut self.slots {
+            for v in slot.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+/// `z = x·Wᵀ + b` for row-major `W: [d_out, d_in]`.
+pub fn affine(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
+    let wt = w.transpose();
+    let mut z = matmul(x, &wt);
+    for i in 0..z.rows {
+        let row = &mut z.data[i * z.cols..(i + 1) * z.cols];
+        for (v, bj) in row.iter_mut().zip(b) {
+            *v += bj;
+        }
+    }
+    z
+}
+
+/// Exact linear backward: (dW, db, dX if requested).
+pub fn exact_linear_backward(
+    g: &Mat,
+    x: &Mat,
+    w: &Mat,
+    need_dx: bool,
+) -> (Mat, Vec<f32>, Option<Mat>) {
+    let dw = matmul(&g.transpose(), x);
+    let db = column_sums(g);
+    let dx = if need_dx { Some(matmul(g, w)) } else { None };
+    (dw, db, dx)
+}
+
+fn column_sums(g: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.cols];
+    for i in 0..g.rows {
+        for (o, &v) in out.iter_mut().zip(g.row(i)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// The paper's sketched linear backward on native matrices.
+///
+/// Draws keep-probabilities from the method's column scores (waterfilling,
+/// Algorithm 1), gates columns with correlated (systematic, Algorithm 2) or
+/// independent Bernoulli sampling (`per_column` and `*_ind` methods), and
+/// computes dX = Ĝ·W, dW = Ĝᵀ·X, db = Ĝᵀ·1 touching only kept columns with
+/// the unbiased 1/pᵢ rescale. Returns (dW, db, dX if requested).
+pub fn sketched_linear_backward(
+    g: &Mat,
+    x: &Mat,
+    w: &Mat,
+    method: &str,
+    budget: f64,
+    rng: &mut Pcg64,
+    need_dx: bool,
+) -> (Mat, Vec<f32>, Option<Mat>) {
+    let dout = g.cols;
+    let p: Vec<f32> = if method == "per_column" {
+        vec![budget.clamp(1e-6, 1.0) as f32; dout]
+    } else {
+        let scores = column_scores(method, g, Some(w));
+        pstar_from_weights(&scores, budget * dout as f64)
+    };
+    let independent = method == "per_column" || method.ends_with("_ind");
+    let z = if independent {
+        independent_bernoulli(rng, &p)
+    } else {
+        correlated_bernoulli(rng, &p)
+    };
+    let kept = kept_columns(&z, &p);
+    let dw = sparse_dw(g, &kept, x);
+    let mut db = vec![0.0f32; dout];
+    for &(j, inv) in &kept {
+        let mut s = 0.0f32;
+        for i in 0..g.rows {
+            s += g.at(i, j);
+        }
+        db[j] = s * inv;
+    }
+    let dx = if need_dx { Some(sparse_dx(g, &kept, w)) } else { None };
+    (dw, db, dx)
+}
+
+/// Dispatch one linear backward through the context: exact when the site is
+/// ungated, sketched otherwise. Shared by every sketchable layer.
+pub(crate) fn linear_backward_ctx(
+    g: &Mat,
+    x: &Mat,
+    w: &Mat,
+    ctx: &mut SketchCtx<'_>,
+    need_dx: bool,
+) -> (Mat, Vec<f32>, Option<Mat>) {
+    match ctx.sketch {
+        Some(s) => {
+            sketched_linear_backward(g, x, w, &s.method, s.budget, ctx.rng, need_dx)
+        }
+        None => exact_linear_backward(g, x, w, need_dx),
+    }
+}
+
+/// One dense layer `y = x·Wᵀ + b` with `W: [d_out, d_in]` row-major — the
+/// canonical sketch site (§4.2 column estimator on the output gradient).
+pub struct Linear {
+    /// Weight matrix, one row per output unit.
+    pub w: Mat,
+    /// Bias, length `d_out`.
+    pub b: Vec<f32>,
+}
+
+impl Linear {
+    /// He-initialized layer (std √(2/d_in)), deterministic given
+    /// `(seed, stream)` — stream `300 + i` for the i-th weight-bearing
+    /// layer keeps MLP inits bit-identical across API generations.
+    pub fn he(din: usize, dout: usize, seed: u64, stream: u64) -> Linear {
+        Linear::init(din, dout, (2.0 / din as f64).sqrt(), seed, stream)
+    }
+
+    /// Layer with gaussian(0, std²) weights and zero bias.
+    pub fn init(din: usize, dout: usize, std: f64, seed: u64, stream: u64) -> Linear {
+        let mut rng = Pcg64::new(seed ^ 0x1e57, stream);
+        let w = Mat::from_fn(dout, din, |_, _| (rng.gaussian() * std) as f32);
+        Linear { w, b: vec![0.0; dout] }
+    }
+
+    /// Input width d_in.
+    pub fn din(&self) -> usize {
+        self.w.cols
+    }
+
+    /// Output width d_out.
+    pub fn dout(&self) -> usize {
+        self.w.rows
+    }
+}
+
+impl Layer for Linear {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        let y = affine(x, &self.w, &self.b);
+        (y, Cache { mats: vec![x.clone()] })
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        cache: &Cache,
+        ctx: &mut SketchCtx<'_>,
+        need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        let x = &cache.mats[0];
+        let (dw, db, gx) = linear_backward_ctx(gy, x, &self.w, ctx, need_gx);
+        (gx, vec![dw.data, db])
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        vec![&self.w.data, &self.b]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        vec![&mut self.w.data, &mut self.b]
+    }
+
+    fn sketchable(&self) -> bool {
+        true
+    }
+}
+
+/// Elementwise rectifier; caches its input for the derivative mask.
+pub struct Relu;
+
+impl Layer for Relu {
+    fn name(&self) -> &'static str {
+        "relu"
+    }
+
+    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+        let mut y = x.clone();
+        for v in &mut y.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        (y, Cache { mats: vec![x.clone()] })
+    }
+
+    fn backward(
+        &self,
+        gy: &Mat,
+        cache: &Cache,
+        _ctx: &mut SketchCtx<'_>,
+        _need_gx: bool,
+    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        let mut gx = gy.clone();
+        for (v, &zv) in gx.data.iter_mut().zip(&cache.mats[0].data) {
+            if zv <= 0.0 {
+                *v = 0.0;
+            }
+        }
+        (Some(gx), Vec::new())
+    }
+
+    fn params(&self) -> Vec<&[f32]> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dense_backward;
+
+    fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn sketched_full_budget_matches_exact() {
+        let mut rng = Pcg64::new(9, 0);
+        let g = randmat(8, 6, &mut rng);
+        let x = randmat(8, 5, &mut rng);
+        let w = randmat(6, 5, &mut rng);
+        let (dw_e, db_e, dx_e) = exact_linear_backward(&g, &x, &w, true);
+        let (dw_s, db_s, dx_s) =
+            sketched_linear_backward(&g, &x, &w, "l1", 1.0, &mut rng, true);
+        for (a, b) in dw_e.data.iter().zip(&dw_s.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in db_e.iter().zip(&db_s) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in dx_e.unwrap().data.iter().zip(&dx_s.unwrap().data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sketched_budget_drops_columns() {
+        let mut rng = Pcg64::new(11, 0);
+        let g = randmat(16, 32, &mut rng);
+        let x = randmat(16, 8, &mut rng);
+        let w = randmat(32, 8, &mut rng);
+        let (dw, db, _) =
+            sketched_linear_backward(&g, &x, &w, "l1", 0.25, &mut rng, false);
+        // dropped output units have identically-zero dW rows and db entries
+        let zero_rows = (0..32)
+            .filter(|&j| dw.data[j * 8..(j + 1) * 8].iter().all(|&v| v == 0.0))
+            .count();
+        assert!(zero_rows >= 32 - 10, "only {zero_rows} zero rows");
+        assert!(db.iter().filter(|&&v| v == 0.0).count() >= 32 - 10);
+    }
+
+    #[test]
+    fn linear_layer_backward_matches_dense() {
+        let mut rng = Pcg64::new(3, 0);
+        let lin = Linear::he(5, 4, 7, 300);
+        let x = randmat(6, 5, &mut rng);
+        let (y, cache) = lin.forward(&x);
+        assert_eq!((y.rows, y.cols), (6, 4));
+        let gy = randmat(6, 4, &mut rng);
+        let mut gate = Pcg64::new(0, 0);
+        let mut ctx = SketchCtx { sketch: None, rng: &mut gate };
+        let (gx, pg) = lin.backward(&gy, &cache, &mut ctx, true);
+        let (dx_ref, dw_ref) = dense_backward(&gy, &x, &lin.w);
+        for (a, b) in pg[0].iter().zip(&dw_ref.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in gx.unwrap().data.iter().zip(&dx_ref.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // bias gradient = column sums of gy
+        for j in 0..4 {
+            let s: f32 = (0..6).map(|i| gy.at(i, j)).sum();
+            assert!((pg[1][j] - s).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relu_masks_gradient_at_nonpositive_inputs() {
+        let x = Mat::from_rows(vec![vec![-1.0, 0.0, 2.0]]);
+        let (y, cache) = Relu.forward(&x);
+        assert_eq!(y.data, vec![0.0, 0.0, 2.0]);
+        let gy = Mat::from_rows(vec![vec![1.0, 1.0, 1.0]]);
+        let mut gate = Pcg64::new(0, 0);
+        let mut ctx = SketchCtx { sketch: None, rng: &mut gate };
+        let (gx, pg) = Relu.backward(&gy, &cache, &mut ctx, true);
+        assert_eq!(gx.unwrap().data, vec![0.0, 0.0, 1.0]);
+        assert!(pg.is_empty());
+    }
+
+    #[test]
+    fn grads_flatten_and_norm() {
+        let mut g = Grads { slots: vec![vec![3.0, 0.0], vec![4.0]] };
+        assert_eq!(g.flatten(), vec![3.0, 0.0, 4.0]);
+        assert!((g.global_norm() - 5.0).abs() < 1e-9);
+        g.scale(0.5);
+        assert!((g.global_norm() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn he_init_is_deterministic_per_stream() {
+        let a = Linear::he(8, 4, 5, 300);
+        let b = Linear::he(8, 4, 5, 300);
+        let c = Linear::he(8, 4, 5, 301);
+        assert_eq!(a.w.data, b.w.data);
+        assert_ne!(a.w.data, c.w.data);
+        assert_eq!((a.din(), a.dout()), (8, 4));
+    }
+}

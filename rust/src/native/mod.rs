@@ -1,10 +1,12 @@
-//! CPU-native training backend: the paper's sketched backward, end to end.
+//! CPU-native training backend: the paper's sketched backward, end to end,
+//! on a composable module API.
 //!
-//! The PJRT path ([`crate::runtime`]) executes AOT-compiled JAX graphs; this
-//! module is the self-contained alternative (DESIGN.md §7): an MLP whose
-//! forward runs on [`crate::tensor::Mat`] and whose backward is written by
-//! hand per layer, so the paper's randomized VJP estimators plug in exactly
-//! where the math says they do —
+//! The PJRT path ([`crate::runtime`]) executes AOT-compiled JAX graphs;
+//! this module is the self-contained alternative (DESIGN.md §7): models are
+//! [`Sequential`] stacks of [`Layer`] modules whose forwards run on
+//! [`crate::tensor::Mat`] and whose backwards are written by hand per
+//! layer, so the paper's randomized VJP estimators plug in exactly where
+//! the math says they do —
 //!
 //! 1. column scores on the output gradient ([`crate::sketch::column_scores`]),
 //! 2. waterfilled keep-probabilities ([`crate::sketch::pstar_from_weights`]),
@@ -17,19 +19,29 @@
 //! while unbiasedness keeps SGD convergent (`tests/native_unbiased.rs`
 //! checks E[ĝ] = g by Monte Carlo).
 //!
-//! Submodules: [`mlp`] (model + manual backward), [`loss`] (cross-entropy /
-//! MSE heads), [`optim`] (SGD, momentum, Adam, gradient clipping),
-//! [`trainer`] (the training loop behind `--backend native`).
+//! Submodules: [`layer`] (the `Layer` trait, `Linear`/`Relu`, the sketched
+//! linear backward), [`conv`] (BagNet-lite patch layers), [`attention`]
+//! (ViT-lite blocks), [`sequential`] (the container + `SketchPolicy`),
+//! [`models`] (the registry of named architectures), [`loss`]
+//! (cross-entropy / MSE heads), [`optim`] (SGD, momentum, Adam, gradient
+//! clipping), [`trainer`] (the training loop behind `--backend native`).
 
+pub mod attention;
+pub mod conv;
+pub mod layer;
 pub mod loss;
-pub mod mlp;
+pub mod models;
 pub mod optim;
+pub mod sequential;
 pub mod trainer;
 
-pub use loss::{accuracy, loss_and_grad, loss_value, LossKind};
-pub use mlp::{
-    sketched_linear_backward, ForwardCache, Grads, Linear, Mlp, SketchSpec,
-    NATIVE_METHODS,
+pub use attention::{Attention, FfnBlock, LayerNorm, PosEmbed};
+pub use conv::{PatchConv, PatchMeanPool, Patchify};
+pub use layer::{
+    affine, exact_linear_backward, sketched_linear_backward, Cache, Grads,
+    Layer, Linear, Relu, SiteSketch, SketchCtx, NATIVE_METHODS,
 };
+pub use loss::{accuracy, loss_and_grad, loss_value, LossKind};
 pub use optim::{clip_global_norm, Optim};
+pub use sequential::{Sequential, SketchPolicy, Tape};
 pub use trainer::NativeTrainer;

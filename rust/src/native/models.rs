@@ -1,0 +1,241 @@
+//! Model registry for the native backend: named builders for the paper's
+//! three architectures (§5), all expressed as [`Sequential`] stacks over
+//! the [`crate::native::Layer`] trait.
+//!
+//! * **mlp** — 784-64-64-10 with ReLU between linears (synth-MNIST);
+//!   every linear is a sketch site. Init streams match the pre-module-API
+//!   `Mlp` struct bit-for-bit.
+//! * **bagnet** — BagNet-lite on synth-CIFAR: non-overlapping 8×8 patch
+//!   convs (lowered to kept-column GEMMs) + bag-of-patches mean pool.
+//! * **vit** — ViT-lite on synth-CIFAR: patch embedding + learned
+//!   positional embedding + one post-LN transformer encoder block
+//!   (residual MHSA and residual FFN sublayers, each followed by
+//!   LayerNorm) + mean pool; the QKV/projection and FFN linears are the
+//!   sketch sites.
+//!
+//! `supports_model` queries ([`is_supported`]) and trainer construction
+//! ([`build`]) both go through [`REGISTRY`] — adding a model here is all
+//! it takes to make it trainable, sweepable and figure-eligible.
+
+use anyhow::{bail, Result};
+
+use super::attention::{Attention, FfnBlock, LayerNorm, PosEmbed};
+use super::conv::{PatchConv, PatchMeanPool, Patchify};
+use super::layer::{Layer, Linear, Relu};
+use super::sequential::Sequential;
+
+/// One registry entry: a named model family the native backend can build.
+pub struct ModelEntry {
+    /// Model name as configs and the CLI spell it.
+    pub name: &'static str,
+    /// Builder: seed → initialized stack.
+    pub build: fn(u64) -> Sequential,
+    /// One-line description for `uavjp methods`.
+    pub about: &'static str,
+}
+
+/// Every model family the native backend implements.
+pub const REGISTRY: &[ModelEntry] = &[
+    ModelEntry {
+        name: "mlp",
+        build: build_mlp,
+        about: "784-64-64-10 ReLU MLP on synth-MNIST (3 sketch sites)",
+    },
+    ModelEntry {
+        name: "bagnet",
+        build: bagnet,
+        about: "BagNet-lite: 8x8 patch convs + mean pool on synth-CIFAR \
+                (3 sketch sites)",
+    },
+    ModelEntry {
+        name: "vit",
+        build: vit,
+        about: "ViT-lite: patch embed + post-LN MHSA/FFN block on \
+                synth-CIFAR (4 sketch sites)",
+    },
+];
+
+/// Whether `name` is a registered native model.
+pub fn is_supported(name: &str) -> bool {
+    REGISTRY.iter().any(|e| e.name == name)
+}
+
+/// Registered model names, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Build a registered model at `seed`.
+pub fn build(name: &str, seed: u64) -> Result<Sequential> {
+    match REGISTRY.iter().find(|e| e.name == name) {
+        Some(e) => Ok((e.build)(seed)),
+        None => bail!(
+            "native backend has no model {name} (registered: {})",
+            names().join(" ")
+        ),
+    }
+}
+
+/// The standard MLP dimensions (`build("mlp", …)` shape).
+pub const MLP_DIMS: &[usize] = &[784, 64, 64, 10];
+
+fn build_mlp(seed: u64) -> Sequential {
+    mlp(MLP_DIMS, seed)
+}
+
+/// He-initialized MLP over explicit `dims` (e.g. `[784, 64, 64, 10]`),
+/// ReLU between linears, none after the last. The i-th linear draws from
+/// stream `300 + i` of `seed ^ 0x1e57` — the exact init the pre-module-API
+/// `Mlp` struct used, keeping trained trajectories bit-identical.
+pub fn mlp(dims: &[usize], seed: u64) -> Sequential {
+    assert!(dims.len() >= 2, "need at least one linear layer");
+    let n = dims.len() - 1;
+    let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(2 * n - 1);
+    for (li, pair) in dims.windows(2).enumerate() {
+        layers.push(Box::new(Linear::he(pair[0], pair[1], seed, 300 + li as u64)));
+        if li + 1 < n {
+            layers.push(Box::new(Relu));
+        }
+    }
+    Sequential::new(layers)
+}
+
+/// BagNet-lite for 32×32×3 synth-CIFAR: two 8×8-patch conv stages and a
+/// bag-of-patches mean-pool head. Sketch sites: both patch convs and the
+/// classifier linear.
+pub fn bagnet(seed: u64) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Patchify::new(32, 32, 3, 8)), // 16 patches of 192
+        Box::new(PatchConv::he(16, 192, 64, seed, 300)),
+        Box::new(Relu),
+        Box::new(PatchConv::he(16, 64, 64, seed, 301)),
+        Box::new(Relu),
+        Box::new(PatchMeanPool { patches: 16, dim: 64 }),
+        Box::new(Linear::he(64, 10, seed, 302)),
+    ])
+}
+
+/// ViT-lite for 32×32×3 synth-CIFAR: 8×8 patch embedding, learned
+/// positional embedding, one post-LN transformer encoder block —
+/// `LN(x + MHSA(x))` then `LN(x + FFN(x))`, both sublayer residuals
+/// internal to [`Attention`] / [`FfnBlock`] — and mean-pool
+/// classification. Sketch sites: the patch embedding, the attention
+/// block (its QKV + output projections), the FFN block (both
+/// projections), and the classifier linear.
+pub fn vit(seed: u64) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Patchify::new(32, 32, 3, 8)), // 16 tokens of 192
+        Box::new(PatchConv::he(16, 192, 64, seed, 300)),
+        Box::new(PosEmbed::new(16, 64, seed, 301)),
+        Box::new(Attention::new(16, 64, 4, seed, 302)), // streams 302..306
+        Box::new(LayerNorm::new(64)),
+        Box::new(FfnBlock::he(64, 128, seed, 306)), // streams 306..308
+        Box::new(LayerNorm::new(64)),
+        Box::new(PatchMeanPool { patches: 16, dim: 64 }),
+        Box::new(Linear::he(64, 10, seed, 308)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn registry_answers_support_queries() {
+        assert!(is_supported("mlp"));
+        assert!(is_supported("bagnet"));
+        assert!(is_supported("vit"));
+        assert!(!is_supported("resnet"));
+        assert_eq!(names(), vec!["mlp", "bagnet", "vit"]);
+        assert!(build("resnet", 0).is_err());
+    }
+
+    #[test]
+    fn mlp_forward_shapes() {
+        let m = mlp(&[5, 4, 3], 0);
+        let mut rng = Pcg64::new(1, 0);
+        let x = Mat::from_fn(7, 5, |_, _| rng.gaussian() as f32);
+        let tape = m.forward(&x);
+        assert_eq!(tape.caches.len(), 3);
+        assert_eq!((tape.output.rows, tape.output.cols), (7, 3));
+        assert_eq!(m.num_params(), 5 * 4 + 4 + 4 * 3 + 3);
+    }
+
+    #[test]
+    fn mlp_relu_applied_between_but_not_after() {
+        let m = mlp(&[3, 4, 8], 1);
+        let mut rng = Pcg64::new(2, 0);
+        let x = Mat::from_fn(16, 3, |_, _| rng.gaussian() as f32);
+        let tape = m.forward(&x);
+        // relu output feeds the cache of the last linear
+        assert!(tape.caches[2].mats[0].data.iter().all(|&v| v >= 0.0));
+        assert!(tape.output.data.iter().any(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn mlp_init_matches_legacy_streams() {
+        // the pre-module-API Mlp drew layer i from Pcg64(seed ^ 0x1e57,
+        // 300 + i) with std sqrt(2/din); a regression here would silently
+        // break trained-trajectory parity with PR-1 artifacts
+        let m = mlp(&[4, 3, 2], 9);
+        let mut rng = Pcg64::new(9 ^ 0x1e57, 300);
+        let std = (2.0f64 / 4.0).sqrt();
+        let expect = (rng.gaussian() * std) as f32;
+        assert_eq!(m.layers[0].params()[0][0], expect);
+    }
+
+    #[test]
+    fn bagnet_and_vit_forward_shapes_and_sites() {
+        let mut rng = Pcg64::new(3, 0);
+        let x = Mat::from_fn(2, 3072, |_, _| rng.gaussian() as f32);
+        let b = bagnet(0);
+        let tb = b.forward(&x);
+        assert_eq!((tb.output.rows, tb.output.cols), (2, 10));
+        assert_eq!(b.num_sites(), 3);
+        let v = vit(0);
+        let tv = v.forward(&x);
+        assert_eq!((tv.output.rows, tv.output.cols), (2, 10));
+        assert_eq!(v.num_sites(), 4);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        use crate::native::loss::{loss_and_grad, loss_value, LossKind};
+        use crate::native::SketchPolicy;
+        let m = mlp(&[4, 5, 3], 3);
+        let mut rng = Pcg64::new(4, 0);
+        let x = Mat::from_fn(6, 4, |_, _| rng.gaussian() as f32);
+        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let tape = m.forward(&x);
+        let (_, dlogits) =
+            loss_and_grad(LossKind::CrossEntropy, &tape.output, &y);
+        let plan = m.plan(&SketchPolicy::exact()).unwrap();
+        let grads = m.backward(&tape, &dlogits, &plan, &mut rng);
+        // finite-difference a few weight coordinates of each linear
+        let eps = 1e-3f32;
+        let mut m2 = mlp(&[4, 5, 3], 3);
+        let loss_of = |m2: &Sequential, x: &Mat, y: &[i32]| {
+            loss_value(LossKind::CrossEntropy, &m2.forward(x).output, y)
+        };
+        for (slot_w, li) in [(0usize, 0usize), (2, 2)] {
+            for &idx in &[0usize, 3, 7] {
+                let orig = m2.layers[li].params()[0][idx];
+                m2.layers[li].params_mut()[0][idx] = orig + eps;
+                let lp = loss_of(&m2, &x, &y);
+                m2.layers[li].params_mut()[0][idx] = orig - eps;
+                let lm = loss_of(&m2, &x, &y);
+                m2.layers[li].params_mut()[0][idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                let an = grads.slots[slot_w][idx] as f64;
+                // loose bar: f32 forward + ReLU kinks make FD noisy, but a
+                // transposed/missing term would be off by O(|fd|)
+                assert!(
+                    (fd - an).abs() < 1e-2 * (1.0 + fd.abs()),
+                    "slot {slot_w} idx {idx}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! Optimizers for the native trainer: SGD (± momentum) and Adam, plus
 //! global-norm gradient clipping — the recipes of §5 / Appendix B.2.
 
-use super::mlp::Grads;
+use super::layer::Grads;
 
 /// First-order optimizer with per-slot state (slot = one parameter tensor;
 /// the trainer uses `2·layer` for weights and `2·layer + 1` for biases).
@@ -140,7 +140,6 @@ pub fn clip_global_norm(grads: &mut Grads, max_norm: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::Mat;
 
     #[test]
     fn sgd_step_is_lr_times_grad() {
@@ -191,10 +190,7 @@ mod tests {
 
     #[test]
     fn clip_caps_norm() {
-        let mut g = Grads {
-            dw: vec![Mat::from_rows(vec![vec![3.0, 4.0]])],
-            db: vec![vec![0.0]],
-        };
+        let mut g = Grads { slots: vec![vec![3.0, 4.0], vec![0.0]] };
         let pre = clip_global_norm(&mut g, 1.0);
         assert!((pre - 5.0).abs() < 1e-9);
         assert!((g.global_norm() - 1.0).abs() < 1e-6);

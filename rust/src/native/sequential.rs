@@ -1,0 +1,352 @@
+//! [`Sequential`]: the container that owns the layer stack and the tape,
+//! and [`SketchPolicy`]: the per-layer sketch configuration that replaces
+//! the old single global `SketchSpec`.
+//!
+//! The container drives the forward sweep (recording one [`Cache`] per
+//! layer into a [`Tape`]), the reverse sweep (handing each layer its
+//! resolved sketch decision through a [`SketchCtx`]), and the flat
+//! parameter registry (global slot order = layer order × tensor order)
+//! that optimizers, gradient clipping and the variance probes share.
+//!
+//! Sketch *sites* are the layers reporting [`Layer::sketchable`], numbered
+//! in forward order; [`SketchPolicy::resolve`] maps the config's
+//! `location` mask (`all|first|last|none`) and optional per-depth budget
+//! schedule onto those sites. Exact sites consume no gate randomness, so
+//! a `location="none"` run is bit-identical to the baseline.
+
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+use anyhow::{bail, Result};
+
+use super::layer::{Cache, Grads, Layer, SiteSketch, SketchCtx, NATIVE_METHODS};
+use super::optim::Optim;
+
+/// Per-layer sketch configuration: one method, a default budget, the
+/// `location` site mask, and an optional per-site budget schedule (the
+/// Fig. 3-style depth sweeps).
+#[derive(Clone, Debug)]
+pub struct SketchPolicy {
+    /// One of [`NATIVE_METHODS`]; `"baseline"` means exact everywhere.
+    pub method: String,
+    /// Default kept-column budget p ∈ (0, 1] for every gated site.
+    pub budget: f64,
+    /// Which sites are gated: `"all" | "first" | "last" | "none"`.
+    pub location: String,
+    /// Optional per-site budgets (forward order); when set, its length
+    /// must equal the model's site count and it overrides `budget`.
+    pub schedule: Option<Vec<f64>>,
+}
+
+impl SketchPolicy {
+    /// The exact-backward policy.
+    pub fn exact() -> SketchPolicy {
+        SketchPolicy {
+            method: "baseline".into(),
+            budget: 1.0,
+            location: "none".into(),
+            schedule: None,
+        }
+    }
+
+    /// Policy from a run config (`method` / `budget` / `location` /
+    /// `budget_schedule` fields).
+    pub fn from_config(cfg: &crate::config::TrainConfig) -> SketchPolicy {
+        SketchPolicy {
+            method: cfg.method.clone(),
+            budget: cfg.budget,
+            location: cfg.location.clone(),
+            schedule: if cfg.budget_schedule.is_empty() {
+                None
+            } else {
+                Some(cfg.budget_schedule.clone())
+            },
+        }
+    }
+
+    /// True when no sketching happens regardless of the site mask.
+    pub fn is_exact(&self) -> bool {
+        self.method == "baseline"
+    }
+
+    /// Per-site gate mask from a `location` string over `n` sites.
+    pub fn site_mask(location: &str, n: usize) -> Result<Vec<bool>> {
+        let mut m = vec![false; n];
+        match location {
+            "all" => m.iter_mut().for_each(|v| *v = true),
+            "first" | "last" if n == 0 => {
+                bail!("location {location} needs at least one sketchable layer")
+            }
+            "first" => m[0] = true,
+            "last" => m[n - 1] = true,
+            "none" => {}
+            other => bail!(
+                "unknown sketch location {other} (want all|first|last|none)"
+            ),
+        }
+        Ok(m)
+    }
+
+    /// Resolve into one decision per site (forward order): `None` for
+    /// exact sites, the method + per-site budget otherwise.
+    pub fn resolve(&self, n_sites: usize) -> Result<Vec<Option<SiteSketch>>> {
+        if !NATIVE_METHODS.contains(&self.method.as_str()) {
+            bail!(
+                "native backend does not implement method {} (supported: {})",
+                self.method,
+                NATIVE_METHODS.join(" ")
+            );
+        }
+        let mask = Self::site_mask(&self.location, n_sites)?;
+        if let Some(s) = &self.schedule {
+            if s.len() != n_sites {
+                bail!(
+                    "budget schedule has {} entries but the model has {} \
+                     sketchable layers",
+                    s.len(),
+                    n_sites
+                );
+            }
+        }
+        Ok((0..n_sites)
+            .map(|i| {
+                if !mask[i] || self.is_exact() {
+                    return None;
+                }
+                let budget =
+                    self.schedule.as_ref().map_or(self.budget, |s| s[i]);
+                Some(SiteSketch { method: self.method.clone(), budget })
+            })
+            .collect())
+    }
+}
+
+/// The forward tape: one cache per layer plus the stack output.
+pub struct Tape {
+    /// `caches[i]` is what layer `i` recorded for its backward.
+    pub caches: Vec<Cache>,
+    /// Output of the last layer (the logits for a classifier stack).
+    pub output: Mat,
+}
+
+/// A stack of [`Layer`]s applied in order; owns the tape and the flat
+/// parameter registry.
+pub struct Sequential {
+    /// The layers, input to output.
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    /// Wrap an ordered layer stack.
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Sequential {
+        assert!(!layers.is_empty(), "need at least one layer");
+        Sequential { layers }
+    }
+
+    /// Number of layers.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Indices of the sketchable layers, forward order.
+    pub fn sketch_sites(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.sketchable())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of sketch sites.
+    pub fn num_sites(&self) -> usize {
+        self.layers.iter().filter(|l| l.sketchable()).count()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    /// Number of parameter tensors (the optimizer slot count).
+    pub fn num_slots(&self) -> usize {
+        self.layers.iter().map(|l| l.params().len()).sum()
+    }
+
+    /// Resolve a policy into one decision per *layer* (`None` everywhere
+    /// except gated sketch sites).
+    pub fn plan(&self, policy: &SketchPolicy) -> Result<Vec<Option<SiteSketch>>> {
+        let sites = self.sketch_sites();
+        let per_site = policy.resolve(sites.len())?;
+        let mut plan: Vec<Option<SiteSketch>> = vec![None; self.layers.len()];
+        for (site, layer_idx) in sites.into_iter().enumerate() {
+            plan[layer_idx] = per_site[site].clone();
+        }
+        Ok(plan)
+    }
+
+    /// Forward sweep, recording every layer's cache.
+    pub fn forward(&self, x: &Mat) -> Tape {
+        let mut caches = Vec::with_capacity(self.layers.len());
+        let mut h: Option<Mat> = None;
+        for layer in &self.layers {
+            let (y, c) = layer.forward(h.as_ref().unwrap_or(x));
+            caches.push(c);
+            h = Some(y);
+        }
+        Tape { caches, output: h.expect("stack is never empty") }
+    }
+
+    /// Reverse sweep from the loss gradient `dout`, under a per-layer
+    /// `plan` from [`Sequential::plan`]. Exact layers consume no
+    /// randomness from `rng`.
+    pub fn backward(
+        &self,
+        tape: &Tape,
+        dout: &Mat,
+        plan: &[Option<SiteSketch>],
+        rng: &mut Pcg64,
+    ) -> Grads {
+        let n = self.layers.len();
+        assert_eq!(plan.len(), n, "plan length");
+        let mut per_layer: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n);
+        per_layer.resize_with(n, Vec::new);
+        let mut g = dout.clone();
+        for i in (0..n).rev() {
+            let need_gx = i > 0;
+            let mut ctx =
+                SketchCtx { sketch: plan[i].as_ref(), rng: &mut *rng };
+            let (gx, pg) =
+                self.layers[i].backward(&g, &tape.caches[i], &mut ctx, need_gx);
+            per_layer[i] = pg;
+            if let Some(gx) = gx {
+                g = gx;
+            }
+        }
+        let mut slots = Vec::with_capacity(self.num_slots());
+        for pg in per_layer {
+            slots.extend(pg);
+        }
+        Grads { slots }
+    }
+
+    /// One optimizer update over every parameter tensor, global slot order.
+    pub fn apply_grads(&mut self, opt: &mut Optim, grads: &Grads, lr: f64) {
+        let mut slot = 0;
+        for layer in &mut self.layers {
+            for p in layer.params_mut() {
+                opt.update(slot, p, &grads.slots[slot], lr);
+                slot += 1;
+            }
+        }
+        debug_assert_eq!(slot, grads.slots.len(), "grad slot count");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::models;
+
+    #[test]
+    fn policy_masks_resolve_per_site() {
+        let m = SketchPolicy::site_mask("all", 3).unwrap();
+        assert_eq!(m, vec![true, true, true]);
+        assert_eq!(
+            SketchPolicy::site_mask("first", 3).unwrap(),
+            vec![true, false, false]
+        );
+        assert_eq!(
+            SketchPolicy::site_mask("last", 3).unwrap(),
+            vec![false, false, true]
+        );
+        assert_eq!(
+            SketchPolicy::site_mask("none", 2).unwrap(),
+            vec![false, false]
+        );
+        assert!(SketchPolicy::site_mask("middle", 3).is_err());
+        assert!(SketchPolicy::site_mask("first", 0).is_err());
+    }
+
+    #[test]
+    fn policy_resolves_budget_schedule() {
+        let p = SketchPolicy {
+            method: "l1".into(),
+            budget: 0.5,
+            location: "all".into(),
+            schedule: Some(vec![0.5, 0.25, 0.1]),
+        };
+        let r = p.resolve(3).unwrap();
+        assert_eq!(r[0].as_ref().unwrap().budget, 0.5);
+        assert_eq!(r[1].as_ref().unwrap().budget, 0.25);
+        assert_eq!(r[2].as_ref().unwrap().budget, 0.1);
+        // wrong length errors with both counts in the message
+        let bad = SketchPolicy { schedule: Some(vec![0.5]), ..p.clone() };
+        let err = format!("{}", bad.resolve(3).unwrap_err());
+        assert!(err.contains("1 entries") && err.contains('3'), "{err}");
+    }
+
+    #[test]
+    fn baseline_and_masked_sites_resolve_to_exact() {
+        let p = SketchPolicy::exact();
+        assert!(p.resolve(3).unwrap().iter().all(|s| s.is_none()));
+        let p = SketchPolicy {
+            method: "l1".into(),
+            budget: 0.2,
+            location: "last".into(),
+            schedule: None,
+        };
+        let r = p.resolve(3).unwrap();
+        assert!(r[0].is_none() && r[1].is_none());
+        assert_eq!(r[2].as_ref().unwrap().method, "l1");
+    }
+
+    #[test]
+    fn unknown_method_is_rejected() {
+        let p = SketchPolicy {
+            method: "rcs".into(),
+            budget: 0.2,
+            location: "all".into(),
+            schedule: None,
+        };
+        assert!(p.resolve(2).is_err());
+    }
+
+    #[test]
+    fn mlp_stack_counts_sites_and_slots() {
+        let m = models::mlp(&[5, 4, 3], 0);
+        assert_eq!(m.num_layers(), 3); // lin relu lin (relu only between)
+        assert_eq!(m.sketch_sites(), vec![0, 2]);
+        assert_eq!(m.num_sites(), 2);
+        assert_eq!(m.num_slots(), 4);
+        assert_eq!(m.num_params(), 5 * 4 + 4 + 4 * 3 + 3);
+    }
+
+    #[test]
+    fn masked_off_layers_consume_no_rng() {
+        use crate::native::loss::{loss_and_grad, LossKind};
+        use crate::rng::Pcg64;
+        use crate::tensor::Mat;
+        let m = models::mlp(&[4, 6, 3], 5);
+        let mut rng = Pcg64::new(6, 0);
+        let x = Mat::from_fn(5, 4, |_, _| rng.gaussian() as f32);
+        let y = vec![0i32, 1, 2, 0, 1];
+        let tape = m.forward(&x);
+        let (_, dl) = loss_and_grad(LossKind::CrossEntropy, &tape.output, &y);
+        let masked = SketchPolicy {
+            method: "l1".into(),
+            budget: 0.3,
+            location: "none".into(),
+            schedule: None,
+        };
+        let mut r1 = Pcg64::new(77, 0);
+        let g1 = m.backward(&tape, &dl, &m.plan(&masked).unwrap(), &mut r1);
+        let mut r2 = Pcg64::new(77, 0);
+        let g2 =
+            m.backward(&tape, &dl, &m.plan(&SketchPolicy::exact()).unwrap(), &mut r2);
+        for (a, b) in g1.slots[0].iter().zip(&g2.slots[0]) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // and the rng stream was untouched by the masked run
+        assert_eq!(r1.next_u64(), Pcg64::new(77, 0).next_u64());
+    }
+}

@@ -1,66 +1,59 @@
 //! The native training loop: same protocol as the PJRT trainer
 //! ([`crate::coordinator::trainer`]) — same datasets, batch order, LR
 //! schedule and curve format — but every step runs on [`crate::tensor`]
-//! kernels, so it needs no AOT artifacts and the sketched backward's FLOP
-//! saving is real wall-clock.
+//! kernels through the [`Sequential`] module API, so it needs no AOT
+//! artifacts and the sketched backward's FLOP saving is real wall-clock.
+//! All registered models ([`crate::native::models`]) train here: MLP,
+//! BagNet-lite and ViT-lite.
 
 use crate::config::TrainConfig;
-use crate::coordinator::trainer::layer_mask;
 use crate::data::{self, BatchIter, Dataset, DatasetKind};
 use crate::metrics::RunCurve;
 use crate::rng::Pcg64;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
 
+use super::layer::SiteSketch;
 use super::loss::{accuracy, loss_and_grad, loss_value, LossKind};
-use super::mlp::{Mlp, SketchSpec, NATIVE_METHODS};
+use super::models;
 use super::optim::{clip_global_norm, Optim};
+use super::sequential::{Sequential, SketchPolicy};
 
-/// Layer widths for a named model (native backend supports the MLP; BagNet /
-/// ViT stay PJRT-only until their native blocks land).
-pub fn model_dims(model: &str) -> Result<Vec<usize>> {
-    match model {
-        "mlp" => Ok(vec![784, 64, 64, 10]),
-        other => bail!(
-            "native backend has no model {other} (supported: mlp; use --backend pjrt for vit/bagnet)"
-        ),
-    }
-}
+/// Max global gradient norm for every native recipe (§B.2: clip 1.0;
+/// ≤ 0 disables).
+pub const CLIP_NORM: f64 = 1.0;
 
-/// Max gradient norm for the MLP recipe (§B.2: clip 1.0; ≤ 0 disables).
-pub const MLP_CLIP_NORM: f64 = 1.0;
-
-/// CPU-native trainer over [`Mlp`].
+/// CPU-native trainer over a [`Sequential`] model stack.
 pub struct NativeTrainer {
-    /// The run configuration (steps, LR schedule, sketch method/budget, …).
+    /// The run configuration (steps, LR schedule, sketch policy, …).
     pub cfg: TrainConfig,
-    model: Mlp,
+    model: Sequential,
+    plan: Vec<Option<SiteSketch>>,
     opt: Optim,
     loss: LossKind,
-    spec: SketchSpec,
-    mask: Vec<f32>,
+    data_kind: DatasetKind,
     sk_rng: Pcg64,
 }
 
 impl NativeTrainer {
-    /// Build a trainer for `cfg.model`'s standard dimensions.
+    /// Build a trainer for `cfg.model` from the model registry.
     pub fn new(cfg: TrainConfig) -> Result<NativeTrainer> {
-        let dims = model_dims(&cfg.model)?;
-        NativeTrainer::with_dims(cfg, &dims)
+        let model = models::build(&cfg.model, cfg.seed)?;
+        NativeTrainer::with_model(cfg, model)
     }
 
-    /// Build a trainer over explicit layer widths (tests shrink the net).
-    pub fn with_dims(mut cfg: TrainConfig, dims: &[usize]) -> Result<NativeTrainer> {
+    /// Build a trainer over an MLP with explicit layer widths (tests
+    /// shrink the net).
+    pub fn with_dims(cfg: TrainConfig, dims: &[usize]) -> Result<NativeTrainer> {
+        let model = models::mlp(dims, cfg.seed);
+        NativeTrainer::with_model(cfg, model)
+    }
+
+    /// Build a trainer over an explicit model stack.
+    pub fn with_model(mut cfg: TrainConfig, model: Sequential) -> Result<NativeTrainer> {
         if cfg.eval_every == 0 {
             // avoid a remainder-by-zero in the step loop; "never" → run end
             cfg.eval_every = cfg.steps.max(1);
-        }
-        if !NATIVE_METHODS.contains(&cfg.method.as_str()) {
-            bail!(
-                "native backend does not implement method {} (supported: {})",
-                cfg.method,
-                NATIVE_METHODS.join(" ")
-            );
         }
         if cfg.batch == 0 || cfg.train_size < cfg.batch {
             bail!(
@@ -69,13 +62,12 @@ impl NativeTrainer {
                 cfg.batch
             );
         }
-        let model = Mlp::new(dims, cfg.seed);
+        let plan = model.plan(&SketchPolicy::from_config(&cfg))?;
         let opt = Optim::parse(&cfg.optimizer)?;
         let loss = LossKind::parse(&cfg.loss)?;
-        let mask = layer_mask(&cfg.location, model.num_layers());
-        let spec = SketchSpec { method: cfg.method.clone(), budget: cfg.budget };
+        let data_kind = DatasetKind::for_model(&cfg.model)?;
         let sk_rng = Pcg64::new(cfg.seed ^ 0x9e3779b9, 11);
-        Ok(NativeTrainer { cfg, model, opt, loss, spec, mask, sk_rng })
+        Ok(NativeTrainer { cfg, model, plan, opt, loss, data_kind, sk_rng })
     }
 
     /// Batch size of this run.
@@ -83,8 +75,8 @@ impl NativeTrainer {
         self.cfg.batch
     }
 
-    /// The model (e.g. for benches driving steps manually).
-    pub fn model(&self) -> &Mlp {
+    /// The model stack (e.g. for benches driving steps manually).
+    pub fn model(&self) -> &Sequential {
         &self.model
     }
 
@@ -92,29 +84,20 @@ impl NativeTrainer {
     /// trainer: contents share a fixed generator seed so method comparisons
     /// are paired; batch order varies with `cfg.seed`.
     pub fn datasets(&self) -> (Dataset, Dataset) {
-        let kind = DatasetKind::for_model(&self.cfg.model);
-        let train = data::generate(kind, self.cfg.train_size, 1234, "train");
-        let test = data::generate(kind, self.cfg.test_size, 1234, "test");
+        let train = data::generate(self.data_kind, self.cfg.train_size, 1234, "train");
+        let test = data::generate(self.data_kind, self.cfg.test_size, 1234, "test");
         (train, test)
     }
 
     /// One optimizer step on a batch; returns the training loss.
     pub fn step(&mut self, x: &Mat, y: &[i32], step: usize) -> f64 {
-        let cache = self.model.forward(x);
-        let (loss, dlogits) = loss_and_grad(self.loss, cache.logits(), y);
-        let mut grads = self.model.backward(
-            &cache,
-            &dlogits,
-            &self.spec,
-            &self.mask,
-            &mut self.sk_rng,
-        );
-        clip_global_norm(&mut grads, MLP_CLIP_NORM);
+        let tape = self.model.forward(x);
+        let (loss, dlogits) = loss_and_grad(self.loss, &tape.output, y);
+        let mut grads =
+            self.model.backward(&tape, &dlogits, &self.plan, &mut self.sk_rng);
+        clip_global_norm(&mut grads, CLIP_NORM);
         let lr = self.cfg.lr_at(step);
-        for (i, layer) in self.model.layers.iter_mut().enumerate() {
-            self.opt.update(2 * i, &mut layer.w.data, &grads.dw[i].data, lr);
-            self.opt.update(2 * i + 1, &mut layer.b, &grads.db[i], lr);
-        }
+        self.model.apply_grads(&mut self.opt, &grads, lr);
         loss
     }
 
@@ -135,9 +118,9 @@ impl NativeTrainer {
                 data: test.x[b * batch * dim..(b + 1) * batch * dim].to_vec(),
             };
             let y = &test.y[b * batch..(b + 1) * batch];
-            let cache = self.model.forward(&x);
-            loss_sum += loss_value(self.loss, cache.logits(), y) * batch as f64;
-            correct += accuracy(cache.logits(), y) * batch as f64;
+            let tape = self.model.forward(&x);
+            loss_sum += loss_value(self.loss, &tape.output, y) * batch as f64;
+            correct += accuracy(&tape.output, y) * batch as f64;
         }
         let seen = (nb * batch) as f64;
         Ok((loss_sum / seen, correct / seen))
@@ -193,7 +176,7 @@ mod tests {
     use crate::config::Preset;
 
     fn tiny_cfg(method: &str, budget: f64) -> TrainConfig {
-        let mut cfg = Preset::Smoke.base("mlp");
+        let mut cfg = Preset::Smoke.base("mlp").unwrap();
         cfg.method = method.into();
         cfg.budget = budget;
         cfg.train_size = 256;
@@ -209,8 +192,27 @@ mod tests {
         let mut cfg = tiny_cfg("rcs", 0.2);
         assert!(NativeTrainer::new(cfg.clone()).is_err());
         cfg.method = "l1".into();
-        cfg.model = "vit".into();
+        cfg.model = "resnet".into();
         assert!(NativeTrainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_location_and_schedule() {
+        let mut cfg = tiny_cfg("l1", 0.2);
+        cfg.location = "middle".into();
+        assert!(NativeTrainer::new(cfg).is_err());
+        let mut cfg = tiny_cfg("l1", 0.2);
+        cfg.budget_schedule = vec![0.5, 0.1]; // mlp has 3 sites
+        assert!(NativeTrainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn budget_schedule_trains_when_sized_right() {
+        let mut cfg = tiny_cfg("l1", 0.2);
+        cfg.budget_schedule = vec![0.5, 0.25, 0.1];
+        let mut t = NativeTrainer::new(cfg).unwrap();
+        let curve = t.run().unwrap();
+        assert!(curve.tail_loss(6).unwrap() < curve.losses[0]);
     }
 
     #[test]

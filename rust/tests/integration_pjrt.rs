@@ -128,7 +128,7 @@ fn micro_sketch_bwd_matches_native_tensor_math() {
 #[test]
 fn training_reduces_loss_mlp_l1() {
     let Some(rt) = runtime() else { return };
-    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp").unwrap();
     cfg.method = "l1".into();
     cfg.budget = 0.2;
     cfg.steps = 60;
@@ -146,7 +146,7 @@ fn disabled_sketch_matches_baseline_trajectory() {
     // location="none" must make any sketched artifact numerically follow
     // the baseline artifact exactly (same seed ⇒ same batches ⇒ same loss).
     let Some(rt) = runtime() else { return };
-    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp").unwrap();
     cfg.steps = 12;
     cfg.eval_every = 12;
     cfg.method = "per_column".into();
@@ -166,7 +166,7 @@ fn disabled_sketch_matches_baseline_trajectory() {
 #[test]
 fn determinism_same_seed_same_curve() {
     let Some(rt) = runtime() else { return };
-    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp").unwrap();
     cfg.method = "l1".into();
     cfg.budget = 0.2;
     cfg.steps = 10;
@@ -179,12 +179,12 @@ fn determinism_same_seed_same_curve() {
 #[test]
 fn eval_artifact_counts_correctly() {
     let Some(rt) = runtime() else { return };
-    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp").unwrap();
     cfg.method = "baseline".into();
     cfg.test_size = 256;
     let trainer = Trainer::new(&rt, cfg).unwrap();
     let state = trainer.init_state().unwrap();
-    let (_, test) = trainer.datasets();
+    let (_, test) = trainer.datasets().unwrap();
     let (loss, acc) = trainer.evaluate(&state, &test).unwrap();
     // fresh random init on 10 classes: acc near chance, loss near ln(10)
     assert!(acc < 0.35, "untrained acc suspicious: {acc}");
@@ -195,7 +195,7 @@ fn eval_artifact_counts_correctly() {
 fn fig4_layer_masks_affect_only_selected_layers() {
     let Some(rt) = runtime() else { return };
     // first-layer-only sketching must differ from all-layer sketching
-    let mut cfg: TrainConfig = Preset::Smoke.base("mlp");
+    let mut cfg: TrainConfig = Preset::Smoke.base("mlp").unwrap();
     cfg.method = "per_column".into();
     cfg.budget = 0.05;
     cfg.steps = 15;
@@ -205,7 +205,7 @@ fn fig4_layer_masks_affect_only_selected_layers() {
     cfg.location = "all".into();
     let all = Trainer::new(&rt, cfg).unwrap().run().unwrap();
     assert_ne!(first.losses, all.losses);
-    let _ = layer_mask("first", 3);
+    let _ = layer_mask("first", 3).unwrap();
 }
 
 #[test]

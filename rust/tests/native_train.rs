@@ -10,7 +10,7 @@ use uavjp::coordinator::TrainBackend;
 use uavjp::native::NativeTrainer;
 
 fn parity_cfg(method: &str, budget: f64) -> TrainConfig {
-    let mut cfg = Preset::Smoke.base("mlp");
+    let mut cfg = Preset::Smoke.base("mlp").unwrap();
     cfg.method = method.into();
     cfg.budget = budget;
     cfg.location = if method == "baseline" { "none".into() } else { "all".into() };
@@ -85,7 +85,10 @@ fn backend_method_and_model_support_split() {
     assert!(be.supports_method("per_column"));
     assert!(!be.supports_method("rcs"));
     assert!(!be.supports_method("per_element"));
+    // the model registry now answers support queries: all three paper
+    // architectures train natively
     assert!(be.supports_model("mlp"));
-    assert!(!be.supports_model("bagnet"));
-    assert!(!be.supports_model("vit"));
+    assert!(be.supports_model("bagnet"));
+    assert!(be.supports_model("vit"));
+    assert!(!be.supports_model("resnet"));
 }
