@@ -5,6 +5,12 @@ Monte-Carlo unbiasedness of the sketched PatchConv backward, and the
 BagNet-lite / ViT-lite convergence bars used by rust/tests.
 
 Companion to native_sim.py (PR 1), which covers the MLP path.
+
+Note: the rust side has since moved to a destination-passing kernel API
+(layers write into workspace buffers instead of returning matrices —
+DESIGN.md §7.2). The math, the per-element accumulation orders and the
+gate-RNG call order are unchanged, so this simulator's numerics remain a
+valid oracle for the rust assertions.
 """
 import math
 import sys

@@ -2,6 +2,11 @@
 //! median-of-N timing with warmup; `harness = false`).
 //!
 //! Sections map to the paper's evaluation (DESIGN.md §4):
+//!   gemm_scaling   — the view-kernel matrix: dense gemm_into vs the old
+//!                    naive value-returning matmul across sizes × thread
+//!                    counts, and the kept-column kernels across budgets ×
+//!                    thread counts on the same shapes (kernel-vs-kernel,
+//!                    the honest Eq-6 baseline)
 //!   native_bwd     — exact vs sketched layer backward (scores + waterfilling
 //!                    + sampling + kept-column GEMMs) across budgets and
 //!                    widths: the ρ(V) wall-clock of Eq 6 on real kernels
@@ -14,19 +19,25 @@
 //!   pipeline       — simulated pipeline step time vs budget (Fig §1(i))
 //!   substrates     — pstar / correlated sampling / JSON parse throughput
 //!
-//! Run all:  cargo bench    Filter:  cargo bench -- native_bwd
+//! Run all:  cargo bench    Filter:  cargo bench -- gemm_scaling
 //! Machine-readable medians:  cargo bench -- --json results/BENCH_native.json
-//! (writes {group, case, median_ms} records for the perf trajectory).
+//! (writes {group, case, median_ms} records for the perf trajectory; CI
+//! uploads the file as a workflow artifact).
 
 use std::time::Instant;
 
 use uavjp::config::{Preset, TrainConfig};
 use uavjp::json::Value;
-use uavjp::native::{sketched_linear_backward, NativeTrainer};
+use uavjp::native::{sketched_linear_backward_into, NativeTrainer};
 use uavjp::pipeline::{simulate, PipelineConfig};
+use uavjp::pool;
 use uavjp::rng::Pcg64;
-use uavjp::sketch::{correlated_bernoulli, kept_columns, pstar_from_weights};
-use uavjp::tensor::{dense_backward, sparse_dw, sparse_dx, Mat};
+use uavjp::sketch::{
+    correlated_bernoulli, kept_columns, pstar_from_weights, SketchScratch,
+};
+use uavjp::tensor::{
+    gemm_into, matmul_pr2_reference, sparse_dw_into, sparse_dx_into, Mat,
+};
 
 fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     // warmup
@@ -70,9 +81,105 @@ impl Report {
     }
 }
 
+/// The dense exact backward on preallocated buffers (dX = G·W, dW = Gᵀ·X)
+/// — the baseline every sketched case races.
+fn dense_backward_into(g: &Mat, x: &Mat, w: &Mat, dx: &mut Mat, dw: &mut Mat) {
+    gemm_into(1.0, g.view(), false, w.view(), false, 0.0, dx.view_mut());
+    gemm_into(1.0, g.view(), true, x.view(), false, 0.0, dw.view_mut());
+}
+
+/// The view-kernel scaling matrix: dense `gemm_into` vs the old naive
+/// matmul across size × threads, then the kept-column backward kernels
+/// across budget × threads on the paper's 512-wide backward shapes.
+fn bench_gemm_scaling(filter: &str, rep: &mut Report) {
+    if !"gemm_scaling".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== gemm_scaling (gemm_into vs old matmul: size × threads × budget) ==");
+    for n in [128usize, 256, 512] {
+        let mut rng = Pcg64::new(3, n as u64);
+        let a = Mat::from_fn(n, n, |_, _| rng.gaussian() as f32);
+        let b = Mat::from_fn(n, n, |_, _| rng.gaussian() as f32);
+        let reps = if n >= 512 { 5 } else { 9 };
+        let naive = time_median(reps, || {
+            let _ = matmul_pr2_reference(&a, &b);
+        });
+        println!("  n={n:<5} old matmul:      {:8.2} ms", naive * 1e3);
+        rep.rec("gemm_scaling", format!("n{n}_naive"), naive);
+        let mut c = Mat::zeros(n, n);
+        // only record t>1 cases that really engage the threaded path —
+        // below the cut-off gemm_into runs single-threaded regardless,
+        // and a t2/t4 label on it would misrepresent the scaling data
+        let threaded = n * n * n >= uavjp::tensor::GEMM_PAR_MIN_FLOPS;
+        for threads in [1usize, 2, 4] {
+            if threads > 1 && !threaded {
+                continue;
+            }
+            pool::set_threads(threads);
+            let t = time_median(reps, || {
+                gemm_into(1.0, a.view(), false, b.view(), false, 0.0, c.view_mut());
+            });
+            println!(
+                "  n={n:<5} gemm_into t={threads}:   {:8.2} ms  (vs old {:.2}x)",
+                t * 1e3,
+                naive / t
+            );
+            rep.rec("gemm_scaling", format!("n{n}_t{threads}"), t);
+        }
+        pool::set_threads(1);
+    }
+    // kept-column kernels vs the dense exact backward, budget × threads
+    let (bsz, dout, din) = (128usize, 512usize, 512usize);
+    let mut rng = Pcg64::new(7, 0);
+    let g = Mat::from_fn(bsz, dout, |_, _| rng.gaussian() as f32);
+    let x = Mat::from_fn(bsz, din, |_, _| rng.gaussian() as f32);
+    let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
+    let mut dx = Mat::zeros(bsz, din);
+    let mut dw = Mat::zeros(dout, din);
+    for threads in [1usize, 2, 4] {
+        pool::set_threads(threads);
+        let dense = time_median(5, || {
+            dense_backward_into(&g, &x, &w, &mut dx, &mut dw);
+        });
+        println!(
+            "  bwd B={bsz} {dout}x{din} dense t={threads}: {:8.2} ms",
+            dense * 1e3
+        );
+        rep.rec("gemm_scaling", format!("bwd512_dense_t{threads}"), dense);
+        for budget in [0.1, 0.25, 0.5] {
+            let scores = uavjp::sketch::column_scores("l1", &g, None);
+            let p = pstar_from_weights(&scores, budget * dout as f64);
+            let z = correlated_bernoulli(&mut rng, &p);
+            let kept = kept_columns(&z, &p);
+            // skip t>1 labels for cases the threshold keeps single-threaded
+            if threads > 1
+                && bsz * din * kept.len() < uavjp::tensor::GEMM_PAR_MIN_FLOPS
+            {
+                continue;
+            }
+            let t = time_median(5, || {
+                sparse_dx_into(g.view(), &kept, w.view(), dx.view_mut());
+                sparse_dw_into(g.view(), &kept, x.view(), dw.view_mut());
+            });
+            println!(
+                "  bwd B={bsz} {dout}x{din} p={budget:<4} t={threads}: {:8.2} ms  (vs dense {:.2}x)",
+                t * 1e3,
+                dense / t
+            );
+            rep.rec(
+                "gemm_scaling",
+                format!("bwd512_p{budget}_t{threads}"),
+                t,
+            );
+        }
+    }
+    pool::set_threads(1);
+}
+
 /// Exact vs sketched native layer backward, *including* the sketch overhead
 /// (scores, waterfilling, sampling) the analytic model in `sketch::
-/// backward_flops` accounts for — the honest ρ wall-clock.
+/// backward_flops` accounts for — the honest ρ wall-clock. Runs on
+/// preallocated destination buffers, like the trainer's steady state.
 fn bench_native_bwd(filter: &str, rep: &mut Report) {
     if !"native_bwd".contains(filter) && !filter.is_empty() {
         return;
@@ -85,16 +192,29 @@ fn bench_native_bwd(filter: &str, rep: &mut Report) {
         let g = Mat::from_fn(b, dout, |_, _| rng.gaussian() as f32);
         let x = Mat::from_fn(b, din, |_, _| rng.gaussian() as f32);
         let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
+        let mut dx = Mat::zeros(b, din);
+        let mut dw = Mat::zeros(dout, din);
+        let mut db = vec![0.0f32; dout];
         let dense = time_median(5, || {
-            let _ = dense_backward(&g, &x, &w);
+            dense_backward_into(&g, &x, &w, &mut dx, &mut dw);
         });
         println!("  d_out={dout:<5} exact: {:8.2} ms", dense * 1e3);
         rep.rec("native_bwd", format!("d{dout}_exact"), dense);
         for budget in [0.05, 0.1, 0.2, 0.5] {
             let mut srng = Pcg64::new(11, dout as u64);
+            let mut scratch = SketchScratch::new();
             let t = time_median(5, || {
-                let _ = sketched_linear_backward(
-                    &g, &x, &w, "l1", budget, &mut srng, true,
+                sketched_linear_backward_into(
+                    g.view(),
+                    x.view(),
+                    &w,
+                    "l1",
+                    budget,
+                    &mut srng,
+                    &mut scratch,
+                    dw.view_mut(),
+                    &mut db,
+                    Some(dx.view_mut()),
                 );
             });
             println!(
@@ -275,20 +395,22 @@ fn bench_eq6_gemm(filter: &str, rep: &mut Report) {
     let g = Mat::from_fn(b, dout, |_, _| rng.gaussian() as f32);
     let x = Mat::from_fn(b, din, |_, _| rng.gaussian() as f32);
     let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
+    let mut dx = Mat::zeros(b, din);
+    let mut dw = Mat::zeros(dout, din);
 
     let dense = time_median(5, || {
-        let _ = dense_backward(&g, &x, &w);
+        dense_backward_into(&g, &x, &w, &mut dx, &mut dw);
     });
     println!("  dense backward (B={b}, {dout}×{din}): {:.2} ms", dense * 1e3);
     rep.rec("eq6_gemm", "dense", dense);
-    for budget in [0.05, 0.1, 0.2, 0.5] {
+    for budget in [0.05, 0.1, 0.25, 0.5] {
         let scores = uavjp::sketch::column_scores("l1", &g, None);
         let p = pstar_from_weights(&scores, budget * dout as f64);
         let z = correlated_bernoulli(&mut rng, &p);
         let kept = kept_columns(&z, &p);
         let t = time_median(5, || {
-            let _ = sparse_dx(&g, &kept, &w);
-            let _ = sparse_dw(&g, &kept, &x);
+            sparse_dx_into(g.view(), &kept, w.view(), dx.view_mut());
+            sparse_dw_into(g.view(), &kept, x.view(), dw.view_mut());
         });
         println!(
             "  sketched p={budget:<4} ({} cols kept): {:.2} ms  (ρ_wall = {:.3})",
@@ -376,6 +498,7 @@ fn main() {
     }
     println!("uavjp bench harness (median-of-N, warmup excluded)");
     let mut rep = Report::default();
+    bench_gemm_scaling(&filter, &mut rep);
     bench_native_bwd(&filter, &mut rep);
     bench_native_step(&filter, &mut rep);
     bench_native_models(&filter, &mut rep);

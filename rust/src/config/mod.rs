@@ -87,6 +87,10 @@ pub struct TrainConfig {
     /// (forward order), overriding `budget` when non-empty. The native
     /// `SketchPolicy` validates its length against the model's site count.
     pub budget_schedule: Vec<f64>,
+    /// Intra-op worker count for the native tensor kernels (`--threads`);
+    /// `0` inherits the process default (auto on explicit `--threads 0`).
+    /// Results are bit-identical at every setting — pure wall-clock knob.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -109,6 +113,7 @@ impl Default for TrainConfig {
             loss: "ce".into(),
             batch: 128,
             budget_schedule: Vec::new(),
+            threads: 0,
         }
     }
 }
@@ -148,6 +153,7 @@ impl TrainConfig {
             ("loss", Value::str(&self.loss)),
             ("batch", Value::num(self.batch as f64)),
             ("budget_schedule", Value::arr_f64(&self.budget_schedule)),
+            ("threads", Value::num(self.threads as f64)),
         ])
     }
 
@@ -192,6 +198,7 @@ impl TrainConfig {
             loss: v.get("loss").as_str().unwrap_or(&d.loss).to_string(),
             batch: v.get("batch").as_usize().unwrap_or(d.batch),
             budget_schedule,
+            threads: v.get("threads").as_usize().unwrap_or(d.threads),
         })
     }
 }
@@ -432,15 +439,18 @@ mod tests {
         assert_eq!(c.backend, Backend::Native);
         assert_eq!(c.batch, 128);
         assert!(c.budget_schedule.is_empty());
+        assert_eq!(c.threads, 0);
         c.backend = Backend::Pjrt;
         c.optimizer = "adam".into();
         c.loss = "mse".into();
         c.batch = 64;
+        c.threads = 3;
         let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.backend, Backend::Pjrt);
         assert_eq!(c2.optimizer, "adam");
         assert_eq!(c2.loss, "mse");
         assert_eq!(c2.batch, 64);
+        assert_eq!(c2.threads, 3);
         // configs without the new keys fall back to defaults
         let legacy = crate::json::parse(r#"{"model":"mlp","method":"l1"}"#).unwrap();
         let c3 = TrainConfig::from_json(&legacy).unwrap();

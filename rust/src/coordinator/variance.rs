@@ -91,18 +91,27 @@ fn native_probe_setup(
     (model, x, ds.y)
 }
 
+/// One flattened gradient through a caller-provided workspace and
+/// pre-resolved plan (both reused across Monte-Carlo trials so the probe
+/// loop stays allocation-light).
 fn native_grad(
     model: &crate::native::Sequential,
+    ws: &mut crate::native::Workspace,
     x: &crate::tensor::Mat,
     y: &[i32],
-    policy: &crate::native::SketchPolicy,
+    plan: &[Option<crate::native::SiteSketch>],
     rng: &mut crate::rng::Pcg64,
-) -> Result<Vec<f32>> {
-    use crate::native::{loss_and_grad, LossKind};
-    let tape = model.forward(x);
-    let (_, dlogits) = loss_and_grad(LossKind::CrossEntropy, &tape.output, y);
-    let plan = model.plan(policy)?;
-    Ok(model.backward(&tape, &dlogits, &plan, rng).flatten())
+) -> Vec<f32> {
+    use crate::native::{loss_and_grad_into, LossKind};
+    model.forward(x, ws);
+    loss_and_grad_into(
+        LossKind::CrossEntropy,
+        ws.acts.last().expect("non-empty stack"),
+        y,
+        ws.grads.last_mut().expect("non-empty stack"),
+    );
+    model.backward(x, ws, plan, rng);
+    ws.grad_slots.flatten()
 }
 
 /// Measure gradient bias/variance for one (method, budget) on the native
@@ -119,17 +128,19 @@ pub fn measure_native(
         anyhow::bail!("native variance probe: unsupported method {method}");
     }
     let (model, x, y) = native_probe_setup(seed);
+    let mut ws = model.workspace(x.rows, x.cols);
     let mut exact_rng = Pcg64::new(0, 0);
-    let g = native_grad(&model, &x, &y, &SketchPolicy::exact(), &mut exact_rng)?;
-    let policy = SketchPolicy {
+    let exact_plan = model.plan(&SketchPolicy::exact())?;
+    let g = native_grad(&model, &mut ws, &x, &y, &exact_plan, &mut exact_rng);
+    let plan = model.plan(&SketchPolicy {
         method: method.to_string(),
         budget,
         location: "all".into(),
         schedule: None,
-    };
+    })?;
     summarize(method, budget, &g, trials, |t| {
         let mut rng = Pcg64::new(seed ^ 0xabcd, t as u64);
-        native_grad(&model, &x, &y, &policy, &mut rng)
+        Ok(native_grad(&model, &mut ws, &x, &y, &plan, &mut rng))
     })
 }
 
@@ -141,12 +152,14 @@ pub fn sigma2_native(trials: usize) -> Result<f64> {
     use crate::tensor::Mat;
     let batch = 128usize;
     let model = models::mlp(models::MLP_DIMS, 5);
+    let mut ws = model.workspace(batch, models::MLP_DIMS[0]);
+    let plan = model.plan(&SketchPolicy::exact())?;
     let mut grads: Vec<Vec<f32>> = Vec::with_capacity(trials);
     for t in 0..trials {
         let ds = data::generate(DatasetKind::SynthMnist, batch, 500 + t as u64, "train");
         let x = Mat { rows: batch, cols: ds.dim, data: ds.x.clone() };
         let mut rng = Pcg64::new(0, 0);
-        grads.push(native_grad(&model, &x, &ds.y, &SketchPolicy::exact(), &mut rng)?);
+        grads.push(native_grad(&model, &mut ws, &x, &ds.y, &plan, &mut rng));
     }
     Ok(spread(&grads))
 }

@@ -40,6 +40,8 @@ commands:
 flags:
   --backend native|pjrt   execution engine (default: native; pjrt needs the
                           `pjrt` cargo feature and a built artifacts dir)
+  --threads N       intra-op worker count for the native tensor kernels
+                    (0 = auto; results are bit-identical at any value)
   --artifacts DIR   artifact directory (default: artifacts or $UAVJP_ARTIFACTS)
   --verbose         chatty sweeps
 ";
@@ -54,6 +56,9 @@ fn main() -> Result<()> {
         }
     };
     let artifacts = args.str_or("artifacts", "artifacts");
+    if args.str_opt("threads").is_some() {
+        uavjp::pool::set_threads(args.usize_or("threads", 0)?);
+    }
 
     match sub.as_str() {
         "exec-bench" => cmd_exec_bench(&args, &artifacts),
@@ -201,6 +206,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.loss = args.str_or("loss", &cfg.loss);
     cfg.batch = args.usize_or("batch", cfg.batch)?;
     cfg.budget_schedule = args.f64_list_or("budget-schedule", &[])?;
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
 
     eprintln!(
         "[train:{}] {} / {} p={} lr={} steps={}",

@@ -4,20 +4,26 @@
 //! feed-forward sublayer [`FfnBlock`].
 //!
 //! Token layout: a `[B, P·d]` batch matrix is reinterpreted as `B·P` token
-//! rows of width `d` (row-major buffers coincide, no copies). The four
-//! attention projections run as single GEMMs over the stacked tokens, so
-//! their backward gradients are `[B·P, d]` matrices — exactly the shape
-//! the §4.2 column estimator gates, with model channels as columns. The
-//! softmax core stays exact: it holds no parameters and its FLOPs are
-//! `O(P²d)` per image versus the projections' `O(P d²)`.
+//! rows of width `d` via zero-copy [`crate::tensor::Mat::reshape`] (the
+//! row-major buffers coincide). The four attention projections run as
+//! single GEMMs over the stacked tokens, so their backward gradients are
+//! `[B·P, d]` matrices — exactly the shape the §4.2 column estimator
+//! gates, with model channels as columns. The softmax core stays exact:
+//! it holds no parameters and its FLOPs are `O(P²d)` per image versus the
+//! projections' `O(P d²)`. Every intermediate (Q/K/V/O, the attention
+//! probabilities, and all backward temporaries) lives in the layer's
+//! preallocated [`Cache`], so neither pass allocates.
 
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatViewMut};
 
-use super::layer::{affine, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
+use super::layer::{affine_into, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
 
 /// Per-token layer normalization over the channel axis with learned scale
 /// and shift: rows of width `dim` are normalized to zero mean / unit
 /// variance, then mapped through `γ ⊙ x̂ + β`.
+///
+/// Cache layout: `mats[0]` = x̂ (normalized inputs, `[tokens, d]`),
+/// `mats[1]` = 1/σ per token (`[tokens, 1]`).
 pub struct LayerNorm {
     /// Channel width `d` each token row is normalized over.
     pub dim: usize,
@@ -42,13 +48,21 @@ impl Layer for LayerNorm {
         "layer_norm"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
-        assert_eq!(x.cols % self.dim, 0, "layer_norm input width");
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din % self.dim, 0, "layer_norm input width");
+        din
+    }
+
+    fn cache_shapes(&self, batch: usize, din: usize) -> Vec<(usize, usize)> {
+        let tokens = batch * (din / self.dim);
+        vec![(tokens, self.dim), (tokens, 1)]
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, cache: &mut Cache) {
         let d = self.dim;
         let rows = x.rows * (x.cols / d);
-        let mut xhat = Mat::zeros(rows, d);
-        let mut invstd = Mat::zeros(rows, 1);
-        let mut y = Mat::zeros(x.rows, x.cols);
+        let (xh_m, rest) = cache.mats.split_at_mut(1);
+        let (xhat, invstd) = (&mut xh_m[0], &mut rest[0]);
         for r in 0..rows {
             let xin = &x.data[r * d..(r + 1) * d];
             let mut mu = 0.0f32;
@@ -70,22 +84,23 @@ impl Layer for LayerNorm {
                 yr[j] = self.gamma[j] * xh[j] + self.beta[j];
             }
         }
-        (y, Cache { mats: vec![xhat, invstd] })
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        cache: &Cache,
+        _x: &Mat,
+        cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        mut gx: Option<&mut Mat>,
+        pg: &mut [Vec<f32>],
+    ) {
         let d = self.dim;
         let (xhat, invstd) = (&cache.mats[0], &cache.mats[1]);
         let rows = xhat.rows;
-        let mut dgamma = vec![0.0f32; d];
-        let mut dbeta = vec![0.0f32; d];
-        let mut gx = if need_gx { Some(Mat::zeros(gy.rows, gy.cols)) } else { None };
+        let [dgamma, dbeta] = pg else { panic!("layer_norm has 2 param slots") };
+        dgamma.fill(0.0);
+        dbeta.fill(0.0);
         for r in 0..rows {
             let g = &gy.data[r * d..(r + 1) * d];
             let xh = &xhat.data[r * d..(r + 1) * d];
@@ -112,7 +127,6 @@ impl Layer for LayerNorm {
                 }
             }
         }
-        (gx, vec![dgamma, dbeta])
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -121,6 +135,11 @@ impl Layer for LayerNorm {
 
     fn params_mut(&mut self) -> Vec<&mut [f32]> {
         vec![&mut self.gamma, &mut self.beta]
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        f(&mut self.gamma);
+        f(&mut self.beta);
     }
 }
 
@@ -146,33 +165,40 @@ impl Layer for PosEmbed {
         "pos_embed"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
-        assert_eq!(x.cols, self.table.len(), "pos_embed input width");
-        let mut y = x.clone();
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din, self.table.len(), "pos_embed input width");
+        din
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
         for i in 0..y.rows {
+            let xin = x.row(i);
             let row = &mut y.data[i * y.cols..(i + 1) * y.cols];
-            for (v, &t) in row.iter_mut().zip(&self.table) {
-                *v += t;
+            for ((v, &xv), &t) in row.iter_mut().zip(xin).zip(&self.table) {
+                *v = xv + t;
             }
         }
-        (y, Cache::default())
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        _cache: &Cache,
+        _x: &Mat,
+        _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
-        let mut dt = vec![0.0f32; self.table.len()];
+        gx: Option<&mut Mat>,
+        pg: &mut [Vec<f32>],
+    ) {
+        let [dt] = pg else { panic!("pos_embed has 1 param slot") };
+        dt.fill(0.0);
         for i in 0..gy.rows {
             for (d, &g) in dt.iter_mut().zip(gy.row(i)) {
                 *d += g;
             }
         }
-        let gx = if need_gx { Some(gy.clone()) } else { None };
-        (gx, vec![dt])
+        if let Some(gx) = gx {
+            gx.data.copy_from_slice(&gy.data);
+        }
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -182,12 +208,22 @@ impl Layer for PosEmbed {
     fn params_mut(&mut self) -> Vec<&mut [f32]> {
         vec![&mut self.table]
     }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        f(&mut self.table);
+    }
 }
 
 /// Multi-head self-attention over `P` tokens of width `d` with a residual
 /// connection: `y = x + W_o·MHSA(x)`. The QKV and output projections are
 /// the sketch sites; when the site is gated, all four backward GEMMs use
 /// the kept-column estimator at the site's budget.
+///
+/// Cache layout (all preallocated): `mats[0..3]` = Q, K, V (`[B·P, d]`),
+/// `mats[3]` = head-mixed values O, `mats[4]` = attention probabilities
+/// (`[(b·h + head)·P, P]` stacked), `mats[5..9]` = backward temporaries
+/// gQ, gK, gV and the shared dX scratch, `mats[9..11]` = per-head `P × P`
+/// score scratch (gA, gS).
 pub struct Attention {
     /// Tokens per image `P`.
     pub patches: usize,
@@ -238,109 +274,145 @@ impl Layer for Attention {
         "attention"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din, self.patches * self.dim, "attention input width");
+        din
+    }
+
+    fn cache_shapes(&self, batch: usize, _din: usize) -> Vec<(usize, usize)> {
         let (p, d, h) = (self.patches, self.dim, self.heads);
-        assert_eq!(x.cols, p * d, "attention input width");
+        let rows = batch * p;
+        vec![
+            (rows, d),           // 0: Q
+            (rows, d),           // 1: K
+            (rows, d),           // 2: V
+            (rows, d),           // 3: O (head-mixed values)
+            (batch * h * p, p),  // 4: attention probabilities
+            (rows, d),           // 5: gQ
+            (rows, d),           // 6: gK
+            (rows, d),           // 7: gV
+            (rows, d),           // 8: projection-dX scratch
+            (p, p),              // 9: gA (per-head)
+            (p, p),              // 10: gS (per-head)
+        ]
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, cache: &mut Cache) {
+        let (p, d, h) = (self.patches, self.dim, self.heads);
         let bsz = x.rows;
-        let xs = Mat { rows: bsz * p, cols: d, data: x.data.clone() };
-        let q = affine(&xs, &self.q.w, &self.q.b);
-        let k = affine(&xs, &self.k.w, &self.k.b);
-        let v = affine(&xs, &self.v.w, &self.v.b);
-        let dh = self.head_dim();
-        let scale = 1.0 / (dh as f32).sqrt();
-        let mut o = Mat::zeros(bsz * p, d);
-        // attention probabilities, stacked [(b·h + head)·P, P]
-        let mut attn = Mat::zeros(bsz * h * p, p);
-        for b in 0..bsz {
-            let r0 = b * p;
-            for head in 0..h {
-                let c0 = head * dh;
-                let a0 = (b * h + head) * p;
-                // scores s[i][j] = <q_i, k_j> · scale, softmaxed per row
-                for i in 0..p {
-                    let arow = &mut attn.data[(a0 + i) * p..(a0 + i + 1) * p];
-                    let mut m = f32::NEG_INFINITY;
-                    for (j, aj) in arow.iter_mut().enumerate() {
-                        let mut s = 0.0f32;
+        let rows = bsz * p;
+        let xs = x.reshape(rows, d);
+        affine_into(xs, &self.q.w, &self.q.b, cache.mats[0].view_mut());
+        affine_into(xs, &self.k.w, &self.k.b, cache.mats[1].view_mut());
+        affine_into(xs, &self.v.w, &self.v.b, cache.mats[2].view_mut());
+        {
+            let (qkv, rest) = cache.mats.split_at_mut(3);
+            let (q, k, v) = (&qkv[0], &qkv[1], &qkv[2]);
+            let (o_m, attn_m) = rest.split_at_mut(1);
+            let (o, attn) = (&mut o_m[0], &mut attn_m[0]);
+            let dh = self.head_dim();
+            let scale = 1.0 / (dh as f32).sqrt();
+            for b in 0..bsz {
+                let r0 = b * p;
+                for head in 0..h {
+                    let c0 = head * dh;
+                    let a0 = (b * h + head) * p;
+                    // scores s[i][j] = <q_i, k_j> · scale, softmaxed per row
+                    for i in 0..p {
+                        let arow = &mut attn.data[(a0 + i) * p..(a0 + i + 1) * p];
+                        let mut m = f32::NEG_INFINITY;
+                        for (j, aj) in arow.iter_mut().enumerate() {
+                            let mut s = 0.0f32;
+                            for c in 0..dh {
+                                s += q.at(r0 + i, c0 + c) * k.at(r0 + j, c0 + c);
+                            }
+                            *aj = s * scale;
+                            if *aj > m {
+                                m = *aj;
+                            }
+                        }
+                        let mut sum = 0.0f32;
+                        for aj in arow.iter_mut() {
+                            *aj = (*aj - m).exp();
+                            sum += *aj;
+                        }
+                        for aj in arow.iter_mut() {
+                            *aj /= sum;
+                        }
+                    }
+                    // o_i = Σ_j a[i][j] · v_j  (head slice)
+                    for i in 0..p {
+                        let arow = &attn.data[(a0 + i) * p..(a0 + i + 1) * p];
                         for c in 0..dh {
-                            s += q.at(r0 + i, c0 + c) * k.at(r0 + j, c0 + c);
+                            let mut s = 0.0f32;
+                            for (j, &aij) in arow.iter().enumerate() {
+                                s += aij * v.at(r0 + j, c0 + c);
+                            }
+                            o.data[(r0 + i) * d + c0 + c] = s;
                         }
-                        *aj = s * scale;
-                        if *aj > m {
-                            m = *aj;
-                        }
-                    }
-                    let mut sum = 0.0f32;
-                    for aj in arow.iter_mut() {
-                        *aj = (*aj - m).exp();
-                        sum += *aj;
-                    }
-                    for aj in arow.iter_mut() {
-                        *aj /= sum;
-                    }
-                }
-                // o_i = Σ_j a[i][j] · v_j  (head slice)
-                for i in 0..p {
-                    let arow = &attn.data[(a0 + i) * p..(a0 + i + 1) * p];
-                    for c in 0..dh {
-                        let mut s = 0.0f32;
-                        for (j, &aij) in arow.iter().enumerate() {
-                            s += aij * v.at(r0 + j, c0 + c);
-                        }
-                        o.data[(r0 + i) * d + c0 + c] = s;
                     }
                 }
             }
         }
-        let mut y = affine(&o, &self.o.w, &self.o.b);
-        for (yv, &xv) in y.data.iter_mut().zip(&xs.data) {
+        affine_into(
+            cache.mats[3].view(),
+            &self.o.w,
+            &self.o.b,
+            y.reshape_mut(rows, d),
+        );
+        for (yv, &xv) in y.data.iter_mut().zip(&x.data) {
             *yv += xv; // residual
         }
-        let out = Mat { rows: bsz, cols: p * d, data: y.data };
-        (out, Cache { mats: vec![xs, q, k, v, o, attn] })
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        cache: &Cache,
+        x: &Mat,
+        cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        gx: Option<&mut Mat>,
+        pg: &mut [Vec<f32>],
+    ) {
         let (p, d, h) = (self.patches, self.dim, self.heads);
         let bsz = gy.rows;
-        let (xs, q, k, v, o, attn) = (
-            &cache.mats[0],
-            &cache.mats[1],
-            &cache.mats[2],
-            &cache.mats[3],
-            &cache.mats[4],
-            &cache.mats[5],
+        let rows = bsz * p;
+        let g = gy.reshape(rows, d);
+        let xs = x.reshape(rows, d);
+        let [dwq, dbq, dwk, dbk, dwv, dbv, dwo, dbo] = pg else {
+            panic!("attention has 8 param slots")
+        };
+        let (ro, rw) = cache.mats.split_at_mut(5);
+        let (q, k, v, o, attn) = (&ro[0], &ro[1], &ro[2], &ro[3], &ro[4]);
+        let [gq, gk, gv, dxs, ga, gs] = rw else {
+            panic!("attention cache has 11 mats")
+        };
+        // output projection backward; its dX (`dxs`) feeds the core.
+        linear_backward_ctx(
+            g,
+            o.view(),
+            &self.o.w,
+            ctx,
+            MatViewMut::new(d, d, dwo),
+            dbo,
+            Some(dxs.view_mut()),
         );
-        let g = Mat { rows: bsz * p, cols: d, data: gy.data.clone() };
-        let (dwo, dbo, go) = linear_backward_ctx(&g, o, &self.o.w, ctx, true);
-        let go = go.expect("attention output projection always needs dX");
-        let mut gx = g; // residual path
+        let go = &*dxs;
         let dh = self.head_dim();
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut gq = Mat::zeros(bsz * p, d);
-        let mut gk = Mat::zeros(bsz * p, d);
-        let mut gv = Mat::zeros(bsz * p, d);
-        let mut ga = vec![0.0f32; p * p];
-        let mut gs = vec![0.0f32; p * p];
         for b in 0..bsz {
             let r0 = b * p;
             for head in 0..h {
                 let c0 = head * dh;
                 let a0 = (b * h + head) * p;
-                // gA[i][j] = <go_i, v_j>;  gV_j += Σ_i a[i][j]·go_i
+                // gA[i][j] = <go_i, v_j>;  gV_j = Σ_i a[i][j]·go_i
                 for i in 0..p {
                     for j in 0..p {
                         let mut s = 0.0f32;
                         for c in 0..dh {
                             s += go.at(r0 + i, c0 + c) * v.at(r0 + j, c0 + c);
                         }
-                        ga[i * p + j] = s;
+                        ga.data[i * p + j] = s;
                     }
                 }
                 for j in 0..p {
@@ -357,10 +429,10 @@ impl Layer for Attention {
                     let arow = &attn.data[(a0 + i) * p..(a0 + i + 1) * p];
                     let mut dot = 0.0f32;
                     for j in 0..p {
-                        dot += ga[i * p + j] * arow[j];
+                        dot += ga.data[i * p + j] * arow[j];
                     }
                     for j in 0..p {
-                        gs[i * p + j] = arow[j] * (ga[i * p + j] - dot);
+                        gs.data[i * p + j] = arow[j] * (ga.data[i * p + j] - dot);
                     }
                 }
                 // gQ_i = scale · Σ_j gS[i][j]·k_j;  gK_j = scale · Σ_i gS[i][j]·q_i
@@ -368,7 +440,7 @@ impl Layer for Attention {
                     for c in 0..dh {
                         let mut s = 0.0f32;
                         for j in 0..p {
-                            s += gs[i * p + j] * k.at(r0 + j, c0 + c);
+                            s += gs.data[i * p + j] * k.at(r0 + j, c0 + c);
                         }
                         gq.data[(r0 + i) * d + c0 + c] = s * scale;
                     }
@@ -377,30 +449,41 @@ impl Layer for Attention {
                     for c in 0..dh {
                         let mut s = 0.0f32;
                         for i in 0..p {
-                            s += gs[i * p + j] * q.at(r0 + i, c0 + c);
+                            s += gs.data[i * p + j] * q.at(r0 + i, c0 + c);
                         }
                         gk.data[(r0 + j) * d + c0 + c] = s * scale;
                     }
                 }
             }
         }
-        let (dwq, dbq, gxq) = linear_backward_ctx(&gq, xs, &self.q.w, ctx, need_gx);
-        let (dwk, dbk, gxk) = linear_backward_ctx(&gk, xs, &self.k.w, ctx, need_gx);
-        let (dwv, dbv, gxv) = linear_backward_ctx(&gv, xs, &self.v.w, ctx, need_gx);
-        let gx = if need_gx {
-            for part in [gxq, gxk, gxv].into_iter().flatten() {
-                for (a, &b) in gx.data.iter_mut().zip(&part.data) {
+        // QKV projection backwards; each dX lands in the shared scratch and
+        // is folded into gx on top of the residual path (gx starts as gy).
+        let need_gx = gx.is_some();
+        let mut gx = gx;
+        if let Some(gxm) = gx.as_mut() {
+            gxm.data.copy_from_slice(&gy.data);
+        }
+        for (proj, gproj, dw, db) in [
+            (&self.q, &*gq, &mut *dwq, &mut *dbq),
+            (&self.k, &*gk, &mut *dwk, &mut *dbk),
+            (&self.v, &*gv, &mut *dwv, &mut *dbv),
+        ] {
+            let dx_dest = if need_gx { Some(dxs.view_mut()) } else { None };
+            linear_backward_ctx(
+                gproj.view(),
+                xs,
+                &proj.w,
+                ctx,
+                MatViewMut::new(d, d, dw),
+                db,
+                dx_dest,
+            );
+            if let Some(gxm) = gx.as_mut() {
+                for (a, &b) in gxm.data.iter_mut().zip(&dxs.data) {
                     *a += b;
                 }
             }
-            Some(Mat { rows: bsz, cols: p * d, data: gx.data })
-        } else {
-            None
-        };
-        (
-            gx,
-            vec![dwq.data, dbq, dwk.data, dbk, dwv.data, dbv, dwo.data, dbo],
-        )
+        }
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -429,6 +512,17 @@ impl Layer for Attention {
         ]
     }
 
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        f(&mut self.q.w.data);
+        f(&mut self.q.b);
+        f(&mut self.k.w.data);
+        f(&mut self.k.b);
+        f(&mut self.v.w.data);
+        f(&mut self.v.b);
+        f(&mut self.o.w.data);
+        f(&mut self.o.b);
+    }
+
     fn sketchable(&self) -> bool {
         true
     }
@@ -439,7 +533,10 @@ impl Layer for Attention {
 /// One sketch site; when gated, both backward GEMMs use the kept-column
 /// estimator. Together with [`Attention`] (whose residual is internal too)
 /// and a following [`LayerNorm`], this composes the standard post-LN
-/// transformer encoder block `LN(x + sublayer(x))`.
+/// transformer block `LN(x + sublayer(x))`.
+///
+/// Cache layout: `mats[0]` = pre-activation H, `mats[1]` = relu(H),
+/// `mats[2]` = backward hidden-gradient scratch.
 pub struct FfnBlock {
     /// Up projection `d → hidden`.
     pub w1: Linear,
@@ -463,51 +560,86 @@ impl Layer for FfnBlock {
         "ffn_block"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din % self.w1.din(), 0, "ffn_block input width");
+        din
+    }
+
+    fn cache_shapes(&self, batch: usize, din: usize) -> Vec<(usize, usize)> {
+        let rows = batch * (din / self.w1.din());
+        let hidden = self.w1.dout();
+        vec![(rows, hidden), (rows, hidden), (rows, hidden)]
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, cache: &mut Cache) {
         let d = self.w1.din();
-        assert_eq!(x.cols % d, 0, "ffn_block input width");
         let rows = x.rows * (x.cols / d);
-        let xs = Mat { rows, cols: d, data: x.data.clone() };
-        let h = affine(&xs, &self.w1.w, &self.w1.b);
-        let mut hr = h.clone();
-        for v in &mut hr.data {
-            if *v < 0.0 {
-                *v = 0.0;
+        let xs = x.reshape(rows, d);
+        {
+            let (h_m, rest) = cache.mats.split_at_mut(1);
+            let (h, hr) = (&mut h_m[0], &mut rest[0]);
+            affine_into(xs, &self.w1.w, &self.w1.b, h.view_mut());
+            for (o, &v) in hr.data.iter_mut().zip(&h.data) {
+                *o = if v < 0.0 { 0.0 } else { v };
             }
         }
-        let mut y = affine(&hr, &self.w2.w, &self.w2.b);
-        for (yv, &xv) in y.data.iter_mut().zip(&xs.data) {
+        affine_into(
+            cache.mats[1].view(),
+            &self.w2.w,
+            &self.w2.b,
+            y.reshape_mut(rows, d),
+        );
+        for (yv, &xv) in y.data.iter_mut().zip(&x.data) {
             *yv += xv; // residual
         }
-        let out = Mat { rows: x.rows, cols: x.cols, data: y.data };
-        (out, Cache { mats: vec![xs, h, hr] })
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        cache: &Cache,
+        x: &Mat,
+        cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
-        let (xs, h, hr) = (&cache.mats[0], &cache.mats[1], &cache.mats[2]);
-        let g = Mat { rows: xs.rows, cols: xs.cols, data: gy.data.clone() };
-        let (dw2, db2, gh) = linear_backward_ctx(&g, hr, &self.w2.w, ctx, true);
-        let mut gh = gh.expect("ffn down projection always needs dX");
+        gx: Option<&mut Mat>,
+        pg: &mut [Vec<f32>],
+    ) {
+        let d = self.w1.din();
+        let rows = x.rows * (x.cols / d);
+        let xs = x.reshape(rows, d);
+        let g = gy.reshape(rows, d);
+        let [dw1, db1, dw2, db2] = pg else { panic!("ffn has 4 param slots") };
+        let (ro, rw) = cache.mats.split_at_mut(2);
+        let (h, hr) = (&ro[0], &ro[1]);
+        let gh = &mut rw[0];
+        linear_backward_ctx(
+            g,
+            hr.view(),
+            &self.w2.w,
+            ctx,
+            MatViewMut::new(self.w2.w.rows, self.w2.w.cols, dw2),
+            db2,
+            Some(gh.view_mut()),
+        );
         for (v, &hv) in gh.data.iter_mut().zip(&h.data) {
             if hv <= 0.0 {
                 *v = 0.0;
             }
         }
-        let (dw1, db1, gx1) = linear_backward_ctx(&gh, xs, &self.w1.w, ctx, need_gx);
-        let gx = gx1.map(|gx1| {
-            let mut data = g.data;
-            for (a, &b) in data.iter_mut().zip(&gx1.data) {
+        let mut gx = gx;
+        linear_backward_ctx(
+            gh.view(),
+            xs,
+            &self.w1.w,
+            ctx,
+            MatViewMut::new(self.w1.w.rows, self.w1.w.cols, dw1),
+            db1,
+            gx.as_mut().map(|m| m.reshape_mut(rows, d)),
+        );
+        if let Some(gx) = gx {
+            for (a, &b) in gx.data.iter_mut().zip(&gy.data) {
                 *a += b; // residual
             }
-            Mat { rows: gy.rows, cols: gy.cols, data }
-        });
-        (gx, vec![dw1.data, db1, dw2.data, db2])
+        }
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -523,6 +655,13 @@ impl Layer for FfnBlock {
         ]
     }
 
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        f(&mut self.w1.w.data);
+        f(&mut self.w1.b);
+        f(&mut self.w2.w.data);
+        f(&mut self.w2.b);
+    }
+
     fn sketchable(&self) -> bool {
         true
     }
@@ -531,6 +670,7 @@ impl Layer for FfnBlock {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::native::layer::{run_layer_backward, run_layer_forward};
     use crate::rng::Pcg64;
 
     fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
@@ -542,7 +682,7 @@ mod tests {
         let ln = LayerNorm::new(6);
         let mut rng = Pcg64::new(4, 0);
         let x = randmat(3, 12, &mut rng); // 6 token rows of width 6
-        let (y, _) = ln.forward(&x);
+        let (y, _) = run_layer_forward(&ln, &x);
         for r in 0..6 {
             let row = &y.data[r * 6..(r + 1) * 6];
             let mu: f32 = row.iter().sum::<f32>() / 6.0;
@@ -558,11 +698,11 @@ mod tests {
         let ln = LayerNorm::new(4);
         let mut rng = Pcg64::new(7, 0);
         let x = randmat(2, 8, &mut rng);
-        let (_, cache) = ln.forward(&x);
+        let (_, mut cache) = run_layer_forward(&ln, &x);
         let gy = Mat::from_fn(2, 8, |_, _| 1.0);
         let mut g = Pcg64::new(0, 0);
-        let mut ctx = SketchCtx { sketch: None, rng: &mut g };
-        let (_, pg) = ln.backward(&gy, &cache, &mut ctx, false);
+        let (_, pg) =
+            run_layer_backward(&ln, &gy, &x, &mut cache, None, &mut g, false);
         // dbeta sums gy over all 4 token rows
         for &v in &pg[1] {
             assert!((v - 4.0).abs() < 1e-5);
@@ -574,10 +714,10 @@ mod tests {
         let at = Attention::new(3, 8, 2, 1, 302);
         let mut rng = Pcg64::new(9, 0);
         let x = randmat(2, 24, &mut rng);
-        let (y, cache) = at.forward(&x);
+        let (y, cache) = run_layer_forward(&at, &x);
         assert_eq!((y.rows, y.cols), (2, 24));
         // attention probabilities are a distribution per row
-        let attn = &cache.mats[5];
+        let attn = &cache.mats[4];
         for r in 0..attn.rows {
             let s: f32 = attn.row(r).iter().sum();
             assert!((s - 1.0).abs() < 1e-5);
@@ -589,7 +729,7 @@ mod tests {
     fn pos_embed_adds_table_and_sums_gradient() {
         let pe = PosEmbed::new(2, 3, 1, 301);
         let x = Mat::zeros(4, 6);
-        let (y, cache) = pe.forward(&x);
+        let (y, mut cache) = run_layer_forward(&pe, &x);
         for i in 0..4 {
             for (a, b) in y.row(i).iter().zip(&pe.table) {
                 assert_eq!(a, b);
@@ -597,11 +737,25 @@ mod tests {
         }
         let gy = Mat::from_fn(4, 6, |_, _| 0.5);
         let mut g = Pcg64::new(0, 0);
-        let mut ctx = SketchCtx { sketch: None, rng: &mut g };
-        let (gx, pg) = pe.backward(&gy, &cache, &mut ctx, true);
+        let (gx, pg) =
+            run_layer_backward(&pe, &gy, &x, &mut cache, None, &mut g, true);
         assert_eq!(gx.unwrap().data, gy.data);
         for &v in &pg[0] {
             assert!((v - 2.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn ffn_residual_identity_at_zero_weights() {
+        let mut layer = FfnBlock::he(4, 6, 1, 306);
+        for t in layer.params_mut() {
+            for v in t.iter_mut() {
+                *v = 0.0;
+            }
+        }
+        let mut rng = Pcg64::new(6, 0);
+        let x = randmat(3, 8, &mut rng);
+        let (y, _) = run_layer_forward(&layer, &x);
+        assert_eq!(y.data, x.data);
     }
 }

@@ -10,11 +10,14 @@
 //! * [`Patchify`] — im2col for non-overlapping patches: channel-last image
 //!   rows → patch-major rows (pure permutation, exact backward).
 //! * [`PatchConv`] — a [`Linear`] applied per patch; the sketch site.
+//!   Since the view redesign the `[B, P·d] ↔ [B·P, d]` lowering is a
+//!   zero-copy [`crate::tensor::Mat::reshape`] — the row-major buffers
+//!   coincide, so neither pass copies the batch.
 //! * [`PatchMeanPool`] — mean over patches, the bag-of-features head.
 
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatViewMut};
 
-use super::layer::{affine, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
+use super::layer::{affine_into, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
 
 /// Non-overlapping-patch im2col: `[B, H·W·C]` channel-last images to
 /// `[B, P·(q·q·C)]` patch-major rows (patch index `p = pr·(W/q) + pc`,
@@ -54,10 +57,13 @@ impl Layer for Patchify {
         "patchify"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
-        assert_eq!(x.cols, self.src.len(), "patchify input width");
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din, self.src.len(), "patchify input width");
+        din
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
         let n = self.src.len();
-        let mut y = Mat::zeros(x.rows, n);
         for i in 0..x.rows {
             let xin = x.row(i);
             let yr = &mut y.data[i * n..(i + 1) * n];
@@ -65,21 +71,19 @@ impl Layer for Patchify {
                 *o = xin[s];
             }
         }
-        (y, Cache::default())
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        _cache: &Cache,
+        _x: &Mat,
+        _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
-        if !need_gx {
-            return (None, Vec::new());
-        }
+        gx: Option<&mut Mat>,
+        _pg: &mut [Vec<f32>],
+    ) {
+        let Some(gx) = gx else { return };
         let n = self.src.len();
-        let mut gx = Mat::zeros(gy.rows, n);
         for i in 0..gy.rows {
             let grow = gy.row(i);
             let out = &mut gx.data[i * n..(i + 1) * n];
@@ -87,7 +91,6 @@ impl Layer for Patchify {
                 out[s] = *g;
             }
         }
-        (Some(gx), Vec::new())
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -97,12 +100,14 @@ impl Layer for Patchify {
     fn params_mut(&mut self) -> Vec<&mut [f32]> {
         Vec::new()
     }
+
+    fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut [f32])) {}
 }
 
 /// A linear layer applied independently to each of `P` patches: input
 /// `[B, P·d_in]` (patch-major, from [`Patchify`] or a previous
 /// `PatchConv`), output `[B, P·d_out]`. Internally one GEMM over the
-/// stacked `[B·P, d_in]` rows, which is where the kept-column sketch
+/// reshaped `[B·P, d_in]` rows, which is where the kept-column sketch
 /// plugs in — the output gradient seen by the estimator is `[B·P, d_out]`
 /// with output channels as columns.
 pub struct PatchConv {
@@ -130,37 +135,43 @@ impl Layer for PatchConv {
         "patch_conv"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din, self.patches * self.lin.din(), "patch_conv input width");
+        self.patches * self.lin.dout()
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
         let (din, dout) = (self.lin.din(), self.lin.dout());
-        assert_eq!(x.cols, self.patches * din, "patch_conv input width");
-        // [B, P·din] and [B·P, din] share one row-major buffer
-        let xp = Mat { rows: x.rows * self.patches, cols: din, data: x.data.clone() };
-        let y = affine(&xp, &self.lin.w, &self.lin.b);
-        let out = Mat { rows: x.rows, cols: self.patches * dout, data: y.data };
-        (out, Cache { mats: vec![xp] })
+        let rows = x.rows * self.patches;
+        affine_into(
+            x.reshape(rows, din),
+            &self.lin.w,
+            &self.lin.b,
+            y.reshape_mut(rows, dout),
+        );
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        cache: &Cache,
+        x: &Mat,
+        _cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
+        gx: Option<&mut Mat>,
+        pg: &mut [Vec<f32>],
+    ) {
         let (din, dout) = (self.lin.din(), self.lin.dout());
-        let xp = &cache.mats[0];
-        let g = Mat {
-            rows: gy.rows * self.patches,
-            cols: dout,
-            data: gy.data.clone(),
-        };
-        let (dw, db, gx) = linear_backward_ctx(&g, xp, &self.lin.w, ctx, need_gx);
-        let gx = gx.map(|m| Mat {
-            rows: gy.rows,
-            cols: self.patches * din,
-            data: m.data,
-        });
-        (gx, vec![dw.data, db])
+        let rows = gy.rows * self.patches;
+        let [dw, db] = pg else { panic!("patch_conv has 2 param slots") };
+        linear_backward_ctx(
+            gy.reshape(rows, dout),
+            x.reshape(rows, din),
+            &self.lin.w,
+            ctx,
+            MatViewMut::new(dout, din, dw),
+            db,
+            gx.map(|m| m.reshape_mut(rows, din)),
+        );
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -169,6 +180,11 @@ impl Layer for PatchConv {
 
     fn params_mut(&mut self) -> Vec<&mut [f32]> {
         vec![&mut self.lin.w.data, &mut self.lin.b]
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        f(&mut self.lin.w.data);
+        f(&mut self.lin.b);
     }
 
     fn sketchable(&self) -> bool {
@@ -190,13 +206,17 @@ impl Layer for PatchMeanPool {
         "patch_mean_pool"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
-        assert_eq!(x.cols, self.patches * self.dim, "pool input width");
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din, self.patches * self.dim, "pool input width");
+        self.dim
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
         let inv = 1.0 / self.patches as f32;
-        let mut y = Mat::zeros(x.rows, self.dim);
         for i in 0..x.rows {
             let xin = x.row(i);
             let yr = &mut y.data[i * self.dim..(i + 1) * self.dim];
+            yr.fill(0.0);
             for p in 0..self.patches {
                 let chunk = &xin[p * self.dim..(p + 1) * self.dim];
                 for (o, &v) in yr.iter_mut().zip(chunk) {
@@ -207,21 +227,19 @@ impl Layer for PatchMeanPool {
                 *o *= inv;
             }
         }
-        (y, Cache::default())
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        _cache: &Cache,
+        _x: &Mat,
+        _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
-        if !need_gx {
-            return (None, Vec::new());
-        }
+        gx: Option<&mut Mat>,
+        _pg: &mut [Vec<f32>],
+    ) {
+        let Some(gx) = gx else { return };
         let inv = 1.0 / self.patches as f32;
-        let mut gx = Mat::zeros(gy.rows, self.patches * self.dim);
         for i in 0..gy.rows {
             let grow = gy.row(i);
             let out = &mut gx.data
@@ -233,7 +251,6 @@ impl Layer for PatchMeanPool {
                 }
             }
         }
-        (Some(gx), Vec::new())
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -243,19 +260,18 @@ impl Layer for PatchMeanPool {
     fn params_mut(&mut self) -> Vec<&mut [f32]> {
         Vec::new()
     }
+
+    fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut [f32])) {}
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::native::layer::{run_layer_backward, run_layer_forward};
     use crate::rng::Pcg64;
 
     fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
         Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
-    }
-
-    fn exact_ctx(rng: &mut Pcg64) -> SketchCtx<'_> {
-        SketchCtx { sketch: None, rng }
     }
 
     #[test]
@@ -265,7 +281,7 @@ mod tests {
         assert_eq!(pf.patch_dim, 12);
         let mut rng = Pcg64::new(1, 0);
         let x = randmat(2, 48, &mut rng);
-        let (y, cache) = pf.forward(&x);
+        let (y, mut cache) = run_layer_forward(&pf, &x);
         // same multiset of values per row
         let mut a = x.row(0).to_vec();
         let mut b = y.row(0).to_vec();
@@ -278,7 +294,8 @@ mod tests {
         assert_eq!(y.at(0, 6), x.at(0, 12)); // (1,0,ch0) = in-index 4*3
         // backward(forward-output) restores the input ordering
         let mut g = Pcg64::new(0, 0);
-        let (gx, _) = pf.backward(&y, &cache, &mut exact_ctx(&mut g), true);
+        let (gx, _) =
+            run_layer_backward(&pf, &y, &x, &mut cache, None, &mut g, true);
         assert_eq!(gx.unwrap().data, x.data);
     }
 
@@ -287,7 +304,7 @@ mod tests {
         let pc = PatchConv::he(3, 4, 5, 9, 300);
         let mut rng = Pcg64::new(2, 0);
         let x = randmat(2, 12, &mut rng);
-        let (y, _) = pc.forward(&x);
+        let (y, _) = run_layer_forward(&pc, &x);
         assert_eq!((y.rows, y.cols), (2, 15));
         // manual: patch p of sample i maps through the same linear
         for i in 0..2 {
@@ -308,14 +325,16 @@ mod tests {
         let pc = PatchConv::he(4, 6, 8, 3, 300);
         let mut rng = Pcg64::new(5, 0);
         let x = randmat(3, 24, &mut rng);
-        let (y, cache) = pc.forward(&x);
+        let (y, mut cache) = run_layer_forward(&pc, &x);
         let gy = randmat(y.rows, y.cols, &mut rng);
         let mut g1 = Pcg64::new(0, 0);
-        let (gx_e, pg_e) = pc.backward(&gy, &cache, &mut exact_ctx(&mut g1), true);
+        let (gx_e, pg_e) =
+            run_layer_backward(&pc, &gy, &x, &mut cache, None, &mut g1, true);
         let site = super::super::layer::SiteSketch { method: "l1".into(), budget: 1.0 };
         let mut g2 = Pcg64::new(0, 0);
-        let mut ctx = SketchCtx { sketch: Some(&site), rng: &mut g2 };
-        let (gx_s, pg_s) = pc.backward(&gy, &cache, &mut ctx, true);
+        let (gx_s, pg_s) = run_layer_backward(
+            &pc, &gy, &x, &mut cache, Some(&site), &mut g2, true,
+        );
         for (a, b) in pg_e[0].iter().zip(&pg_s[0]) {
             assert!((a - b).abs() < 1e-4);
         }
@@ -328,11 +347,12 @@ mod tests {
     fn mean_pool_averages_and_spreads_gradient() {
         let pool = PatchMeanPool { patches: 2, dim: 3 };
         let x = Mat::from_rows(vec![vec![1.0, 2.0, 3.0, 3.0, 4.0, 5.0]]);
-        let (y, cache) = pool.forward(&x);
+        let (y, mut cache) = run_layer_forward(&pool, &x);
         assert_eq!(y.data, vec![2.0, 3.0, 4.0]);
         let gy = Mat::from_rows(vec![vec![2.0, 4.0, 6.0]]);
         let mut g = Pcg64::new(0, 0);
-        let (gx, _) = pool.backward(&gy, &cache, &mut exact_ctx(&mut g), true);
+        let (gx, _) =
+            run_layer_backward(&pool, &gy, &x, &mut cache, None, &mut g, true);
         assert_eq!(gx.unwrap().data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
     }
 }

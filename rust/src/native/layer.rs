@@ -1,24 +1,30 @@
 //! The composable module API of the native backend: the [`Layer`] trait,
-//! its per-layer forward [`Cache`], the [`SketchCtx`] handed to every
+//! its per-layer scratch [`Cache`], the [`SketchCtx`] handed to every
 //! backward call, the flat [`Grads`] parameter-gradient registry, and the
 //! two primitive layers everything else is built from ([`Linear`],
 //! [`Relu`]).
 //!
-//! A layer is a pure function plus parameters: `forward` maps a batch
-//! matrix to a batch matrix and records whatever the backward needs in a
-//! [`Cache`]; `backward` maps the output gradient back to an input gradient
-//! and per-parameter gradients. Layers that support the paper's column
-//! sketch report `sketchable() == true` and read their per-site decision
-//! from the [`SketchCtx`] — exact when `ctx.sketch` is `None`, the §4.2
-//! column estimator otherwise. [`crate::native::Sequential`] owns the tape
-//! and drives the reverse sweep.
+//! Since the view-based kernel redesign (DESIGN.md §7.2) every layer is a
+//! *destination-passing* function: `forward` writes its output into a
+//! caller-provided matrix and records extra intermediates in a
+//! preallocated [`Cache`]; `backward` maps the output gradient back into a
+//! caller-provided input-gradient buffer and overwrites its
+//! parameter-gradient slots. The caller (a
+//! [`crate::native::Workspace`] owned by [`crate::native::Sequential`])
+//! sizes every buffer once at build via [`Layer::out_dim`] /
+//! [`Layer::cache_shapes`], so a steady-state training step allocates
+//! nothing.
+//!
+//! Layers that support the paper's column sketch report
+//! `sketchable() == true` and read their per-site decision from the
+//! [`SketchCtx`] — exact when `ctx.sketch` is `None`, the §4.2 column
+//! estimator otherwise. Exact backwards consume no gate randomness.
 
 use crate::rng::Pcg64;
-use crate::sketch::{
-    column_scores, correlated_bernoulli, independent_bernoulli, kept_columns,
-    pstar_from_weights,
+use crate::sketch::SketchScratch;
+use crate::tensor::{
+    gemm_into, sparse_dw_into, sparse_dx_into, Mat, MatView, MatViewMut,
 };
-use crate::tensor::{matmul, sparse_dw, sparse_dx, Mat};
 
 /// Column-sketch methods the native backward supports (the coordinate and
 /// uniform-column families of §4.2; spectral and row/element masks stay
@@ -28,12 +34,27 @@ pub const NATIVE_METHODS: &[&str] = &[
     "var_sq", "ds",
 ];
 
-/// Forward intermediates one layer saves for its backward pass. A plain bag
-/// of matrices: each layer documents what it stores at which index.
+/// Per-layer scratch arena: the matrices a layer's forward saves for its
+/// backward plus the backward's own temporaries, preallocated from
+/// [`Layer::cache_shapes`] and reused every step. Each layer documents
+/// what it stores at which index.
 #[derive(Default)]
 pub struct Cache {
-    /// The cached matrices, in the order the layer's `forward` pushed them.
+    /// The cached matrices, in the layer's documented order.
     pub mats: Vec<Mat>,
+}
+
+impl Cache {
+    /// Allocate the cache `layer` needs for a `batch × din` input.
+    pub fn for_layer(layer: &dyn Layer, batch: usize, din: usize) -> Cache {
+        Cache {
+            mats: layer
+                .cache_shapes(batch, din)
+                .into_iter()
+                .map(|(r, c)| Mat::zeros(r, c))
+                .collect(),
+        }
+    }
 }
 
 /// The resolved sketch decision for one backward site: which score method
@@ -50,47 +71,75 @@ pub struct SiteSketch {
 }
 
 /// Per-layer context for one backward call: the site's sketch decision (or
-/// `None` for the exact path) and the run's gate-randomness stream. Exact
-/// sites consume no randomness, which is what keeps `location="none"` runs
-/// bit-identical to the baseline.
+/// `None` for the exact path), the run's gate-randomness stream, and the
+/// shared column-planning scratch. Exact sites consume no randomness,
+/// which is what keeps `location="none"` runs bit-identical to the
+/// baseline.
 pub struct SketchCtx<'a> {
     /// Sketch decision for this site; `None` means exact backward.
     pub sketch: Option<&'a SiteSketch>,
     /// The trainer's gate-randomness stream.
     pub rng: &'a mut Pcg64,
+    /// Reused buffers for scores / waterfilling / gates / kept columns.
+    pub scratch: &'a mut SketchScratch,
 }
 
 /// One differentiable module in a [`crate::native::Sequential`] stack.
 ///
-/// Implementations must uphold two contracts the container relies on:
-/// the order of tensors returned by [`Layer::params`],
-/// [`Layer::params_mut`] and the param-gradient list of
-/// [`Layer::backward`] must agree, and a backward with `ctx.sketch ==
-/// None` must consume no randomness from `ctx.rng`.
+/// Implementations must uphold the contracts the container relies on:
+///
+/// * the tensor order of [`Layer::params`], [`Layer::params_mut`] and the
+///   `pg` slots of [`Layer::backward`] agree;
+/// * `backward` with `ctx.sketch == None` consumes no randomness from
+///   `ctx.rng`;
+/// * `forward` fully overwrites `y` and `backward` fully overwrites `gx`
+///   (when given) and every `pg` slot — buffers are reused across steps
+///   and arrive dirty.
 pub trait Layer {
     /// Short name for logs and debugging ("linear", "attention", …).
     fn name(&self) -> &'static str;
 
-    /// Forward pass on a batch: returns the output and the cache the
-    /// backward needs.
-    fn forward(&self, x: &Mat) -> (Mat, Cache);
+    /// Output width for an input of width `din` (also validates `din`);
+    /// the workspace uses it to size activation/gradient buffers.
+    fn out_dim(&self, din: usize) -> usize;
 
-    /// Backward pass: maps the output gradient `gy` to the input gradient
-    /// (when `need_gx`; the first layer of a stack skips it) and one flat
-    /// gradient per parameter tensor, in [`Layer::params`] order.
+    /// Shapes of the scratch matrices this layer needs in its [`Cache`]
+    /// for a `batch × din` input (empty by default).
+    fn cache_shapes(&self, batch: usize, din: usize) -> Vec<(usize, usize)> {
+        let _ = (batch, din);
+        Vec::new()
+    }
+
+    /// Forward pass on a batch: write the output into `y`
+    /// (`batch × out_dim`) and record whatever the backward needs in
+    /// `cache`.
+    fn forward(&self, x: &Mat, y: &mut Mat, cache: &mut Cache);
+
+    /// Backward pass: map the output gradient `gy` to the input gradient
+    /// (written into `gx` when present; the first layer of a stack passes
+    /// `None`) and overwrite one flat gradient slot per parameter tensor,
+    /// in [`Layer::params`] order. `x` is the same input the forward saw
+    /// (the workspace keeps it alive — layers no longer clone it).
     fn backward(
         &self,
         gy: &Mat,
-        cache: &Cache,
+        x: &Mat,
+        cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>);
+        gx: Option<&mut Mat>,
+        pg: &mut [Vec<f32>],
+    );
 
     /// Flat views of this layer's parameter tensors (empty if none).
     fn params(&self) -> Vec<&[f32]>;
 
     /// Mutable flat views, same order as [`Layer::params`].
     fn params_mut(&mut self) -> Vec<&mut [f32]>;
+
+    /// Visit every parameter tensor in [`Layer::params`] order without
+    /// building a `Vec` — the optimizer's per-step walk, kept
+    /// allocation-free.
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut [f32]));
 
     /// Whether this layer is a sketch site (reads `ctx.sketch`).
     fn sketchable(&self) -> bool {
@@ -101,6 +150,37 @@ pub trait Layer {
     fn num_params(&self) -> usize {
         self.params().iter().map(|p| p.len()).sum()
     }
+}
+
+/// Run a layer's forward through freshly allocated buffers — convenience
+/// for tests, probes and offline tools; the training path goes through a
+/// [`crate::native::Workspace`] instead.
+pub fn run_layer_forward(layer: &dyn Layer, x: &Mat) -> (Mat, Cache) {
+    let mut y = Mat::zeros(x.rows, layer.out_dim(x.cols));
+    let mut cache = Cache::for_layer(layer, x.rows, x.cols);
+    layer.forward(x, &mut y, &mut cache);
+    (y, cache)
+}
+
+/// Run a layer's backward through freshly allocated buffers (see
+/// [`run_layer_forward`]). Returns the input gradient (when `need_gx`)
+/// and one flat gradient per parameter tensor.
+pub fn run_layer_backward(
+    layer: &dyn Layer,
+    gy: &Mat,
+    x: &Mat,
+    cache: &mut Cache,
+    sketch: Option<&SiteSketch>,
+    rng: &mut Pcg64,
+    need_gx: bool,
+) -> (Option<Mat>, Vec<Vec<f32>>) {
+    let mut scratch = SketchScratch::new();
+    let mut ctx = SketchCtx { sketch, rng, scratch: &mut scratch };
+    let mut pg: Vec<Vec<f32>> =
+        layer.params().iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut gx = if need_gx { Some(Mat::zeros(x.rows, x.cols)) } else { None };
+    layer.backward(gy, x, cache, &mut ctx, gx.as_mut(), &mut pg);
+    (gx, pg)
 }
 
 /// Per-parameter-tensor gradients in the model's global slot order (layer
@@ -141,49 +221,110 @@ impl Grads {
     }
 }
 
-/// `z = x·Wᵀ + b` for row-major `W: [d_out, d_in]`.
-pub fn affine(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
-    let wt = w.transpose();
-    let mut z = matmul(x, &wt);
-    for i in 0..z.rows {
-        let row = &mut z.data[i * z.cols..(i + 1) * z.cols];
+/// `y = x·Wᵀ + b` for row-major `W: [d_out, d_in]`, written into `y` —
+/// one transpose-flagged GEMM, no materialized `Wᵀ`.
+pub fn affine_into(x: MatView<'_>, w: &Mat, b: &[f32], mut y: MatViewMut<'_>) {
+    gemm_into(1.0, x, false, w.view(), true, 0.0, y.rb());
+    for i in 0..y.rows {
+        let row = &mut y.data[i * y.cols..(i + 1) * y.cols];
         for (v, bj) in row.iter_mut().zip(b) {
             *v += bj;
         }
     }
-    z
 }
 
-/// Exact linear backward: (dW, db, dX if requested).
+/// `z = x·Wᵀ + b` (allocating wrapper over [`affine_into`]).
+pub fn affine(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
+    let mut y = Mat::zeros(x.rows, w.rows);
+    affine_into(x.view(), w, b, y.view_mut());
+    y
+}
+
+/// Column sums of `g` into `db` (the bias gradient), overwriting.
+fn column_sums_into(g: MatView<'_>, db: &mut [f32]) {
+    db.fill(0.0);
+    for i in 0..g.rows {
+        for (o, &v) in db.iter_mut().zip(g.row(i)) {
+            *o += v;
+        }
+    }
+}
+
+/// Exact linear backward into caller buffers: dW = Gᵀ·X, db = Gᵀ·1 and
+/// (when `dx` is given) dX = G·W.
+pub fn exact_linear_backward_into(
+    g: MatView<'_>,
+    x: MatView<'_>,
+    w: &Mat,
+    dw: MatViewMut<'_>,
+    db: &mut [f32],
+    dx: Option<MatViewMut<'_>>,
+) {
+    gemm_into(1.0, g, true, x, false, 0.0, dw);
+    column_sums_into(g, db);
+    if let Some(dx) = dx {
+        gemm_into(1.0, g, false, w.view(), false, 0.0, dx);
+    }
+}
+
+/// Exact linear backward (allocating wrapper): (dW, db, dX if requested).
 pub fn exact_linear_backward(
     g: &Mat,
     x: &Mat,
     w: &Mat,
     need_dx: bool,
 ) -> (Mat, Vec<f32>, Option<Mat>) {
-    let dw = matmul(&g.transpose(), x);
-    let db = column_sums(g);
-    let dx = if need_dx { Some(matmul(g, w)) } else { None };
+    let mut dw = Mat::zeros(w.rows, w.cols);
+    let mut db = vec![0.0f32; g.cols];
+    let mut dx = if need_dx { Some(Mat::zeros(g.rows, w.cols)) } else { None };
+    exact_linear_backward_into(
+        g.view(),
+        x.view(),
+        w,
+        dw.view_mut(),
+        &mut db,
+        dx.as_mut().map(|m| m.view_mut()),
+    );
     (dw, db, dx)
 }
 
-fn column_sums(g: &Mat) -> Vec<f32> {
-    let mut out = vec![0.0f32; g.cols];
-    for i in 0..g.rows {
-        for (o, &v) in out.iter_mut().zip(g.row(i)) {
-            *o += v;
-        }
-    }
-    out
-}
-
-/// The paper's sketched linear backward on native matrices.
+/// The paper's sketched linear backward into caller buffers.
 ///
 /// Draws keep-probabilities from the method's column scores (waterfilling,
 /// Algorithm 1), gates columns with correlated (systematic, Algorithm 2) or
 /// independent Bernoulli sampling (`per_column` and `*_ind` methods), and
 /// computes dX = Ĝ·W, dW = Ĝᵀ·X, db = Ĝᵀ·1 touching only kept columns with
-/// the unbiased 1/pᵢ rescale. Returns (dW, db, dX if requested).
+/// the unbiased 1/pᵢ rescale. All planning buffers come from `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn sketched_linear_backward_into(
+    g: MatView<'_>,
+    x: MatView<'_>,
+    w: &Mat,
+    method: &str,
+    budget: f64,
+    rng: &mut Pcg64,
+    scratch: &mut SketchScratch,
+    dw: MatViewMut<'_>,
+    db: &mut [f32],
+    dx: Option<MatViewMut<'_>>,
+) {
+    let kept = scratch.plan_columns(method, budget, g, Some(w), rng);
+    sparse_dw_into(g, kept, x, dw);
+    db.fill(0.0);
+    for &(j, inv) in kept {
+        let mut s = 0.0f32;
+        for i in 0..g.rows {
+            s += g.at(i, j);
+        }
+        db[j] = s * inv;
+    }
+    if let Some(dx) = dx {
+        sparse_dx_into(g, kept, w.view(), dx);
+    }
+}
+
+/// Sketched linear backward (allocating wrapper): (dW, db, dX if
+/// requested).
 pub fn sketched_linear_backward(
     g: &Mat,
     x: &Mat,
@@ -193,47 +334,41 @@ pub fn sketched_linear_backward(
     rng: &mut Pcg64,
     need_dx: bool,
 ) -> (Mat, Vec<f32>, Option<Mat>) {
-    let dout = g.cols;
-    let p: Vec<f32> = if method == "per_column" {
-        vec![budget.clamp(1e-6, 1.0) as f32; dout]
-    } else {
-        let scores = column_scores(method, g, Some(w));
-        pstar_from_weights(&scores, budget * dout as f64)
-    };
-    let independent = method == "per_column" || method.ends_with("_ind");
-    let z = if independent {
-        independent_bernoulli(rng, &p)
-    } else {
-        correlated_bernoulli(rng, &p)
-    };
-    let kept = kept_columns(&z, &p);
-    let dw = sparse_dw(g, &kept, x);
-    let mut db = vec![0.0f32; dout];
-    for &(j, inv) in &kept {
-        let mut s = 0.0f32;
-        for i in 0..g.rows {
-            s += g.at(i, j);
-        }
-        db[j] = s * inv;
-    }
-    let dx = if need_dx { Some(sparse_dx(g, &kept, w)) } else { None };
+    let mut scratch = SketchScratch::new();
+    let mut dw = Mat::zeros(w.rows, w.cols);
+    let mut db = vec![0.0f32; g.cols];
+    let mut dx = if need_dx { Some(Mat::zeros(g.rows, w.cols)) } else { None };
+    sketched_linear_backward_into(
+        g.view(),
+        x.view(),
+        w,
+        method,
+        budget,
+        rng,
+        &mut scratch,
+        dw.view_mut(),
+        &mut db,
+        dx.as_mut().map(|m| m.view_mut()),
+    );
     (dw, db, dx)
 }
 
 /// Dispatch one linear backward through the context: exact when the site is
 /// ungated, sketched otherwise. Shared by every sketchable layer.
 pub(crate) fn linear_backward_ctx(
-    g: &Mat,
-    x: &Mat,
+    g: MatView<'_>,
+    x: MatView<'_>,
     w: &Mat,
     ctx: &mut SketchCtx<'_>,
-    need_dx: bool,
-) -> (Mat, Vec<f32>, Option<Mat>) {
+    dw: MatViewMut<'_>,
+    db: &mut [f32],
+    dx: Option<MatViewMut<'_>>,
+) {
     match ctx.sketch {
-        Some(s) => {
-            sketched_linear_backward(g, x, w, &s.method, s.budget, ctx.rng, need_dx)
-        }
-        None => exact_linear_backward(g, x, w, need_dx),
+        Some(s) => sketched_linear_backward_into(
+            g, x, w, &s.method, s.budget, ctx.rng, ctx.scratch, dw, db, dx,
+        ),
+        None => exact_linear_backward_into(g, x, w, dw, db, dx),
     }
 }
 
@@ -277,21 +412,34 @@ impl Layer for Linear {
         "linear"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
-        let y = affine(x, &self.w, &self.b);
-        (y, Cache { mats: vec![x.clone()] })
+    fn out_dim(&self, din: usize) -> usize {
+        assert_eq!(din, self.din(), "linear input width");
+        self.dout()
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
+        affine_into(x.view(), &self.w, &self.b, y.view_mut());
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        cache: &Cache,
+        x: &Mat,
+        _cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
-        need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
-        let x = &cache.mats[0];
-        let (dw, db, gx) = linear_backward_ctx(gy, x, &self.w, ctx, need_gx);
-        (gx, vec![dw.data, db])
+        gx: Option<&mut Mat>,
+        pg: &mut [Vec<f32>],
+    ) {
+        let [dw, db] = pg else { panic!("linear has 2 param slots") };
+        linear_backward_ctx(
+            gy.view(),
+            x.view(),
+            &self.w,
+            ctx,
+            MatViewMut::new(self.w.rows, self.w.cols, dw),
+            db,
+            gx.map(|m| m.view_mut()),
+        );
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -302,12 +450,18 @@ impl Layer for Linear {
         vec![&mut self.w.data, &mut self.b]
     }
 
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        f(&mut self.w.data);
+        f(&mut self.b);
+    }
+
     fn sketchable(&self) -> bool {
         true
     }
 }
 
-/// Elementwise rectifier; caches its input for the derivative mask.
+/// Elementwise rectifier; the derivative mask reads the workspace-held
+/// input directly (nothing cached).
 pub struct Relu;
 
 impl Layer for Relu {
@@ -315,30 +469,32 @@ impl Layer for Relu {
         "relu"
     }
 
-    fn forward(&self, x: &Mat) -> (Mat, Cache) {
-        let mut y = x.clone();
-        for v in &mut y.data {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
+    fn out_dim(&self, din: usize) -> usize {
+        din
+    }
+
+    fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
+        for (o, &v) in y.data.iter_mut().zip(&x.data) {
+            *o = if v < 0.0 { 0.0 } else { v };
         }
-        (y, Cache { mats: vec![x.clone()] })
     }
 
     fn backward(
         &self,
         gy: &Mat,
-        cache: &Cache,
+        x: &Mat,
+        _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
-        _need_gx: bool,
-    ) -> (Option<Mat>, Vec<Vec<f32>>) {
-        let mut gx = gy.clone();
-        for (v, &zv) in gx.data.iter_mut().zip(&cache.mats[0].data) {
-            if zv <= 0.0 {
-                *v = 0.0;
+        gx: Option<&mut Mat>,
+        _pg: &mut [Vec<f32>],
+    ) {
+        if let Some(gx) = gx {
+            for ((o, &g), &zv) in
+                gx.data.iter_mut().zip(&gy.data).zip(&x.data)
+            {
+                *o = if zv <= 0.0 { 0.0 } else { g };
             }
         }
-        (Some(gx), Vec::new())
     }
 
     fn params(&self) -> Vec<&[f32]> {
@@ -348,6 +504,8 @@ impl Layer for Relu {
     fn params_mut(&mut self) -> Vec<&mut [f32]> {
         Vec::new()
     }
+
+    fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut [f32])) {}
 }
 
 #[cfg(test)]
@@ -396,16 +554,41 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        // the workspace reuses gradient slots across steps; a backward must
+        // not accumulate into stale contents
+        let mut rng = Pcg64::new(21, 0);
+        let g = randmat(6, 4, &mut rng);
+        let x = randmat(6, 3, &mut rng);
+        let w = randmat(4, 3, &mut rng);
+        let (dw_ref, db_ref, dx_ref) = exact_linear_backward(&g, &x, &w, true);
+        let mut dw = Mat::from_fn(4, 3, |_, _| f32::NAN);
+        let mut db = vec![f32::NAN; 4];
+        let mut dx = Mat::from_fn(6, 3, |_, _| f32::NAN);
+        exact_linear_backward_into(
+            g.view(),
+            x.view(),
+            &w,
+            dw.view_mut(),
+            &mut db,
+            Some(dx.view_mut()),
+        );
+        assert_eq!(dw.data, dw_ref.data);
+        assert_eq!(db, db_ref);
+        assert_eq!(dx.data, dx_ref.unwrap().data);
+    }
+
+    #[test]
     fn linear_layer_backward_matches_dense() {
         let mut rng = Pcg64::new(3, 0);
         let lin = Linear::he(5, 4, 7, 300);
         let x = randmat(6, 5, &mut rng);
-        let (y, cache) = lin.forward(&x);
+        let (y, mut cache) = run_layer_forward(&lin, &x);
         assert_eq!((y.rows, y.cols), (6, 4));
         let gy = randmat(6, 4, &mut rng);
         let mut gate = Pcg64::new(0, 0);
-        let mut ctx = SketchCtx { sketch: None, rng: &mut gate };
-        let (gx, pg) = lin.backward(&gy, &cache, &mut ctx, true);
+        let (gx, pg) =
+            run_layer_backward(&lin, &gy, &x, &mut cache, None, &mut gate, true);
         let (dx_ref, dw_ref) = dense_backward(&gy, &x, &lin.w);
         for (a, b) in pg[0].iter().zip(&dw_ref.data) {
             assert!((a - b).abs() < 1e-5);
@@ -423,12 +606,12 @@ mod tests {
     #[test]
     fn relu_masks_gradient_at_nonpositive_inputs() {
         let x = Mat::from_rows(vec![vec![-1.0, 0.0, 2.0]]);
-        let (y, cache) = Relu.forward(&x);
+        let (y, mut cache) = run_layer_forward(&Relu, &x);
         assert_eq!(y.data, vec![0.0, 0.0, 2.0]);
         let gy = Mat::from_rows(vec![vec![1.0, 1.0, 1.0]]);
         let mut gate = Pcg64::new(0, 0);
-        let mut ctx = SketchCtx { sketch: None, rng: &mut gate };
-        let (gx, pg) = Relu.backward(&gy, &cache, &mut ctx, true);
+        let (gx, pg) =
+            run_layer_backward(&Relu, &gy, &x, &mut cache, None, &mut gate, true);
         assert_eq!(gx.unwrap().data, vec![0.0, 0.0, 1.0]);
         assert!(pg.is_empty());
     }

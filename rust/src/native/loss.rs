@@ -24,9 +24,8 @@ impl LossKind {
     }
 }
 
-/// Row-wise softmax probabilities (numerically stable).
-fn softmax_rows(logits: &Mat) -> Mat {
-    let mut out = logits.clone();
+/// Row-wise softmax probabilities (numerically stable), in place.
+fn softmax_rows_inplace(out: &mut Mat) {
     for i in 0..out.rows {
         let row = &mut out.data[i * out.cols..(i + 1) * out.cols];
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -39,16 +38,24 @@ fn softmax_rows(logits: &Mat) -> Mat {
             *v /= sum;
         }
     }
-    out
 }
 
-/// Mean loss and its gradient w.r.t. the logits.
-pub fn loss_and_grad(kind: LossKind, logits: &Mat, y: &[i32]) -> (f64, Mat) {
+/// Mean loss, with its gradient w.r.t. the logits written into the
+/// caller's buffer (same shape as `logits`; fully overwritten) — the
+/// workspace path, no allocation.
+pub fn loss_and_grad_into(
+    kind: LossKind,
+    logits: &Mat,
+    y: &[i32],
+    g: &mut Mat,
+) -> f64 {
     let (b, c) = (logits.rows, logits.cols);
     assert_eq!(y.len(), b, "label batch size");
+    assert_eq!((g.rows, g.cols), (b, c), "loss gradient shape");
+    g.data.copy_from_slice(&logits.data);
     match kind {
         LossKind::CrossEntropy => {
-            let mut g = softmax_rows(logits);
+            softmax_rows_inplace(g);
             let mut loss = 0.0f64;
             for (i, &yi) in y.iter().enumerate() {
                 let p = g.at(i, yi as usize).max(1e-12);
@@ -58,10 +65,9 @@ pub fn loss_and_grad(kind: LossKind, logits: &Mat, y: &[i32]) -> (f64, Mat) {
             for v in &mut g.data {
                 *v /= b as f32;
             }
-            (loss / b as f64, g)
+            loss / b as f64
         }
         LossKind::Mse => {
-            let mut g = logits.clone();
             let mut loss = 0.0f64;
             for (i, &yi) in y.iter().enumerate() {
                 g.data[i * c + yi as usize] -= 1.0;
@@ -74,14 +80,52 @@ pub fn loss_and_grad(kind: LossKind, logits: &Mat, y: &[i32]) -> (f64, Mat) {
             for v in &mut g.data {
                 *v *= scale;
             }
-            (loss / n, g)
+            loss / n
         }
     }
 }
 
-/// Mean loss only (no gradient) — the evaluation path.
+/// Mean loss and its gradient w.r.t. the logits (allocating wrapper over
+/// [`loss_and_grad_into`]).
+pub fn loss_and_grad(kind: LossKind, logits: &Mat, y: &[i32]) -> (f64, Mat) {
+    let mut g = Mat::zeros(logits.rows, logits.cols);
+    let loss = loss_and_grad_into(kind, logits, y, &mut g);
+    (loss, g)
+}
+
+/// Mean loss only (no gradient) — the evaluation path, allocation-free.
+/// Per-row arithmetic matches [`loss_and_grad_into`] operation for
+/// operation (same `exp`/divide rounding, same clamp), just without
+/// materializing the gradient.
 pub fn loss_value(kind: LossKind, logits: &Mat, y: &[i32]) -> f64 {
-    loss_and_grad(kind, logits, y).0
+    let (b, c) = (logits.rows, logits.cols);
+    assert_eq!(y.len(), b, "label batch size");
+    match kind {
+        LossKind::CrossEntropy => {
+            let mut loss = 0.0f64;
+            for (i, &yi) in y.iter().enumerate() {
+                let row = logits.row(i);
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for &v in row {
+                    sum += (v - m).exp();
+                }
+                let p = ((row[yi as usize] - m).exp() / sum).max(1e-12);
+                loss -= (p as f64).ln();
+            }
+            loss / b as f64
+        }
+        LossKind::Mse => {
+            let mut loss = 0.0f64;
+            for (i, &yi) in y.iter().enumerate() {
+                for (j, &v) in logits.row(i).iter().enumerate() {
+                    let r = if j == yi as usize { v - 1.0 } else { v };
+                    loss += (r as f64) * (r as f64);
+                }
+            }
+            loss / (b * c) as f64
+        }
+    }
 }
 
 /// Fraction of rows whose argmax matches the label.

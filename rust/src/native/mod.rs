@@ -1,30 +1,35 @@
 //! CPU-native training backend: the paper's sketched backward, end to end,
-//! on a composable module API.
+//! on a composable module API over view-based, destination-passing
+//! kernels.
 //!
 //! The PJRT path ([`crate::runtime`]) executes AOT-compiled JAX graphs;
 //! this module is the self-contained alternative (DESIGN.md §7): models are
-//! [`Sequential`] stacks of [`Layer`] modules whose forwards run on
-//! [`crate::tensor::Mat`] and whose backwards are written by hand per
+//! [`Sequential`] stacks of [`Layer`] modules whose forwards write into a
+//! preallocated [`Workspace`] and whose backwards are written by hand per
 //! layer, so the paper's randomized VJP estimators plug in exactly where
 //! the math says they do —
 //!
-//! 1. column scores on the output gradient ([`crate::sketch::column_scores`]),
-//! 2. waterfilled keep-probabilities ([`crate::sketch::pstar_from_weights`]),
+//! 1. column scores on the output gradient
+//!    ([`crate::sketch::SketchScratch::plan_columns`]),
+//! 2. waterfilled keep-probabilities (Algorithm 1),
 //! 3. correlated (systematic) or independent Bernoulli gates,
-//! 4. 1/pᵢ-rescaled kept-column GEMMs ([`crate::tensor::sparse_dx`] /
-//!    [`crate::tensor::sparse_dw`]).
+//! 4. 1/pᵢ-rescaled kept-column GEMMs ([`crate::tensor::sparse_dx_into`] /
+//!    [`crate::tensor::sparse_dw_into`]).
 //!
-//! Because the sparse GEMMs really skip dropped columns, wall-clock shrinks
-//! with the budget (Eq. 6's ρ(V)) — `cargo bench native_bwd` measures it —
-//! while unbiasedness keeps SGD convergent (`tests/native_unbiased.rs`
-//! checks E[ĝ] = g by Monte Carlo).
+//! Because the sparse GEMMs really skip dropped columns — against a
+//! blocked, multi-threaded dense baseline with no data-dependent
+//! shortcuts — wall-clock shrinks with the budget (Eq. 6's ρ(V));
+//! `cargo bench gemm_scaling` measures it kernel-vs-kernel while
+//! unbiasedness keeps SGD convergent (`tests/native_unbiased.rs` checks
+//! E[ĝ] = g by Monte Carlo).
 //!
 //! Submodules: [`layer`] (the `Layer` trait, `Linear`/`Relu`, the sketched
 //! linear backward), [`conv`] (BagNet-lite patch layers), [`attention`]
-//! (ViT-lite blocks), [`sequential`] (the container + `SketchPolicy`),
-//! [`models`] (the registry of named architectures), [`loss`]
-//! (cross-entropy / MSE heads), [`optim`] (SGD, momentum, Adam, gradient
-//! clipping), [`trainer`] (the training loop behind `--backend native`).
+//! (ViT-lite blocks), [`sequential`] (the container + `Workspace` +
+//! `SketchPolicy`), [`models`] (the registry of named architectures),
+//! [`loss`] (cross-entropy / MSE heads), [`optim`] (SGD, momentum, Adam,
+//! gradient clipping), [`trainer`] (the training loop behind
+//! `--backend native`).
 
 pub mod attention;
 pub mod conv;
@@ -38,10 +43,12 @@ pub mod trainer;
 pub use attention::{Attention, FfnBlock, LayerNorm, PosEmbed};
 pub use conv::{PatchConv, PatchMeanPool, Patchify};
 pub use layer::{
-    affine, exact_linear_backward, sketched_linear_backward, Cache, Grads,
-    Layer, Linear, Relu, SiteSketch, SketchCtx, NATIVE_METHODS,
+    affine, affine_into, exact_linear_backward, exact_linear_backward_into,
+    run_layer_backward, run_layer_forward, sketched_linear_backward,
+    sketched_linear_backward_into, Cache, Grads, Layer, Linear, Relu,
+    SiteSketch, SketchCtx, NATIVE_METHODS,
 };
-pub use loss::{accuracy, loss_and_grad, loss_value, LossKind};
+pub use loss::{accuracy, loss_and_grad, loss_and_grad_into, loss_value, LossKind};
 pub use optim::{clip_global_norm, Optim};
-pub use sequential::{Sequential, SketchPolicy, Tape};
+pub use sequential::{Sequential, SketchPolicy, Workspace};
 pub use trainer::NativeTrainer;

@@ -157,9 +157,10 @@ mod tests {
         let m = mlp(&[5, 4, 3], 0);
         let mut rng = Pcg64::new(1, 0);
         let x = Mat::from_fn(7, 5, |_, _| rng.gaussian() as f32);
-        let tape = m.forward(&x);
-        assert_eq!(tape.caches.len(), 3);
-        assert_eq!((tape.output.rows, tape.output.cols), (7, 3));
+        let mut ws = m.workspace(7, 5);
+        m.forward(&x, &mut ws);
+        assert_eq!(ws.acts.len(), 3);
+        assert_eq!((ws.output().rows, ws.output().cols), (7, 3));
         assert_eq!(m.num_params(), 5 * 4 + 4 + 4 * 3 + 3);
     }
 
@@ -168,10 +169,11 @@ mod tests {
         let m = mlp(&[3, 4, 8], 1);
         let mut rng = Pcg64::new(2, 0);
         let x = Mat::from_fn(16, 3, |_, _| rng.gaussian() as f32);
-        let tape = m.forward(&x);
-        // relu output feeds the cache of the last linear
-        assert!(tape.caches[2].mats[0].data.iter().all(|&v| v >= 0.0));
-        assert!(tape.output.data.iter().any(|&v| v < 0.0));
+        let mut ws = m.workspace(16, 3);
+        m.forward(&x, &mut ws);
+        // the relu activation feeds the last linear
+        assert!(ws.acts[1].data.iter().all(|&v| v >= 0.0));
+        assert!(ws.output().data.iter().any(|&v| v < 0.0));
     }
 
     #[test]
@@ -191,33 +193,43 @@ mod tests {
         let mut rng = Pcg64::new(3, 0);
         let x = Mat::from_fn(2, 3072, |_, _| rng.gaussian() as f32);
         let b = bagnet(0);
-        let tb = b.forward(&x);
-        assert_eq!((tb.output.rows, tb.output.cols), (2, 10));
+        let mut wsb = b.workspace(2, 3072);
+        b.forward(&x, &mut wsb);
+        assert_eq!((wsb.output().rows, wsb.output().cols), (2, 10));
         assert_eq!(b.num_sites(), 3);
         let v = vit(0);
-        let tv = v.forward(&x);
-        assert_eq!((tv.output.rows, tv.output.cols), (2, 10));
+        let mut wsv = v.workspace(2, 3072);
+        v.forward(&x, &mut wsv);
+        assert_eq!((wsv.output().rows, wsv.output().cols), (2, 10));
         assert_eq!(v.num_sites(), 4);
     }
 
     #[test]
     fn backward_matches_finite_differences() {
-        use crate::native::loss::{loss_and_grad, loss_value, LossKind};
+        use crate::native::loss::{loss_and_grad_into, loss_value, LossKind};
         use crate::native::SketchPolicy;
         let m = mlp(&[4, 5, 3], 3);
         let mut rng = Pcg64::new(4, 0);
         let x = Mat::from_fn(6, 4, |_, _| rng.gaussian() as f32);
         let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
-        let tape = m.forward(&x);
-        let (_, dlogits) =
-            loss_and_grad(LossKind::CrossEntropy, &tape.output, &y);
+        let mut ws = m.workspace(6, 4);
+        m.forward(&x, &mut ws);
+        loss_and_grad_into(
+            LossKind::CrossEntropy,
+            ws.acts.last().unwrap(),
+            &y,
+            ws.grads.last_mut().unwrap(),
+        );
         let plan = m.plan(&SketchPolicy::exact()).unwrap();
-        let grads = m.backward(&tape, &dlogits, &plan, &mut rng);
+        m.backward(&x, &mut ws, &plan, &mut rng);
+        let grads = &ws.grad_slots;
         // finite-difference a few weight coordinates of each linear
         let eps = 1e-3f32;
         let mut m2 = mlp(&[4, 5, 3], 3);
         let loss_of = |m2: &Sequential, x: &Mat, y: &[i32]| {
-            loss_value(LossKind::CrossEntropy, &m2.forward(x).output, y)
+            let mut ws = m2.workspace(x.rows, x.cols);
+            m2.forward(x, &mut ws);
+            loss_value(LossKind::CrossEntropy, ws.output(), y)
         };
         for (slot_w, li) in [(0usize, 0usize), (2, 2)] {
             for &idx in &[0usize, 3, 7] {

@@ -1,12 +1,15 @@
-//! [`Sequential`]: the container that owns the layer stack and the tape,
-//! and [`SketchPolicy`]: the per-layer sketch configuration that replaces
+//! [`Sequential`]: the container that owns the layer stack, and
+//! [`Workspace`]: the preallocated arenas one training step runs in.
+//! [`SketchPolicy`] is the per-layer sketch configuration that replaces
 //! the old single global `SketchSpec`.
 //!
-//! The container drives the forward sweep (recording one [`Cache`] per
-//! layer into a [`Tape`]), the reverse sweep (handing each layer its
-//! resolved sketch decision through a [`SketchCtx`]), and the flat
-//! parameter registry (global slot order = layer order × tensor order)
-//! that optimizers, gradient clipping and the variance probes share.
+//! Since the view-based kernel redesign (DESIGN.md §7.2) the container is
+//! destination-passing end to end: [`Sequential::workspace`] sizes one
+//! activation buffer, one gradient buffer and one layer [`Cache`] per
+//! depth — plus the flat parameter-gradient slots and the column-planning
+//! scratch — once at build, and [`Sequential::forward`] /
+//! [`Sequential::backward`] stream every step through those arenas. A
+//! steady-state optimizer step therefore performs no heap allocation.
 //!
 //! Sketch *sites* are the layers reporting [`Layer::sketchable`], numbered
 //! in forward order; [`SketchPolicy::resolve`] maps the config's
@@ -15,6 +18,7 @@
 //! a `location="none"` run is bit-identical to the baseline.
 
 use crate::rng::Pcg64;
+use crate::sketch::SketchScratch;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
 
@@ -120,16 +124,54 @@ impl SketchPolicy {
     }
 }
 
-/// The forward tape: one cache per layer plus the stack output.
-pub struct Tape {
-    /// `caches[i]` is what layer `i` recorded for its backward.
+/// The preallocated arenas one training step runs in: per-depth activation
+/// and gradient buffers, per-layer caches, the flat parameter-gradient
+/// slots, and the column-planning scratch. Built once by
+/// [`Sequential::workspace`] for a fixed `(batch, in_dim)`; every buffer
+/// is overwritten each step (never read before written), so reuse across
+/// steps is safe and steady-state training allocates nothing.
+///
+/// Lifetime rules: a workspace is only valid for the stack that built it
+/// (buffer shapes are per-layer) and for inputs of exactly `batch × in_dim`.
+/// After [`Sequential::forward`], `acts[i]` holds layer i's output —
+/// `backward` reads those as the layers' saved inputs, so the workspace
+/// must not be touched between the two sweeps of one step.
+pub struct Workspace {
+    /// Batch size every buffer is sized for.
+    pub batch: usize,
+    /// Input width the stack was sized for.
+    pub in_dim: usize,
+    /// `acts[i]` = output of layer i (`batch × out_dim(i)`).
+    pub acts: Vec<Mat>,
+    /// `grads[i]` = gradient w.r.t. `acts[i]` (same shapes). The loss
+    /// writes `dL/d(output)` into the last entry before `backward`.
+    pub grads: Vec<Mat>,
+    /// Per-layer scratch ([`Layer::cache_shapes`]).
     pub caches: Vec<Cache>,
-    /// Output of the last layer (the logits for a classifier stack).
-    pub output: Mat,
+    /// Flat parameter-gradient slots, global slot order.
+    pub grad_slots: Grads,
+    /// `slot_offsets[i]..slot_offsets[i+1]` = layer i's slot range (so the
+    /// backward walk never rebuilds the parameter registry).
+    pub slot_offsets: Vec<usize>,
+    /// Reused column-planning buffers for the sketched sites.
+    pub scratch: SketchScratch,
 }
 
-/// A stack of [`Layer`]s applied in order; owns the tape and the flat
-/// parameter registry.
+impl Workspace {
+    /// The stack output (logits) after a [`Sequential::forward`].
+    pub fn output(&self) -> &Mat {
+        self.acts.last().expect("stack is never empty")
+    }
+
+    /// The loss-gradient destination read by [`Sequential::backward`].
+    pub fn grad_out_mut(&mut self) -> &mut Mat {
+        self.grads.last_mut().expect("stack is never empty")
+    }
+}
+
+/// A stack of [`Layer`]s applied in order; owns the layers and the flat
+/// parameter registry. Per-step state lives in a caller-owned
+/// [`Workspace`].
 pub struct Sequential {
     /// The layers, input to output.
     pub layers: Vec<Box<dyn Layer>>,
@@ -172,6 +214,95 @@ impl Sequential {
         self.layers.iter().map(|l| l.params().len()).sum()
     }
 
+    /// Allocate every arena one training step needs for `batch × in_dim`
+    /// inputs: activations, gradients and caches per depth
+    /// ([`Layer::out_dim`] / [`Layer::cache_shapes`] size them), the
+    /// parameter-gradient slots, and the sketch scratch.
+    pub fn workspace(&self, batch: usize, in_dim: usize) -> Workspace {
+        let mut acts = Vec::with_capacity(self.layers.len());
+        let mut caches = Vec::with_capacity(self.layers.len());
+        let mut din = in_dim;
+        for layer in &self.layers {
+            let dout = layer.out_dim(din);
+            acts.push(Mat::zeros(batch, dout));
+            caches.push(Cache::for_layer(layer.as_ref(), batch, din));
+            din = dout;
+        }
+        let grads = acts.iter().map(|a| Mat::zeros(a.rows, a.cols)).collect();
+        let mut slots = Vec::with_capacity(self.num_slots());
+        let mut slot_offsets = Vec::with_capacity(self.layers.len() + 1);
+        slot_offsets.push(0);
+        for layer in &self.layers {
+            for p in layer.params() {
+                slots.push(vec![0.0f32; p.len()]);
+            }
+            slot_offsets.push(slots.len());
+        }
+        Workspace {
+            batch,
+            in_dim,
+            acts,
+            grads,
+            caches,
+            grad_slots: Grads { slots },
+            slot_offsets,
+            scratch: SketchScratch::new(),
+        }
+    }
+
+    /// Forward sweep: stream `x` through every layer, writing each output
+    /// into `ws.acts[i]`. The final activation is the stack output
+    /// ([`Workspace::output`]).
+    pub fn forward(&self, x: &Mat, ws: &mut Workspace) {
+        assert_eq!(
+            (x.rows, x.cols),
+            (ws.batch, ws.in_dim),
+            "workspace sized for a different input shape"
+        );
+        for i in 0..self.layers.len() {
+            let (prev, cur) = ws.acts.split_at_mut(i);
+            let input = if i == 0 { x } else { &prev[i - 1] };
+            self.layers[i].forward(input, &mut cur[0], &mut ws.caches[i]);
+        }
+    }
+
+    /// Reverse sweep under a per-layer `plan` from [`Sequential::plan`],
+    /// starting from the loss gradient the caller wrote into
+    /// `ws.grads.last()` ([`Workspace::grad_out_mut`]). Parameter
+    /// gradients land in `ws.grad_slots`; exact layers consume no
+    /// randomness from `rng`. `x` must be the same batch the forward saw.
+    pub fn backward(
+        &self,
+        x: &Mat,
+        ws: &mut Workspace,
+        plan: &[Option<SiteSketch>],
+        rng: &mut Pcg64,
+    ) {
+        let n = self.layers.len();
+        assert_eq!(plan.len(), n, "plan length");
+        for i in (0..n).rev() {
+            let (slot_start, slot_end) =
+                (ws.slot_offsets[i], ws.slot_offsets[i + 1]);
+            let (gprev, gcur) = ws.grads.split_at_mut(i);
+            let gy: &Mat = &gcur[0];
+            let gx = if i > 0 { Some(&mut gprev[i - 1]) } else { None };
+            let input = if i == 0 { x } else { &ws.acts[i - 1] };
+            let mut ctx = SketchCtx {
+                sketch: plan[i].as_ref(),
+                rng: &mut *rng,
+                scratch: &mut ws.scratch,
+            };
+            self.layers[i].backward(
+                gy,
+                input,
+                &mut ws.caches[i],
+                &mut ctx,
+                gx,
+                &mut ws.grad_slots.slots[slot_start..slot_end],
+            );
+        }
+    }
+
     /// Resolve a policy into one decision per *layer* (`None` everywhere
     /// except gated sketch sites).
     pub fn plan(&self, policy: &SketchPolicy) -> Result<Vec<Option<SiteSketch>>> {
@@ -184,59 +315,15 @@ impl Sequential {
         Ok(plan)
     }
 
-    /// Forward sweep, recording every layer's cache.
-    pub fn forward(&self, x: &Mat) -> Tape {
-        let mut caches = Vec::with_capacity(self.layers.len());
-        let mut h: Option<Mat> = None;
-        for layer in &self.layers {
-            let (y, c) = layer.forward(h.as_ref().unwrap_or(x));
-            caches.push(c);
-            h = Some(y);
-        }
-        Tape { caches, output: h.expect("stack is never empty") }
-    }
-
-    /// Reverse sweep from the loss gradient `dout`, under a per-layer
-    /// `plan` from [`Sequential::plan`]. Exact layers consume no
-    /// randomness from `rng`.
-    pub fn backward(
-        &self,
-        tape: &Tape,
-        dout: &Mat,
-        plan: &[Option<SiteSketch>],
-        rng: &mut Pcg64,
-    ) -> Grads {
-        let n = self.layers.len();
-        assert_eq!(plan.len(), n, "plan length");
-        let mut per_layer: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n);
-        per_layer.resize_with(n, Vec::new);
-        let mut g = dout.clone();
-        for i in (0..n).rev() {
-            let need_gx = i > 0;
-            let mut ctx =
-                SketchCtx { sketch: plan[i].as_ref(), rng: &mut *rng };
-            let (gx, pg) =
-                self.layers[i].backward(&g, &tape.caches[i], &mut ctx, need_gx);
-            per_layer[i] = pg;
-            if let Some(gx) = gx {
-                g = gx;
-            }
-        }
-        let mut slots = Vec::with_capacity(self.num_slots());
-        for pg in per_layer {
-            slots.extend(pg);
-        }
-        Grads { slots }
-    }
-
-    /// One optimizer update over every parameter tensor, global slot order.
+    /// One optimizer update over every parameter tensor, global slot order
+    /// (allocation-free: walks [`Layer::visit_params_mut`]).
     pub fn apply_grads(&mut self, opt: &mut Optim, grads: &Grads, lr: f64) {
         let mut slot = 0;
         for layer in &mut self.layers {
-            for p in layer.params_mut() {
+            layer.visit_params_mut(&mut |p| {
                 opt.update(slot, p, &grads.slots[slot], lr);
                 slot += 1;
-            }
+            });
         }
         debug_assert_eq!(slot, grads.slots.len(), "grad slot count");
     }
@@ -322,28 +409,92 @@ mod tests {
     }
 
     #[test]
-    fn masked_off_layers_consume_no_rng() {
-        use crate::native::loss::{loss_and_grad, LossKind};
+    fn workspace_arenas_match_layer_shapes() {
+        let m = models::mlp(&[5, 4, 3], 0);
+        let ws = m.workspace(6, 5);
+        assert_eq!(ws.acts.len(), 3);
+        assert_eq!((ws.acts[0].rows, ws.acts[0].cols), (6, 4));
+        assert_eq!((ws.acts[2].rows, ws.acts[2].cols), (6, 3));
+        for (a, g) in ws.acts.iter().zip(&ws.grads) {
+            assert_eq!((a.rows, a.cols), (g.rows, g.cols));
+        }
+        assert_eq!(ws.grad_slots.slots.len(), m.num_slots());
+        assert_eq!(ws.grad_slots.slots[0].len(), 5 * 4);
+        assert_eq!(ws.grad_slots.slots[1].len(), 4);
+    }
+
+    #[test]
+    fn workspace_steps_are_reusable_and_deterministic() {
+        use crate::native::loss::{loss_and_grad_into, LossKind};
         use crate::rng::Pcg64;
         use crate::tensor::Mat;
         let m = models::mlp(&[4, 6, 3], 5);
         let mut rng = Pcg64::new(6, 0);
         let x = Mat::from_fn(5, 4, |_, _| rng.gaussian() as f32);
         let y = vec![0i32, 1, 2, 0, 1];
-        let tape = m.forward(&x);
-        let (_, dl) = loss_and_grad(LossKind::CrossEntropy, &tape.output, &y);
+        let plan = m
+            .plan(&SketchPolicy {
+                method: "l1".into(),
+                budget: 0.4,
+                location: "all".into(),
+                schedule: None,
+            })
+            .unwrap();
+        let run = |ws: &mut Workspace| {
+            m.forward(&x, ws);
+            loss_and_grad_into(
+                LossKind::CrossEntropy,
+                ws.acts.last().unwrap(),
+                &y,
+                ws.grads.last_mut().unwrap(),
+            );
+            let mut rng = Pcg64::new(77, 0);
+            m.backward(&x, ws, &plan, &mut rng);
+            ws.grad_slots.flatten()
+        };
+        let mut ws = m.workspace(5, 4);
+        let first = run(&mut ws);
+        // second pass through the SAME (now dirty) workspace must agree —
+        // every buffer is fully overwritten, never accumulated into
+        let second = run(&mut ws);
+        assert_eq!(first, second);
+        // and a fresh workspace agrees too
+        let mut ws2 = m.workspace(5, 4);
+        assert_eq!(first, run(&mut ws2));
+    }
+
+    #[test]
+    fn masked_off_layers_consume_no_rng() {
+        use crate::native::loss::{loss_and_grad_into, LossKind};
+        use crate::rng::Pcg64;
+        use crate::tensor::Mat;
+        let m = models::mlp(&[4, 6, 3], 5);
+        let mut rng = Pcg64::new(6, 0);
+        let x = Mat::from_fn(5, 4, |_, _| rng.gaussian() as f32);
+        let y = vec![0i32, 1, 2, 0, 1];
         let masked = SketchPolicy {
             method: "l1".into(),
             budget: 0.3,
             location: "none".into(),
             schedule: None,
         };
+        let grads_under = |policy: &SketchPolicy, rng: &mut Pcg64| {
+            let mut ws = m.workspace(5, 4);
+            m.forward(&x, &mut ws);
+            loss_and_grad_into(
+                LossKind::CrossEntropy,
+                ws.acts.last().unwrap(),
+                &y,
+                ws.grads.last_mut().unwrap(),
+            );
+            m.backward(&x, &mut ws, &m.plan(policy).unwrap(), rng);
+            ws.grad_slots.flatten()
+        };
         let mut r1 = Pcg64::new(77, 0);
-        let g1 = m.backward(&tape, &dl, &m.plan(&masked).unwrap(), &mut r1);
+        let g1 = grads_under(&masked, &mut r1);
         let mut r2 = Pcg64::new(77, 0);
-        let g2 =
-            m.backward(&tape, &dl, &m.plan(&SketchPolicy::exact()).unwrap(), &mut r2);
-        for (a, b) in g1.slots[0].iter().zip(&g2.slots[0]) {
+        let g2 = grads_under(&SketchPolicy::exact(), &mut r2);
+        for (a, b) in g1.iter().zip(&g2) {
             assert!((a - b).abs() < 1e-5);
         }
         // and the rng stream was untouched by the masked run

@@ -5,19 +5,26 @@
 //! artifacts and the sketched backward's FLOP saving is real wall-clock.
 //! All registered models ([`crate::native::models`]) train here: MLP,
 //! BagNet-lite and ViT-lite.
+//!
+//! The trainer owns one [`Workspace`] sized at construction; every
+//! forward/backward of a run streams through those arenas, so the
+//! steady-state step performs no heap allocation (DESIGN.md §7.2).
+//! `cfg.threads` (the `--threads` flag) sets the kernels' intra-op worker
+//! count — a pure wall-clock knob, bit-identical results at any value.
 
 use crate::config::TrainConfig;
 use crate::data::{self, BatchIter, Dataset, DatasetKind};
 use crate::metrics::RunCurve;
+use crate::pool;
 use crate::rng::Pcg64;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
 
 use super::layer::SiteSketch;
-use super::loss::{accuracy, loss_and_grad, loss_value, LossKind};
+use super::loss::{accuracy, loss_and_grad_into, loss_value, LossKind};
 use super::models;
 use super::optim::{clip_global_norm, Optim};
-use super::sequential::{Sequential, SketchPolicy};
+use super::sequential::{Sequential, SketchPolicy, Workspace};
 
 /// Max global gradient norm for every native recipe (§B.2: clip 1.0;
 /// ≤ 0 disables).
@@ -28,6 +35,7 @@ pub struct NativeTrainer {
     /// The run configuration (steps, LR schedule, sketch policy, …).
     pub cfg: TrainConfig,
     model: Sequential,
+    ws: Workspace,
     plan: Vec<Option<SiteSketch>>,
     opt: Optim,
     loss: LossKind,
@@ -67,7 +75,11 @@ impl NativeTrainer {
         let loss = LossKind::parse(&cfg.loss)?;
         let data_kind = DatasetKind::for_model(&cfg.model)?;
         let sk_rng = Pcg64::new(cfg.seed ^ 0x9e3779b9, 11);
-        Ok(NativeTrainer { cfg, model, plan, opt, loss, data_kind, sk_rng })
+        if cfg.threads > 0 {
+            pool::set_threads(cfg.threads);
+        }
+        let ws = model.workspace(cfg.batch, data_kind.dim());
+        Ok(NativeTrainer { cfg, model, ws, plan, opt, loss, data_kind, sk_rng })
     }
 
     /// Batch size of this run.
@@ -89,38 +101,45 @@ impl NativeTrainer {
         (train, test)
     }
 
-    /// One optimizer step on a batch; returns the training loss.
+    /// One optimizer step on a batch; returns the training loss. Runs
+    /// entirely in the trainer's preallocated workspace.
     pub fn step(&mut self, x: &Mat, y: &[i32], step: usize) -> f64 {
-        let tape = self.model.forward(x);
-        let (loss, dlogits) = loss_and_grad(self.loss, &tape.output, y);
-        let mut grads =
-            self.model.backward(&tape, &dlogits, &self.plan, &mut self.sk_rng);
-        clip_global_norm(&mut grads, CLIP_NORM);
+        self.model.forward(x, &mut self.ws);
+        let loss = loss_and_grad_into(
+            self.loss,
+            self.ws.acts.last().expect("non-empty stack"),
+            y,
+            self.ws.grads.last_mut().expect("non-empty stack"),
+        );
+        self.model
+            .backward(x, &mut self.ws, &self.plan, &mut self.sk_rng);
+        clip_global_norm(&mut self.ws.grad_slots, CLIP_NORM);
         let lr = self.cfg.lr_at(step);
-        self.model.apply_grads(&mut self.opt, &grads, lr);
+        self.model
+            .apply_grads(&mut self.opt, &self.ws.grad_slots, lr);
         loss
     }
 
     /// Evaluate on the full test set; returns (mean loss, accuracy).
-    pub fn evaluate(&self, test: &Dataset) -> Result<(f64, f64)> {
+    /// Reuses the training workspace (one staged batch buffer per call).
+    pub fn evaluate(&mut self, test: &Dataset) -> Result<(f64, f64)> {
         let batch = self.cfg.batch;
         let nb = test.n / batch;
         if nb == 0 {
             bail!("test set smaller than one batch");
         }
         let dim = test.dim;
+        let mut x = Mat::zeros(batch, dim);
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         for b in 0..nb {
-            let x = Mat {
-                rows: batch,
-                cols: dim,
-                data: test.x[b * batch * dim..(b + 1) * batch * dim].to_vec(),
-            };
+            x.data
+                .copy_from_slice(&test.x[b * batch * dim..(b + 1) * batch * dim]);
             let y = &test.y[b * batch..(b + 1) * batch];
-            let tape = self.model.forward(&x);
-            loss_sum += loss_value(self.loss, &tape.output, y) * batch as f64;
-            correct += accuracy(&tape.output, y) * batch as f64;
+            self.model.forward(&x, &mut self.ws);
+            let logits = self.ws.output();
+            loss_sum += loss_value(self.loss, logits, y) * batch as f64;
+            correct += accuracy(logits, y) * batch as f64;
         }
         let seen = (nb * batch) as f64;
         Ok((loss_sum / seen, correct / seen))

@@ -1,12 +1,67 @@
 //! Scoped thread-pool substrate (std::thread; no rayon/tokio offline).
 //!
-//! The coordinator uses `parallel_map` for sweep fan-out. On this single-core
-//! testbed it degrades gracefully to near-sequential execution, but the
-//! structure matches what a multi-core deployment would use, and the unit
-//! tests exercise real concurrency.
+//! Two parallel primitives share it:
+//!
+//! * [`parallel_map`] — coarse task fan-out (the coordinator's sweeps);
+//! * [`run_row_chunks`] — intra-op row partitioning for the tensor
+//!   kernels (`tensor::gemm_into` and friends). Each worker owns a
+//!   contiguous block of output rows and computes it in exactly the order
+//!   the single-threaded path would, so results are bit-identical for
+//!   every worker count (the kernel-API contract `tests/gemm_kernels.rs`
+//!   pins down).
+//!
+//! The intra-op worker count is a process-global set once at startup from
+//! `--threads` / `TrainConfig::threads` ([`set_threads`]; `0` = auto).
+//! On this single-core testbed both primitives degrade gracefully to
+//! near-sequential execution, but the structure matches what a multi-core
+//! deployment would use, and the unit tests exercise real concurrency.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Intra-op worker count for the tensor kernels (see [`set_threads`]).
+static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the intra-op worker count used by the tensor kernels. `0` resolves
+/// to [`default_workers`] (auto); any other value is taken literally.
+/// Results are bit-identical for every setting — this is purely a
+/// wall-clock knob.
+pub fn set_threads(n: usize) {
+    let resolved = if n == 0 { default_workers() } else { n };
+    KERNEL_THREADS.store(resolved.max(1), Ordering::Relaxed);
+}
+
+/// Current intra-op worker count (≥ 1).
+pub fn threads() -> usize {
+    KERNEL_THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// Split a `rows × cols` row-major buffer into up to `workers` contiguous
+/// row blocks and run `f(first_row, block)` on each, concurrently when
+/// `workers > 1`. Every row is written by exactly one worker, in the same
+/// within-row order as the sequential path, so the result is independent
+/// of `workers`.
+pub fn run_row_chunks<F>(workers: usize, rows: usize, cols: usize, data: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(data.len(), rows * cols, "row-chunk buffer size");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, rows);
+    if workers == 1 {
+        f(0, data);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (ci, chunk) in data.chunks_mut(chunk_rows * cols).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(ci * chunk_rows, chunk));
+        }
+    });
+}
 
 /// Map `f` over `items` with up to `workers` OS threads, preserving order.
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
@@ -77,6 +132,44 @@ mod tests {
     fn more_workers_than_items() {
         let out = parallel_map(vec![5], 16, |&x| x * x);
         assert_eq!(out, vec![25]);
+    }
+
+    #[test]
+    fn row_chunks_cover_every_row_once() {
+        for workers in [1usize, 2, 3, 8, 100] {
+            let rows = 7usize;
+            let cols = 3usize;
+            let mut data = vec![0.0f32; rows * cols];
+            run_row_chunks(workers, rows, cols, &mut data, |row0, chunk| {
+                for (li, row) in chunk.chunks_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + li) as f32 + 1.0;
+                    }
+                }
+            });
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(data[i * cols + j], i as f32 + 1.0, "w={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_chunks_degenerate_shapes_are_noops() {
+        let mut empty: Vec<f32> = Vec::new();
+        run_row_chunks(4, 0, 5, &mut empty, |_, _| panic!("no rows"));
+        run_row_chunks(4, 5, 0, &mut empty, |_, _| panic!("no cols"));
+    }
+
+    #[test]
+    fn thread_knob_resolves_auto_and_explicit() {
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+        set_threads(1);
+        assert_eq!(threads(), 1);
     }
 
     #[test]

@@ -8,107 +8,97 @@
 //! against the `micro_*` artifacts.
 
 use crate::rng::Pcg64;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatView};
 
-/// Algorithm 1 — waterfilling: minimize Σ wᵢ/pᵢ s.t. Σ pᵢ = r, 0 < pᵢ ≤ 1.
-///
-/// KKT gives pᵢ* = min(1, √wᵢ / √λ); we find the saturation split exactly by
-/// scanning candidate counts of saturated coordinates (sorted order), which
-/// matches the thresholding construction in the paper's Appendix A.2.
-pub fn pstar_from_weights(w: &[f32], r: f64) -> Vec<f32> {
-    let n = w.len();
-    if r >= n as f64 {
-        return vec![1.0; n];
+/// Reusable buffers for the per-site column-planning pipeline
+/// (scores → waterfilling → gates → kept list). One instance lives in a
+/// training `Workspace` and is threaded through every sketched backward
+/// via `SketchCtx`, so a steady-state step plans its columns without
+/// heap allocation. The value-returning functions below remain as thin
+/// allocating wrappers for tests, benches and one-off callers.
+#[derive(Default)]
+pub struct SketchScratch {
+    abs: Vec<f64>,
+    sq: Vec<f64>,
+    sum: Vec<f64>,
+    sort: Vec<(f64, usize)>,
+    suffix: Vec<f64>,
+    /// Column scores of the last planned site.
+    pub scores: Vec<f32>,
+    /// Waterfilled keep-probabilities of the last planned site.
+    pub p: Vec<f32>,
+    /// Gate draws of the last planned site.
+    pub z: Vec<bool>,
+    /// Kept-column list (index, 1/pᵢ) of the last planned site.
+    pub kept: Vec<(usize, f32)>,
+}
+
+impl SketchScratch {
+    pub fn new() -> SketchScratch {
+        SketchScratch::default()
     }
-    let mut t: Vec<(f64, usize)> = w
-        .iter()
-        .enumerate()
-        .map(|(i, &wi)| ((wi.max(0.0) as f64).sqrt(), i))
-        .collect();
-    t.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-    let total_t: f64 = t.iter().map(|x| x.0).sum();
-    if total_t <= 0.0 {
-        return vec![(r / n as f64).clamp(1e-6, 1.0) as f32; n];
-    }
-    // suffix sums of sorted t
-    let mut suffix = vec![0.0f64; n + 1];
-    for k in (0..n).rev() {
-        suffix[k] = suffix[k + 1] + t[k].0;
-    }
-    let mut lam_sqrt = suffix[0] / r; // k = 0 candidate
-    for k in 0..n {
-        let rem = r - k as f64;
-        if rem <= 0.0 {
-            break;
+
+    /// Run the full pipeline for one backward site on the output gradient
+    /// `g`: column scores (or the uniform `per_column` probabilities),
+    /// waterfilling, correlated or independent gates (chosen by the method
+    /// name, consuming the site's RNG in the same order as always), and
+    /// the kept list. Returns the kept columns; `self.p` holds the
+    /// probabilities they were drawn with.
+    pub fn plan_columns(
+        &mut self,
+        method: &str,
+        budget: f64,
+        g: MatView<'_>,
+        w_mat: Option<&Mat>,
+        rng: &mut Pcg64,
+    ) -> &[(usize, f32)] {
+        let dout = g.cols;
+        if method == "per_column" {
+            self.p.clear();
+            self.p.resize(dout, budget.clamp(1e-6, 1.0) as f32);
+        } else {
+            self.column_scores_into(method, g, w_mat);
+            self.pstar_into(budget * dout as f64);
         }
-        let cand = suffix[k] / rem;
-        let prev_ok = k == 0 || t[k - 1].0 >= cand - 1e-12;
-        let cur_ok = t[k].0 <= cand + 1e-12;
-        if prev_ok && cur_ok {
-            lam_sqrt = cand;
-            break;
+        let independent = method == "per_column" || method.ends_with("_ind");
+        if independent {
+            independent_bernoulli_into(rng, &self.p, &mut self.z);
+        } else {
+            correlated_bernoulli_into(rng, &self.p, &mut self.z);
         }
+        kept_columns_into(&self.z, &self.p, &mut self.kept);
+        &self.kept
     }
-    let mut p = vec![0.0f32; n];
-    for (tv, i) in &t {
-        p[*i] = ((tv / lam_sqrt).min(1.0)).clamp(1e-6, 1.0) as f32;
-    }
-    p
-}
 
-/// Algorithm 2 — correlated exact-r sampling (systematic sampling).
-///
-/// Draw u ~ U(0,1]; index i is selected iff some u+ℓ lies in the cumulative
-/// interval (C_{i-1}, C_i]. Marginals are exactly pᵢ and the number of
-/// selected indices equals Σpᵢ (up to the integer boundary) almost surely.
-pub fn correlated_bernoulli(rng: &mut Pcg64, p: &[f32]) -> Vec<bool> {
-    let u = rng.f64().max(1e-12);
-    let mut out = vec![false; p.len()];
-    let mut c_prev = 0.0f64;
-    for (i, &pi) in p.iter().enumerate() {
-        let c = c_prev + pi as f64;
-        let lo = (c_prev - u).floor();
-        let hi = (c - u).floor();
-        out[i] = hi > lo;
-        c_prev = c;
-    }
-    out
-}
-
-/// Independent Bernoulli(pᵢ) gates (Lemma 3.4 sampling model).
-pub fn independent_bernoulli(rng: &mut Pcg64, p: &[f32]) -> Vec<bool> {
-    p.iter().map(|&pi| rng.bernoulli(pi as f64)).collect()
-}
-
-/// Kept-column list (index, 1/pᵢ) for the sparse backward kernels.
-pub fn kept_columns(z: &[bool], p: &[f32]) -> Vec<(usize, f32)> {
-    z.iter()
-        .zip(p)
-        .enumerate()
-        .filter(|(_, (&zi, _))| zi)
-        .map(|(i, (_, &pi))| (i, 1.0 / pi))
-        .collect()
-}
-
-/// Column importance weights for the coordinate methods (§4.2) on a native
-/// gradient matrix. Mirrors python `sketching.column_scores`.
-pub fn column_scores(method: &str, g: &Mat, w_mat: Option<&Mat>) -> Vec<f32> {
-    let (b, dout) = (g.rows, g.cols);
-    let mut abs = vec![0.0f64; dout];
-    let mut sq = vec![0.0f64; dout];
-    let mut sum = vec![0.0f64; dout];
-    for i in 0..b {
-        for j in 0..dout {
-            let v = g.at(i, j) as f64;
-            abs[j] += v.abs();
-            sq[j] += v * v;
-            sum[j] += v;
+    /// Column scores for the coordinate methods (§4.2) into `self.scores`.
+    pub fn column_scores_into(
+        &mut self,
+        method: &str,
+        g: MatView<'_>,
+        w_mat: Option<&Mat>,
+    ) {
+        let (b, dout) = (g.rows, g.cols);
+        self.abs.clear();
+        self.abs.resize(dout, 0.0);
+        self.sq.clear();
+        self.sq.resize(dout, 0.0);
+        self.sum.clear();
+        self.sum.resize(dout, 0.0);
+        for i in 0..b {
+            let grow = g.row(i);
+            for j in 0..dout {
+                let v = grow[j] as f64;
+                self.abs[j] += v.abs();
+                self.sq[j] += v * v;
+                self.sum[j] += v;
+            }
         }
-    }
-    let var =
-        |j: usize| (sq[j] / b as f64 - (sum[j] / b as f64).powi(2)).max(0.0);
-    (0..dout)
-        .map(|j| {
+        let (abs, sq, sum) = (&self.abs, &self.sq, &self.sum);
+        let var = |j: usize| {
+            (sq[j] / b as f64 - (sum[j] / b as f64).powi(2)).max(0.0)
+        };
+        self.scores.clear();
+        self.scores.extend((0..dout).map(|j| {
             (match method {
                 "l1" | "l1_ind" => abs[j] * abs[j],
                 "l1_sq" => (abs[j] * abs[j]).powi(2),
@@ -127,8 +117,145 @@ pub fn column_scores(method: &str, g: &Mat, w_mat: Option<&Mat>) -> Vec<f32> {
                 }
                 other => panic!("unknown coordinate method {other}"),
             }) as f32
-        })
-        .collect()
+        }));
+    }
+
+    /// Algorithm 1 — waterfilling `self.scores` under budget `r` into
+    /// `self.p`: minimize Σ wᵢ/pᵢ s.t. Σ pᵢ = r, 0 < pᵢ ≤ 1.
+    ///
+    /// KKT gives pᵢ* = min(1, √wᵢ / √λ); we find the saturation split
+    /// exactly by scanning candidate counts of saturated coordinates
+    /// (sorted order), which matches the thresholding construction in the
+    /// paper's Appendix A.2. The sort is unstable (no allocation); ties
+    /// carry equal scores, hence equal pᵢ, so the output is
+    /// order-independent.
+    pub fn pstar_into(&mut self, r: f64) {
+        let w = &self.scores;
+        let n = w.len();
+        self.p.clear();
+        if r >= n as f64 {
+            self.p.resize(n, 1.0);
+            return;
+        }
+        self.sort.clear();
+        self.sort.extend(
+            w.iter()
+                .enumerate()
+                .map(|(i, &wi)| ((wi.max(0.0) as f64).sqrt(), i)),
+        );
+        self.sort
+            .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let t = &self.sort;
+        let total_t: f64 = t.iter().map(|x| x.0).sum();
+        if total_t <= 0.0 {
+            self.p.resize(n, (r / n as f64).clamp(1e-6, 1.0) as f32);
+            return;
+        }
+        // suffix sums of sorted t
+        self.suffix.clear();
+        self.suffix.resize(n + 1, 0.0);
+        for k in (0..n).rev() {
+            self.suffix[k] = self.suffix[k + 1] + t[k].0;
+        }
+        let suffix = &self.suffix;
+        let mut lam_sqrt = suffix[0] / r; // k = 0 candidate
+        for k in 0..n {
+            let rem = r - k as f64;
+            if rem <= 0.0 {
+                break;
+            }
+            let cand = suffix[k] / rem;
+            let prev_ok = k == 0 || t[k - 1].0 >= cand - 1e-12;
+            let cur_ok = t[k].0 <= cand + 1e-12;
+            if prev_ok && cur_ok {
+                lam_sqrt = cand;
+                break;
+            }
+        }
+        self.p.resize(n, 0.0);
+        for (tv, i) in t {
+            self.p[*i] = ((tv / lam_sqrt).min(1.0)).clamp(1e-6, 1.0) as f32;
+        }
+    }
+}
+
+/// Algorithm 1 — waterfilling (allocating wrapper over
+/// [`SketchScratch::pstar_into`]).
+pub fn pstar_from_weights(w: &[f32], r: f64) -> Vec<f32> {
+    let mut s = SketchScratch::new();
+    s.scores.extend_from_slice(w);
+    s.pstar_into(r);
+    s.p
+}
+
+/// Algorithm 2 — correlated exact-r sampling (systematic sampling) into a
+/// reused gate buffer.
+///
+/// Draw u ~ U(0,1]; index i is selected iff some u+ℓ lies in the cumulative
+/// interval (C_{i-1}, C_i]. Marginals are exactly pᵢ and the number of
+/// selected indices equals Σpᵢ (up to the integer boundary) almost surely.
+pub fn correlated_bernoulli_into(rng: &mut Pcg64, p: &[f32], out: &mut Vec<bool>) {
+    let u = rng.f64().max(1e-12);
+    out.clear();
+    let mut c_prev = 0.0f64;
+    for &pi in p {
+        let c = c_prev + pi as f64;
+        let lo = (c_prev - u).floor();
+        let hi = (c - u).floor();
+        out.push(hi > lo);
+        c_prev = c;
+    }
+}
+
+/// Algorithm 2 — correlated sampling (allocating wrapper).
+pub fn correlated_bernoulli(rng: &mut Pcg64, p: &[f32]) -> Vec<bool> {
+    let mut out = Vec::with_capacity(p.len());
+    correlated_bernoulli_into(rng, p, &mut out);
+    out
+}
+
+/// Independent Bernoulli(pᵢ) gates (Lemma 3.4 sampling model) into a
+/// reused gate buffer.
+pub fn independent_bernoulli_into(rng: &mut Pcg64, p: &[f32], out: &mut Vec<bool>) {
+    out.clear();
+    out.extend(p.iter().map(|&pi| rng.bernoulli(pi as f64)));
+}
+
+/// Independent Bernoulli gates (allocating wrapper).
+pub fn independent_bernoulli(rng: &mut Pcg64, p: &[f32]) -> Vec<bool> {
+    let mut out = Vec::with_capacity(p.len());
+    independent_bernoulli_into(rng, p, &mut out);
+    out
+}
+
+/// Kept-column list (index, 1/pᵢ) for the sparse backward kernels, into a
+/// reused buffer.
+pub fn kept_columns_into(z: &[bool], p: &[f32], out: &mut Vec<(usize, f32)>) {
+    out.clear();
+    out.extend(
+        z.iter()
+            .zip(p)
+            .enumerate()
+            .filter(|(_, (&zi, _))| zi)
+            .map(|(i, (_, &pi))| (i, 1.0 / pi)),
+    );
+}
+
+/// Kept-column list (allocating wrapper).
+pub fn kept_columns(z: &[bool], p: &[f32]) -> Vec<(usize, f32)> {
+    let mut out = Vec::new();
+    kept_columns_into(z, p, &mut out);
+    out
+}
+
+/// Column importance weights for the coordinate methods (§4.2) on a native
+/// gradient matrix (allocating wrapper over
+/// [`SketchScratch::column_scores_into`]). Mirrors python
+/// `sketching.column_scores`.
+pub fn column_scores(method: &str, g: &Mat, w_mat: Option<&Mat>) -> Vec<f32> {
+    let mut s = SketchScratch::new();
+    s.column_scores_into(method, g.view(), w_mat);
+    s.scores
 }
 
 /// Analytic FLOP model for one sketched linear backward (Eq. 6's ρ(V)).

@@ -1,18 +1,92 @@
-//! Dense matrix substrate + column-sparse GEMMs.
+//! Dense matrix substrate + column-sparse GEMMs, as a view-based,
+//! destination-passing kernel layer (DESIGN.md §7.2).
 //!
 //! This is the CPU-native half of the paper's efficiency story: interpret-
 //! mode XLA cannot *skip* masked columns, so the wall-clock mechanism behind
 //! Eq. (6) (per-iteration cost ρ(V) shrinking with the sketch budget) is
-//! demonstrated here with real kernels — a dense row-major GEMM baseline and
-//! the two sketched backward products that only touch the kept columns.
-//! `cargo bench eq6` measures both.
+//! demonstrated here with real kernels — a blocked, multi-threaded dense
+//! GEMM baseline ([`gemm_into`]) and the two sketched backward products
+//! that only touch the kept columns ([`sparse_dx_into`] /
+//! [`sparse_dw_into`]). `cargo bench gemm_scaling` measures both.
+//!
+//! Three API rules hold for every kernel here:
+//!
+//! 1. **Views in, destinations out.** Kernels read [`MatView`]s and write
+//!    caller-provided [`MatViewMut`]s; nothing allocates. Transposition is
+//!    a flag on [`gemm_into`], not a materialized copy, and `[B, P·d]` ↔
+//!    `[B·P, d]` reinterpretation is [`Mat::reshape`] (row-major buffers
+//!    coincide).
+//! 2. **No data-dependent branches.** The dense kernels never skip
+//!    zero-valued operands, so dense-vs-sketched bench ratios are not
+//!    skewed by ReLU-induced zeros in G — the pitfall XConv warns about.
+//! 3. **Thread-count invariance.** Multi-threading partitions output rows
+//!    ([`crate::pool::run_row_chunks`]); each element's accumulation order
+//!    is fixed, so results are bit-identical for every `--threads` value
+//!    (and to the pre-view value-returning API — `tests/gemm_kernels.rs`
+//!    pins both).
 
-/// Row-major f32 matrix.
+use crate::pool;
+
+/// Row-major f32 matrix (owning).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f32>,
+}
+
+/// Borrowed read-only view of a row-major matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+/// Borrowed mutable view of a row-major matrix (a kernel destination).
+#[derive(Debug)]
+pub struct MatViewMut<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a mut [f32],
+}
+
+impl<'a> MatView<'a> {
+    /// View over a raw row-major slice; `data.len()` must be `rows·cols`.
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> MatView<'a> {
+        assert_eq!(data.len(), rows * cols, "view size mismatch");
+        MatView { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl<'a> MatViewMut<'a> {
+    /// Mutable view over a raw row-major slice (e.g. a parameter-gradient
+    /// slot); `data.len()` must be `rows·cols`.
+    pub fn new(rows: usize, cols: usize, data: &'a mut [f32]) -> MatViewMut<'a> {
+        assert_eq!(data.len(), rows * cols, "view size mismatch");
+        MatViewMut { rows, cols, data }
+    }
+
+    /// Read-only alias of this destination.
+    pub fn as_view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, data: self.data }
+    }
+
+    /// Reborrow as a shorter-lived destination (hand to a kernel while
+    /// keeping this view usable afterwards).
+    pub fn rb(&mut self) -> MatViewMut<'_> {
+        MatViewMut { rows: self.rows, cols: self.cols, data: &mut *self.data }
+    }
 }
 
 impl Mat {
@@ -30,6 +104,9 @@ impl Mat {
         m
     }
 
+    /// Build from row vectors. `vec![]` yields the empty `0 × 0` matrix;
+    /// rows of zero width yield `r × 0` — both round-trip through
+    /// [`Mat::transpose`], [`gemm_into`] and [`Mat::frob_sq`].
     pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -49,6 +126,30 @@ impl Mat {
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow as a read-only view.
+    #[inline]
+    pub fn view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
+    /// Borrow as a kernel destination.
+    #[inline]
+    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+        MatViewMut { rows: self.rows, cols: self.cols, data: &mut self.data }
+    }
+
+    /// Zero-copy reinterpretation of the row-major buffer under different
+    /// dimensions (`rows·cols` must match) — how `[B, P·d]` batches become
+    /// `[B·P, d]` token/patch stacks without touching memory.
+    pub fn reshape(&self, rows: usize, cols: usize) -> MatView<'_> {
+        MatView::new(rows, cols, &self.data)
+    }
+
+    /// Mutable zero-copy reinterpretation (see [`Mat::reshape`]).
+    pub fn reshape_mut(&mut self, rows: usize, cols: usize) -> MatViewMut<'_> {
+        MatViewMut::new(rows, cols, &mut self.data)
     }
 
     pub fn transpose(&self) -> Mat {
@@ -77,8 +178,222 @@ impl Mat {
     }
 }
 
-/// Dense C = A · B (row-major, ikj loop order for cache-friendly streaming).
+/// k-dimension block size for the dense kernels: one block of B rows
+/// (`KB × n` floats) stays hot in L2 while a chunk of C rows streams over
+/// it. Blocking never reorders any element's accumulation (k blocks are
+/// visited in ascending order), so it is invisible to the results.
+const GEMM_KB: usize = 64;
+
+/// Below this many multiply-adds a GEMM runs single-threaded. There is no
+/// persistent worker pool — the threaded path spawns scoped OS threads per
+/// call (tens of µs) — so the cut-off sits where a call's work comfortably
+/// amortizes the spawn (~4M MACs ≈ milliseconds single-threaded). Small
+/// layers therefore never pay spawn overhead; results are identical either
+/// way. Public so benches/tests can tell which cases actually engage the
+/// threaded path.
+pub const GEMM_PAR_MIN_FLOPS: usize = 1 << 22;
+
+/// General destination-passing GEMM with transpose flags:
+/// `C = α·op(A)·op(B) + β·C`, `op(M) = Mᵀ` when the flag is set.
+///
+/// * `β = 0` overwrites `C` without reading it (safe on dirty buffers);
+///   `β = 1` accumulates.
+/// * Row-chunk multi-threaded over C's rows ([`crate::pool::threads`]
+///   workers); every element accumulates in ascending-k order regardless
+///   of blocking or thread count, so results are bit-identical across
+///   `--threads` values.
+/// * No data-dependent skips: zeros in A/G cost the same as any value,
+///   keeping dense-baseline timings honest.
+/// * Degenerate shapes (`m`, `n` or `k` = 0) are well-defined: the output
+///   is `β·C` (empty when `C` is empty).
+pub fn gemm_into(
+    alpha: f32,
+    a: MatView<'_>,
+    ta: bool,
+    b: MatView<'_>,
+    tb: bool,
+    beta: f32,
+    c: MatViewMut<'_>,
+) {
+    let (m, ka) = if ta { (a.cols, a.rows) } else { (a.rows, a.cols) };
+    let (kb, n) = if tb { (b.cols, b.rows) } else { (b.rows, b.cols) };
+    assert_eq!(ka, kb, "gemm_into inner dimension: {ka} vs {kb}");
+    assert_eq!((c.rows, c.cols), (m, n), "gemm_into output shape");
+    let k = ka;
+    let workers = if m * n * k.max(1) < GEMM_PAR_MIN_FLOPS {
+        1
+    } else {
+        pool::threads()
+    };
+    pool::run_row_chunks(workers, m, n, c.data, |i0, chunk| {
+        // β pass first; the accumulation below then only ever adds.
+        if beta == 0.0 {
+            chunk.fill(0.0);
+        } else if beta != 1.0 {
+            for v in chunk.iter_mut() {
+                *v *= beta;
+            }
+        }
+        if k == 0 {
+            return;
+        }
+        let rows = chunk.len() / n;
+        match (ta, tb) {
+            (false, false) => gemm_chunk_nn(alpha, &a, &b, i0, rows, n, k, chunk),
+            (false, true) => gemm_chunk_nt(alpha, &a, &b, i0, rows, n, k, chunk),
+            (true, false) => gemm_chunk_tn(alpha, &a, &b, i0, rows, n, k, chunk),
+            (true, true) => gemm_chunk_tt(alpha, &a, &b, i0, rows, n, k, chunk),
+        }
+    });
+}
+
+/// C += α·A·B over C rows `i0..i0+rows` (ikj, k-blocked: the B block stays
+/// in cache while the chunk's rows stream over it).
+#[allow(clippy::too_many_arguments)]
+fn gemm_chunk_nn(
+    alpha: f32,
+    a: &MatView<'_>,
+    b: &MatView<'_>,
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    let mut kb0 = 0;
+    while kb0 < k {
+        let kb1 = (kb0 + GEMM_KB).min(k);
+        for li in 0..rows {
+            let arow = a.row(i0 + li);
+            let crow = &mut c[li * n..(li + 1) * n];
+            for kk in kb0..kb1 {
+                let aik = alpha * arow[kk];
+                let brow = b.row(kk);
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        kb0 = kb1;
+    }
+}
+
+/// C += α·A·Bᵀ: per output element a dot of two row streams, four columns
+/// at a time for ILP (each element's own accumulator still runs ascending
+/// k).
+#[allow(clippy::too_many_arguments)]
+fn gemm_chunk_nt(
+    alpha: f32,
+    a: &MatView<'_>,
+    b: &MatView<'_>,
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    for li in 0..rows {
+        let arow = a.row(i0 + li);
+        let crow = &mut c[li * n..(li + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let (b0, b1, b2, b3) =
+                (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+            for kk in 0..k {
+                let av = arow[kk];
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            crow[j] += alpha * s0;
+            crow[j + 1] += alpha * s1;
+            crow[j + 2] += alpha * s2;
+            crow[j + 3] += alpha * s3;
+            j += 4;
+        }
+        while j < n {
+            let brow = b.row(j);
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += arow[kk] * brow[kk];
+            }
+            crow[j] += alpha * s;
+            j += 1;
+        }
+    }
+}
+
+/// C += α·Aᵀ·B: k-blocked rank-1 updates; each C row accumulates the
+/// block's B rows in ascending k.
+#[allow(clippy::too_many_arguments)]
+fn gemm_chunk_tn(
+    alpha: f32,
+    a: &MatView<'_>,
+    b: &MatView<'_>,
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    let mut kb0 = 0;
+    while kb0 < k {
+        let kb1 = (kb0 + GEMM_KB).min(k);
+        for li in 0..rows {
+            let crow = &mut c[li * n..(li + 1) * n];
+            for kk in kb0..kb1 {
+                let aik = alpha * a.at(kk, i0 + li);
+                let brow = b.row(kk);
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        kb0 = kb1;
+    }
+}
+
+/// C += α·Aᵀ·Bᵀ (both operands strided — rare; correctness path).
+#[allow(clippy::too_many_arguments)]
+fn gemm_chunk_tt(
+    alpha: f32,
+    a: &MatView<'_>,
+    b: &MatView<'_>,
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    for li in 0..rows {
+        let crow = &mut c[li * n..(li + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = b.row(j);
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += a.at(kk, i0 + li) * brow[kk];
+            }
+            *cv += alpha * s;
+        }
+    }
+}
+
+/// Dense C = A · B (value-returning convenience over [`gemm_into`]).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    gemm_into(1.0, a.view(), false, b.view(), false, 0.0, c.view_mut());
+    c
+}
+
+/// Frozen replica of the pre-view-API dense GEMM (the PR-2 `matmul`):
+/// naive single-threaded ikj with the data-dependent `aik == 0` skip.
+/// Not used by any product path — kept as the one shared oracle for the
+/// bitwise-parity tests (`tests/gemm_kernels.rs`) and the `gemm_scaling`
+/// bench baseline, so both compare against the same kernel. Do not
+/// "improve" it; its value is staying byte-for-byte what PR-2 shipped.
+pub fn matmul_pr2_reference(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     let mut c = Mat::zeros(a.rows, b.cols);
     for i in 0..a.rows {
@@ -97,54 +412,150 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// dX = Ĝ·W touching only the kept columns of G (the paper's FLOP saving).
+/// dX = Ĝ·W touching only the kept columns of G (the paper's FLOP saving),
+/// written into `dx` (overwritten, no read).
 ///
 /// `kept` lists the surviving column indices j with their rescale 1/p_j;
-/// cost is O(B · |kept| · d_in) instead of O(B · d_out · d_in).
-pub fn sparse_dx(g: &Mat, kept: &[(usize, f32)], w: &Mat) -> Mat {
-    let (b, din) = (g.rows, w.cols);
-    let mut dx = Mat::zeros(b, din);
-    for i in 0..b {
-        let grow = g.row(i);
-        let dxrow = &mut dx.data[i * din..(i + 1) * din];
-        for &(j, inv) in kept {
-            let gij = grow[j] * inv;
-            if gij == 0.0 {
-                continue;
-            }
-            let wrow = &w.data[j * din..(j + 1) * din];
-            for (dv, wv) in dxrow.iter_mut().zip(wrow) {
-                *dv += gij * wv;
+/// cost is O(B · |kept| · d_in) instead of O(B · d_out · d_in). Batch rows
+/// are independent, so the kernel row-chunk threads exactly like
+/// [`gemm_into`] (bit-identical for every worker count).
+pub fn sparse_dx_into(
+    g: MatView<'_>,
+    kept: &[(usize, f32)],
+    w: MatView<'_>,
+    dx: MatViewMut<'_>,
+) {
+    let (bsz, din) = (g.rows, w.cols);
+    assert_eq!((dx.rows, dx.cols), (bsz, din), "sparse_dx output shape");
+    let workers = if bsz * din * kept.len().max(1) < GEMM_PAR_MIN_FLOPS {
+        1
+    } else {
+        pool::threads()
+    };
+    pool::run_row_chunks(workers, bsz, din, dx.data, |i0, chunk| {
+        for (li, dxrow) in chunk.chunks_mut(din).enumerate() {
+            dxrow.fill(0.0);
+            let grow = g.row(i0 + li);
+            for &(j, inv) in kept {
+                let gij = grow[j] * inv;
+                let wrow = w.row(j);
+                for (dv, wv) in dxrow.iter_mut().zip(wrow) {
+                    *dv += gij * wv;
+                }
             }
         }
-    }
+    });
+}
+
+/// dX = Ĝ·W (value-returning convenience over [`sparse_dx_into`]).
+pub fn sparse_dx(g: &Mat, kept: &[(usize, f32)], w: &Mat) -> Mat {
+    let mut dx = Mat::zeros(g.rows, w.cols);
+    sparse_dx_into(g.view(), kept, w.view(), dx.view_mut());
     dx
 }
 
-/// dW = Ĝᵀ·X restricted to the kept rows of dW (same saving, other GEMM).
-pub fn sparse_dw(g: &Mat, kept: &[(usize, f32)], x: &Mat) -> Mat {
-    let (b, din, dout) = (g.rows, x.cols, g.cols);
-    let mut dw = Mat::zeros(dout, din);
-    for i in 0..b {
-        let grow = g.row(i);
+/// One kept row of dW: `dw_row += Σ_i g[i,j]·inv · x[i,:]` (ascending i —
+/// the same per-element order as the dense TN kernel).
+#[inline]
+fn accum_dw_row(
+    j: usize,
+    inv: f32,
+    g: &MatView<'_>,
+    x: &MatView<'_>,
+    dwrow: &mut [f32],
+) {
+    for i in 0..g.rows {
+        let gij = g.at(i, j) * inv;
         let xrow = x.row(i);
-        for &(j, inv) in kept {
-            let gij = grow[j] * inv;
-            if gij == 0.0 {
-                continue;
-            }
-            let dwrow = &mut dw.data[j * din..(j + 1) * din];
-            for (dv, xv) in dwrow.iter_mut().zip(xrow) {
-                *dv += gij * xv;
-            }
+        for (dv, xv) in dwrow.iter_mut().zip(xrow) {
+            *dv += gij * xv;
         }
     }
+}
+
+/// dW = Ĝᵀ·X restricted to the kept rows of dW (same saving, other GEMM),
+/// written into `dw` (fully overwritten: dropped rows are zeroed).
+///
+/// Threading partitions the kept list; each worker owns whole dW rows
+/// (kept indices are strictly increasing, hence disjoint), so the result
+/// is bit-identical for every worker count.
+pub fn sparse_dw_into(
+    g: MatView<'_>,
+    kept: &[(usize, f32)],
+    x: MatView<'_>,
+    dw: MatViewMut<'_>,
+) {
+    let (bsz, din, dout) = (g.rows, x.cols, g.cols);
+    assert_eq!((dw.rows, dw.cols), (dout, din), "sparse_dw output shape");
+    dw.data.fill(0.0);
+    if din == 0 || kept.is_empty() {
+        return;
+    }
+    // Input contract, checked on every path so behavior is uniform across
+    // thread counts: strictly increasing indices (what `kept_columns`
+    // produces) make the threaded workers' row spans disjoint, and every
+    // index must address a real dW row.
+    assert!(
+        kept.windows(2).all(|p| p[0].0 < p[1].0),
+        "sparse_dw_into: kept indices must be strictly increasing"
+    );
+    assert!(
+        kept.last().expect("non-empty").0 < dout,
+        "sparse_dw_into: kept index out of range"
+    );
+    let workers = if bsz * din * kept.len() < GEMM_PAR_MIN_FLOPS {
+        1
+    } else {
+        pool::threads().min(kept.len())
+    };
+    if workers <= 1 {
+        for &(j, inv) in kept {
+            accum_dw_row(j, inv, &g, &x, &mut dw.data[j * din..(j + 1) * din]);
+        }
+        return;
+    }
+    // Each worker takes a contiguous run of kept entries; since indices
+    // are strictly increasing, those entries live in an ordered, disjoint
+    // span of dW rows, so the buffer can be carved with safe progressive
+    // split_at_mut — no raw pointers.
+    let chunk = kept.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = dw.data;
+        let mut consumed_rows = 0usize;
+        for part in kept.chunks(chunk) {
+            let first = part[0].0;
+            let last = part[part.len() - 1].0;
+            let r = std::mem::take(&mut rest);
+            let (_skip, tail) = r.split_at_mut((first - consumed_rows) * din);
+            let (span, tail) = tail.split_at_mut((last - first + 1) * din);
+            rest = tail;
+            consumed_rows = last + 1;
+            scope.spawn(move || {
+                for &(j, inv) in part {
+                    let off = (j - first) * din;
+                    accum_dw_row(j, inv, &g, &x, &mut span[off..off + din]);
+                }
+            });
+        }
+    });
+}
+
+/// dW = Ĝᵀ·X (value-returning convenience over [`sparse_dw_into`]).
+pub fn sparse_dw(g: &Mat, kept: &[(usize, f32)], x: &Mat) -> Mat {
+    let mut dw = Mat::zeros(g.cols, x.cols);
+    sparse_dw_into(g.view(), kept, x.view(), dw.view_mut());
     dw
 }
 
-/// Exact backward (dense baseline): (dX, dW).
+/// Exact backward (dense baseline): (dX, dW) = (G·W, Gᵀ·X). Convenience
+/// for benches/tests; the training path writes into workspace buffers via
+/// [`gemm_into`] directly.
 pub fn dense_backward(g: &Mat, x: &Mat, w: &Mat) -> (Mat, Mat) {
-    (matmul(g, w), matmul(&g.transpose(), x))
+    let mut dx = Mat::zeros(g.rows, w.cols);
+    gemm_into(1.0, g.view(), false, w.view(), false, 0.0, dx.view_mut());
+    let mut dw = Mat::zeros(g.cols, x.cols);
+    gemm_into(1.0, g.view(), true, x.view(), false, 0.0, dw.view_mut());
+    (dx, dw)
 }
 
 #[cfg(test)]
@@ -169,6 +580,103 @@ mod tests {
         let mut rng = Pcg64::new(1, 0);
         let a = randmat(7, 5, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gemm_transpose_flags_match_materialized_transposes() {
+        let mut rng = Pcg64::new(8, 0);
+        let a = randmat(5, 7, &mut rng);
+        let b = randmat(7, 4, &mut rng);
+        let want = matmul(&a, &b);
+        for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)] {
+            let am = if ta { a.transpose() } else { a.clone() };
+            let bm = if tb { b.transpose() } else { b.clone() };
+            let mut c = Mat::zeros(5, 4);
+            gemm_into(1.0, am.view(), ta, bm.view(), tb, 0.0, c.view_mut());
+            for (got, expect) in c.data.iter().zip(&want.data) {
+                assert!((got - expect).abs() < 1e-4, "ta={ta} tb={tb}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_beta_accumulates_and_alpha_scales() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0]]);
+        let b = Mat::from_rows(vec![vec![3.0], vec![4.0]]);
+        let mut c = Mat::from_rows(vec![vec![10.0]]);
+        // c = 2·(1·3 + 2·4) + 0.5·10 = 27
+        gemm_into(2.0, a.view(), false, b.view(), false, 0.5, c.view_mut());
+        assert!((c.data[0] - 27.0).abs() < 1e-6);
+        // beta = 0 ignores (even non-finite) destination contents
+        c.data[0] = f32::NAN;
+        gemm_into(1.0, a.view(), false, b.view(), false, 0.0, c.view_mut());
+        assert_eq!(c.data[0], 11.0);
+    }
+
+    #[test]
+    fn gemm_ignores_relu_zeros_without_skipping() {
+        // zeros in A must cost like any value AND not perturb results
+        let a = Mat::from_rows(vec![vec![0.0, 2.0, 0.0], vec![1.0, 0.0, -1.0]]);
+        let b = Mat::from_rows(vec![
+            vec![-1.0, 5.0],
+            vec![2.0, -3.0],
+            vec![4.0, 0.5],
+        ]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![4.0, -6.0, -5.0, 4.5]);
+    }
+
+    #[test]
+    fn degenerate_shapes_round_trip() {
+        // 0×0 from an empty row list
+        let e = Mat::from_rows(vec![]);
+        assert_eq!((e.rows, e.cols), (0, 0));
+        assert_eq!(e.transpose().rows, 0);
+        assert_eq!(e.frob_sq(), 0.0);
+        // rows of zero width
+        let z = Mat::from_rows(vec![vec![], vec![]]);
+        assert_eq!((z.rows, z.cols), (2, 0));
+        let zt = z.transpose();
+        assert_eq!((zt.rows, zt.cols), (0, 2));
+        assert_eq!(z.frob_sq(), 0.0);
+        // every transpose combination over empty inner/outer dims
+        for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)] {
+            // k = 0: C = β·C
+            let a = if ta { Mat::zeros(0, 3) } else { Mat::zeros(3, 0) };
+            let b = if tb { Mat::zeros(4, 0) } else { Mat::zeros(0, 4) };
+            let mut c = Mat::from_fn(3, 4, |i, j| (i + j) as f32);
+            gemm_into(1.0, a.view(), ta, b.view(), tb, 0.0, c.view_mut());
+            assert!(c.data.iter().all(|&v| v == 0.0), "ta={ta} tb={tb}");
+            // m = n = 0: empty output, no panic
+            let a = Mat::zeros(0, 0);
+            let b = Mat::zeros(0, 0);
+            let mut c = Mat::zeros(0, 0);
+            gemm_into(1.0, a.view(), ta, b.view(), tb, 1.0, c.view_mut());
+            assert!(c.data.is_empty());
+        }
+        // sparse kernels on empty kept lists / empty batches
+        let g = Mat::zeros(2, 3);
+        let w = Mat::zeros(3, 4);
+        let mut dx = Mat::from_fn(2, 4, |_, _| 7.0);
+        sparse_dx_into(g.view(), &[], w.view(), dx.view_mut());
+        assert!(dx.data.iter().all(|&v| v == 0.0));
+        let x = Mat::zeros(2, 4);
+        let mut dw = Mat::from_fn(3, 4, |_, _| 7.0);
+        sparse_dw_into(g.view(), &[], x.view(), dw.view_mut());
+        assert!(dw.data.iter().all(|&v| v == 0.0));
+        let eg = Mat::zeros(0, 3);
+        let ex = Mat::zeros(0, 4);
+        let mut dw = Mat::zeros(3, 4);
+        sparse_dw_into(eg.view(), &[(1, 2.0)], ex.view(), dw.view_mut());
+        assert!(dw.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn reshape_is_zero_copy_reinterpretation() {
+        let m = Mat::from_fn(2, 6, |i, j| (i * 6 + j) as f32);
+        let v = m.reshape(4, 3);
+        assert_eq!(v.at(2, 1), 7.0);
+        assert_eq!(v.row(3), &[9.0, 10.0, 11.0]);
     }
 
     #[test]
@@ -211,6 +719,23 @@ mod tests {
         for (a, b) in dw.data.iter().zip(&sdw.data) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn sparse_into_reuses_dirty_buffers() {
+        let mut rng = Pcg64::new(4, 0);
+        let g = randmat(5, 8, &mut rng);
+        let x = randmat(5, 3, &mut rng);
+        let w = randmat(8, 3, &mut rng);
+        let kept = vec![(1usize, 2.0f32), (6, 1.5)];
+        let clean_dx = sparse_dx(&g, &kept, &w);
+        let clean_dw = sparse_dw(&g, &kept, &x);
+        let mut dx = Mat::from_fn(5, 3, |_, _| f32::NAN);
+        let mut dw = Mat::from_fn(8, 3, |_, _| f32::NAN);
+        sparse_dx_into(g.view(), &kept, w.view(), dx.view_mut());
+        sparse_dw_into(g.view(), &kept, x.view(), dw.view_mut());
+        assert_eq!(dx.data, clean_dx.data);
+        assert_eq!(dw.data, clean_dw.data);
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Contract tests of the view-based kernel layer (DESIGN.md §7.2):
+//!
+//! * **Reference parity** — `gemm_into` with all four transpose-flag
+//!   combinations and `β ≠ 0` accumulation matches a scalar f64 reference
+//!   matmul (property-tested over random shapes/scalars).
+//! * **Pre-redesign bitwise parity** — against a literal port of the PR-2
+//!   value-returning `matmul` (naive ikj **with** the data-dependent zero
+//!   skip), the new kernels produce bit-identical f32 results even on
+//!   ReLU-sparsified inputs. Removing the skip only ever adds `±0.0`
+//!   terms to chains that start at `+0.0`, which IEEE-754 round-to-nearest
+//!   cannot flip — this is the invariant that keeps MLP/BagNet/ViT
+//!   training trajectories bit-identical to the pre-view-API code.
+//! * **Thread invariance** — every kernel is bit-identical for every
+//!   `--threads` value (row partitioning never reorders an element's
+//!   accumulation), checked per-kernel and end-to-end through full
+//!   training runs.
+
+use std::sync::Mutex;
+
+use uavjp::config::{Preset, TrainConfig};
+use uavjp::native::NativeTrainer;
+use uavjp::pool;
+use uavjp::ptest::{check, gen};
+use uavjp::rng::Pcg64;
+use uavjp::sketch::{correlated_bernoulli, kept_columns, pstar_from_weights};
+use uavjp::tensor::{
+    gemm_into, matmul_pr2_reference, sparse_dw_into, sparse_dx_into, Mat,
+};
+
+/// `pool::set_threads` is process-global; the tests that sweep it hold
+/// this lock so one test's single-thread baseline can't be silently
+/// rewritten to multi-threaded by a concurrently running test. (A race
+/// could not cause a false failure — results are thread-invariant — but
+/// it would erode what the baselines actually cover.)
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
+}
+
+/// ReLU-like sparsification: exact zeros at data-dependent positions.
+fn sparsify(m: &mut Mat, rng: &mut Pcg64, frac: f64) {
+    for v in m.data.iter_mut() {
+        if rng.f64() < frac {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Scalar f64 reference: C = α·op(A)·op(B) + β·C₀.
+fn reference_gemm(
+    alpha: f32,
+    a: &Mat,
+    ta: bool,
+    b: &Mat,
+    tb: bool,
+    beta: f32,
+    c0: &Mat,
+) -> Vec<f64> {
+    let m = if ta { a.cols } else { a.rows };
+    let k = if ta { a.rows } else { a.cols };
+    let n = if tb { b.rows } else { b.cols };
+    let mut out = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for kk in 0..k {
+                let av = if ta { a.at(kk, i) } else { a.at(i, kk) } as f64;
+                let bv = if tb { b.at(j, kk) } else { b.at(kk, j) } as f64;
+                s += av * bv;
+            }
+            out[i * n + j] =
+                alpha as f64 * s + beta as f64 * c0.at(i, j) as f64;
+        }
+    }
+    out
+}
+
+#[test]
+fn gemm_matches_reference_all_flags_and_betas() {
+    // property: random shapes (crossing the k-block size), random α and
+    // β ∈ {0, ±} — every transpose combination tracks the f64 reference
+    check(
+        42,
+        24,
+        |rng| {
+            let m = gen::usize_in(rng, 1, 9);
+            let k = gen::usize_in(rng, 1, 140); // crosses GEMM_KB = 64
+            (m, k)
+        },
+        |&(m, k)| {
+            let mut rng = Pcg64::new((m * 1000 + k) as u64, 5);
+            let n = 7usize;
+            for (ta, tb) in
+                [(false, false), (false, true), (true, false), (true, true)]
+            {
+                for (alpha, beta) in
+                    [(1.0f32, 0.0f32), (0.7, 1.0), (-1.3, 0.4), (2.0, -0.9)]
+                {
+                    let a = if ta {
+                        randmat(k, m, &mut rng)
+                    } else {
+                        randmat(m, k, &mut rng)
+                    };
+                    let b = if tb {
+                        randmat(n, k, &mut rng)
+                    } else {
+                        randmat(k, n, &mut rng)
+                    };
+                    let c0 = randmat(m, n, &mut rng);
+                    let want =
+                        reference_gemm(alpha, &a, ta, &b, tb, beta, &c0);
+                    let mut c = c0.clone();
+                    gemm_into(
+                        alpha,
+                        a.view(),
+                        ta,
+                        b.view(),
+                        tb,
+                        beta,
+                        c.view_mut(),
+                    );
+                    for (idx, (&got, &expect)) in
+                        c.data.iter().zip(&want).enumerate()
+                    {
+                        let err = (got as f64 - expect).abs();
+                        if err > 1e-3 * (1.0 + expect.abs()) {
+                            return Err(format!(
+                                "ta={ta} tb={tb} α={alpha} β={beta} \
+                                 m={m} k={k} idx={idx}: {got} vs {expect}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gemm_bitwise_matches_pr2_matmul_on_relu_sparse_data() {
+    // the trajectory-parity invariant: the training path's three GEMM
+    // configurations (β = 0, α = 1; NN for dX, NT for the affine forward,
+    // TN for dW) are bit-identical to the PR-2 kernel — including on
+    // inputs with exact ReLU zeros, where the old kernel skipped terms
+    let mut rng = Pcg64::new(9, 0);
+    for trial in 0..20 {
+        let (m, k, n) = (5usize, 70usize, 6usize);
+        let mut a = randmat(m, k, &mut rng);
+        let mut b = randmat(k, n, &mut rng);
+        sparsify(&mut a, &mut rng, 0.4);
+        sparsify(&mut b, &mut rng, 0.3);
+        let want = matmul_pr2_reference(&a, &b);
+        // NN
+        let mut c = Mat::from_fn(m, n, |_, _| f32::NAN);
+        gemm_into(1.0, a.view(), false, b.view(), false, 0.0, c.view_mut());
+        assert_eq!(c.data, want.data, "NN trial {trial}");
+        // NT: op(B) = (Bᵀ)ᵀ — same product, transposed operand layout
+        let bt = b.transpose();
+        gemm_into(1.0, a.view(), false, bt.view(), true, 0.0, c.view_mut());
+        assert_eq!(c.data, want.data, "NT trial {trial}");
+        // TN: op(A) = (Aᵀ)ᵀ
+        let at = a.transpose();
+        gemm_into(1.0, at.view(), true, b.view(), false, 0.0, c.view_mut());
+        assert_eq!(c.data, want.data, "TN trial {trial}");
+    }
+}
+
+#[test]
+fn gemm_threaded_bitwise_matches_single_thread() {
+    // row partitioning must never change results: every transpose combo,
+    // shapes with remainder rows, workers beyond the row count. The shape
+    // is sized above GEMM_PAR_MIN_FLOPS so the threaded path really runs.
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let saved = pool::threads();
+    let mut rng = Pcg64::new(17, 0);
+    for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)]
+    {
+        let (m, k, n) = (41usize, 300usize, 401usize);
+        let a = if ta { randmat(k, m, &mut rng) } else { randmat(m, k, &mut rng) };
+        let b = if tb { randmat(n, k, &mut rng) } else { randmat(k, n, &mut rng) };
+        let c0 = randmat(m, n, &mut rng);
+        pool::set_threads(1);
+        let mut base = c0.clone();
+        gemm_into(0.9, a.view(), ta, b.view(), tb, 0.5, base.view_mut());
+        for threads in [2usize, 3, 5, 64] {
+            pool::set_threads(threads);
+            let mut c = c0.clone();
+            gemm_into(0.9, a.view(), ta, b.view(), tb, 0.5, c.view_mut());
+            assert_eq!(
+                c.data, base.data,
+                "ta={ta} tb={tb} threads={threads}"
+            );
+        }
+    }
+    pool::set_threads(saved);
+}
+
+#[test]
+fn sparse_kernels_threaded_bitwise_match_single_thread() {
+    // sized above GEMM_PAR_MIN_FLOPS so the threaded path really runs
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let saved = pool::threads();
+    let mut rng = Pcg64::new(23, 0);
+    let (bsz, dout, din) = (128usize, 256usize, 384usize);
+    let mut g = randmat(bsz, dout, &mut rng);
+    sparsify(&mut g, &mut rng, 0.5);
+    let x = randmat(bsz, din, &mut rng);
+    let w = randmat(dout, din, &mut rng);
+    let scores = uavjp::sketch::column_scores("l1", &g, None);
+    let p = pstar_from_weights(&scores, 0.45 * dout as f64);
+    let z = correlated_bernoulli(&mut rng, &p);
+    let kept = kept_columns(&z, &p);
+    assert!(!kept.is_empty());
+    pool::set_threads(1);
+    let mut dx1 = Mat::zeros(bsz, din);
+    let mut dw1 = Mat::zeros(dout, din);
+    sparse_dx_into(g.view(), &kept, w.view(), dx1.view_mut());
+    sparse_dw_into(g.view(), &kept, x.view(), dw1.view_mut());
+    for threads in [2usize, 3, 7] {
+        pool::set_threads(threads);
+        let mut dx = Mat::from_fn(bsz, din, |_, _| f32::NAN);
+        let mut dw = Mat::from_fn(dout, din, |_, _| f32::NAN);
+        sparse_dx_into(g.view(), &kept, w.view(), dx.view_mut());
+        sparse_dw_into(g.view(), &kept, x.view(), dw.view_mut());
+        assert_eq!(dx.data, dx1.data, "sparse_dx threads={threads}");
+        assert_eq!(dw.data, dw1.data, "sparse_dw threads={threads}");
+    }
+    pool::set_threads(saved);
+}
+
+fn short_cfg(model: &str, method: &str, budget: f64) -> TrainConfig {
+    let mut cfg = Preset::Smoke.base(model).unwrap();
+    cfg.method = method.into();
+    cfg.budget = budget;
+    cfg.location = if method == "baseline" { "none".into() } else { "all".into() };
+    cfg.train_size = 256;
+    cfg.test_size = 64;
+    cfg.batch = 32;
+    cfg.steps = 10;
+    cfg.eval_every = 10;
+    cfg
+}
+
+#[test]
+fn training_trajectories_are_thread_count_invariant() {
+    // end-to-end: the whole stack (affine forwards, exact + sketched
+    // backwards, loss, optimizer) is bit-identical across --threads values
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    for (model, method, budget) in [
+        ("mlp", "baseline", 1.0),
+        ("mlp", "l1", 0.25),
+        ("vit", "l1", 0.25),
+        ("bagnet", "baseline", 1.0),
+    ] {
+        let losses_at = |threads: usize| {
+            let mut cfg = short_cfg(model, method, budget);
+            cfg.threads = threads;
+            NativeTrainer::new(cfg).unwrap().run().unwrap().losses
+        };
+        let one = losses_at(1);
+        let four = losses_at(4);
+        assert_eq!(one, four, "{model}/{method} diverged across threads");
+    }
+    pool::set_threads(1);
+}

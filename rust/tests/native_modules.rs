@@ -17,8 +17,8 @@
 
 use uavjp::config::{Preset, TrainConfig};
 use uavjp::native::{
-    Attention, FfnBlock, Layer, LayerNorm, NativeTrainer, PatchConv,
-    SiteSketch, SketchCtx,
+    run_layer_backward, run_layer_forward, Attention, FfnBlock, Layer,
+    LayerNorm, NativeTrainer, PatchConv, SiteSketch,
 };
 use uavjp::rng::Pcg64;
 use uavjp::tensor::Mat;
@@ -31,7 +31,7 @@ fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
 /// the layer output is exactly R, so `backward(R, …)` yields analytic
 /// dL/dparam and dL/dx to compare against central differences.
 fn proj_loss(layer: &dyn Layer, x: &Mat, r: &Mat) -> f64 {
-    let (y, _) = layer.forward(x);
+    let (y, _) = run_layer_forward(layer, x);
     y.data
         .iter()
         .zip(&r.data)
@@ -43,11 +43,11 @@ fn proj_loss(layer: &dyn Layer, x: &Mat, r: &Mat) -> f64 {
 /// coordinates of every parameter tensor and of the input.
 fn fd_check(layer: &mut dyn Layer, x: &mut Mat, seed: u64, tol: f64) {
     let mut rng = Pcg64::new(seed, 9);
-    let (y, cache) = layer.forward(x);
+    let (y, mut cache) = run_layer_forward(layer, x);
     let r = randmat(y.rows, y.cols, &mut rng);
     let mut gate = Pcg64::new(0, 0);
-    let mut ctx = SketchCtx { sketch: None, rng: &mut gate };
-    let (gx, pgrads) = layer.backward(&r, &cache, &mut ctx, true);
+    let (gx, pgrads) =
+        run_layer_backward(layer, &r, x, &mut cache, None, &mut gate, true);
     let gx = gx.expect("need_gx");
     let eps = 1e-2f32;
 
@@ -136,7 +136,7 @@ fn ffn_block_residual_is_identity_at_zero_weights() {
     }
     let mut rng = Pcg64::new(6, 0);
     let x = randmat(3, 8, &mut rng);
-    let (y, _) = layer.forward(&x);
+    let (y, _) = run_layer_forward(&layer, &x);
     assert_eq!(y.data, x.data);
 }
 
@@ -150,12 +150,12 @@ fn patchconv_mc_mean_matches_exact(method: &str, budget: f64, data_seed: u64) {
     let layer = PatchConv::he(4, 6, 12, data_seed, 300);
     let mut rng = Pcg64::new(data_seed, 0);
     let x = randmat(4, 24, &mut rng);
-    let (y, cache) = layer.forward(&x);
+    let (y, mut cache) = run_layer_forward(&layer, &x);
     let gy = randmat(y.rows, y.cols, &mut rng);
 
     let mut gate = Pcg64::new(0, 0);
-    let mut ctx = SketchCtx { sketch: None, rng: &mut gate };
-    let (gx_e, pg_e) = layer.backward(&gy, &cache, &mut ctx, true);
+    let (gx_e, pg_e) =
+        run_layer_backward(&layer, &gy, &x, &mut cache, None, &mut gate, true);
     let gx_e = gx_e.unwrap();
 
     let site = SiteSketch { method: method.into(), budget };
@@ -164,8 +164,15 @@ fn patchconv_mc_mean_matches_exact(method: &str, budget: f64, data_seed: u64) {
     let mut acc_gx = vec![0.0f64; gx_e.data.len()];
     let mut gate_rng = Pcg64::new(data_seed ^ 0x5eed, 1);
     for _ in 0..trials {
-        let mut ctx = SketchCtx { sketch: Some(&site), rng: &mut gate_rng };
-        let (gx, pg) = layer.backward(&gy, &cache, &mut ctx, true);
+        let (gx, pg) = run_layer_backward(
+            &layer,
+            &gy,
+            &x,
+            &mut cache,
+            Some(&site),
+            &mut gate_rng,
+            true,
+        );
         for (a, v) in acc_dw.iter_mut().zip(&pg[0]) {
             *a += *v as f64;
         }
