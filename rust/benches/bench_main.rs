@@ -3,10 +3,11 @@
 //!
 //! Sections map to the paper's evaluation (DESIGN.md §4):
 //!   gemm_scaling   — the view-kernel matrix: dense gemm_into vs the old
-//!                    naive value-returning matmul across sizes × thread
-//!                    counts, and the kept-column kernels across budgets ×
-//!                    thread counts on the same shapes (kernel-vs-kernel,
-//!                    the honest Eq-6 baseline)
+//!                    naive value-returning matmul across kernel kind
+//!                    (scalar vs the packed SIMD micro-kernel) × size ×
+//!                    thread count, and the kept-column kernels across
+//!                    kind × budget × threads on the same shapes
+//!                    (kernel-vs-kernel, the honest Eq-6 baseline)
 //!   native_bwd     — exact vs sketched layer backward (scores + waterfilling
 //!                    + sampling + kept-column GEMMs) across budgets and
 //!                    widths: the ρ(V) wall-clock of Eq 6 on real kernels
@@ -35,6 +36,7 @@ use uavjp::rng::Pcg64;
 use uavjp::sketch::{
     correlated_bernoulli, kept_columns, pstar_from_weights, SketchScratch,
 };
+use uavjp::tensor::kernels::{self, KernelKind};
 use uavjp::tensor::{
     gemm_into, matmul_pr2_reference, sparse_dw_into, sparse_dx_into, Mat,
 };
@@ -89,13 +91,18 @@ fn dense_backward_into(g: &Mat, x: &Mat, w: &Mat, dx: &mut Mat, dw: &mut Mat) {
 }
 
 /// The view-kernel scaling matrix: dense `gemm_into` vs the old naive
-/// matmul across size × threads, then the kept-column backward kernels
-/// across budget × threads on the paper's 512-wide backward shapes.
+/// matmul across kernel kind × size × threads, then the kept-column
+/// backward kernels across kind × budget × threads on the paper's
+/// 512-wide backward shapes. The ISSUE-4 acceptance bar reads straight
+/// off the records: `n512_simd_t1` vs `n512_scalar_t1` ≥ 3× on AVX2, and
+/// `bwd512_{kind}_p*` / `bwd512_{kind}_dense` ratios tracking the FLOP
+/// ratio per kind.
 fn bench_gemm_scaling(filter: &str, rep: &mut Report) {
     if !"gemm_scaling".contains(filter) && !filter.is_empty() {
         return;
     }
-    println!("\n== gemm_scaling (gemm_into vs old matmul: size × threads × budget) ==");
+    println!("\n== gemm_scaling (kernel kind × size × threads × budget) ==");
+    let kinds = [("scalar", KernelKind::Scalar), ("simd", KernelKind::Simd)];
     for n in [128usize, 256, 512] {
         let mut rng = Pcg64::new(3, n as u64);
         let a = Mat::from_fn(n, n, |_, _| rng.gaussian() as f32);
@@ -111,24 +118,29 @@ fn bench_gemm_scaling(filter: &str, rep: &mut Report) {
         // below the cut-off gemm_into runs single-threaded regardless,
         // and a t2/t4 label on it would misrepresent the scaling data
         let threaded = n * n * n >= uavjp::tensor::GEMM_PAR_MIN_FLOPS;
-        for threads in [1usize, 2, 4] {
-            if threads > 1 && !threaded {
-                continue;
+        for (kname, kind) in kinds {
+            kernels::set_kernel(kind);
+            for threads in [1usize, 2, 4] {
+                if threads > 1 && !threaded {
+                    continue;
+                }
+                pool::set_threads(threads);
+                let t = time_median(reps, || {
+                    gemm_into(1.0, a.view(), false, b.view(), false, 0.0, c.view_mut());
+                });
+                println!(
+                    "  n={n:<5} gemm_into {kname:<6} t={threads}: {:8.2} ms  \
+                     (vs old {:.2}x)",
+                    t * 1e3,
+                    naive / t
+                );
+                rep.rec("gemm_scaling", format!("n{n}_{kname}_t{threads}"), t);
             }
-            pool::set_threads(threads);
-            let t = time_median(reps, || {
-                gemm_into(1.0, a.view(), false, b.view(), false, 0.0, c.view_mut());
-            });
-            println!(
-                "  n={n:<5} gemm_into t={threads}:   {:8.2} ms  (vs old {:.2}x)",
-                t * 1e3,
-                naive / t
-            );
-            rep.rec("gemm_scaling", format!("n{n}_t{threads}"), t);
+            pool::set_threads(1);
         }
-        pool::set_threads(1);
     }
-    // kept-column kernels vs the dense exact backward, budget × threads
+    // kept-column kernels vs the dense exact backward, kind × budget ×
+    // threads — the wall-clock side of Eq. 6's ρ(V)
     let (bsz, dout, din) = (128usize, 512usize, 512usize);
     let mut rng = Pcg64::new(7, 0);
     let g = Mat::from_fn(bsz, dout, |_, _| rng.gaussian() as f32);
@@ -136,44 +148,54 @@ fn bench_gemm_scaling(filter: &str, rep: &mut Report) {
     let w = Mat::from_fn(dout, din, |_, _| rng.gaussian() as f32);
     let mut dx = Mat::zeros(bsz, din);
     let mut dw = Mat::zeros(dout, din);
-    for threads in [1usize, 2, 4] {
-        pool::set_threads(threads);
-        let dense = time_median(5, || {
-            dense_backward_into(&g, &x, &w, &mut dx, &mut dw);
-        });
-        println!(
-            "  bwd B={bsz} {dout}x{din} dense t={threads}: {:8.2} ms",
-            dense * 1e3
-        );
-        rep.rec("gemm_scaling", format!("bwd512_dense_t{threads}"), dense);
-        for budget in [0.1, 0.25, 0.5] {
-            let scores = uavjp::sketch::column_scores("l1", &g, None);
-            let p = pstar_from_weights(&scores, budget * dout as f64);
-            let z = correlated_bernoulli(&mut rng, &p);
-            let kept = kept_columns(&z, &p);
-            // skip t>1 labels for cases the threshold keeps single-threaded
-            if threads > 1
-                && bsz * din * kept.len() < uavjp::tensor::GEMM_PAR_MIN_FLOPS
-            {
-                continue;
-            }
-            let t = time_median(5, || {
-                sparse_dx_into(g.view(), &kept, w.view(), dx.view_mut());
-                sparse_dw_into(g.view(), &kept, x.view(), dw.view_mut());
+    for (kname, kind) in kinds {
+        kernels::set_kernel(kind);
+        for threads in [1usize, 2, 4] {
+            pool::set_threads(threads);
+            let dense = time_median(5, || {
+                dense_backward_into(&g, &x, &w, &mut dx, &mut dw);
             });
             println!(
-                "  bwd B={bsz} {dout}x{din} p={budget:<4} t={threads}: {:8.2} ms  (vs dense {:.2}x)",
-                t * 1e3,
-                dense / t
+                "  bwd B={bsz} {dout}x{din} dense {kname} t={threads}: {:8.2} ms",
+                dense * 1e3
             );
             rep.rec(
                 "gemm_scaling",
-                format!("bwd512_p{budget}_t{threads}"),
-                t,
+                format!("bwd512_{kname}_dense_t{threads}"),
+                dense,
             );
+            for budget in [0.1, 0.25, 0.5] {
+                let scores = uavjp::sketch::column_scores("l1", &g, None);
+                let p = pstar_from_weights(&scores, budget * dout as f64);
+                let z = correlated_bernoulli(&mut rng, &p);
+                let kept = kept_columns(&z, &p);
+                // skip t>1 labels for cases the threshold keeps single-threaded
+                if threads > 1
+                    && bsz * din * kept.len() < uavjp::tensor::GEMM_PAR_MIN_FLOPS
+                {
+                    continue;
+                }
+                let t = time_median(5, || {
+                    sparse_dx_into(g.view(), &kept, w.view(), dx.view_mut());
+                    sparse_dw_into(g.view(), &kept, x.view(), dw.view_mut());
+                });
+                println!(
+                    "  bwd B={bsz} {dout}x{din} p={budget:<4} {kname} \
+                     t={threads}: {:8.2} ms  (vs dense {:.2}x, \
+                     flop-ratio ~{budget})",
+                    t * 1e3,
+                    dense / t
+                );
+                rep.rec(
+                    "gemm_scaling",
+                    format!("bwd512_{kname}_p{budget}_t{threads}"),
+                    t,
+                );
+            }
         }
+        pool::set_threads(1);
     }
-    pool::set_threads(1);
+    kernels::set_kernel(KernelKind::Auto);
 }
 
 /// Exact vs sketched native layer backward, *including* the sketch overhead

@@ -91,6 +91,12 @@ pub struct TrainConfig {
     /// `0` inherits the process default (auto on explicit `--threads 0`).
     /// Results are bit-identical at every setting — pure wall-clock knob.
     pub threads: usize,
+    /// Compute-kernel kind for the native tensor ops (`--kernel`):
+    /// `"auto" | "scalar" | "simd"`. `"auto"` inherits the process
+    /// setting (`UAVJP_KERNEL` env, else hardware detection). Within a
+    /// kind results are bit-identical across runs and thread counts;
+    /// kinds differ in the last ulps (DESIGN.md §7.3).
+    pub kernel: String,
 }
 
 impl Default for TrainConfig {
@@ -114,6 +120,7 @@ impl Default for TrainConfig {
             batch: 128,
             budget_schedule: Vec::new(),
             threads: 0,
+            kernel: "auto".into(),
         }
     }
 }
@@ -154,6 +161,7 @@ impl TrainConfig {
             ("batch", Value::num(self.batch as f64)),
             ("budget_schedule", Value::arr_f64(&self.budget_schedule)),
             ("threads", Value::num(self.threads as f64)),
+            ("kernel", Value::str(&self.kernel)),
         ])
     }
 
@@ -199,6 +207,7 @@ impl TrainConfig {
             batch: v.get("batch").as_usize().unwrap_or(d.batch),
             budget_schedule,
             threads: v.get("threads").as_usize().unwrap_or(d.threads),
+            kernel: v.get("kernel").as_str().unwrap_or(&d.kernel).to_string(),
         })
     }
 }
@@ -440,6 +449,8 @@ mod tests {
         assert_eq!(c.batch, 128);
         assert!(c.budget_schedule.is_empty());
         assert_eq!(c.threads, 0);
+        assert_eq!(c.kernel, "auto");
+        c.kernel = "simd".into();
         c.backend = Backend::Pjrt;
         c.optimizer = "adam".into();
         c.loss = "mse".into();
@@ -451,6 +462,7 @@ mod tests {
         assert_eq!(c2.loss, "mse");
         assert_eq!(c2.batch, 64);
         assert_eq!(c2.threads, 3);
+        assert_eq!(c2.kernel, "simd");
         // configs without the new keys fall back to defaults
         let legacy = crate::json::parse(r#"{"model":"mlp","method":"l1"}"#).unwrap();
         let c3 = TrainConfig::from_json(&legacy).unwrap();
@@ -458,6 +470,7 @@ mod tests {
         assert_eq!(c3.optimizer, "sgd");
         assert_eq!(c3.batch, 128);
         assert!(c3.budget_schedule.is_empty());
+        assert_eq!(c3.kernel, "auto");
         // present-but-invalid values are loud errors, not silent fallbacks
         let bad = crate::json::parse(r#"{"backend":"pjtr"}"#).unwrap();
         assert!(TrainConfig::from_json(&bad).is_err());

@@ -22,6 +22,12 @@
 //!   [`rng`], [`tensor`], [`sketch`], [`pool`], [`config`], [`metrics`],
 //!   [`ptest`], [`cli`]).
 
+// Unsafe hygiene for the SIMD kernels (`tensor::kernels`): every unsafe
+// op inside an `unsafe fn` needs its own block, and every block needs a
+// `// SAFETY:` comment (enforced in CI via `clippy -D warnings`).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -42,6 +42,9 @@ flags:
                           `pjrt` cargo feature and a built artifacts dir)
   --threads N       intra-op worker count for the native tensor kernels
                     (0 = auto; results are bit-identical at any value)
+  --kernel K        compute-kernel kind: auto|scalar|simd (auto = AVX2+FMA
+                    SIMD when detected, else scalar; UAVJP_KERNEL env
+                    override; per-kind results are bit-identical)
   --artifacts DIR   artifact directory (default: artifacts or $UAVJP_ARTIFACTS)
   --verbose         chatty sweeps
 ";
@@ -58,6 +61,9 @@ fn main() -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     if args.str_opt("threads").is_some() {
         uavjp::pool::set_threads(args.usize_or("threads", 0)?);
+    }
+    if let Some(kind) = args.str_opt("kernel") {
+        uavjp::tensor::kernels::set_kernel(uavjp::tensor::kernels::KernelKind::parse(kind)?);
     }
 
     match sub.as_str() {
@@ -207,6 +213,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.batch = args.usize_or("batch", cfg.batch)?;
     cfg.budget_schedule = args.f64_list_or("budget-schedule", &[])?;
     cfg.threads = args.usize_or("threads", cfg.threads)?;
+    cfg.kernel = args.str_or("kernel", &cfg.kernel);
 
     eprintln!(
         "[train:{}] {} / {} p={} lr={} steps={}",

@@ -14,6 +14,7 @@
 //! probabilities, and all backward temporaries) lives in the layer's
 //! preallocated [`Cache`], so neither pass allocates.
 
+use crate::tensor::kernels::vec;
 use crate::tensor::{Mat, MatViewMut};
 
 use super::layer::{affine_into, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
@@ -65,24 +66,13 @@ impl Layer for LayerNorm {
         let (xhat, invstd) = (&mut xh_m[0], &mut rest[0]);
         for r in 0..rows {
             let xin = &x.data[r * d..(r + 1) * d];
-            let mut mu = 0.0f32;
-            for &v in xin {
-                mu += v;
-            }
-            mu /= d as f32;
-            let mut var = 0.0f32;
-            for &v in xin {
-                var += (v - mu) * (v - mu);
-            }
-            var /= d as f32;
+            let mu = vec::vsum(xin) / d as f32;
+            let var = vec::vsq_diff(xin, mu) / d as f32;
             let is = 1.0 / (var + LN_EPS).sqrt();
             invstd.data[r] = is;
             let xh = &mut xhat.data[r * d..(r + 1) * d];
             let yr = &mut y.data[r * d..(r + 1) * d];
-            for j in 0..d {
-                xh[j] = (xin[j] - mu) * is;
-                yr[j] = self.gamma[j] * xh[j] + self.beta[j];
-            }
+            vec::ln_forward_row(xin, mu, is, &self.gamma, &self.beta, xh, yr);
         }
     }
 
@@ -104,27 +94,14 @@ impl Layer for LayerNorm {
         for r in 0..rows {
             let g = &gy.data[r * d..(r + 1) * d];
             let xh = &xhat.data[r * d..(r + 1) * d];
-            for j in 0..d {
-                dgamma[j] += g[j] * xh[j];
-                dbeta[j] += g[j];
-            }
+            vec::ln_grad_params(g, xh, dgamma, dbeta);
             if let Some(gx) = gx.as_mut() {
                 // gx = invstd · (ĝ − mean(ĝ) − x̂ · mean(ĝ ⊙ x̂)), ĝ = γ ⊙ g
-                let mut m1 = 0.0f32;
-                let mut m2 = 0.0f32;
-                for j in 0..d {
-                    let gh = self.gamma[j] * g[j];
-                    m1 += gh;
-                    m2 += gh * xh[j];
-                }
-                m1 /= d as f32;
-                m2 /= d as f32;
+                let m1 = vec::vdot(&self.gamma, g) / d as f32;
+                let m2 = vec::vdot3(&self.gamma, g, xh) / d as f32;
                 let is = invstd.data[r];
                 let out = &mut gx.data[r * d..(r + 1) * d];
-                for j in 0..d {
-                    let gh = self.gamma[j] * g[j];
-                    out[j] = is * (gh - m1 - xh[j] * m2);
-                }
+                vec::ln_backward_row(g, xh, &self.gamma, m1, m2, is, out);
             }
         }
     }
@@ -172,11 +149,9 @@ impl Layer for PosEmbed {
 
     fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
         for i in 0..y.rows {
-            let xin = x.row(i);
             let row = &mut y.data[i * y.cols..(i + 1) * y.cols];
-            for ((v, &xv), &t) in row.iter_mut().zip(xin).zip(&self.table) {
-                *v = xv + t;
-            }
+            row.copy_from_slice(x.row(i));
+            vec::add_assign(row, &self.table);
         }
     }
 
@@ -192,9 +167,7 @@ impl Layer for PosEmbed {
         let [dt] = pg else { panic!("pos_embed has 1 param slot") };
         dt.fill(0.0);
         for i in 0..gy.rows {
-            for (d, &g) in dt.iter_mut().zip(gy.row(i)) {
-                *d += g;
-            }
+            vec::add_assign(dt, gy.row(i));
         }
         if let Some(gx) = gx {
             gx.data.copy_from_slice(&gy.data);
@@ -317,28 +290,23 @@ impl Layer for Attention {
                 for head in 0..h {
                     let c0 = head * dh;
                     let a0 = (b * h + head) * p;
-                    // scores s[i][j] = <q_i, k_j> · scale, softmaxed per row
+                    // scores s[i][j] = <q_i, k_j> · scale, softmaxed per
+                    // row; head slices are contiguous, so each score is a
+                    // vec::vdot over dh channels
                     for i in 0..p {
+                        let q0 = (r0 + i) * d + c0;
+                        let qrow = &q.data[q0..q0 + dh];
                         let arow = &mut attn.data[(a0 + i) * p..(a0 + i + 1) * p];
-                        let mut m = f32::NEG_INFINITY;
                         for (j, aj) in arow.iter_mut().enumerate() {
-                            let mut s = 0.0f32;
-                            for c in 0..dh {
-                                s += q.at(r0 + i, c0 + c) * k.at(r0 + j, c0 + c);
-                            }
-                            *aj = s * scale;
-                            if *aj > m {
-                                m = *aj;
-                            }
+                            let k0 = (r0 + j) * d + c0;
+                            *aj = vec::vdot(qrow, &k.data[k0..k0 + dh]) * scale;
                         }
-                        let mut sum = 0.0f32;
+                        let m = vec::vmax(arow);
                         for aj in arow.iter_mut() {
                             *aj = (*aj - m).exp();
-                            sum += *aj;
                         }
-                        for aj in arow.iter_mut() {
-                            *aj /= sum;
-                        }
+                        let sum = vec::vsum(arow);
+                        vec::div_scalar(arow, sum);
                     }
                     // o_i = Σ_j a[i][j] · v_j  (head slice)
                     for i in 0..p {
@@ -360,9 +328,7 @@ impl Layer for Attention {
             &self.o.b,
             y.reshape_mut(rows, d),
         );
-        for (yv, &xv) in y.data.iter_mut().zip(&x.data) {
-            *yv += xv; // residual
-        }
+        vec::add_assign(&mut y.data, &x.data); // residual
     }
 
     fn backward(
@@ -407,12 +373,11 @@ impl Layer for Attention {
                 let a0 = (b * h + head) * p;
                 // gA[i][j] = <go_i, v_j>;  gV_j = Σ_i a[i][j]·go_i
                 for i in 0..p {
+                    let go0 = (r0 + i) * d + c0;
+                    let gorow = &go.data[go0..go0 + dh];
                     for j in 0..p {
-                        let mut s = 0.0f32;
-                        for c in 0..dh {
-                            s += go.at(r0 + i, c0 + c) * v.at(r0 + j, c0 + c);
-                        }
-                        ga.data[i * p + j] = s;
+                        let v0 = (r0 + j) * d + c0;
+                        ga.data[i * p + j] = vec::vdot(gorow, &v.data[v0..v0 + dh]);
                     }
                 }
                 for j in 0..p {
@@ -427,13 +392,9 @@ impl Layer for Attention {
                 // softmax backward: gS = A ⊙ (gA − rowsum(gA ⊙ A))
                 for i in 0..p {
                     let arow = &attn.data[(a0 + i) * p..(a0 + i + 1) * p];
-                    let mut dot = 0.0f32;
-                    for j in 0..p {
-                        dot += ga.data[i * p + j] * arow[j];
-                    }
-                    for j in 0..p {
-                        gs.data[i * p + j] = arow[j] * (ga.data[i * p + j] - dot);
-                    }
+                    let garow = &ga.data[i * p..(i + 1) * p];
+                    let dot = vec::vdot(garow, arow);
+                    vec::softmax_bwd_row(&mut gs.data[i * p..(i + 1) * p], arow, garow, dot);
                 }
                 // gQ_i = scale · Σ_j gS[i][j]·k_j;  gK_j = scale · Σ_i gS[i][j]·q_i
                 for i in 0..p {
@@ -479,9 +440,7 @@ impl Layer for Attention {
                 dx_dest,
             );
             if let Some(gxm) = gx.as_mut() {
-                for (a, &b) in gxm.data.iter_mut().zip(&dxs.data) {
-                    *a += b;
-                }
+                vec::add_assign(&mut gxm.data, &dxs.data);
             }
         }
     }
@@ -579,9 +538,7 @@ impl Layer for FfnBlock {
             let (h_m, rest) = cache.mats.split_at_mut(1);
             let (h, hr) = (&mut h_m[0], &mut rest[0]);
             affine_into(xs, &self.w1.w, &self.w1.b, h.view_mut());
-            for (o, &v) in hr.data.iter_mut().zip(&h.data) {
-                *o = if v < 0.0 { 0.0 } else { v };
-            }
+            vec::relu_into(&mut hr.data, &h.data);
         }
         affine_into(
             cache.mats[1].view(),
@@ -589,9 +546,7 @@ impl Layer for FfnBlock {
             &self.w2.b,
             y.reshape_mut(rows, d),
         );
-        for (yv, &xv) in y.data.iter_mut().zip(&x.data) {
-            *yv += xv; // residual
-        }
+        vec::add_assign(&mut y.data, &x.data); // residual
     }
 
     fn backward(
@@ -620,11 +575,7 @@ impl Layer for FfnBlock {
             db2,
             Some(gh.view_mut()),
         );
-        for (v, &hv) in gh.data.iter_mut().zip(&h.data) {
-            if hv <= 0.0 {
-                *v = 0.0;
-            }
-        }
+        vec::mask_nonpos(&mut gh.data, &h.data);
         let mut gx = gx;
         linear_backward_ctx(
             gh.view(),
@@ -636,9 +587,7 @@ impl Layer for FfnBlock {
             gx.as_mut().map(|m| m.reshape_mut(rows, d)),
         );
         if let Some(gx) = gx {
-            for (a, &b) in gx.data.iter_mut().zip(&gy.data) {
-                *a += b; // residual
-            }
+            vec::add_assign(&mut gx.data, &gy.data); // residual
         }
     }
 

@@ -15,6 +15,7 @@
 //!   coincide, so neither pass copies the batch.
 //! * [`PatchMeanPool`] — mean over patches, the bag-of-features head.
 
+use crate::tensor::kernels::vec;
 use crate::tensor::{Mat, MatViewMut};
 
 use super::layer::{affine_into, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
@@ -218,14 +219,9 @@ impl Layer for PatchMeanPool {
             let yr = &mut y.data[i * self.dim..(i + 1) * self.dim];
             yr.fill(0.0);
             for p in 0..self.patches {
-                let chunk = &xin[p * self.dim..(p + 1) * self.dim];
-                for (o, &v) in yr.iter_mut().zip(chunk) {
-                    *o += v;
-                }
+                vec::add_assign(yr, &xin[p * self.dim..(p + 1) * self.dim]);
             }
-            for o in yr.iter_mut() {
-                *o *= inv;
-            }
+            vec::scale(yr, inv);
         }
     }
 
@@ -246,9 +242,8 @@ impl Layer for PatchMeanPool {
                 [i * self.patches * self.dim..(i + 1) * self.patches * self.dim];
             for p in 0..self.patches {
                 let chunk = &mut out[p * self.dim..(p + 1) * self.dim];
-                for (o, &g) in chunk.iter_mut().zip(grow) {
-                    *o = g * inv;
-                }
+                chunk.copy_from_slice(grow);
+                vec::scale(chunk, inv);
             }
         }
     }

@@ -22,6 +22,7 @@
 
 use crate::rng::Pcg64;
 use crate::sketch::SketchScratch;
+use crate::tensor::kernels::vec;
 use crate::tensor::{
     gemm_into, sparse_dw_into, sparse_dx_into, Mat, MatView, MatViewMut,
 };
@@ -214,9 +215,7 @@ impl Grads {
     /// Scale every gradient entry by `s` (used by clipping).
     pub fn scale(&mut self, s: f32) {
         for slot in &mut self.slots {
-            for v in slot.iter_mut() {
-                *v *= s;
-            }
+            vec::scale(slot, s);
         }
     }
 }
@@ -227,9 +226,7 @@ pub fn affine_into(x: MatView<'_>, w: &Mat, b: &[f32], mut y: MatViewMut<'_>) {
     gemm_into(1.0, x, false, w.view(), true, 0.0, y.rb());
     for i in 0..y.rows {
         let row = &mut y.data[i * y.cols..(i + 1) * y.cols];
-        for (v, bj) in row.iter_mut().zip(b) {
-            *v += bj;
-        }
+        vec::add_assign(row, b);
     }
 }
 
@@ -244,9 +241,7 @@ pub fn affine(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
 fn column_sums_into(g: MatView<'_>, db: &mut [f32]) {
     db.fill(0.0);
     for i in 0..g.rows {
-        for (o, &v) in db.iter_mut().zip(g.row(i)) {
-            *o += v;
-        }
+        vec::add_assign(db, g.row(i));
     }
 }
 
@@ -474,9 +469,7 @@ impl Layer for Relu {
     }
 
     fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
-        for (o, &v) in y.data.iter_mut().zip(&x.data) {
-            *o = if v < 0.0 { 0.0 } else { v };
-        }
+        vec::relu_into(&mut y.data, &x.data);
     }
 
     fn backward(
@@ -489,11 +482,8 @@ impl Layer for Relu {
         _pg: &mut [Vec<f32>],
     ) {
         if let Some(gx) = gx {
-            for ((o, &g), &zv) in
-                gx.data.iter_mut().zip(&gy.data).zip(&x.data)
-            {
-                *o = if zv <= 0.0 { 0.0 } else { g };
-            }
+            gx.data.copy_from_slice(&gy.data);
+            vec::mask_nonpos(&mut gx.data, &x.data);
         }
     }
 

@@ -1,5 +1,11 @@
 //! Loss heads for the native trainer: softmax cross-entropy and MSE.
+//!
+//! The softmax row reductions (max, exp-sum, normalize) run through
+//! [`crate::tensor::kernels::vec`] — legacy bit-exact loops under
+//! `--kernel scalar`, 8-wide lanes under `--kernel simd`. `exp` itself
+//! stays scalar (no vector transcendental without external deps).
 
+use crate::tensor::kernels::vec;
 use crate::tensor::Mat;
 
 /// Which loss head the trainer applies to the logits.
@@ -28,15 +34,12 @@ impl LossKind {
 fn softmax_rows_inplace(out: &mut Mat) {
     for i in 0..out.rows {
         let row = &mut out.data[i * out.cols..(i + 1) * out.cols];
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
+        let m = vec::vmax(row);
         for v in row.iter_mut() {
             *v = (*v - m).exp();
-            sum += *v;
         }
-        for v in row.iter_mut() {
-            *v /= sum;
-        }
+        let sum = vec::vsum(row);
+        vec::div_scalar(row, sum);
     }
 }
 
@@ -62,9 +65,7 @@ pub fn loss_and_grad_into(
                 loss -= (p as f64).ln();
                 g.data[i * c + yi as usize] -= 1.0;
             }
-            for v in &mut g.data {
-                *v /= b as f32;
-            }
+            vec::div_scalar(&mut g.data, b as f32);
             loss / b as f64
         }
         LossKind::Mse => {
@@ -77,9 +78,7 @@ pub fn loss_and_grad_into(
                 loss += (*v as f64) * (*v as f64);
             }
             let scale = 2.0 / n as f32;
-            for v in &mut g.data {
-                *v *= scale;
-            }
+            vec::scale(&mut g.data, scale);
             loss / n
         }
     }
@@ -94,9 +93,11 @@ pub fn loss_and_grad(kind: LossKind, logits: &Mat, y: &[i32]) -> (f64, Mat) {
 }
 
 /// Mean loss only (no gradient) — the evaluation path, allocation-free.
-/// Per-row arithmetic matches [`loss_and_grad_into`] operation for
-/// operation (same `exp`/divide rounding, same clamp), just without
-/// materializing the gradient.
+/// Per-row arithmetic matches the scalar-kind [`loss_and_grad_into`]
+/// operation for operation (same `exp`/divide rounding, same clamp)
+/// without materializing the gradient; under `--kernel simd` the train
+/// path's exp-sum reassociates into lanes, so the two may differ in the
+/// reported loss's last ulp (metric-only — gradients are unaffected).
 pub fn loss_value(kind: LossKind, logits: &Mat, y: &[i32]) -> f64 {
     let (b, c) = (logits.rows, logits.cols);
     assert_eq!(y.len(), b, "label batch size");

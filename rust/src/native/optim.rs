@@ -1,5 +1,12 @@
 //! Optimizers for the native trainer: SGD (± momentum) and Adam, plus
 //! global-norm gradient clipping — the recipes of §5 / Appendix B.2.
+//!
+//! The per-slot update loops run through [`crate::tensor::kernels::vec`]:
+//! under `--kernel scalar` those helpers replicate the legacy loops
+//! bit-for-bit (including the f64 learning-rate products of the SGD
+//! paths); under `--kernel simd` they run 8-wide lanes.
+
+use crate::tensor::kernels::vec;
 
 use super::layer::Grads;
 
@@ -82,16 +89,11 @@ impl Optim {
         match self {
             Optim::Sgd { momentum, vel } => {
                 if *momentum == 0.0 {
-                    for (p, &g) in param.iter_mut().zip(grad) {
-                        *p -= (lr * g as f64) as f32;
-                    }
+                    vec::sgd_step(param, grad, lr);
                 } else {
                     let mu = *momentum as f32;
                     let v = Self::slot_buffer(vel, slot, param.len());
-                    for ((p, &g), vi) in param.iter_mut().zip(grad).zip(v.iter_mut()) {
-                        *vi = mu * *vi + g;
-                        *p -= (lr * *vi as f64) as f32;
-                    }
+                    vec::momentum_step(param, v, grad, mu, lr);
                 }
             }
             Optim::Adam { beta1, beta2, eps, t, m, v } => {
@@ -104,24 +106,9 @@ impl Optim {
                 let bc1 = (1.0 - beta1.powf(tcur)) as f32;
                 let bc2 = (1.0 - beta2.powf(tcur)) as f32;
                 let lrf = lr as f32;
-                {
-                    let mb = Self::slot_buffer(m, slot, param.len());
-                    for (mi, &g) in mb.iter_mut().zip(grad) {
-                        *mi = b1 * *mi + (1.0 - b1) * g;
-                    }
-                }
-                {
-                    let vb = Self::slot_buffer(v, slot, param.len());
-                    for (vi, &g) in vb.iter_mut().zip(grad) {
-                        *vi = b2 * *vi + (1.0 - b2) * g * g;
-                    }
-                }
-                let (mb, vb) = (&m[slot], &v[slot]);
-                for ((p, mi), vi) in param.iter_mut().zip(mb).zip(vb) {
-                    let mhat = mi / bc1;
-                    let vhat = vi / bc2;
-                    *p -= lrf * mhat / (vhat.sqrt() + e);
-                }
+                vec::ema(Self::slot_buffer(m, slot, param.len()), grad, b1);
+                vec::ema_sq(Self::slot_buffer(v, slot, param.len()), grad, b2);
+                vec::adam_apply(param, &m[slot], &v[slot], bc1, bc2, lrf, e);
             }
         }
     }

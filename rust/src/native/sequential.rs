@@ -17,8 +17,10 @@
 //! schedule onto those sites. Exact sites consume no gate randomness, so
 //! a `location="none"` run is bit-identical to the baseline.
 
+use crate::pool;
 use crate::rng::Pcg64;
 use crate::sketch::SketchScratch;
+use crate::tensor::kernels;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
 
@@ -155,6 +157,14 @@ pub struct Workspace {
     pub slot_offsets: Vec<usize>,
     /// Reused column-planning buffers for the sketched sites.
     pub scratch: SketchScratch,
+    /// Handle to the pack-buffer pool the SIMD kernels draw from. The
+    /// pool is process-wide (`PackArena::global()` — kernels reach it
+    /// directly, not through this field); the workspace holds a handle
+    /// after pre-warming it at build for this model's worst-case panel
+    /// sizes, so callers can extend the reserve or inspect pooling, and
+    /// so the first step packs without allocating (`--kernel simd`; the
+    /// pool recycles, so steady state never allocates regardless).
+    pub pack: kernels::PackArena,
 }
 
 impl Workspace {
@@ -238,6 +248,22 @@ impl Sequential {
             }
             slot_offsets.push(slots.len());
         }
+        // Pre-warm the pack arena: a packed GEMM takes one B panel plus
+        // one A panel per worker, each bounded by the largest operand this
+        // stack can hand a kernel (activations/gradients or a parameter
+        // tensor) plus micro-tile padding. Best-effort — the arena grows
+        // on demand — but it makes the *first* step's packing
+        // allocation-free too.
+        let pack = kernels::PackArena::global();
+        let max_act = acts
+            .iter()
+            .map(|a| a.data.len())
+            .max()
+            .unwrap_or(0)
+            .max(batch * in_dim);
+        let max_param = slots.iter().map(|s| s.len()).max().unwrap_or(0);
+        let panel = max_act.max(max_param);
+        pack.reserve(pool::threads() + 1, panel + panel / 4 + 1024);
         Workspace {
             batch,
             in_dim,
@@ -247,6 +273,7 @@ impl Sequential {
             grad_slots: Grads { slots },
             slot_offsets,
             scratch: SketchScratch::new(),
+            pack,
         }
     }
 

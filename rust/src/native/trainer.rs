@@ -17,6 +17,7 @@ use crate::data::{self, BatchIter, Dataset, DatasetKind};
 use crate::metrics::RunCurve;
 use crate::pool;
 use crate::rng::Pcg64;
+use crate::tensor::kernels;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
 
@@ -77,6 +78,12 @@ impl NativeTrainer {
         let sk_rng = Pcg64::new(cfg.seed ^ 0x9e3779b9, 11);
         if cfg.threads > 0 {
             pool::set_threads(cfg.threads);
+        }
+        // Validate the kernel kind; an explicit scalar/simd pins the
+        // process knob (like --threads), "auto" inherits it.
+        let kernel_kind = kernels::KernelKind::parse(&cfg.kernel)?;
+        if kernel_kind != kernels::KernelKind::Auto {
+            kernels::set_kernel(kernel_kind);
         }
         let ws = model.workspace(cfg.batch, data_kind.dim());
         Ok(NativeTrainer { cfg, model, ws, plan, opt, loss, data_kind, sk_rng })

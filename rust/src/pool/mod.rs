@@ -1,6 +1,6 @@
 //! Scoped thread-pool substrate (std::thread; no rayon/tokio offline).
 //!
-//! Two parallel primitives share it:
+//! Four parallel primitives share it:
 //!
 //! * [`parallel_map`] — coarse task fan-out (the coordinator's sweeps);
 //! * [`run_row_chunks`] — intra-op row partitioning for the tensor
@@ -8,7 +8,12 @@
 //!   contiguous block of output rows and computes it in exactly the order
 //!   the single-threaded path would, so results are bit-identical for
 //!   every worker count (the kernel-API contract `tests/gemm_kernels.rs`
-//!   pins down).
+//!   pins down);
+//! * [`run_row_chunks_with`] — the same partitioning with one mutable
+//!   scratch state per worker (the packed SIMD GEMM's A-panel buffers);
+//! * [`run_dynamic`] — a work queue for skew-prone item lists
+//!   (`tensor::sparse_dw_into`'s kept-row chunks), preserving per-item
+//!   determinism while letting fast workers steal the tail.
 //!
 //! The intra-op worker count is a process-global set once at startup from
 //! `--threads` / `TrainConfig::threads` ([`set_threads`]; `0` = auto).
@@ -45,20 +50,91 @@ pub fn run_row_chunks<F>(workers: usize, rows: usize, cols: usize, data: &mut [f
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
+    // one shared implementation (ZST states are free), so the
+    // bit-identity-across-worker-counts contract lives in exactly one
+    // chunking routine
+    let mut states = vec![(); workers.max(1)];
+    run_row_chunks_with(workers, rows, cols, data, &mut states, |i0, chunk, _| {
+        f(i0, chunk)
+    });
+}
+
+/// [`run_row_chunks`] with one caller-provided state per worker (e.g. the
+/// packed-GEMM A-panel buffers): `f(first_row, block, state)` where each
+/// spawned worker owns one entry of `states`. At most
+/// `min(workers, states.len())` workers run; the states of unspawned
+/// workers are untouched. The bit-identity contract of [`run_row_chunks`]
+/// carries over — states must only hold scratch whose contents do not
+/// alter results.
+pub fn run_row_chunks_with<S, F>(
+    workers: usize,
+    rows: usize,
+    cols: usize,
+    data: &mut [f32],
+    states: &mut [S],
+    f: F,
+) where
+    S: Send,
+    F: Fn(usize, &mut [f32], &mut S) + Sync,
+{
     assert_eq!(data.len(), rows * cols, "row-chunk buffer size");
+    assert!(!states.is_empty(), "need at least one worker state");
     if rows == 0 || cols == 0 {
         return;
     }
-    let workers = workers.clamp(1, rows);
+    let workers = workers.clamp(1, rows).min(states.len());
     if workers == 1 {
-        f(0, data);
+        f(0, data, &mut states[0]);
         return;
     }
     let chunk_rows = rows.div_ceil(workers);
     std::thread::scope(|scope| {
-        for (ci, chunk) in data.chunks_mut(chunk_rows * cols).enumerate() {
+        for ((ci, chunk), st) in data
+            .chunks_mut(chunk_rows * cols)
+            .enumerate()
+            .zip(states.iter_mut())
+        {
             let f = &f;
-            scope.spawn(move || f(ci * chunk_rows, chunk));
+            scope.spawn(move || f(ci * chunk_rows, chunk, st));
+        }
+    });
+}
+
+/// Dynamic work queue: `states.len()` workers pull `items` one at a time
+/// from a shared queue and run `f(item, state)`. Use when per-item cost is
+/// skewed (e.g. waterfilling-budget row chunks) so a slow item can't
+/// serialize the whole batch behind one worker.
+///
+/// Determinism contract: which worker processes an item is
+/// non-deterministic, so `f` must write only item-owned data and each
+/// item's result must not depend on processing order — then results are
+/// identical for every worker count and schedule.
+pub fn run_dynamic<T, S, F>(items: Vec<T>, states: &mut [S], f: F)
+where
+    T: Send,
+    S: Send,
+    F: Fn(T, &mut S) + Sync,
+{
+    assert!(!states.is_empty(), "need at least one worker state");
+    if items.is_empty() {
+        return;
+    }
+    let workers = states.len().min(items.len());
+    if workers == 1 {
+        for it in items {
+            f(it, &mut states[0]);
+        }
+        return;
+    }
+    let queue = Mutex::new(items.into_iter());
+    std::thread::scope(|scope| {
+        for st in states.iter_mut().take(workers) {
+            let (f, queue) = (&f, &queue);
+            scope.spawn(move || loop {
+                let item = queue.lock().unwrap_or_else(|e| e.into_inner()).next();
+                let Some(it) = item else { break };
+                f(it, &mut *st);
+            });
         }
     });
 }
@@ -160,6 +236,45 @@ mod tests {
         let mut empty: Vec<f32> = Vec::new();
         run_row_chunks(4, 0, 5, &mut empty, |_, _| panic!("no rows"));
         run_row_chunks(4, 5, 0, &mut empty, |_, _| panic!("no cols"));
+    }
+
+    #[test]
+    fn stateful_row_chunks_cover_rows_and_use_worker_states() {
+        for workers in [1usize, 2, 3, 8] {
+            let rows = 7usize;
+            let cols = 3usize;
+            let mut data = vec![0.0f32; rows * cols];
+            let mut states = vec![0usize; workers];
+            run_row_chunks_with(workers, rows, cols, &mut data, &mut states, |row0, chunk, st| {
+                *st += chunk.len() / cols;
+                for (li, row) in chunk.chunks_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v = (row0 + li) as f32;
+                    }
+                }
+            });
+            for i in 0..rows {
+                assert_eq!(data[i * cols], i as f32, "w={workers}");
+            }
+            assert_eq!(states.iter().sum::<usize>(), rows, "w={workers}");
+        }
+    }
+
+    #[test]
+    fn dynamic_queue_processes_every_item_exactly_once() {
+        for workers in [1usize, 2, 5] {
+            let items: Vec<usize> = (0..23).collect();
+            let done: Vec<Mutex<usize>> = (0..23).map(|_| Mutex::new(0)).collect();
+            let mut states = vec![(); workers];
+            run_dynamic(items, &mut states, |i, _| {
+                *done[i].lock().unwrap() += 1;
+            });
+            for (i, d) in done.iter().enumerate() {
+                assert_eq!(*d.lock().unwrap(), 1, "item {i} w={workers}");
+            }
+        }
+        // empty input is a no-op
+        run_dynamic(Vec::<usize>::new(), &mut [()], |_, _| panic!("no items"));
     }
 
     #[test]

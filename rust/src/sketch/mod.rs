@@ -84,14 +84,16 @@ impl SketchScratch {
         self.sq.resize(dout, 0.0);
         self.sum.clear();
         self.sum.resize(dout, 0.0);
+        // Per-column f64 moment accumulation; vectorized across columns
+        // under `--kernel simd` (bitwise identical to the scalar loop —
+        // each column's op order is unchanged).
         for i in 0..b {
-            let grow = g.row(i);
-            for j in 0..dout {
-                let v = grow[j] as f64;
-                self.abs[j] += v.abs();
-                self.sq[j] += v * v;
-                self.sum[j] += v;
-            }
+            crate::tensor::kernels::vec::accum_scores(
+                g.row(i),
+                &mut self.abs,
+                &mut self.sq,
+                &mut self.sum,
+            );
         }
         let (abs, sq, sum) = (&self.abs, &self.sq, &self.sum);
         let var = |j: usize| {

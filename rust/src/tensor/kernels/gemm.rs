@@ -1,0 +1,881 @@
+//! The packed, register-tiled GEMM and its kept-column (sparse) variants.
+//!
+//! # Shape of the computation (BLIS-style, single panel level)
+//!
+//! For `C = α·op(A)·op(B) + β·C` with `C: m × n` and inner dim `k`:
+//!
+//! 1. **Pack B** once into NR-column panels: panel `p` holds columns
+//!    `[p·NR, p·NR+NR)` in k-major order (`bp[p·k·NR + kk·NR + l]`),
+//!    zero-padded past `n`. Transposition is absorbed here — the micro-
+//!    kernel always reads contiguous panels.
+//! 2. **Pack A** per row-chunk into MR-row micro-panels in k-major order
+//!    (`ap[t·MR·k + kk·MR + r]`), zero-padded past the chunk's rows.
+//! 3. **Micro-kernel**: each `MR × NR` tile of C is computed in
+//!    `MR × 2` lane registers ([`super::lane::SimdLane`], 6×16 with 8-wide
+//!    lanes — 12 accumulators + 2 B lanes + 1 broadcast fits the 16
+//!    AVX2 registers), one `mul_add` chain per element over ascending k.
+//!
+//! At the shapes this crate trains (k ≤ ~1024) a B panel is ≤ 64 KiB and
+//! an A micro-panel ≤ 24 KiB, so both stream from L1/L2 without a second
+//! (KC/MC) blocking level; see DESIGN.md §7.3 for when and how to add one.
+//!
+//! # Determinism
+//!
+//! Every output element is one register chain over ascending k, scaled by
+//! α once, then combined with `β·C` — a fixed op sequence per element that
+//! does not depend on tile position, chunk boundaries or worker count
+//! (zero-padded pack slots only ever feed *discarded* accumulator slots).
+//! The full-tile lane store and the edge-tile scalar store compute the
+//! same `β·c + α·acc` expression with the same associativity, so results
+//! are bit-identical however the work is partitioned — the property
+//! `tests/simd_kernels.rs` pins.
+//!
+//! The kept-column variants fold the unbiased `1/pᵢ` rescale into the
+//! packed A values (`ĝ = g·inv`, same product order as the scalar
+//! kernels), gather only kept columns/rows while packing, and then run
+//! the *identical* micro-kernel — which is how the sketched backward
+//! vectorizes exactly as well as the dense baseline.
+
+use crate::pool;
+use crate::tensor::{MatView, MatViewMut, GEMM_PAR_MIN_FLOPS};
+
+use super::lane::{PortableLane, SimdLane, LANE};
+#[cfg(target_arch = "x86_64")]
+use super::lane::Avx2Lane;
+use super::{aligned_slice, Kernel, PackArena};
+
+/// Micro-tile rows (register-tile height).
+pub(crate) const MR: usize = 6;
+/// Micro-tile columns = two lanes (register-tile width).
+pub(crate) const NR: usize = 2 * LANE;
+
+/// Pack rows `[i0, i0+rows)` of `op(A)` (k-major MR-panels, zero-padded).
+fn pack_a(a: &MatView<'_>, ta: bool, i0: usize, rows: usize, k: usize, out: &mut [f32]) {
+    let tiles = rows.div_ceil(MR);
+    for t in 0..tiles {
+        let base = t * MR * k;
+        for r in 0..MR {
+            let li = t * MR + r;
+            if li < rows {
+                let i = i0 + li;
+                if ta {
+                    for kk in 0..k {
+                        out[base + kk * MR + r] = a.at(kk, i);
+                    }
+                } else {
+                    let row = a.row(i);
+                    for kk in 0..k {
+                        out[base + kk * MR + r] = row[kk];
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    out[base + kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack all of `op(B)` (k × n) into NR-column panels (zero-padded).
+fn pack_b(b: &MatView<'_>, tb: bool, n: usize, k: usize, out: &mut [f32]) {
+    let panels = n.div_ceil(NR);
+    for p in 0..panels {
+        let base = p * k * NR;
+        let j0 = p * NR;
+        let take = NR.min(n - j0);
+        for kk in 0..k {
+            let dst = &mut out[base + kk * NR..base + (kk + 1) * NR];
+            if tb {
+                for (l, d) in dst.iter_mut().enumerate() {
+                    let j = j0 + l;
+                    *d = if j < n { b.at(j, kk) } else { 0.0 };
+                }
+            } else {
+                let row = b.row(kk);
+                dst[..take].copy_from_slice(&row[j0..j0 + take]);
+                for d in dst[take..].iter_mut() {
+                    *d = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack the kept rows of `W` as the B operand of dX = Ĝ·W (k = |kept|).
+fn pack_b_kept_rows(w: &MatView<'_>, kept: &[(usize, f32)], n: usize, out: &mut [f32]) {
+    let k = kept.len();
+    let panels = n.div_ceil(NR);
+    for p in 0..panels {
+        let base = p * k * NR;
+        let j0 = p * NR;
+        let take = NR.min(n - j0);
+        for (kk, &(j, _)) in kept.iter().enumerate() {
+            let dst = &mut out[base + kk * NR..base + (kk + 1) * NR];
+            let row = w.row(j);
+            dst[..take].copy_from_slice(&row[j0..j0 + take]);
+            for d in dst[take..].iter_mut() {
+                *d = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack batch rows `[i0, i0+rows)` of Ĝ restricted to the kept columns,
+/// with the `1/pⱼ` rescale folded in — the A operand of dX = Ĝ·W.
+fn pack_a_kept_cols(
+    g: &MatView<'_>,
+    kept: &[(usize, f32)],
+    i0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    let k = kept.len();
+    let tiles = rows.div_ceil(MR);
+    for t in 0..tiles {
+        let base = t * MR * k;
+        for r in 0..MR {
+            let li = t * MR + r;
+            if li < rows {
+                let row = g.row(i0 + li);
+                for (kk, &(j, inv)) in kept.iter().enumerate() {
+                    out[base + kk * MR + r] = row[j] * inv;
+                }
+            } else {
+                for kk in 0..k {
+                    out[base + kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack `part`'s kept columns of Ĝ as *rows* of the A operand of
+/// dW = Ĝᵀ·X (k = batch), rescale folded in.
+fn pack_a_dw(g: &MatView<'_>, part: &[(usize, f32)], out: &mut [f32]) {
+    let k = g.rows;
+    let tiles = part.len().div_ceil(MR);
+    for t in 0..tiles {
+        let base = t * MR * k;
+        for r in 0..MR {
+            let li = t * MR + r;
+            if li < part.len() {
+                let (j, inv) = part[li];
+                for kk in 0..k {
+                    out[base + kk * MR + r] = g.at(kk, j) * inv;
+                }
+            } else {
+                for kk in 0..k {
+                    out[base + kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// One `MR × NR` register tile: `acc[r] = Σ_k a[k][r] · b[k][:]`, one
+/// ascending-k `mul_add` chain per element.
+#[inline(always)]
+fn micro_tile<L: SimdLane>(k: usize, ap: &[f32], bp: &[f32]) -> [[L; 2]; MR] {
+    let mut acc = [[L::zero(); 2]; MR];
+    for (brow, arow) in bp.chunks_exact(NR).take(k).zip(ap.chunks_exact(MR)) {
+        let b0 = L::load((&brow[..LANE]).try_into().expect("lane width"));
+        let b1 = L::load((&brow[LANE..]).try_into().expect("lane width"));
+        for r in 0..MR {
+            let av = L::splat(arow[r]);
+            acc[r][0] = av.mul_add(b0, acc[r][0]);
+            acc[r][1] = av.mul_add(b1, acc[r][1]);
+        }
+    }
+    acc
+}
+
+/// Combine one already-scaled lane with `β·dst` and store. The three β
+/// cases spell out the exact expression the edge path replicates.
+#[inline(always)]
+fn write_lane<L: SimdLane>(scaled: L, beta: f32, dst: &mut [f32; LANE]) {
+    let out = if beta == 0.0 {
+        scaled // never reads dst (safe on dirty/NaN buffers)
+    } else if beta == 1.0 {
+        L::load(dst).add(scaled)
+    } else {
+        L::load(dst).mul(L::splat(beta)).add(scaled)
+    };
+    out.store(dst);
+}
+
+/// Store one tile row (`acc0 ‖ acc1`) into `dst` (`dst.len()` ≤ NR):
+/// `dst = β·dst + α·acc`. Full rows go through lanes; edge rows spill the
+/// accumulators and apply the *same* per-element expression scalar-wise,
+/// so an element's bits never depend on which path its tile took.
+#[inline(always)]
+fn store_row<L: SimdLane>(acc0: L, acc1: L, alpha: f32, beta: f32, dst: &mut [f32]) {
+    if dst.len() == NR {
+        let al = L::splat(alpha);
+        write_lane::<L>(
+            acc0.mul(al),
+            beta,
+            (&mut dst[..LANE]).try_into().expect("lane width"),
+        );
+        write_lane::<L>(
+            acc1.mul(al),
+            beta,
+            (&mut dst[LANE..]).try_into().expect("lane width"),
+        );
+    } else {
+        let mut tmp = [0.0f32; NR];
+        acc0.store((&mut tmp[..LANE]).try_into().expect("lane width"));
+        acc1.store((&mut tmp[LANE..]).try_into().expect("lane width"));
+        for (d, &t) in dst.iter_mut().zip(&tmp) {
+            *d = if beta == 0.0 {
+                alpha * t
+            } else if beta == 1.0 {
+                *d + alpha * t
+            } else {
+                beta * *d + alpha * t
+            };
+        }
+    }
+}
+
+/// Dense tile sweep over one packed row-chunk: `c = β·c + α·(Ap · Bp)`.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn gemm_chunk<L: SimdLane>(
+    alpha: f32,
+    beta: f32,
+    ap: &[f32],
+    bp: &[f32],
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    let tiles_m = rows.div_ceil(MR);
+    let panels_n = n.div_ceil(NR);
+    for t in 0..tiles_m {
+        let rows_v = MR.min(rows - t * MR);
+        let apt = &ap[t * MR * k..(t + 1) * MR * k];
+        for p in 0..panels_n {
+            let bpp = &bp[p * k * NR..(p + 1) * k * NR];
+            let acc = micro_tile::<L>(k, apt, bpp);
+            let j0 = p * NR;
+            let cols_v = NR.min(n - j0);
+            for (r, acc_r) in acc.iter().enumerate().take(rows_v) {
+                let off = (t * MR + r) * n + j0;
+                store_row::<L>(acc_r[0], acc_r[1], alpha, beta, &mut c[off..off + cols_v]);
+            }
+        }
+    }
+}
+
+/// AVX2 instantiation of [`gemm_chunk`] (the `target_feature` boundary the
+/// inlined lane intrinsics compile under).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_chunk_avx2(
+    alpha: f32,
+    beta: f32,
+    ap: &[f32],
+    bp: &[f32],
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    gemm_chunk::<Avx2Lane>(alpha, beta, ap, bp, rows, n, k, c);
+}
+
+/// Dispatch one packed row-chunk to the resolved lane backend.
+#[allow(clippy::too_many_arguments)]
+fn run_chunk(
+    kernel: Kernel,
+    alpha: f32,
+    beta: f32,
+    ap: &[f32],
+    bp: &[f32],
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Kernel::SimdAvx2` is only ever constructed after
+        // `is_x86_feature_detected!("avx2") && ("fma")` succeeded
+        // (`kernels::detect_simd`), so the required instruction sets are
+        // present on this CPU.
+        Kernel::SimdAvx2 => unsafe {
+            gemm_chunk_avx2(alpha, beta, ap, bp, rows, n, k, c)
+        },
+        _ => gemm_chunk::<PortableLane>(alpha, beta, ap, bp, rows, n, k, c),
+    }
+}
+
+/// Apply the β pass alone (the k = 0 degenerate case: C = β·C).
+fn beta_only(beta: f32, c: &mut [f32]) {
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
+/// Packed-path implementation of [`crate::tensor::gemm_into`] — same
+/// contract (shapes pre-validated by the caller), dispatched to `kernel`'s
+/// lane backend, row-chunk threaded like the scalar path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed(
+    kernel: Kernel,
+    alpha: f32,
+    a: MatView<'_>,
+    ta: bool,
+    b: MatView<'_>,
+    tb: bool,
+    beta: f32,
+    c: MatViewMut<'_>,
+) {
+    let (m, n) = (c.rows, c.cols);
+    let k = if ta { a.rows } else { a.cols };
+    let workers = if m * n * k.max(1) < GEMM_PAR_MIN_FLOPS {
+        1
+    } else {
+        pool::threads()
+    };
+    gemm_packed_workers(kernel, workers, alpha, a, ta, b, tb, beta, c);
+}
+
+/// [`gemm_packed`] with an explicit worker count (bit-identical for every
+/// value; split out so tests can sweep it without the process-global
+/// thread knob).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_packed_workers(
+    kernel: Kernel,
+    workers: usize,
+    alpha: f32,
+    a: MatView<'_>,
+    ta: bool,
+    b: MatView<'_>,
+    tb: bool,
+    beta: f32,
+    c: MatViewMut<'_>,
+) {
+    let (m, n) = (c.rows, c.cols);
+    let k = if ta { a.rows } else { a.cols };
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        beta_only(beta, c.data);
+        return;
+    }
+    let arena = PackArena::global();
+    let blen = n.div_ceil(NR) * NR * k;
+    let mut bbuf = arena.take(blen);
+    let bp: &[f32] = {
+        let s = aligned_slice(&mut bbuf, blen);
+        pack_b(&b, tb, n, k, s);
+        s
+    };
+    let workers = workers.clamp(1, m);
+    let chunk_rows = m.div_ceil(workers);
+    let nchunks = m.div_ceil(chunk_rows);
+    let alen = chunk_rows.div_ceil(MR) * MR * k;
+    let mut abufs: Vec<Vec<f32>> = (0..nchunks).map(|_| arena.take(alen)).collect();
+    pool::run_row_chunks_with(workers, m, n, c.data, &mut abufs, |i0, chunk, abuf| {
+        let rows = chunk.len() / n;
+        let ap = aligned_slice(abuf, rows.div_ceil(MR) * MR * k);
+        pack_a(&a, ta, i0, rows, k, ap);
+        run_chunk(kernel, alpha, beta, ap, bp, rows, n, k, chunk);
+    });
+    for ab in abufs {
+        arena.put(ab);
+    }
+    arena.put(bbuf);
+}
+
+/// Packed-path implementation of [`crate::tensor::sparse_dx_into`]:
+/// dX = Ĝ·W over kept columns only, same threading/threshold as the
+/// scalar path, rescale folded into the A pack.
+pub fn sparse_dx_packed(
+    kernel: Kernel,
+    g: MatView<'_>,
+    kept: &[(usize, f32)],
+    w: MatView<'_>,
+    dx: MatViewMut<'_>,
+) {
+    let workers = if dx.rows * dx.cols * kept.len().max(1) < GEMM_PAR_MIN_FLOPS {
+        1
+    } else {
+        pool::threads()
+    };
+    sparse_dx_packed_workers(kernel, workers, g, kept, w, dx);
+}
+
+/// [`sparse_dx_packed`] with an explicit worker count (tests).
+pub(crate) fn sparse_dx_packed_workers(
+    kernel: Kernel,
+    workers: usize,
+    g: MatView<'_>,
+    kept: &[(usize, f32)],
+    w: MatView<'_>,
+    dx: MatViewMut<'_>,
+) {
+    let (m, n, k) = (dx.rows, dx.cols, kept.len());
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        dx.data.fill(0.0);
+        return;
+    }
+    let arena = PackArena::global();
+    let blen = n.div_ceil(NR) * NR * k;
+    let mut bbuf = arena.take(blen);
+    let bp: &[f32] = {
+        let s = aligned_slice(&mut bbuf, blen);
+        pack_b_kept_rows(&w, kept, n, s);
+        s
+    };
+    let workers = workers.clamp(1, m);
+    let chunk_rows = m.div_ceil(workers);
+    let nchunks = m.div_ceil(chunk_rows);
+    let alen = chunk_rows.div_ceil(MR) * MR * k;
+    let mut abufs: Vec<Vec<f32>> = (0..nchunks).map(|_| arena.take(alen)).collect();
+    pool::run_row_chunks_with(workers, m, n, dx.data, &mut abufs, |i0, chunk, abuf| {
+        let rows = chunk.len() / n;
+        let ap = aligned_slice(abuf, rows.div_ceil(MR) * MR * k);
+        pack_a_kept_cols(&g, kept, i0, rows, ap);
+        run_chunk(kernel, 1.0, 0.0, ap, bp, rows, n, k, chunk);
+    });
+    for ab in abufs {
+        arena.put(ab);
+    }
+    arena.put(bbuf);
+}
+
+/// Pack X as the shared B operand of dW = Ĝᵀ·X (done once per call; every
+/// worker chunk reads it). Returns the aligned packed panel view.
+pub fn sparse_dw_pack_x<'b>(x: MatView<'_>, buf: &'b mut Vec<f32>) -> &'b [f32] {
+    let len = x.cols.div_ceil(NR) * NR * x.rows;
+    let s = aligned_slice(buf, len);
+    pack_b(&x, false, x.cols, x.rows, s);
+    s
+}
+
+/// Scatter tile sweep for one dW chunk: compute the kept rows listed in
+/// `part` (a contiguous slice of the kept list) into `span`, the caller's
+/// mutable window over dW rows `[first, last]`. `xp` is the packed X from
+/// [`sparse_dw_pack_x`]. Dropped rows inside the window are untouched
+/// (the caller pre-zeroed dW).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_dw_tiles(
+    kernel: Kernel,
+    g: MatView<'_>,
+    part: &[(usize, f32)],
+    xp: &[f32],
+    din: usize,
+    first: usize,
+    span: &mut [f32],
+    abuf: &mut Vec<f32>,
+) {
+    let k = g.rows;
+    let ap = aligned_slice(abuf, part.len().div_ceil(MR) * MR * k);
+    pack_a_dw(&g, part, ap);
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Kernel::SimdAvx2` proves the runtime avx2+fma probe
+        // succeeded (see `run_chunk`).
+        Kernel::SimdAvx2 => unsafe { dw_chunk_avx2(ap, xp, part, din, k, first, span) },
+        _ => dw_chunk::<PortableLane>(ap, xp, part, din, k, first, span),
+    }
+}
+
+/// Tile sweep with scattered destination rows (dW rows are the kept
+/// indices, not consecutive). β = 0 semantics: kept rows fully
+/// overwritten.
+#[inline(always)]
+fn dw_chunk<L: SimdLane>(
+    ap: &[f32],
+    xp: &[f32],
+    part: &[(usize, f32)],
+    din: usize,
+    k: usize,
+    first: usize,
+    span: &mut [f32],
+) {
+    let tiles_m = part.len().div_ceil(MR);
+    let panels_n = din.div_ceil(NR);
+    for t in 0..tiles_m {
+        let rows_v = MR.min(part.len() - t * MR);
+        let apt = &ap[t * MR * k..(t + 1) * MR * k];
+        for p in 0..panels_n {
+            let bpp = &xp[p * k * NR..(p + 1) * k * NR];
+            let acc = micro_tile::<L>(k, apt, bpp);
+            let j0 = p * NR;
+            let cols_v = NR.min(din - j0);
+            for (r, acc_r) in acc.iter().enumerate().take(rows_v) {
+                let row = part[t * MR + r].0;
+                let off = (row - first) * din + j0;
+                store_row::<L>(acc_r[0], acc_r[1], 1.0, 0.0, &mut span[off..off + cols_v]);
+            }
+        }
+    }
+}
+
+/// AVX2 instantiation of [`dw_chunk`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dw_chunk_avx2(
+    ap: &[f32],
+    xp: &[f32],
+    part: &[(usize, f32)],
+    din: usize,
+    k: usize,
+    first: usize,
+    span: &mut [f32],
+) {
+    dw_chunk::<Avx2Lane>(ap, xp, part, din, k, first, span);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::Mat;
+
+    fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
+    }
+
+    /// Backends available on this host (portable always; AVX2 when live).
+    fn backends() -> Vec<Kernel> {
+        let mut v = vec![Kernel::SimdPortable];
+        if super::super::detect_simd() == Kernel::SimdAvx2 {
+            v.push(Kernel::SimdAvx2);
+        }
+        v
+    }
+
+    fn reference_f64(
+        alpha: f32,
+        a: &Mat,
+        ta: bool,
+        b: &Mat,
+        tb: bool,
+        beta: f32,
+        c0: &Mat,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let m = if ta { a.cols } else { a.rows };
+        let k = if ta { a.rows } else { a.cols };
+        let n = if tb { b.rows } else { b.cols };
+        let mut out = vec![0.0f64; m * n];
+        let mut mag = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                let mut t = 0.0f64;
+                for kk in 0..k {
+                    let av = if ta { a.at(kk, i) } else { a.at(i, kk) } as f64;
+                    let bv = if tb { b.at(j, kk) } else { b.at(kk, j) } as f64;
+                    s += av * bv;
+                    t += (av * bv).abs();
+                }
+                out[i * n + j] = alpha as f64 * s + beta as f64 * c0.at(i, j) as f64;
+                mag[i * n + j] = (alpha as f64 * t).abs()
+                    + (beta as f64 * c0.at(i, j) as f64).abs();
+            }
+        }
+        (out, mag)
+    }
+
+    fn assert_ulp_close(got: &[f32], want: &[f64], mag: &[f64], k: usize, tag: &str) {
+        for (i, (&g, (&w, &m))) in got.iter().zip(want.iter().zip(mag)).enumerate() {
+            let tol = (k as f64 + 8.0) * f32::EPSILON as f64 * (m + 1e-30);
+            assert!(
+                (g as f64 - w).abs() <= tol,
+                "{tag} idx {i}: got {g} want {w} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_f64_reference_over_remainder_shapes() {
+        // m, n, k deliberately off the 6/16/lane grid, plus exact-grid and
+        // degenerate sizes
+        let ms = [1usize, 5, 6, 7, 13];
+        let ns = [1usize, 15, 16, 17, 33];
+        let ks = [1usize, 2, 9, 64];
+        let mut rng = Pcg64::new(31, 0);
+        let combos = [(false, false), (false, true), (true, false), (true, true)];
+        for kernel in backends() {
+            for &m in &ms {
+                for &n in &ns {
+                    for &k in &ks {
+                        for (ta, tb) in combos {
+                            let a = if ta {
+                                randmat(k, m, &mut rng)
+                            } else {
+                                randmat(m, k, &mut rng)
+                            };
+                            let b = if tb {
+                                randmat(n, k, &mut rng)
+                            } else {
+                                randmat(k, n, &mut rng)
+                            };
+                            let c0 = randmat(m, n, &mut rng);
+                            let (alpha, beta) = (0.7f32, -0.4f32);
+                            let (want, mag) =
+                                reference_f64(alpha, &a, ta, &b, tb, beta, &c0);
+                            let mut c = c0.clone();
+                            gemm_packed_workers(
+                                kernel,
+                                1,
+                                alpha,
+                                a.view(),
+                                ta,
+                                b.view(),
+                                tb,
+                                beta,
+                                c.view_mut(),
+                            );
+                            assert_ulp_close(
+                                &c.data,
+                                &want,
+                                &mag,
+                                k,
+                                &format!("{kernel:?} m{m} n{n} k{k} ta{ta} tb{tb}"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_beta_zero_ignores_dirty_destination() {
+        let mut rng = Pcg64::new(5, 0);
+        let a = randmat(7, 10, &mut rng);
+        let b = randmat(10, 18, &mut rng);
+        for kernel in backends() {
+            let mut c = Mat::from_fn(7, 18, |_, _| f32::NAN);
+            gemm_packed_workers(
+                kernel,
+                1,
+                1.0,
+                a.view(),
+                false,
+                b.view(),
+                false,
+                0.0,
+                c.view_mut(),
+            );
+            assert!(c.data.iter().all(|v| v.is_finite()), "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_is_worker_count_invariant_bitwise() {
+        let mut rng = Pcg64::new(9, 0);
+        let a = randmat(23, 37, &mut rng);
+        let b = randmat(37, 29, &mut rng);
+        let c0 = randmat(23, 29, &mut rng);
+        for kernel in backends() {
+            let mut base = c0.clone();
+            gemm_packed_workers(
+                kernel,
+                1,
+                0.9,
+                a.view(),
+                false,
+                b.view(),
+                false,
+                0.5,
+                base.view_mut(),
+            );
+            for workers in [2usize, 3, 5, 64] {
+                let mut c = c0.clone();
+                gemm_packed_workers(
+                    kernel,
+                    workers,
+                    0.9,
+                    a.view(),
+                    false,
+                    b.view(),
+                    false,
+                    0.5,
+                    c.view_mut(),
+                );
+                assert_eq!(c.data, base.data, "{kernel:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_degenerate_shapes_match_scalar_semantics() {
+        for kernel in backends() {
+            // k = 0 → pure β pass
+            let a = Mat::zeros(3, 0);
+            let b = Mat::zeros(0, 4);
+            let mut c = Mat::from_fn(3, 4, |i, j| (i + j) as f32 + 1.0);
+            gemm_packed_workers(
+                kernel,
+                1,
+                1.0,
+                a.view(),
+                false,
+                b.view(),
+                false,
+                0.5,
+                c.view_mut(),
+            );
+            for (i, &v) in c.data.iter().enumerate() {
+                let want = ((i / 4 + i % 4) as f32 + 1.0) * 0.5;
+                assert_eq!(v, want, "{kernel:?}");
+            }
+            // m = n = 0 → no-op on the empty buffer
+            let z = Mat::zeros(0, 0);
+            let mut e = Mat::zeros(0, 0);
+            gemm_packed_workers(
+                kernel,
+                4,
+                1.0,
+                z.view(),
+                false,
+                z.view(),
+                false,
+                1.0,
+                e.view_mut(),
+            );
+            assert!(e.data.is_empty());
+        }
+    }
+
+    #[test]
+    fn pack_layouts_are_k_major_and_zero_padded() {
+        // A: 2×3, rows [0,2): panel holds a[i][k] at kk*MR + r
+        let a = Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let mut ap = vec![f32::NAN; MR * 3];
+        pack_a(&a.view(), false, 0, 2, 3, &mut ap);
+        for kk in 0..3 {
+            assert_eq!(ap[kk * MR], a.at(0, kk));
+            assert_eq!(ap[kk * MR + 1], a.at(1, kk));
+            for r in 2..MR {
+                assert_eq!(ap[kk * MR + r], 0.0, "padded row");
+            }
+        }
+        // transposed read: same panel from the 3×2 transpose
+        let at = a.transpose();
+        let mut apt = vec![f32::NAN; MR * 3];
+        pack_a(&at.view(), true, 0, 2, 3, &mut apt);
+        assert_eq!(ap, apt);
+        // B: 2×3 packed as one NR panel, columns past n zeroed
+        let b = Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let mut bp = vec![f32::NAN; NR * 2];
+        pack_b(&b.view(), false, 3, 2, &mut bp);
+        for kk in 0..2 {
+            for l in 0..3 {
+                assert_eq!(bp[kk * NR + l], b.at(kk, l));
+            }
+            for l in 3..NR {
+                assert_eq!(bp[kk * NR + l], 0.0, "padded col");
+            }
+        }
+        let bt = b.transpose();
+        let mut bpt = vec![f32::NAN; NR * 2];
+        pack_b(&bt.view(), true, 3, 2, &mut bpt);
+        assert_eq!(bp, bpt);
+    }
+
+    #[test]
+    fn sparse_dx_packed_matches_masked_dense_reference() {
+        let mut rng = Pcg64::new(13, 0);
+        let (bsz, dout, din) = (9usize, 14, 11);
+        let g = randmat(bsz, dout, &mut rng);
+        let w = randmat(dout, din, &mut rng);
+        let kept = vec![(1usize, 2.0f32), (5, 1.5), (6, 4.0), (13, 1.25)];
+        // dense reference: masked+rescaled G times W, in f64
+        let mut want = vec![0.0f64; bsz * din];
+        for i in 0..bsz {
+            for jj in 0..din {
+                let mut s = 0.0f64;
+                for &(j, inv) in &kept {
+                    s += (g.at(i, j) * inv) as f64 * w.at(j, jj) as f64;
+                }
+                want[i * din + jj] = s;
+            }
+        }
+        for kernel in backends() {
+            for workers in [1usize, 3] {
+                let mut dx = Mat::from_fn(bsz, din, |_, _| f32::NAN);
+                sparse_dx_packed_workers(
+                    kernel,
+                    workers,
+                    g.view(),
+                    &kept,
+                    w.view(),
+                    dx.view_mut(),
+                );
+                for (got, wantv) in dx.data.iter().zip(&want) {
+                    assert!(
+                        (*got as f64 - wantv).abs() < 1e-4,
+                        "{kernel:?} w{workers}: {got} vs {wantv}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_dw_tiles_scatter_only_kept_rows() {
+        let mut rng = Pcg64::new(17, 0);
+        let (bsz, dout, din) = (7usize, 10, 19);
+        let g = randmat(bsz, dout, &mut rng);
+        let x = randmat(bsz, din, &mut rng);
+        let part = vec![(2usize, 3.0f32), (3, 0.5), (7, 2.0)];
+        for kernel in backends() {
+            let arena = PackArena::global();
+            let mut xbuf = arena.take(0);
+            let mut abuf = arena.take(0);
+            let mut dw = Mat::zeros(dout, din);
+            {
+                let xp = sparse_dw_pack_x(x.view(), &mut xbuf);
+                // whole dW as the span (first = 0)
+                sparse_dw_tiles(
+                    kernel,
+                    g.view(),
+                    &part,
+                    xp,
+                    din,
+                    0,
+                    &mut dw.data,
+                    &mut abuf,
+                );
+            }
+            arena.put(xbuf);
+            arena.put(abuf);
+            for j in 0..dout {
+                let row = &dw.data[j * din..(j + 1) * din];
+                match part.iter().find(|&&(pj, _)| pj == j) {
+                    None => assert!(row.iter().all(|&v| v == 0.0), "{kernel:?} row {j}"),
+                    Some(&(_, inv)) => {
+                        for (jj, &got) in row.iter().enumerate() {
+                            let mut s = 0.0f64;
+                            for i in 0..bsz {
+                                s += (g.at(i, j) * inv) as f64 * x.at(i, jj) as f64;
+                            }
+                            assert!(
+                                (got as f64 - s).abs() < 1e-4,
+                                "{kernel:?} ({j},{jj}): {got} vs {s}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,498 @@
+//! The [`SimdLane`] abstraction: one 8-wide f32 vector register, written
+//! once and instantiated per backend.
+//!
+//! Two backends implement it:
+//!
+//! * [`PortableLane`] — a `[f32; 8]` computed with plain scalar ops. Always
+//!   compiled, fully safe, and the correctness oracle the AVX2 backend is
+//!   property-tested against. Its `mul_add` is an unfused `a·b + c` (two
+//!   roundings), so results can differ from the FMA backend in the last
+//!   ulp — never more (see the parity tests).
+//! * [`Avx2Lane`] — `__m256` via `core::arch::x86_64` intrinsics with true
+//!   FMA. Only compiled on x86_64; only *executed* behind a successful
+//!   `is_x86_feature_detected!("avx2") && ("fma")` check (the resolved
+//!   [`crate::tensor::kernels::Kernel`] carries that proof).
+//!
+//! # Invariants every backend must uphold
+//!
+//! * **Lane width is exactly [`LANE`] = 8.** The micro-kernel geometry
+//!   (6×16 tiles = 6 rows × 2 lanes) and every packed-panel layout assume
+//!   it; a future NEON backend of width 4 would wrap two registers per
+//!   lane rather than change `LANE` (DESIGN.md §7.3).
+//! * **Elementwise ops are IEEE-754 exact per slot** (`add`/`sub`/`mul`/
+//!   `div`/`sqrt`/`max` round-to-nearest like the scalar f32 ops), so any
+//!   lane computation that avoids `mul_add` and horizontal reductions is
+//!   bit-identical across backends.
+//! * **Horizontal reductions use one fixed order** — fold the high half
+//!   onto the low half, then halve again, then combine the final pair:
+//!   `(l0+l4)+(l2+l6) … ` exactly as [`PortableLane::hsum`] spells out.
+//!   Both backends implement the same tree, which is what makes a kernel
+//!   *kind* deterministic across runs and thread counts.
+//! * **No data-dependent branching** inside lane ops (`relu` and
+//!   `zero_where_nonpos` are branchless selects on AVX2 and must match the
+//!   scalar `if` semantics bit-for-bit, including `-0.0` handling).
+
+/// Lane width in f32 slots shared by every backend.
+pub const LANE: usize = 8;
+
+/// One 8-wide f32 SIMD register. See the module docs for the invariants
+/// implementations must uphold; all ops are safe — backends that wrap
+/// intrinsics discharge their safety obligations internally (the
+/// intrinsics used are plain register/`loadu`/`storeu` ops that are sound
+/// whenever the instruction set is available, which construction of the
+/// dispatching [`crate::tensor::kernels::Kernel`] guarantees).
+pub trait SimdLane: Copy {
+    /// All-zero lane.
+    fn zero() -> Self;
+    /// Broadcast `v` into every slot.
+    fn splat(v: f32) -> Self;
+    /// Load 8 contiguous f32s.
+    fn load(src: &[f32; LANE]) -> Self;
+    /// Store 8 contiguous f32s.
+    fn store(self, dst: &mut [f32; LANE]);
+    /// Slotwise `self + o`.
+    fn add(self, o: Self) -> Self;
+    /// Slotwise `self - o`.
+    fn sub(self, o: Self) -> Self;
+    /// Slotwise `self * o`.
+    fn mul(self, o: Self) -> Self;
+    /// Slotwise `self / o`.
+    fn div(self, o: Self) -> Self;
+    /// Slotwise square root.
+    fn sqrt(self) -> Self;
+    /// Slotwise `if o > self { o } else { self }` (keeps `self` on ties —
+    /// the same update rule as the scalar running-max loops).
+    fn max(self, o: Self) -> Self;
+    /// Slotwise `self * m + a`. Fused (one rounding) on AVX2, unfused on
+    /// the portable backend — the one op where backends may differ in the
+    /// last ulp.
+    fn mul_add(self, m: Self, a: Self) -> Self;
+    /// Slotwise `if self < 0.0 { 0.0 } else { self }` (keeps `-0.0`, like
+    /// the scalar ReLU).
+    fn relu(self) -> Self;
+    /// Slotwise `if gate <= 0.0 { 0.0 } else { self }` — the ReLU backward
+    /// mask.
+    fn zero_where_nonpos(self, gate: Self) -> Self;
+    /// Horizontal sum in the fixed documented order.
+    fn hsum(self) -> f32;
+    /// Horizontal max (same tree as [`SimdLane::hsum`], exact anyway).
+    fn hmax(self) -> f32;
+}
+
+/// Safe scalar-emulated backend: `[f32; 8]` with plain f32 arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub struct PortableLane(pub [f32; LANE]);
+
+impl PortableLane {
+    #[inline(always)]
+    fn map2(self, o: Self, f: impl Fn(f32, f32) -> f32) -> Self {
+        let mut out = [0.0f32; LANE];
+        for i in 0..LANE {
+            out[i] = f(self.0[i], o.0[i]);
+        }
+        PortableLane(out)
+    }
+}
+
+impl SimdLane for PortableLane {
+    #[inline(always)]
+    fn zero() -> Self {
+        PortableLane([0.0; LANE])
+    }
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        PortableLane([v; LANE])
+    }
+
+    #[inline(always)]
+    fn load(src: &[f32; LANE]) -> Self {
+        PortableLane(*src)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32; LANE]) {
+        *dst = self.0;
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        self.map2(o, |a, b| a + b)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        self.map2(o, |a, b| a - b)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        self.map2(o, |a, b| a * b)
+    }
+
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        self.map2(o, |a, b| a / b)
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        let mut out = self.0;
+        for v in out.iter_mut() {
+            *v = v.sqrt();
+        }
+        PortableLane(out)
+    }
+
+    #[inline(always)]
+    fn max(self, o: Self) -> Self {
+        self.map2(o, |a, b| if b > a { b } else { a })
+    }
+
+    #[inline(always)]
+    fn mul_add(self, m: Self, a: Self) -> Self {
+        // deliberately unfused: two roundings, like plain scalar code
+        let mut out = [0.0f32; LANE];
+        for i in 0..LANE {
+            out[i] = self.0[i] * m.0[i] + a.0[i];
+        }
+        PortableLane(out)
+    }
+
+    #[inline(always)]
+    fn relu(self) -> Self {
+        let mut out = self.0;
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        PortableLane(out)
+    }
+
+    #[inline(always)]
+    fn zero_where_nonpos(self, gate: Self) -> Self {
+        self.map2(gate, |v, g| if g <= 0.0 { 0.0 } else { v })
+    }
+
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        // THE canonical reduction order: fold the high half onto the low
+        // half, halve again, combine the final pair. Avx2Lane must match.
+        let l = self.0;
+        let q = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+        let p = [q[0] + q[2], q[1] + q[3]];
+        p[0] + p[1]
+    }
+
+    #[inline(always)]
+    fn hmax(self) -> f32 {
+        let m = |a: f32, b: f32| if b > a { b } else { a };
+        let l = self.0;
+        let q = [m(l[0], l[4]), m(l[1], l[5]), m(l[2], l[6]), m(l[3], l[7])];
+        let p = [m(q[0], q[2]), m(q[1], q[3])];
+        m(p[0], p[1])
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use avx2::Avx2Lane;
+
+/// AVX2+FMA backend (`__m256`). Compiled only on x86_64; run only behind
+/// runtime feature detection.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{SimdLane, LANE};
+    use core::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_andnot_ps, _mm256_castps256_ps128,
+        _mm256_cmp_ps, _mm256_div_ps, _mm256_extractf128_ps,
+        _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
+        _mm256_set1_ps, _mm256_setzero_ps, _mm256_sqrt_ps, _mm256_storeu_ps,
+        _mm256_sub_ps, _mm_add_ps, _mm_add_ss, _mm_cvtss_f32, _mm_max_ps,
+        _mm_max_ss, _mm_movehdup_ps, _mm_movehl_ps, _CMP_LE_OQ, _CMP_LT_OQ,
+    };
+
+    /// One `__m256` register of 8 f32 slots.
+    ///
+    /// Every method lowers to a single VEX instruction (plus unaligned
+    /// load/store, which carry no alignment obligation). The intrinsics
+    /// themselves are `unsafe` only because executing AVX instructions on
+    /// a CPU without them is undefined; the kernels module never
+    /// constructs a dispatch path to this type without a successful
+    /// `is_x86_feature_detected!` probe, and every call chain is wrapped
+    /// in a `#[target_feature(enable = "avx2,fma")]` function.
+    #[derive(Clone, Copy)]
+    pub struct Avx2Lane(__m256);
+
+    impl SimdLane for Avx2Lane {
+        #[inline(always)]
+        fn zero() -> Self {
+            // SAFETY: register-only AVX op; reachable only behind the
+            // runtime avx2+fma probe (see type docs).
+            Avx2Lane(unsafe { _mm256_setzero_ps() })
+        }
+
+        #[inline(always)]
+        fn splat(v: f32) -> Self {
+            // SAFETY: register-only AVX op behind the runtime probe.
+            Avx2Lane(unsafe { _mm256_set1_ps(v) })
+        }
+
+        #[inline(always)]
+        fn load(src: &[f32; LANE]) -> Self {
+            // SAFETY: `src` is a valid &[f32; 8], so reading 32 bytes from
+            // its address is in-bounds; `loadu` has no alignment
+            // requirement. AVX availability per the type docs.
+            Avx2Lane(unsafe { _mm256_loadu_ps(src.as_ptr()) })
+        }
+
+        #[inline(always)]
+        fn store(self, dst: &mut [f32; LANE]) {
+            // SAFETY: `dst` is a valid &mut [f32; 8]; 32-byte unaligned
+            // store is in-bounds. AVX availability per the type docs.
+            unsafe { _mm256_storeu_ps(dst.as_mut_ptr(), self.0) }
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            // SAFETY: register-only AVX op behind the runtime probe.
+            Avx2Lane(unsafe { _mm256_add_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            // SAFETY: register-only AVX op behind the runtime probe.
+            Avx2Lane(unsafe { _mm256_sub_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            // SAFETY: register-only AVX op behind the runtime probe.
+            Avx2Lane(unsafe { _mm256_mul_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            // SAFETY: register-only AVX op behind the runtime probe.
+            Avx2Lane(unsafe { _mm256_div_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            // SAFETY: register-only AVX op behind the runtime probe.
+            Avx2Lane(unsafe { _mm256_sqrt_ps(self.0) })
+        }
+
+        #[inline(always)]
+        fn max(self, o: Self) -> Self {
+            // `maxps(a, b)` computes `a > b ? a : b` — it returns the
+            // *second* operand on ties (and when either input is NaN), so
+            // the operands go in as `(o, self)` to reproduce the scalar
+            // rule `if o > self { o } else { self }` exactly, including
+            // `-0.0` ties and NaN propagation.
+            // SAFETY: register-only AVX op behind the runtime probe.
+            Avx2Lane(unsafe { _mm256_max_ps(o.0, self.0) })
+        }
+
+        #[inline(always)]
+        fn mul_add(self, m: Self, a: Self) -> Self {
+            // SAFETY: register-only FMA op behind the runtime probe (the
+            // dispatch functions enable both "avx2" and "fma").
+            Avx2Lane(unsafe { _mm256_fmadd_ps(self.0, m.0, a.0) })
+        }
+
+        #[inline(always)]
+        fn relu(self) -> Self {
+            // mask = (self < 0); out = !mask & self — keeps -0.0 exactly
+            // like the scalar `if v < 0.0 { 0.0 } else { v }`.
+            // SAFETY: register-only AVX ops behind the runtime probe.
+            unsafe {
+                let mask = _mm256_cmp_ps::<_CMP_LT_OQ>(self.0, _mm256_setzero_ps());
+                Avx2Lane(_mm256_andnot_ps(mask, self.0))
+            }
+        }
+
+        #[inline(always)]
+        fn zero_where_nonpos(self, gate: Self) -> Self {
+            // mask = (gate <= 0); out = !mask & self.
+            // SAFETY: register-only AVX ops behind the runtime probe.
+            unsafe {
+                let mask = _mm256_cmp_ps::<_CMP_LE_OQ>(gate.0, _mm256_setzero_ps());
+                Avx2Lane(_mm256_andnot_ps(mask, self.0))
+            }
+        }
+
+        #[inline(always)]
+        fn hsum(self) -> f32 {
+            // Matches PortableLane::hsum exactly: high half + low half
+            // gives (l0+l4, l1+l5, l2+l6, l3+l7); movehl then adds slots
+            // (0,2) and (1,3); movehdup pairs the final two.
+            // SAFETY: register-only SSE/AVX ops behind the runtime probe.
+            unsafe {
+                let hi = _mm256_extractf128_ps::<1>(self.0);
+                let lo = _mm256_castps256_ps128(self.0);
+                let q = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+                let p = _mm_add_ps(q, _mm_movehl_ps(q, q)); // [q0+q2, q1+q3, ..]
+                _mm_cvtss_f32(_mm_add_ss(p, _mm_movehdup_ps(p)))
+            }
+        }
+
+        #[inline(always)]
+        fn hmax(self) -> f32 {
+            // Same tree as hsum; `maxps` returns its second operand on
+            // ties, so the earlier (lower-index) value goes second at
+            // every level to match PortableLane's `if b > a { b } else
+            // { a }` fold exactly on signed-zero ties.
+            // SAFETY: register-only SSE/AVX ops behind the runtime probe.
+            unsafe {
+                let hi = _mm256_extractf128_ps::<1>(self.0);
+                let lo = _mm256_castps256_ps128(self.0);
+                let q = _mm_max_ps(hi, lo);
+                let p = _mm_max_ps(_mm_movehl_ps(q, q), q);
+                _mm_cvtss_f32(_mm_max_ss(_mm_movehdup_ps(p), p))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(seed: f32) -> [f32; LANE] {
+        let mut a = [0.0f32; LANE];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = seed + i as f32 * 0.37 - 1.2;
+        }
+        a
+    }
+
+    #[test]
+    fn portable_elementwise_ops_match_scalar() {
+        let a = PortableLane::load(&arr(1.0));
+        let b = PortableLane::load(&arr(-0.5));
+        let mut got = [0.0f32; LANE];
+        a.add(b).store(&mut got);
+        for i in 0..LANE {
+            assert_eq!(got[i], arr(1.0)[i] + arr(-0.5)[i]);
+        }
+        a.mul(b).store(&mut got);
+        for i in 0..LANE {
+            assert_eq!(got[i], arr(1.0)[i] * arr(-0.5)[i]);
+        }
+        a.mul_add(b, PortableLane::splat(0.25)).store(&mut got);
+        for i in 0..LANE {
+            assert_eq!(got[i], arr(1.0)[i] * arr(-0.5)[i] + 0.25);
+        }
+    }
+
+    #[test]
+    fn portable_relu_and_mask_keep_scalar_semantics() {
+        let x = PortableLane::load(&[-1.0, -0.0, 0.0, 2.0, -3.0, 4.0, -5.0, 6.0]);
+        let mut got = [0.0f32; LANE];
+        x.relu().store(&mut got);
+        // -0.0 is NOT < 0.0, so it survives with its sign, like scalar code
+        assert_eq!(got[0], 0.0);
+        assert!(got[1] == 0.0 && got[1].is_sign_negative());
+        assert_eq!(got[3], 2.0);
+        let g = PortableLane::splat(1.0);
+        g.zero_where_nonpos(x).store(&mut got);
+        assert_eq!(got, [0.0, 0.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn portable_hsum_uses_documented_order() {
+        // values chosen so different summation orders give different f32
+        // results; the documented tree must be reproduced exactly
+        let l = [1e8f32, 1.0, -1e8, 1.0, -1e8, 1.0, 1e8, 1.0];
+        let got = PortableLane::load(&l).hsum();
+        let q = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+        let p = [q[0] + q[2], q[1] + q[3]];
+        assert_eq!(got, p[0] + p[1]);
+        assert_eq!(got, 4.0); // halves cancel exactly in this order
+    }
+
+    #[test]
+    fn portable_hmax_and_max_tie_rule() {
+        let l = [-3.0f32, 7.0, 2.0, -1.0, 7.0, 0.0, -9.0, 6.5];
+        assert_eq!(PortableLane::load(&l).hmax(), 7.0);
+        // max keeps self on ties (matters only for signed zero)
+        let a = PortableLane::splat(-0.0);
+        let b = PortableLane::splat(0.0);
+        let mut got = [1.0f32; LANE];
+        a.max(b).store(&mut got);
+        assert!(got[0] == 0.0 && got[0].is_sign_negative());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_portable_on_exact_ops() {
+        if !std::arch::is_x86_feature_detected!("avx2")
+            || !std::arch::is_x86_feature_detected!("fma")
+        {
+            return;
+        }
+        // SAFETY: avx2+fma verified present immediately above.
+        unsafe { avx2_vs_portable() }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn avx2_vs_portable() {
+        let xs = [-1.5f32, -0.0, 0.0, 2.25, 1e8, 1.0, -1e8, 0.125];
+        let ys = [0.5f32, 3.0, -2.0, 1.0, 1.0, -1e8, 1e8, 8.0];
+        let (pa, pb) = (PortableLane::load(&xs), PortableLane::load(&ys));
+        let (va, vb) = (Avx2Lane::load(&xs), Avx2Lane::load(&ys));
+        let mut p = [0.0f32; LANE];
+        let mut v = [0.0f32; LANE];
+        pa.add(pb).store(&mut p);
+        va.add(vb).store(&mut v);
+        assert_eq!(p, v, "add");
+        pa.sub(pb).store(&mut p);
+        va.sub(vb).store(&mut v);
+        assert_eq!(p, v, "sub");
+        pa.mul(pb).store(&mut p);
+        va.mul(vb).store(&mut v);
+        assert_eq!(p, v, "mul");
+        pa.div(pb).store(&mut p);
+        va.div(vb).store(&mut v);
+        assert_eq!(p, v, "div");
+        pa.max(pb).store(&mut p);
+        va.max(vb).store(&mut v);
+        assert_eq!(p, v, "max");
+        // signed-zero ties: both backends must keep `self` (the tie rule)
+        let pz = PortableLane::load(&[-0.0; LANE]).max(PortableLane::splat(0.0));
+        let vz = Avx2Lane::load(&[-0.0; LANE]).max(Avx2Lane::splat(0.0));
+        pz.store(&mut p);
+        vz.store(&mut v);
+        for i in 0..LANE {
+            assert!(p[i].is_sign_negative(), "portable max tie slot {i}");
+            assert!(v[i].is_sign_negative(), "avx2 max tie slot {i}");
+        }
+        // all-signed-zero input: the hmax result's sign is decided purely
+        // by the tie rule at every tree level — must agree bitwise
+        let zt = [-0.0f32, 0.0, -0.0, -0.0, 0.0, -0.0, 0.0, -0.0];
+        assert_eq!(
+            PortableLane::load(&zt).hmax().to_bits(),
+            Avx2Lane::load(&zt).hmax().to_bits(),
+            "hmax signed-zero tie"
+        );
+        pa.relu().store(&mut p);
+        va.relu().store(&mut v);
+        assert_eq!(p, v, "relu");
+        assert!(p[1] == 0.0 && p[1].is_sign_negative(), "-0.0 preserved");
+        pa.zero_where_nonpos(pb).store(&mut p);
+        va.zero_where_nonpos(vb).store(&mut v);
+        assert_eq!(p, v, "mask");
+        // horizontal reductions share one fixed tree → bitwise equal
+        assert_eq!(pa.hsum(), va.hsum(), "hsum order");
+        assert_eq!(pa.hmax(), va.hmax(), "hmax");
+        // fma differs from mul+add by at most one rounding
+        pa.mul_add(pb, PortableLane::splat(0.75)).store(&mut p);
+        va.mul_add(vb, Avx2Lane::splat(0.75)).store(&mut v);
+        for i in 0..LANE {
+            let tol = 2.0 * f32::EPSILON * (1.0 + p[i].abs());
+            assert!((p[i] - v[i]).abs() <= tol, "fma slot {i}: {} vs {}", p[i], v[i]);
+        }
+    }
+}

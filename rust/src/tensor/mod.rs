@@ -24,6 +24,18 @@
 //!    is fixed, so results are bit-identical for every `--threads` value
 //!    (and to the pre-view value-returning API — `tests/gemm_kernels.rs`
 //!    pins both).
+//!
+//! Every kernel here additionally dispatches on the process-wide
+//! [`kernels::KernelKind`] (`--kernel {auto,scalar,simd}`): the *scalar*
+//! kind is the plain-loop code in this file — the bitwise oracle the
+//! parity suites pin — and the *simd* kind routes the same contracts
+//! through the packed micro-kernel GEMM in [`kernels`] (panel packing +
+//! 6×16 register tiles over runtime-detected AVX2/FMA lanes, portable
+//! lanes elsewhere). Within a kind, results remain bit-identical across
+//! thread counts; across kinds they differ in the last ulps
+//! (`tests/simd_kernels.rs` bounds it).
+
+pub mod kernels;
 
 use crate::pool;
 
@@ -219,6 +231,11 @@ pub fn gemm_into(
     let (kb, n) = if tb { (b.cols, b.rows) } else { (b.rows, b.cols) };
     assert_eq!(ka, kb, "gemm_into inner dimension: {ka} vs {kb}");
     assert_eq!((c.rows, c.cols), (m, n), "gemm_into output shape");
+    let kernel = kernels::active();
+    if kernel.is_simd() {
+        kernels::gemm_packed(kernel, alpha, a, ta, b, tb, beta, c);
+        return;
+    }
     let k = ka;
     let workers = if m * n * k.max(1) < GEMM_PAR_MIN_FLOPS {
         1
@@ -427,6 +444,11 @@ pub fn sparse_dx_into(
 ) {
     let (bsz, din) = (g.rows, w.cols);
     assert_eq!((dx.rows, dx.cols), (bsz, din), "sparse_dx output shape");
+    let kernel = kernels::active();
+    if kernel.is_simd() {
+        kernels::sparse_dx_packed(kernel, g, kept, w, dx);
+        return;
+    }
     let workers = if bsz * din * kept.len().max(1) < GEMM_PAR_MIN_FLOPS {
         1
     } else {
@@ -476,9 +498,14 @@ fn accum_dw_row(
 /// dW = Ĝᵀ·X restricted to the kept rows of dW (same saving, other GEMM),
 /// written into `dw` (fully overwritten: dropped rows are zeroed).
 ///
-/// Threading partitions the kept list; each worker owns whole dW rows
-/// (kept indices are strictly increasing, hence disjoint), so the result
-/// is bit-identical for every worker count.
+/// Threading partitions the kept list into *more chunks than workers*
+/// (dynamic chunking over [`crate::pool::run_dynamic`]): chunk row counts
+/// round unevenly and waterfilling budgets skew which chunks exist at
+/// all, so a static one-chunk-per-worker split can leave most workers
+/// idle behind one straggler. Each chunk owns whole dW rows (kept
+/// indices are strictly increasing, hence disjoint spans), and each kept
+/// row's accumulation order is fixed, so the result is bit-identical for
+/// every worker count and schedule.
 pub fn sparse_dw_into(
     g: MatView<'_>,
     kept: &[(usize, f32)],
@@ -503,23 +530,42 @@ pub fn sparse_dw_into(
         kept.last().expect("non-empty").0 < dout,
         "sparse_dw_into: kept index out of range"
     );
+    let kernel = kernels::active();
     let workers = if bsz * din * kept.len() < GEMM_PAR_MIN_FLOPS {
         1
     } else {
         pool::threads().min(kept.len())
     };
     if workers <= 1 {
-        for &(j, inv) in kept {
-            accum_dw_row(j, inv, &g, &x, &mut dw.data[j * din..(j + 1) * din]);
+        if kernel.is_simd() {
+            let arena = kernels::PackArena::global();
+            let mut xbuf = arena.take(0);
+            let mut abuf = arena.take(0);
+            {
+                let xp = kernels::sparse_dw_pack_x(x, &mut xbuf);
+                kernels::sparse_dw_tiles(kernel, g, kept, xp, din, 0, dw.data, &mut abuf);
+            }
+            arena.put(xbuf);
+            arena.put(abuf);
+        } else {
+            for &(j, inv) in kept {
+                accum_dw_row(j, inv, &g, &x, &mut dw.data[j * din..(j + 1) * din]);
+            }
         }
         return;
     }
-    // Each worker takes a contiguous run of kept entries; since indices
-    // are strictly increasing, those entries live in an ordered, disjoint
-    // span of dW rows, so the buffer can be carved with safe progressive
-    // split_at_mut — no raw pointers.
-    let chunk = kept.len().div_ceil(workers);
-    std::thread::scope(|scope| {
+    // Carve the kept list into contiguous chunks (4 per worker) whose dW
+    // row spans are ordered and disjoint, so the buffer splits with safe
+    // progressive split_at_mut — no raw pointers.
+    struct DwItem<'a> {
+        part: &'a [(usize, f32)],
+        span: &'a mut [f32],
+        first: usize,
+    }
+    let target = (workers * 4).min(kept.len());
+    let chunk = kept.len().div_ceil(target);
+    let mut items: Vec<DwItem<'_>> = Vec::with_capacity(target);
+    {
         let mut rest: &mut [f32] = dw.data;
         let mut consumed_rows = 0usize;
         for part in kept.chunks(chunk) {
@@ -530,14 +576,39 @@ pub fn sparse_dw_into(
             let (span, tail) = tail.split_at_mut((last - first + 1) * din);
             rest = tail;
             consumed_rows = last + 1;
-            scope.spawn(move || {
-                for &(j, inv) in part {
-                    let off = (j - first) * din;
-                    accum_dw_row(j, inv, &g, &x, &mut span[off..off + din]);
-                }
+            items.push(DwItem { part, span, first });
+        }
+    }
+    debug_assert_eq!(
+        items.iter().map(|it| it.part.len()).sum::<usize>(),
+        kept.len(),
+        "dw chunking must cover every kept row exactly once"
+    );
+    if kernel.is_simd() {
+        let arena = kernels::PackArena::global();
+        let mut xbuf = arena.take(0);
+        let mut abufs: Vec<Vec<f32>> = (0..workers).map(|_| arena.take(0)).collect();
+        {
+            let xp = kernels::sparse_dw_pack_x(x, &mut xbuf);
+            pool::run_dynamic(items, &mut abufs, |it, abuf| {
+                let DwItem { part, span, first } = it;
+                kernels::sparse_dw_tiles(kernel, g, part, xp, din, first, span, abuf);
             });
         }
-    });
+        for ab in abufs {
+            arena.put(ab);
+        }
+        arena.put(xbuf);
+    } else {
+        let mut states = vec![(); workers];
+        pool::run_dynamic(items, &mut states, |it, _| {
+            let DwItem { part, span, first } = it;
+            for &(j, inv) in part {
+                let off = (j - first) * din;
+                accum_dw_row(j, inv, &g, &x, &mut span[off..off + din]);
+            }
+        });
+    }
 }
 
 /// dW = Ĝᵀ·X (value-returning convenience over [`sparse_dw_into`]).

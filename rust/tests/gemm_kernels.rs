@@ -23,6 +23,7 @@ use uavjp::pool;
 use uavjp::ptest::{check, gen};
 use uavjp::rng::Pcg64;
 use uavjp::sketch::{correlated_bernoulli, kept_columns, pstar_from_weights};
+use uavjp::tensor::kernels::{self, Kernel, KernelKind};
 use uavjp::tensor::{
     gemm_into, matmul_pr2_reference, sparse_dw_into, sparse_dx_into, Mat,
 };
@@ -33,6 +34,29 @@ use uavjp::tensor::{
 /// could not cause a false failure — results are thread-invariant — but
 /// it would erode what the baselines actually cover.)
 static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+/// Pin the kernel knob to `kind`; the returned guard restores the
+/// previous resolution on drop — including on panic, so one failing test
+/// can't leave the rest of the binary pinned to the wrong kind (callers
+/// hold [`THREAD_KNOB`]). The PR-2 bitwise-parity invariant below is a
+/// *scalar-kind* contract — `--kernel simd` is ulp-equivalent, not
+/// bit-equivalent (`tests/simd_kernels.rs` bounds it).
+fn pin_kernel(kind: KernelKind) -> KernelGuard {
+    let prev = kernels::active();
+    kernels::set_kernel(kind);
+    KernelGuard(match prev {
+        Kernel::Scalar => KernelKind::Scalar,
+        _ => KernelKind::Simd,
+    })
+}
+
+struct KernelGuard(KernelKind);
+
+impl Drop for KernelGuard {
+    fn drop(&mut self) {
+        kernels::set_kernel(self.0);
+    }
+}
 
 fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
     Mat::from_fn(r, c, |_, _| rng.gaussian() as f32)
@@ -140,10 +164,13 @@ fn gemm_matches_reference_all_flags_and_betas() {
 
 #[test]
 fn gemm_bitwise_matches_pr2_matmul_on_relu_sparse_data() {
-    // the trajectory-parity invariant: the training path's three GEMM
-    // configurations (β = 0, α = 1; NN for dX, NT for the affine forward,
-    // TN for dW) are bit-identical to the PR-2 kernel — including on
-    // inputs with exact ReLU zeros, where the old kernel skipped terms
+    // the trajectory-parity invariant: under the scalar kernel kind, the
+    // training path's three GEMM configurations (β = 0, α = 1; NN for dX,
+    // NT for the affine forward, TN for dW) are bit-identical to the PR-2
+    // kernel — including on inputs with exact ReLU zeros, where the old
+    // kernel skipped terms
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
     let mut rng = Pcg64::new(9, 0);
     for trial in 0..20 {
         let (m, k, n) = (5usize, 70usize, 6usize);
