@@ -11,6 +11,15 @@ Note: the rust side has since moved to a destination-passing kernel API
 DESIGN.md §7.2). The math, the per-element accumulation orders and the
 gate-RNG call order are unchanged, so this simulator's numerics remain a
 valid oracle for the rust assertions.
+
+The activation-policy extension (DESIGN.md §7.4, `python module_sim.py
+act`) additionally models the kept-column input stash: at every gated
+sketch site the forward draws l2/correlated X-gates from a separate
+stream and stores only the kept input columns; the backward then runs the
+doubly-gated dW estimator. It pre-verifies the MC-unbiasedness margins
+and the kept-policy convergence bars asserted in rust/tests/act_policy.rs
+(and the native_train.rs parity bar under the CI `UAVJP_ACTPOLICY=kept`
+leg).
 """
 import math
 import sys
@@ -20,6 +29,10 @@ import numpy as np
 from native_sim import (
     Pcg64,
     column_scores,
+    correlated_bernoulli,
+    generate as generate_mnist,
+    independent_bernoulli,
+    pstar_from_weights,
     sketched_linear_backward,
 )
 
@@ -31,6 +44,67 @@ def dense_linear_backward(g, x, w, need_dx):
     db = g.sum(0).astype(F)
     dx = (g @ w).astype(F) if need_dx else None
     return dw, db, dx
+
+
+# ---------------------------------------------------------------------------
+# activation policy: kept-column input stash (rust native/policy.rs +
+# layer.rs kept_linear_backward_into)
+# ---------------------------------------------------------------------------
+def act_plan_columns(x2d, budget, rng):
+    """X-side gate plan: l2 column scores -> waterfilled p* -> correlated
+    (systematic) gates. Returns [(col, 1/p_col)] for kept columns —
+    mirrors rust SketchScratch::plan_columns with method \"l2\"."""
+    sq = (x2d.astype(np.float64) ** 2).sum(0).astype(np.float32)
+    p = pstar_from_weights(sq, budget * x2d.shape[1])
+    z = correlated_bernoulli(rng, p)
+    return [(j, np.float32(1.0 / p[j])) for j in range(len(p)) if z[j]]
+
+
+def act_gather(x2d, budget, rng):
+    """Forward-time stash: draw X-gates, keep only the selected columns.
+    Returns the kept tuple stored in place of the full input cache."""
+    kept = act_plan_columns(x2d, budget, rng)
+    xg = x2d[:, [j for j, _ in kept]].copy() if kept else \
+        np.zeros((x2d.shape[0], 0), F)
+    return ("kept", xg, kept, x2d.shape[1])
+
+
+def kept_linear_backward(g, xg, xkept, din, w, method, budget, rng, need_dx):
+    """Doubly-gated backward over a kept-column stash (port of rust
+    kept_linear_backward_into): dW = scatter(Ĝᵀ·X̂) with per-column 1/pₓ
+    rescale; db and dX involve only the G-gates, so they match the
+    singly-gated estimator exactly."""
+    dout = g.shape[1]
+    if method == "per_column":
+        p = np.full(dout, F(min(max(budget, 1e-6), 1.0)), F)
+    else:
+        p = pstar_from_weights(column_scores(method, g, w), budget * dout)
+    independent = method == "per_column" or method.endswith("_ind")
+    z = independent_bernoulli(rng, p) if independent else \
+        correlated_bernoulli(rng, p)
+    inv = np.where(z, 1.0 / p, 0.0).astype(F)
+    gh = (g * inv[None, :]).astype(F)
+    dw_small = (gh.T @ xg).astype(F)  # [dout, m] — zero rows where z=0
+    dw = np.zeros((dout, din), F)
+    for c, (j, invx) in enumerate(xkept):
+        dw[:, j] = dw_small[:, c] * invx
+    db = gh.sum(0).astype(F)
+    dx = (gh @ w).astype(F) if need_dx else None
+    return dw, db, dx
+
+
+def stash_linear_backward(g, x, w, sketch, rng, need_dx):
+    """Dispatch a linear backward over a (possibly kept-column) stash —
+    the python twin of rust linear_backward_stash."""
+    if isinstance(x, tuple) and x and x[0] == "kept":
+        _, xg, kept, din = x
+        assert sketch is not None, "kept stash implies a gated site"
+        return kept_linear_backward(
+            g, xg, kept, din, w, sketch[0], sketch[1], rng, need_dx)
+    if sketch is not None:
+        return sketched_linear_backward(
+            g, x, w, sketch[0], sketch[1], rng, need_dx)
+    return dense_linear_backward(g, x, w, need_dx)
 
 
 # ---------------------------------------------------------------------------
@@ -72,13 +146,8 @@ class Linear:
         return (x @ self.w.T + self.b).astype(F), [x.copy()]
 
     def backward(self, gy, cache, sketch, rng, need_gx):
-        x = cache[0]
-        if sketch is not None:
-            dw, db, gx = sketched_linear_backward(
-                gy, x, self.w, sketch[0], sketch[1], rng, need_gx
-            )
-        else:
-            dw, db, gx = dense_linear_backward(gy, x, self.w, need_gx)
+        dw, db, gx = stash_linear_backward(
+            gy, cache[0], self.w, sketch, rng, need_gx)
         return gx, [dw, db]
 
 
@@ -153,14 +222,9 @@ class PatchConv:
         return z.reshape(bsz, self.p * self.dout), [xp.copy()]
 
     def backward(self, gy, cache, sketch, rng, need_gx):
-        xp = cache[0]
         g = gy.reshape(-1, self.dout)
-        if sketch is not None:
-            dw, db, gx = sketched_linear_backward(
-                g, xp, self.w, sketch[0], sketch[1], rng, need_gx
-            )
-        else:
-            dw, db, gx = dense_linear_backward(g, xp, self.w, need_gx)
+        dw, db, gx = stash_linear_backward(
+            g, cache[0], self.w, sketch, rng, need_gx)
         if gx is not None:
             gx = gx.reshape(gy.shape[0], self.p * self.din)
         return gx, [dw, db]
@@ -278,11 +342,8 @@ class FfnBlock:
             dw2, db2, gh = dense_linear_backward(g, hr, self.w2, True)
         gh = gh.copy()
         gh[h <= 0] = 0
-        if sketch is not None:
-            dw1, db1, gx1 = sketched_linear_backward(
-                gh, xs, self.w1, sketch[0], sketch[1], rng, need_gx)
-        else:
-            dw1, db1, gx1 = dense_linear_backward(gh, xs, self.w1, need_gx)
+        dw1, db1, gx1 = stash_linear_backward(
+            gh, xs, self.w1, sketch, rng, need_gx)
         gx = (g + gx1).astype(F).reshape(gy.shape) if need_gx else None
         return gx, [dw1, db1, dw2, db2]
 
@@ -357,11 +418,8 @@ class Attention:
                 gk[rows, cols] = (gs.T @ q[rows, cols] * scale).astype(F)
         grads = []
         for gmat, w in [(gq, self.wq), (gk, self.wk), (gv, self.wv)]:
-            if sketch is not None:
-                dw, db, gxi = sketched_linear_backward(
-                    gmat, xs, w, sketch[0], sketch[1], rng, need_gx)
-            else:
-                dw, db, gxi = dense_linear_backward(gmat, xs, w, need_gx)
+            dw, db, gxi = stash_linear_backward(
+                gmat, xs, w, sketch, rng, need_gx)
             grads.append((dw, db))
             if need_gx:
                 gx = (gx + gxi).astype(F)
@@ -399,12 +457,74 @@ def vit(seed):
     ]
 
 
-def seq_forward(layers, x):
+def bagnet_deep(seed):
+    """2x-deep BagNet-lite (rust models::bagnet_deep): four conv stages."""
+    return [
+        Patchify(32, 32, 3, 8),
+        PatchConv(16, 192, 64, seed, 300),
+        Relu(),
+        PatchConv(16, 64, 64, seed, 301),
+        Relu(),
+        PatchConv(16, 64, 64, seed, 302),
+        Relu(),
+        PatchConv(16, 64, 64, seed, 303),
+        Relu(),
+        PatchMeanPool(16, 64),
+        Linear(64, 10, seed, 304),
+    ]
+
+
+def vit_deep(seed):
+    """3-block ViT-lite (rust models::vit_deep): encoder k uses streams
+    302+6k .. 302+6k+5, classifier stream 320."""
+    layers = [
+        Patchify(32, 32, 3, 8),
+        PatchConv(16, 192, 64, seed, 300),
+        PosEmbed(16, 64, seed, 301),
+    ]
+    for k in range(3):
+        s = 302 + 6 * k
+        layers += [
+            Attention(16, 64, 4, seed, [s, s + 1, s + 2, s + 3]),
+            LayerNorm(64),
+            FfnBlock(64, 128, seed, s + 4),
+            LayerNorm(64),
+        ]
+    layers += [PatchMeanPool(16, 64), Linear(64, 10, seed, 320)]
+    return layers
+
+
+def mlp_layers(dims, seed):
+    """MLP with the rust models::mlp streams (Linear li on stream 300+li)."""
+    layers = []
+    n = len(dims) - 1
+    for li in range(n):
+        layers.append(Linear(dims[li], dims[li + 1], seed, 300 + li))
+        if li + 1 < n:
+            layers.append(Relu())
+    return layers
+
+
+MODELS = {"bagnet": bagnet, "vit": vit,
+          "bagnet_deep": bagnet_deep, "vit_deep": vit_deep}
+
+
+def seq_forward(layers, x, plan=None, act_budget=None, act_rng=None):
+    """Forward pass; when `act_budget` is set, every gated sketch site's
+    input cache is replaced by its kept-column stash (gates drawn in
+    forward order from the dedicated act stream, as in rust
+    Sequential::forward_train). act_budget<=0 inherits the site's sketch
+    budget (ActivationPolicy \"kept\" with no explicit budget)."""
     caches = []
     h = x
-    for layer in layers:
-        h, c = layer.forward(h)
+    for i, layer in enumerate(layers):
+        nxt, c = layer.forward(h)
+        if (act_budget is not None and plan is not None
+                and plan[i] is not None and layer.sketchable and c):
+            b_act = act_budget if act_budget > 0 else plan[i][1]
+            c[0] = act_gather(c[0], b_act, act_rng)
         caches.append(c)
+        h = nxt
     return h, caches
 
 
@@ -567,8 +687,9 @@ def generate_cifar(n, seed, split):
 
 
 def run_trainer(layers, xtr, ytr, xte, yte, plan, opt, lr, steps, batch,
-                warmup=0, cosine=False, seed=0):
+                warmup=0, cosine=False, seed=0, act_budget=None):
     sk_rng = Pcg64(seed ^ 0x9E3779B9, 11)
+    act_rng = Pcg64(seed ^ 0x51AC7, 13)
     rng = Pcg64(seed + 77, 3)
     losses = []
     step = 0
@@ -581,7 +702,7 @@ def run_trainer(layers, xtr, ytr, xte, yte, plan, opt, lr, steps, batch,
             idx = order[cursor:cursor + batch]
             cursor += batch
             xb, yb = xtr[idx], ytr[idx]
-            out, caches = seq_forward(layers, xb)
+            out, caches = seq_forward(layers, xb, plan, act_budget, act_rng)
             loss, dl = ce_loss_grad(out, yb)
             grads = seq_backward(layers, caches, dl, plan, sk_rng)
             grads = clip_all(grads)
@@ -713,24 +834,104 @@ def check_patchconv_unbiased(method="l1", budget=0.45, trials=2500):
     return rdw, rdb, rgx
 
 
-def check_training(model_name, steps, opt_name, lr, warmup, budget_runs):
+def check_training(model_name, steps, opt_name, lr, warmup, budget_runs,
+                   batch=32):
+    """Each run is (method, budget) — full input caches — or
+    (method, budget, act_budget) — kept-column stashes at gated sites
+    (act_budget 0.0 inherits the sketch budget)."""
     print(f"== {model_name} training (steps={steps}, {opt_name} lr={lr}) ==")
     xtr, ytr = DATA["train"]
     xte, yte = DATA["test"]
     results = {}
-    for method, budget in budget_runs:
-        layers = bagnet(0) if model_name == "bagnet" else vit(0)
+    for run in budget_runs:
+        method, budget = run[0], run[1]
+        act = run[2] if len(run) > 2 else None
+        layers = MODELS[model_name](0)
         plan = make_plan(layers, method, budget,
                          "all" if method != "baseline" else "none")
         opt = Momentum(0.9) if opt_name == "momentum" else Adam()
         losses, el, ea = run_trainer(
-            layers, xtr, ytr, xte, yte, plan, opt, lr, steps, 32,
-            warmup=warmup, cosine=True, seed=0)
+            layers, xtr, ytr, xte, yte, plan, opt, lr, steps, batch,
+            warmup=warmup, cosine=True, seed=0, act_budget=act)
         tail = sum(losses[-8:]) / 8
-        print(f"  {method:>9} p={budget}: loss {losses[0]:.3f} -> tail "
-              f"{tail:.3f}, eval loss {el:.3f}, acc {ea:.3f}")
-        results[(method, budget)] = (losses[0], tail, el, ea)
+        tag = f"{method} p={budget}" + ("" if act is None else
+                                        f" act={act if act else budget}")
+        print(f"  {tag:>22}: loss {losses[0]:.3f} -> tail {tail:.3f}, "
+              f"eval loss {el:.3f}, acc {ea:.3f}")
+        results[run] = (losses[0], tail, el, ea)
     return results
+
+
+def check_kept_unbiased(g_method="l1", g_budget=0.4, x_budget=0.5,
+                        trials=4000, rescale=True):
+    """MC check of the doubly-gated kept-stash backward against the exact
+    dense backward (same shapes/budgets as the rust act_policy.rs MC
+    tests). rescale=False drops the 1/p_x scatter factor — the negative
+    control: dW must then miss the bar while db/dX (G-gated only) still
+    pass."""
+    tag = "" if rescale else ", NO 1/px rescale (negative control)"
+    print(f"== MC unbiasedness: kept stash (G {g_method} p={g_budget}, "
+          f"X l2 p={x_budget}, {trials} trials{tag}) ==")
+    b, dout, din = 8, 12, 6
+    rng_data = Pcg64(42, 0)
+    def gauss(r, c, scale=1.0):
+        return np.array([F(rng_data.gaussian() * scale)
+                         for _ in range(r * c)], F).reshape(r, c)
+    x = gauss(b, din)
+    g = gauss(b, dout)
+    w = gauss(dout, din, 0.5)
+    dw_e, db_e, dx_e = dense_linear_backward(g, x, w, True)
+    acc_dw = np.zeros(dw_e.shape, np.float64)
+    acc_db = np.zeros(db_e.shape, np.float64)
+    acc_dx = np.zeros(dx_e.shape, np.float64)
+    g_rng = Pcg64(7, 1)
+    x_rng = Pcg64(9, 2)
+    for _ in range(trials):
+        kept = act_plan_columns(x, x_budget, x_rng)
+        if not rescale:
+            kept = [(j, np.float32(1.0)) for j, _ in kept]
+        xg = x[:, [j for j, _ in kept]].copy()
+        dw, db, dx = kept_linear_backward(
+            g, xg, kept, din, w, g_method, g_budget, g_rng, True)
+        acc_dw += dw
+        acc_db += db
+        acc_dx += dx
+    def rel(acc, exact):
+        d = acc / trials - exact.astype(np.float64)
+        return math.sqrt(float((d ** 2).sum()) /
+                         max(float((exact.astype(np.float64) ** 2).sum()),
+                             1e-12))
+    rdw, rdb, rdx = rel(acc_dw, dw_e), rel(acc_db, db_e), rel(acc_dx, dx_e)
+    print(f"  rel MC dev: dW {rdw:.4f}  db {rdb:.4f}  dX {rdx:.4f}")
+    return rdw, rdb, rdx
+
+
+def check_mlp_kept_bar():
+    """native_train.rs sketched_l1_budget_quarter_tracks_exact under the
+    CI kept leg (UAVJP_ACTPOLICY=kept): the doubly-gated mlp run must
+    still meet `sketched <= exact*1.10 + 0.05` and acc > 0.8."""
+    print("== mlp parity bar under kept policy (320 steps, sgd lr=0.1) ==")
+    xtr, ytr = generate_mnist(1024, 1234, "train")
+    xte, yte = generate_mnist(512, 1234, "test")
+    dims = [784, 64, 10]
+
+    def run(method, budget, act):
+        layers = mlp_layers(dims, 0)
+        plan = make_plan(layers, method, budget,
+                         "all" if method != "baseline" else "none")
+        # Momentum(0.0) == plain sgd, the mlp recipe optimizer
+        return run_trainer(layers, xtr, ytr, xte, yte, plan, Momentum(0.0),
+                           0.1, 320, 64, seed=0, act_budget=act)
+
+    _, exact, eacc = run("baseline", 1.0, None)
+    _, single, sacc = run("l1", 0.25, None)
+    _, double, dacc = run("l1", 0.25, 0.0)  # act budget inherits 0.25
+    bar = exact * 1.10 + 0.05
+    print(f"  exact        : eval {exact:.4f}  acc {eacc:.3f}")
+    print(f"  l1@0.25      : eval {single:.4f}  acc {sacc:.3f}")
+    print(f"  + kept@0.25  : eval {double:.4f}  acc {dacc:.3f}  "
+          f"(bar {bar:.4f} -> {'PASS' if double <= bar and dacc > 0.8 else 'FAIL'})")
+    return exact, single, double, dacc
 
 
 DATA = {}
@@ -751,3 +952,24 @@ if __name__ == "__main__":
                        [("baseline", 1.0), ("l1", 0.25)])
         check_training("vit", 80, "adam", 1e-3, 8,
                        [("baseline", 1.0), ("l1", 0.25)])
+    if which in ("act", "all"):
+        # pillar 2 margins for rust/tests/act_policy.rs (tol 0.12)
+        check_kept_unbiased("l1", 0.4, 0.5, 4000)
+        check_kept_unbiased("l1_ind", 0.4, 0.5, 4000)
+        check_kept_unbiased("l1", 0.4, 0.5, 1500, rescale=False)
+        if "train" not in DATA:
+            print("generating synth-CIFAR (pure-python PCG64, ~1 min)...")
+            DATA["train"] = generate_cifar(256, 1234, "train")
+            DATA["test"] = generate_cifar(128, 1234, "test")
+        # shallow models: doubly-gated @0.25 vs the ISSUE convergence bars
+        check_training("bagnet", 60, "momentum", 0.032, 0,
+                       [("l1", 0.25), ("l1", 0.25, 0.0)])
+        check_training("vit", 80, "adam", 1e-3, 8,
+                       [("l1", 0.25), ("l1", 0.25, 0.0)])
+        # deep variants at the act_policy.rs smoke-test settings
+        check_training("bagnet_deep", 48, "momentum", 0.032, 0,
+                       [("l1", 0.25, 0.0)], batch=16)
+        check_training("vit_deep", 48, "adam", 1e-3, 8,
+                       [("l1", 0.25, 0.0)], batch=16)
+        # CI kept-leg: the existing mlp parity bar must survive dual gating
+        check_mlp_kept_bar()

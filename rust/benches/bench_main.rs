@@ -13,7 +13,11 @@
 //!                    widths: the ρ(V) wall-clock of Eq 6 on real kernels
 //!   native_step    — full native train-step wall time, exact vs sketched
 //!   native_models  — train-step wall time per model family (mlp, bagnet,
-//!                    vit), exact vs l1-sketched
+//!                    vit), exact vs l1-sketched, each record carrying its
+//!                    workspace footprint
+//!   native_memory  — workspace-byte accounting per (model, activation
+//!                    policy), including the 2–3× deeper registry models:
+//!                    the §7.4 memory claim as a tracked column
 //!   step_latency   — AOT train-step wall time per (model, method) through
 //!                    PJRT (requires --features pjrt + built artifacts)
 //!   eq6_gemm       — dense vs kept-column backward GEMMs (kernel-only view)
@@ -22,8 +26,9 @@
 //!
 //! Run all:  cargo bench    Filter:  cargo bench -- gemm_scaling
 //! Machine-readable medians:  cargo bench -- --json results/BENCH_native.json
-//! (writes {group, case, median_ms} records for the perf trajectory; CI
-//! uploads the file as a workflow artifact).
+//! (writes {group, case, median_ms} records — plus a `workspace_bytes`
+//! memory column on the trainer-level records — for the perf trajectory;
+//! CI uploads the file as a workflow artifact).
 
 use std::time::Instant;
 
@@ -55,28 +60,61 @@ fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     times[times.len() / 2]
 }
 
-/// Collected (group, case, median seconds) records, printed as we go and
-/// optionally dumped as JSON for the perf trajectory.
+/// One bench record: median wall time plus, for trainer-level cases, the
+/// workspace footprint in bytes (the §7.4 tracked memory column).
+struct Record {
+    group: String,
+    case: String,
+    secs: f64,
+    workspace_bytes: Option<u64>,
+}
+
+/// Collected records, printed as we go and optionally dumped as JSON for
+/// the perf trajectory.
 #[derive(Default)]
 struct Report {
-    records: Vec<(String, String, f64)>,
+    records: Vec<Record>,
 }
 
 impl Report {
     fn rec(&mut self, group: &str, case: impl Into<String>, secs: f64) {
-        self.records.push((group.to_string(), case.into(), secs));
+        self.records.push(Record {
+            group: group.to_string(),
+            case: case.into(),
+            secs,
+            workspace_bytes: None,
+        });
+    }
+
+    fn rec_mem(
+        &mut self,
+        group: &str,
+        case: impl Into<String>,
+        secs: f64,
+        bytes: u64,
+    ) {
+        self.records.push(Record {
+            group: group.to_string(),
+            case: case.into(),
+            secs,
+            workspace_bytes: Some(bytes),
+        });
     }
 
     fn to_json(&self) -> Value {
         Value::Arr(
             self.records
                 .iter()
-                .map(|(g, c, s)| {
-                    Value::obj(vec![
-                        ("group", Value::str(g)),
-                        ("case", Value::str(c)),
-                        ("median_ms", Value::num(s * 1e3)),
-                    ])
+                .map(|r| {
+                    let mut fields = vec![
+                        ("group", Value::str(&r.group)),
+                        ("case", Value::str(&r.case)),
+                        ("median_ms", Value::num(r.secs * 1e3)),
+                    ];
+                    if let Some(b) = r.workspace_bytes {
+                        fields.push(("workspace_bytes", Value::num(b as f64)));
+                    }
+                    Value::obj(fields)
                 })
                 .collect(),
         )
@@ -319,12 +357,84 @@ fn bench_native_models(filter: &str, rep: &mut Report) {
                 trainer.step(&x, &y, step);
                 step += 1;
             });
+            let wb = trainer.workspace_bytes();
             println!(
-                "  {model:>7}/{method:<9} p={budget:<4}: {:8.2} ms/step  ({:6.1} steps/s)",
+                "  {model:>7}/{method:<9} p={budget:<4}: {:8.2} ms/step  \
+                 ({:6.1} steps/s, workspace {:.2} MiB)",
                 med * 1e3,
-                1.0 / med
+                1.0 / med,
+                wb.total as f64 / (1 << 20) as f64
             );
-            rep.rec("native_models", format!("{model}_{method}_p{budget}"), med);
+            rep.rec_mem(
+                "native_models",
+                format!("{model}_{method}_p{budget}"),
+                med,
+                wb.total as u64,
+            );
+        }
+    }
+}
+
+/// Workspace-byte accounting per (model, activation policy) — the §7.4
+/// memory claim as a tracked BENCH_native.json column. Includes the 2–3×
+/// deeper registry variants: under `--act-policy kept` their footprint
+/// collapses back toward (BagNet: *below*) the shallow exact baseline,
+/// which `tests/act_policy.rs` asserts as the acceptance bar.
+fn bench_native_memory(filter: &str, rep: &mut Report) {
+    if !"native_memory".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== native_memory (workspace bytes per model × activation policy) ==");
+    for model in ["mlp", "bagnet", "vit", "bagnet_deep", "vit_deep"] {
+        for (policy, method, location) in
+            [("exact", "baseline", "none"), ("kept", "l1", "all")]
+        {
+            let mut cfg: TrainConfig = Preset::Smoke.base(model).expect("preset");
+            cfg.method = method.into();
+            cfg.budget = 0.25;
+            cfg.location = location.into();
+            cfg.act_policy = policy.into();
+            cfg.train_size = 256;
+            cfg.test_size = 64;
+            cfg.batch = 64;
+            let mut trainer = NativeTrainer::new(cfg).expect("trainer");
+            let (train_ds, _) = trainer.datasets();
+            let batch = trainer.batch_size();
+            let dim = train_ds.dim;
+            let x = Mat {
+                rows: batch,
+                cols: dim,
+                data: train_ds.x[..batch * dim].to_vec(),
+            };
+            let y = train_ds.y[..batch].to_vec();
+            let mut step = 0usize;
+            let med = time_median(5, || {
+                trainer.step(&x, &y, step);
+                step += 1;
+            });
+            // steady-state footprint: stash arenas are populated after
+            // the timed steps above
+            let wb = trainer.workspace_bytes();
+            let mib = |b: usize| b as f64 / (1 << 20) as f64;
+            println!(
+                "  {model:>12}/{policy:<5}: {:8.2} ms/step  workspace \
+                 {:7.2} MiB (flow {:.2} + grad-flow {:.2} + stash {:.2} + \
+                 caches {:.2} + grads {:.2} + planning {:.2})",
+                med * 1e3,
+                mib(wb.total),
+                mib(wb.flow),
+                mib(wb.gflow),
+                mib(wb.stash),
+                mib(wb.caches),
+                mib(wb.grad_slots),
+                mib(wb.planning),
+            );
+            rep.rec_mem(
+                "native_memory",
+                format!("{model}_{policy}"),
+                med,
+                wb.total as u64,
+            );
         }
     }
 }
@@ -524,6 +634,7 @@ fn main() {
     bench_native_bwd(&filter, &mut rep);
     bench_native_step(&filter, &mut rep);
     bench_native_models(&filter, &mut rep);
+    bench_native_memory(&filter, &mut rep);
     bench_step_latency(&filter, &mut rep);
     bench_eq6_gemm(&filter, &mut rep);
     bench_pipeline(&filter, &mut rep);

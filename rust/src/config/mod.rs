@@ -14,7 +14,8 @@ use anyhow::{bail, Result};
 /// Model families every preset knows a recipe for. Whether a *backend*
 /// can train one is a separate question — `TrainBackend::supports_model`
 /// queries the native model registry (`crate::native::models`).
-pub const KNOWN_MODELS: &[&str] = &["mlp", "bagnet", "vit"];
+pub const KNOWN_MODELS: &[&str] =
+    &["mlp", "bagnet", "vit", "bagnet_deep", "vit_deep"];
 
 /// Which engine executes training steps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -97,6 +98,19 @@ pub struct TrainConfig {
     /// kind results are bit-identical across runs and thread counts;
     /// kinds differ in the last ulps (DESIGN.md §7.3).
     pub kernel: String,
+    /// Activation stash policy (`--act-policy`): `"auto" | "exact" |
+    /// "kept"`. `"exact"` keeps full input copies (bit-identical to the
+    /// pre-policy trainer); `"kept"` compacts sketched sites to kept
+    /// columns and ReLU inputs to sign bitsets (DESIGN.md §7.4);
+    /// `"auto"` reads `UAVJP_ACTPOLICY`, defaulting to `"exact"`.
+    pub act_policy: String,
+    /// Default kept-column budget for activation stashes under the kept
+    /// policy; `0.0` inherits each site's sketch budget.
+    pub act_budget: f64,
+    /// Optional per-site activation budgets (forward order, like
+    /// `budget_schedule`); when non-empty its length must equal the
+    /// model's site count and it overrides `act_budget`.
+    pub act_schedule: Vec<f64>,
 }
 
 impl Default for TrainConfig {
@@ -121,6 +135,9 @@ impl Default for TrainConfig {
             budget_schedule: Vec::new(),
             threads: 0,
             kernel: "auto".into(),
+            act_policy: "auto".into(),
+            act_budget: 0.0,
+            act_schedule: Vec::new(),
         }
     }
 }
@@ -162,6 +179,9 @@ impl TrainConfig {
             ("budget_schedule", Value::arr_f64(&self.budget_schedule)),
             ("threads", Value::num(self.threads as f64)),
             ("kernel", Value::str(&self.kernel)),
+            ("act_policy", Value::str(&self.act_policy)),
+            ("act_budget", Value::num(self.act_budget)),
+            ("act_schedule", Value::arr_f64(&self.act_schedule)),
         ])
     }
 
@@ -175,19 +195,21 @@ impl TrainConfig {
             Some(s) => Backend::parse(s)?,
             None => d.backend,
         };
-        let budget_schedule = match v.get("budget_schedule").as_arr() {
-            Some(xs) => xs
-                .iter()
-                .map(|x| {
-                    x.as_f64().ok_or_else(|| {
-                        anyhow::anyhow!(
-                            "budget_schedule entries must be numbers"
-                        )
+        let sched_of = |key: &'static str| -> Result<Vec<f64>> {
+            match v.get(key).as_arr() {
+                Some(xs) => xs
+                    .iter()
+                    .map(|x| {
+                        x.as_f64().ok_or_else(|| {
+                            anyhow::anyhow!("{key} entries must be numbers")
+                        })
                     })
-                })
-                .collect::<Result<Vec<f64>>>()?,
-            None => Vec::new(),
+                    .collect::<Result<Vec<f64>>>(),
+                None => Ok(Vec::new()),
+            }
         };
+        let budget_schedule = sched_of("budget_schedule")?;
+        let act_schedule = sched_of("act_schedule")?;
         Ok(TrainConfig {
             model: v.get("model").as_str().unwrap_or(&d.model).to_string(),
             method: v.get("method").as_str().unwrap_or(&d.method).to_string(),
@@ -208,6 +230,13 @@ impl TrainConfig {
             budget_schedule,
             threads: v.get("threads").as_usize().unwrap_or(d.threads),
             kernel: v.get("kernel").as_str().unwrap_or(&d.kernel).to_string(),
+            act_policy: v
+                .get("act_policy")
+                .as_str()
+                .unwrap_or(&d.act_policy)
+                .to_string(),
+            act_budget: v.get("act_budget").as_f64().unwrap_or(d.act_budget),
+            act_schedule,
         })
     }
 }
@@ -258,8 +287,15 @@ impl Preset {
             }
             return Ok(c);
         }
+        // Deep variants train under their shallow family's recipe (LR,
+        // schedule, optimizer); only the model name differs.
+        let recipe = match model {
+            "bagnet_deep" => "bagnet",
+            "vit_deep" => "vit",
+            m => m,
+        };
         let mut c = TrainConfig { model: model.to_string(), ..Default::default() };
-        match (self, model) {
+        match (self, recipe) {
             (Preset::Ci, "mlp") => {
                 c.train_size = 4096;
                 c.test_size = 1024;
@@ -312,7 +348,7 @@ impl Preset {
         }
         // optimizer recipes per model (§5 / App B.2); the PJRT artifacts
         // bake these in, the native backend reads them from the config
-        c.optimizer = match model {
+        c.optimizer = match recipe {
             "mlp" => "sgd",
             "bagnet" => "momentum",
             _ => "adam",
@@ -484,5 +520,42 @@ mod tests {
         assert_eq!(Preset::Ci.base("mlp").unwrap().optimizer, "sgd");
         assert_eq!(Preset::Ci.base("bagnet").unwrap().optimizer, "momentum");
         assert_eq!(Preset::Smoke.base("vit").unwrap().optimizer, "adam");
+    }
+
+    #[test]
+    fn act_policy_fields_roundtrip_and_default() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.act_policy, "auto");
+        assert_eq!(c.act_budget, 0.0);
+        assert!(c.act_schedule.is_empty());
+        c.act_policy = "kept".into();
+        c.act_budget = 0.25;
+        c.act_schedule = vec![0.5, 0.25, 0.1];
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.act_policy, "kept");
+        assert_eq!(c2.act_budget, 0.25);
+        assert_eq!(c2.act_schedule, vec![0.5, 0.25, 0.1]);
+        // configs without the new keys fall back to defaults
+        let legacy = crate::json::parse(r#"{"model":"mlp"}"#).unwrap();
+        let c3 = TrainConfig::from_json(&legacy).unwrap();
+        assert_eq!(c3.act_policy, "auto");
+        assert_eq!(c3.act_budget, 0.0);
+        assert!(c3.act_schedule.is_empty());
+        // present-but-invalid entries are loud errors
+        let bad = crate::json::parse(r#"{"act_schedule":[0.5,"x"]}"#).unwrap();
+        assert!(TrainConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn deep_models_inherit_shallow_recipes() {
+        let d = Preset::Ci.base("bagnet_deep").unwrap();
+        let s = Preset::Ci.base("bagnet").unwrap();
+        assert_eq!(d.model, "bagnet_deep");
+        assert_eq!(d.lr, s.lr);
+        assert_eq!(d.optimizer, "momentum");
+        let d = Preset::Smoke.base("vit_deep").unwrap();
+        assert_eq!(d.model, "vit_deep");
+        assert_eq!(d.optimizer, "adam");
+        assert!(d.cosine);
     }
 }

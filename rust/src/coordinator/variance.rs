@@ -99,18 +99,17 @@ fn native_grad(
     ws: &mut crate::native::Workspace,
     x: &crate::tensor::Mat,
     y: &[i32],
-    plan: &[Option<crate::native::SiteSketch>],
+    plan: &crate::native::StepPlan,
     rng: &mut crate::rng::Pcg64,
 ) -> Vec<f32> {
     use crate::native::{loss_and_grad_into, LossKind};
-    model.forward(x, ws);
-    loss_and_grad_into(
-        LossKind::CrossEntropy,
-        ws.acts.last().expect("non-empty stack"),
-        y,
-        ws.grads.last_mut().expect("non-empty stack"),
-    );
-    model.backward(x, ws, plan, rng);
+    // One rng drives both sweeps: the probe plans use the exact
+    // activation policy, whose full stashes consume no randomness, so the
+    // G-gate stream is exactly what it was before stashing existed.
+    model.forward_train(x, ws, plan, rng);
+    let (logits, gout) = ws.loss_io();
+    loss_and_grad_into(LossKind::CrossEntropy, logits, y, gout);
+    model.backward(ws, plan, rng);
     ws.grad_slots.flatten()
 }
 
@@ -122,7 +121,7 @@ pub fn measure_native(
     trials: usize,
     seed: u64,
 ) -> Result<VarianceReport> {
-    use crate::native::SketchPolicy;
+    use crate::native::{ActivationPolicy, SketchPolicy};
     use crate::rng::Pcg64;
     if !crate::native::NATIVE_METHODS.contains(&method) {
         anyhow::bail!("native variance probe: unsupported method {method}");
@@ -130,14 +129,18 @@ pub fn measure_native(
     let (model, x, y) = native_probe_setup(seed);
     let mut ws = model.workspace(x.rows, x.cols);
     let mut exact_rng = Pcg64::new(0, 0);
-    let exact_plan = model.plan(&SketchPolicy::exact())?;
+    let exact_plan =
+        model.plan(&SketchPolicy::exact(), &ActivationPolicy::exact())?;
     let g = native_grad(&model, &mut ws, &x, &y, &exact_plan, &mut exact_rng);
-    let plan = model.plan(&SketchPolicy {
-        method: method.to_string(),
-        budget,
-        location: "all".into(),
-        schedule: None,
-    })?;
+    let plan = model.plan(
+        &SketchPolicy {
+            method: method.to_string(),
+            budget,
+            location: "all".into(),
+            schedule: None,
+        },
+        &ActivationPolicy::exact(),
+    )?;
     summarize(method, budget, &g, trials, |t| {
         let mut rng = Pcg64::new(seed ^ 0xabcd, t as u64);
         Ok(native_grad(&model, &mut ws, &x, &y, &plan, &mut rng))
@@ -147,13 +150,13 @@ pub fn measure_native(
 /// Minibatch gradient variance σ² at the probe's parameter point: resample
 /// batches, exact gradients (native backend).
 pub fn sigma2_native(trials: usize) -> Result<f64> {
-    use crate::native::{models, SketchPolicy};
+    use crate::native::{models, ActivationPolicy, SketchPolicy};
     use crate::rng::Pcg64;
     use crate::tensor::Mat;
     let batch = 128usize;
     let model = models::mlp(models::MLP_DIMS, 5);
     let mut ws = model.workspace(batch, models::MLP_DIMS[0]);
-    let plan = model.plan(&SketchPolicy::exact())?;
+    let plan = model.plan(&SketchPolicy::exact(), &ActivationPolicy::exact())?;
     let mut grads: Vec<Vec<f32>> = Vec::with_capacity(trials);
     for t in 0..trials {
         let ds = data::generate(DatasetKind::SynthMnist, batch, 500 + t as u64, "train");

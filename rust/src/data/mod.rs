@@ -29,7 +29,9 @@ impl DatasetKind {
     pub fn for_model(model: &str) -> anyhow::Result<DatasetKind> {
         match model {
             "mlp" => Ok(DatasetKind::SynthMnist),
-            "vit" | "bagnet" => Ok(DatasetKind::SynthCifar),
+            "vit" | "bagnet" | "vit_deep" | "bagnet_deep" => {
+                Ok(DatasetKind::SynthCifar)
+            }
             other => anyhow::bail!(
                 "no dataset for model {other} (want {})",
                 crate::config::KNOWN_MODELS.join("|")

@@ -17,9 +17,14 @@ USAGE: uavjp <command> [flags]
 
 commands:
   train       one training run
-              --model mlp|bagnet|vit --method <m> --budget <p> --lr <f>
+              --model mlp|bagnet|vit|bagnet_deep|vit_deep
+              --method <m> --budget <p> --lr <f>
               --steps <n> --seed <n> --location all|first|last|none
               --budget-schedule p1,p2,..  (one budget per sketch site)
+              --act-policy auto|exact|kept  (activation stash policy;
+                kept stores only the gated backward's kept columns)
+              --act-budget <p>  (kept-stash budget; 0 = inherit sketch)
+              --act-schedule p1,p2,..  (one act budget per sketch site)
               --optimizer sgd|momentum|adam --loss ce|mse --batch <n>
               [--preset smoke|ci|paper] [--out run.json]
   sweep       budget sweep for one method (LR cross-validated)
@@ -214,6 +219,9 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.budget_schedule = args.f64_list_or("budget-schedule", &[])?;
     cfg.threads = args.usize_or("threads", cfg.threads)?;
     cfg.kernel = args.str_or("kernel", &cfg.kernel);
+    cfg.act_policy = args.str_or("act-policy", &cfg.act_policy);
+    cfg.act_budget = args.f64_or("act-budget", cfg.act_budget)?;
+    cfg.act_schedule = args.f64_list_or("act-schedule", &[])?;
 
     eprintln!(
         "[train:{}] {} / {} p={} lr={} steps={}",

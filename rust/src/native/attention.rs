@@ -17,7 +17,11 @@
 use crate::tensor::kernels::vec;
 use crate::tensor::{Mat, MatViewMut};
 
-use super::layer::{affine_into, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
+use super::layer::{
+    affine_into, linear_backward_ctx, linear_backward_stash, Cache, Layer,
+    Linear, SketchCtx,
+};
+use super::policy::{InputNeed, StashedInput};
 
 /// Per-token layer normalization over the channel axis with learned scale
 /// and shift: rows of width `dim` are normalized to zero mean / unit
@@ -79,7 +83,7 @@ impl Layer for LayerNorm {
     fn backward(
         &self,
         gy: &Mat,
-        _x: &Mat,
+        _x: StashedInput<'_>,
         cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
         mut gx: Option<&mut Mat>,
@@ -158,7 +162,7 @@ impl Layer for PosEmbed {
     fn backward(
         &self,
         gy: &Mat,
-        _x: &Mat,
+        _x: StashedInput<'_>,
         _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
@@ -252,6 +256,14 @@ impl Layer for Attention {
         din
     }
 
+    fn input_need(&self) -> InputNeed {
+        InputNeed::Values
+    }
+
+    fn input_view_shape(&self, batch: usize, _din: usize) -> (usize, usize) {
+        (batch * self.patches, self.dim)
+    }
+
     fn cache_shapes(&self, batch: usize, _din: usize) -> Vec<(usize, usize)> {
         let (p, d, h) = (self.patches, self.dim, self.heads);
         let rows = batch * p;
@@ -334,7 +346,7 @@ impl Layer for Attention {
     fn backward(
         &self,
         gy: &Mat,
-        x: &Mat,
+        x: StashedInput<'_>,
         cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
@@ -344,7 +356,6 @@ impl Layer for Attention {
         let bsz = gy.rows;
         let rows = bsz * p;
         let g = gy.reshape(rows, d);
-        let xs = x.reshape(rows, d);
         let [dwq, dbq, dwk, dbk, dwv, dbv, dwo, dbo] = pg else {
             panic!("attention has 8 param slots")
         };
@@ -419,6 +430,8 @@ impl Layer for Attention {
         }
         // QKV projection backwards; each dX lands in the shared scratch and
         // is folded into gx on top of the residual path (gx starts as gy).
+        // `x` is the stashed projection input — full token matrix under
+        // ActivationPolicy::Exact, gathered kept columns under Kept.
         let need_gx = gx.is_some();
         let mut gx = gx;
         if let Some(gxm) = gx.as_mut() {
@@ -430,9 +443,9 @@ impl Layer for Attention {
             (&self.v, &*gv, &mut *dwv, &mut *dbv),
         ] {
             let dx_dest = if need_gx { Some(dxs.view_mut()) } else { None };
-            linear_backward_ctx(
+            linear_backward_stash(
                 gproj.view(),
-                xs,
+                x,
                 &proj.w,
                 ctx,
                 MatViewMut::new(d, d, dw),
@@ -494,8 +507,12 @@ impl Layer for Attention {
 /// and a following [`LayerNorm`], this composes the standard post-LN
 /// transformer block `LN(x + sublayer(x))`.
 ///
-/// Cache layout: `mats[0]` = pre-activation H, `mats[1]` = relu(H),
-/// `mats[2]` = backward hidden-gradient scratch.
+/// Cache layout: `mats[0]` = relu(H), `mats[1]` = forward staging for the
+/// pre-activation H, reused in backward as the hidden-gradient scratch.
+/// The pre-activation itself is never kept: `relu(h) ≤ 0` exactly where
+/// `h ≤ 0` (NaN compares false and stays, ±0.0 maps to +0.0 and is
+/// dropped either way), so the backward ReLU mask replayed from `relu(H)`
+/// is bit-identical to the one the full cache would produce.
 pub struct FfnBlock {
     /// Up projection `d → hidden`.
     pub w1: Linear,
@@ -524,10 +541,18 @@ impl Layer for FfnBlock {
         din
     }
 
+    fn input_need(&self) -> InputNeed {
+        InputNeed::Values
+    }
+
+    fn input_view_shape(&self, batch: usize, din: usize) -> (usize, usize) {
+        (batch * (din / self.w1.din()), self.w1.din())
+    }
+
     fn cache_shapes(&self, batch: usize, din: usize) -> Vec<(usize, usize)> {
         let rows = batch * (din / self.w1.din());
         let hidden = self.w1.dout();
-        vec![(rows, hidden), (rows, hidden), (rows, hidden)]
+        vec![(rows, hidden), (rows, hidden)]
     }
 
     fn forward(&self, x: &Mat, y: &mut Mat, cache: &mut Cache) {
@@ -535,13 +560,13 @@ impl Layer for FfnBlock {
         let rows = x.rows * (x.cols / d);
         let xs = x.reshape(rows, d);
         {
-            let (h_m, rest) = cache.mats.split_at_mut(1);
-            let (h, hr) = (&mut h_m[0], &mut rest[0]);
-            affine_into(xs, &self.w1.w, &self.w1.b, h.view_mut());
-            vec::relu_into(&mut hr.data, &h.data);
+            let (hr_m, rest) = cache.mats.split_at_mut(1);
+            let (hr, hstage) = (&mut hr_m[0], &mut rest[0]);
+            affine_into(xs, &self.w1.w, &self.w1.b, hstage.view_mut());
+            vec::relu_into(&mut hr.data, &hstage.data);
         }
         affine_into(
-            cache.mats[1].view(),
+            cache.mats[0].view(),
             &self.w2.w,
             &self.w2.b,
             y.reshape_mut(rows, d),
@@ -552,19 +577,18 @@ impl Layer for FfnBlock {
     fn backward(
         &self,
         gy: &Mat,
-        x: &Mat,
+        x: StashedInput<'_>,
         cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
         pg: &mut [Vec<f32>],
     ) {
         let d = self.w1.din();
-        let rows = x.rows * (x.cols / d);
-        let xs = x.reshape(rows, d);
+        let rows = gy.rows * (gy.cols / d);
         let g = gy.reshape(rows, d);
         let [dw1, db1, dw2, db2] = pg else { panic!("ffn has 4 param slots") };
-        let (ro, rw) = cache.mats.split_at_mut(2);
-        let (h, hr) = (&ro[0], &ro[1]);
+        let (ro, rw) = cache.mats.split_at_mut(1);
+        let hr = &ro[0];
         let gh = &mut rw[0];
         linear_backward_ctx(
             g,
@@ -575,11 +599,13 @@ impl Layer for FfnBlock {
             db2,
             Some(gh.view_mut()),
         );
-        vec::mask_nonpos(&mut gh.data, &h.data);
+        // ReLU mask replayed from relu(H): bit-identical to masking on the
+        // dropped pre-activation (see the struct doc).
+        vec::mask_nonpos(&mut gh.data, &hr.data);
         let mut gx = gx;
-        linear_backward_ctx(
+        linear_backward_stash(
             gh.view(),
-            xs,
+            x,
             &self.w1.w,
             ctx,
             MatViewMut::new(self.w1.w.rows, self.w1.w.cols, dw1),

@@ -18,7 +18,8 @@
 use crate::tensor::kernels::vec;
 use crate::tensor::{Mat, MatViewMut};
 
-use super::layer::{affine_into, linear_backward_ctx, Cache, Layer, Linear, SketchCtx};
+use super::layer::{affine_into, linear_backward_stash, Cache, Layer, Linear, SketchCtx};
+use super::policy::{InputNeed, StashedInput};
 
 /// Non-overlapping-patch im2col: `[B, H·W·C]` channel-last images to
 /// `[B, P·(q·q·C)]` patch-major rows (patch index `p = pr·(W/q) + pc`,
@@ -77,7 +78,7 @@ impl Layer for Patchify {
     fn backward(
         &self,
         gy: &Mat,
-        _x: &Mat,
+        _x: StashedInput<'_>,
         _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
@@ -152,10 +153,18 @@ impl Layer for PatchConv {
         );
     }
 
+    fn input_need(&self) -> InputNeed {
+        InputNeed::Values
+    }
+
+    fn input_view_shape(&self, batch: usize, _din: usize) -> (usize, usize) {
+        (batch * self.patches, self.lin.din())
+    }
+
     fn backward(
         &self,
         gy: &Mat,
-        x: &Mat,
+        x: StashedInput<'_>,
         _cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
@@ -164,9 +173,9 @@ impl Layer for PatchConv {
         let (din, dout) = (self.lin.din(), self.lin.dout());
         let rows = gy.rows * self.patches;
         let [dw, db] = pg else { panic!("patch_conv has 2 param slots") };
-        linear_backward_ctx(
+        linear_backward_stash(
             gy.reshape(rows, dout),
-            x.reshape(rows, din),
+            x,
             &self.lin.w,
             ctx,
             MatViewMut::new(dout, din, dw),
@@ -228,7 +237,7 @@ impl Layer for PatchMeanPool {
     fn backward(
         &self,
         gy: &Mat,
-        _x: &Mat,
+        _x: StashedInput<'_>,
         _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,

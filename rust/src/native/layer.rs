@@ -27,6 +27,8 @@ use crate::tensor::{
     gemm_into, sparse_dw_into, sparse_dx_into, Mat, MatView, MatViewMut,
 };
 
+use super::policy::{InputNeed, StashedInput};
+
 /// Column-sketch methods the native backward supports (the coordinate and
 /// uniform-column families of §4.2; spectral and row/element masks stay
 /// PJRT-only).
@@ -111,6 +113,23 @@ pub trait Layer {
         Vec::new()
     }
 
+    /// What the backward needs of this layer's *input* (as distinct from
+    /// its [`Cache`]) — drives the per-layer
+    /// [`crate::native::ActivationPolicy`] resolution. The container
+    /// stashes the input accordingly *before* calling `forward`.
+    fn input_need(&self) -> InputNeed {
+        InputNeed::None
+    }
+
+    /// Shape the backward consumes the input in — the GEMM-lowering view
+    /// (e.g. `[B·P, d]` for patch/token layers). The row-major buffers
+    /// must coincide: `rows · cols == batch · din`. Kept-column stashes
+    /// gate the *view's* columns, so this is also the axis the activation
+    /// budget applies to.
+    fn input_view_shape(&self, batch: usize, din: usize) -> (usize, usize) {
+        (batch, din)
+    }
+
     /// Forward pass on a batch: write the output into `y`
     /// (`batch × out_dim`) and record whatever the backward needs in
     /// `cache`.
@@ -119,12 +138,14 @@ pub trait Layer {
     /// Backward pass: map the output gradient `gy` to the input gradient
     /// (written into `gx` when present; the first layer of a stack passes
     /// `None`) and overwrite one flat gradient slot per parameter tensor,
-    /// in [`Layer::params`] order. `x` is the same input the forward saw
-    /// (the workspace keeps it alive — layers no longer clone it).
+    /// in [`Layer::params`] order. `x` is the input stash the container
+    /// gathered before the forward per this layer's [`Layer::input_need`]
+    /// and the run's activation policy — full values, a sign bitset, or
+    /// kept columns with 1/pᵢ rescales.
     fn backward(
         &self,
         gy: &Mat,
-        x: &Mat,
+        x: StashedInput<'_>,
         cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
@@ -165,7 +186,9 @@ pub fn run_layer_forward(layer: &dyn Layer, x: &Mat) -> (Mat, Cache) {
 
 /// Run a layer's backward through freshly allocated buffers (see
 /// [`run_layer_forward`]). Returns the input gradient (when `need_gx`)
-/// and one flat gradient per parameter tensor.
+/// and one flat gradient per parameter tensor. Uses the exact activation
+/// path — the input is handed to the layer as a full-value stash in its
+/// view shape (or no stash at all when the backward ignores it).
 pub fn run_layer_backward(
     layer: &dyn Layer,
     gy: &Mat,
@@ -180,7 +203,14 @@ pub fn run_layer_backward(
     let mut pg: Vec<Vec<f32>> =
         layer.params().iter().map(|p| vec![0.0; p.len()]).collect();
     let mut gx = if need_gx { Some(Mat::zeros(x.rows, x.cols)) } else { None };
-    layer.backward(gy, x, cache, &mut ctx, gx.as_mut(), &mut pg);
+    let (vr, vc) = layer.input_view_shape(x.rows, x.cols);
+    let stash = match layer.input_need() {
+        InputNeed::None => StashedInput::None,
+        InputNeed::Signs | InputNeed::Values => {
+            StashedInput::Full(x.reshape(vr, vc))
+        }
+    };
+    layer.backward(gy, stash, cache, &mut ctx, gx.as_mut(), &mut pg);
     (gx, pg)
 }
 
@@ -367,6 +397,93 @@ pub(crate) fn linear_backward_ctx(
     }
 }
 
+/// Doubly-gated linear backward over a kept-column input stash. The
+/// forward stored only the kept input columns `xg` (gathered under the
+/// activation policy's l2 gates, 1/pᵢ rescales in `xkept`, full input
+/// width `din`); the backward draws its own G-gates from the site's
+/// method and forms dW = scatter(Ĝᵀ·X̂) — rows rescaled by the G-gates
+/// inside [`sparse_dw_into`], columns rescaled by the X-gates at scatter
+/// time. Unbiased because the two gate streams are independent
+/// (E_X E_G [dŴ] = Gᵀ·X entrywise). db and dX never touch X, so they are
+/// computed exactly as in the singly-gated estimator.
+#[allow(clippy::too_many_arguments)]
+pub fn kept_linear_backward_into(
+    g: MatView<'_>,
+    xg: MatView<'_>,
+    xkept: &[(usize, f32)],
+    din: usize,
+    w: &Mat,
+    method: &str,
+    budget: f64,
+    rng: &mut Pcg64,
+    scratch: &mut SketchScratch,
+    mut dw: MatViewMut<'_>,
+    db: &mut [f32],
+    dx: Option<MatViewMut<'_>>,
+) {
+    debug_assert_eq!(din, w.cols, "kept stash full width");
+    debug_assert_eq!(xg.cols, xkept.len(), "kept stash column count");
+    debug_assert_eq!(xg.rows, g.rows, "kept stash rows");
+    let m = xkept.len();
+    // the kept-G list below borrows `scratch`, so the dW staging buffer
+    // is temporarily taken out of it
+    let mut dwg = std::mem::take(&mut scratch.dwg);
+    dwg.resize(w.rows * m, 0.0);
+    let kept_g = scratch.plan_columns(method, budget, g, Some(w), rng);
+    sparse_dw_into(g, kept_g, xg, MatViewMut::new(w.rows, m, &mut dwg));
+    dw.data.fill(0.0);
+    for &(j, _) in kept_g {
+        let src = &dwg[j * m..(j + 1) * m];
+        let drow = &mut dw.data[j * din..(j + 1) * din];
+        for (c, &(sx, invx)) in xkept.iter().enumerate() {
+            drow[sx] = src[c] * invx;
+        }
+    }
+    db.fill(0.0);
+    for &(j, inv) in kept_g {
+        let mut s = 0.0f32;
+        for i in 0..g.rows {
+            s += g.at(i, j);
+        }
+        db[j] = s * inv;
+    }
+    if let Some(dx) = dx {
+        sparse_dx_into(g, kept_g, w.view(), dx);
+    }
+    scratch.dwg = dwg;
+}
+
+/// Dispatch one linear backward over a stashed input: full stashes go
+/// through the exact/sketched split of [`linear_backward_ctx`]; kept
+/// stashes only exist at gated sites (the plan resolution guarantees it)
+/// and take the doubly-gated [`kept_linear_backward_into`] path. Shared
+/// by every layer whose dW reads its input.
+pub(crate) fn linear_backward_stash(
+    g: MatView<'_>,
+    x: StashedInput<'_>,
+    w: &Mat,
+    ctx: &mut SketchCtx<'_>,
+    dw: MatViewMut<'_>,
+    db: &mut [f32],
+    dx: Option<MatViewMut<'_>>,
+) {
+    match x {
+        StashedInput::Full(xv) => {
+            linear_backward_ctx(g, xv, w, ctx, dw, db, dx)
+        }
+        StashedInput::Kept { xg, kept, cols } => {
+            let s = ctx.sketch.expect("kept stash implies a gated site");
+            kept_linear_backward_into(
+                g, xg, kept, cols, w, &s.method, s.budget, ctx.rng,
+                ctx.scratch, dw, db, dx,
+            );
+        }
+        StashedInput::None | StashedInput::Mask { .. } => {
+            panic!("linear backward needs stashed input values")
+        }
+    }
+}
+
 /// One dense layer `y = x·Wᵀ + b` with `W: [d_out, d_in]` row-major — the
 /// canonical sketch site (§4.2 column estimator on the output gradient).
 pub struct Linear {
@@ -412,6 +529,10 @@ impl Layer for Linear {
         self.dout()
     }
 
+    fn input_need(&self) -> InputNeed {
+        InputNeed::Values
+    }
+
     fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
         affine_into(x.view(), &self.w, &self.b, y.view_mut());
     }
@@ -419,16 +540,16 @@ impl Layer for Linear {
     fn backward(
         &self,
         gy: &Mat,
-        x: &Mat,
+        x: StashedInput<'_>,
         _cache: &mut Cache,
         ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
         pg: &mut [Vec<f32>],
     ) {
         let [dw, db] = pg else { panic!("linear has 2 param slots") };
-        linear_backward_ctx(
+        linear_backward_stash(
             gy.view(),
-            x.view(),
+            x,
             &self.w,
             ctx,
             MatViewMut::new(self.w.rows, self.w.cols, dw),
@@ -455,8 +576,9 @@ impl Layer for Linear {
     }
 }
 
-/// Elementwise rectifier; the derivative mask reads the workspace-held
-/// input directly (nothing cached).
+/// Elementwise rectifier; the derivative mask replays the input's sign
+/// pattern from the stash — full values under the exact policy, a packed
+/// bitset (32× smaller, bit-identical masking) under the kept policy.
 pub struct Relu;
 
 impl Layer for Relu {
@@ -468,6 +590,10 @@ impl Layer for Relu {
         din
     }
 
+    fn input_need(&self) -> InputNeed {
+        InputNeed::Signs
+    }
+
     fn forward(&self, x: &Mat, y: &mut Mat, _cache: &mut Cache) {
         vec::relu_into(&mut y.data, &x.data);
     }
@@ -475,7 +601,7 @@ impl Layer for Relu {
     fn backward(
         &self,
         gy: &Mat,
-        x: &Mat,
+        x: StashedInput<'_>,
         _cache: &mut Cache,
         _ctx: &mut SketchCtx<'_>,
         gx: Option<&mut Mat>,
@@ -483,7 +609,18 @@ impl Layer for Relu {
     ) {
         if let Some(gx) = gx {
             gx.data.copy_from_slice(&gy.data);
-            vec::mask_nonpos(&mut gx.data, &x.data);
+            match x {
+                StashedInput::Full(xv) => {
+                    vec::mask_nonpos(&mut gx.data, xv.data)
+                }
+                StashedInput::Mask { bits, len } => {
+                    debug_assert_eq!(len, gx.data.len(), "mask length");
+                    vec::apply_mask_bits(&mut gx.data, bits);
+                }
+                StashedInput::None | StashedInput::Kept { .. } => {
+                    panic!("relu backward needs stashed input signs")
+                }
+            }
         }
     }
 

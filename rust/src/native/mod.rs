@@ -23,13 +23,22 @@
 //! unbiasedness keeps SGD convergent (`tests/native_unbiased.rs` checks
 //! E[ĝ] = g by Monte Carlo).
 //!
+//! The forward side mirrors this with a per-layer activation policy
+//! (DESIGN.md §7.4): what each layer's backward will read of its input is
+//! captured into a per-layer [`Stash`] — a full copy under
+//! [`ActivationPolicy::exact`], a sign bitset or the gathered kept
+//! columns under the kept policy — so activation memory stops scaling
+//! with depth ([`Workspace::workspace_bytes`] accounts it arena by
+//! arena).
+//!
 //! Submodules: [`layer`] (the `Layer` trait, `Linear`/`Relu`, the sketched
 //! linear backward), [`conv`] (BagNet-lite patch layers), [`attention`]
-//! (ViT-lite blocks), [`sequential`] (the container + `Workspace` +
-//! `SketchPolicy`), [`models`] (the registry of named architectures),
-//! [`loss`] (cross-entropy / MSE heads), [`optim`] (SGD, momentum, Adam,
-//! gradient clipping), [`trainer`] (the training loop behind
-//! `--backend native`).
+//! (ViT-lite blocks), [`policy`] (the activation policy: `ActivationPolicy`,
+//! `ActSite`, `Stash`, the kept-column backward), [`sequential`] (the
+//! container + `Workspace` + `SketchPolicy` + `StepPlan`), [`models`] (the
+//! registry of named architectures), [`loss`] (cross-entropy / MSE heads),
+//! [`optim`] (SGD, momentum, Adam, gradient clipping), [`trainer`] (the
+//! training loop behind `--backend native`).
 
 pub mod attention;
 pub mod conv;
@@ -37,6 +46,7 @@ pub mod layer;
 pub mod loss;
 pub mod models;
 pub mod optim;
+pub mod policy;
 pub mod sequential;
 pub mod trainer;
 
@@ -44,11 +54,15 @@ pub use attention::{Attention, FfnBlock, LayerNorm, PosEmbed};
 pub use conv::{PatchConv, PatchMeanPool, Patchify};
 pub use layer::{
     affine, affine_into, exact_linear_backward, exact_linear_backward_into,
-    run_layer_backward, run_layer_forward, sketched_linear_backward,
-    sketched_linear_backward_into, Cache, Grads, Layer, Linear, Relu,
-    SiteSketch, SketchCtx, NATIVE_METHODS,
+    kept_linear_backward_into, run_layer_backward, run_layer_forward,
+    sketched_linear_backward, sketched_linear_backward_into, Cache, Grads,
+    Layer, Linear, Relu, SiteSketch, SketchCtx, NATIVE_METHODS,
 };
 pub use loss::{accuracy, loss_and_grad, loss_and_grad_into, loss_value, LossKind};
 pub use optim::{clip_global_norm, Optim};
-pub use sequential::{Sequential, SketchPolicy, Workspace};
+pub use policy::{
+    ActMode, ActSite, ActivationPolicy, InputNeed, Stash, StashedInput,
+    StepPlan, ACT_METHOD,
+};
+pub use sequential::{Sequential, SketchPolicy, Workspace, WorkspaceBytes};
 pub use trainer::NativeTrainer;

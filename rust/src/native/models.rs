@@ -12,6 +12,11 @@
 //!   (residual MHSA and residual FFN sublayers, each followed by
 //!   LayerNorm) + mean pool; the QKV/projection and FFN linears are the
 //!   sketch sites.
+//! * **bagnet_deep / vit_deep** — the same recipes at 2×/3× the trunk
+//!   depth (4 conv stages / 3 encoder blocks). These exist to exercise
+//!   the §7.4 activation policy: under `--act-policy kept` their
+//!   per-layer stashes compact to kept columns, so the deep stacks train
+//!   within the shallow exact models' workspace footprint.
 //!
 //! `supports_model` queries ([`is_supported`]) and trainer construction
 //! ([`build`]) both go through [`REGISTRY`] — adding a model here is all
@@ -52,6 +57,18 @@ pub const REGISTRY: &[ModelEntry] = &[
         build: vit,
         about: "ViT-lite: patch embed + post-LN MHSA/FFN block on \
                 synth-CIFAR (4 sketch sites)",
+    },
+    ModelEntry {
+        name: "bagnet_deep",
+        build: bagnet_deep,
+        about: "BagNet-lite at 2x depth: four 8x8 patch conv stages + mean \
+                pool on synth-CIFAR (5 sketch sites)",
+    },
+    ModelEntry {
+        name: "vit_deep",
+        build: vit_deep,
+        about: "ViT-lite at 3x depth: patch embed + three post-LN MHSA/FFN \
+                blocks on synth-CIFAR (8 sketch sites)",
     },
 ];
 
@@ -136,6 +153,49 @@ pub fn vit(seed: u64) -> Sequential {
     ])
 }
 
+/// BagNet-lite at twice the trunk depth: four 8×8-patch conv stages
+/// instead of two. Sketch sites: every conv plus the classifier (5).
+/// Init streams continue the shallow recipe (convs 300…303, classifier
+/// 304), so the first two stages match [`bagnet`] bit-for-bit.
+pub fn bagnet_deep(seed: u64) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Patchify::new(32, 32, 3, 8)), // 16 patches of 192
+        Box::new(PatchConv::he(16, 192, 64, seed, 300)),
+        Box::new(Relu),
+        Box::new(PatchConv::he(16, 64, 64, seed, 301)),
+        Box::new(Relu),
+        Box::new(PatchConv::he(16, 64, 64, seed, 302)),
+        Box::new(Relu),
+        Box::new(PatchConv::he(16, 64, 64, seed, 303)),
+        Box::new(Relu),
+        Box::new(PatchMeanPool { patches: 16, dim: 64 }),
+        Box::new(Linear::he(64, 10, seed, 304)),
+    ])
+}
+
+/// ViT-lite at three times the encoder depth: three post-LN transformer
+/// blocks instead of one. Sketch sites: the patch embedding, each
+/// block's attention and FFN, and the classifier (8). Block k draws its
+/// attention from streams `302 + 6k …` and its FFN from `306 + 6k …`;
+/// block 0 matches [`vit`] bit-for-bit.
+pub fn vit_deep(seed: u64) -> Sequential {
+    let mut layers: Vec<Box<dyn Layer>> = vec![
+        Box::new(Patchify::new(32, 32, 3, 8)), // 16 tokens of 192
+        Box::new(PatchConv::he(16, 192, 64, seed, 300)),
+        Box::new(PosEmbed::new(16, 64, seed, 301)),
+    ];
+    for k in 0..3u64 {
+        let s = 302 + 6 * k;
+        layers.push(Box::new(Attention::new(16, 64, 4, seed, s)));
+        layers.push(Box::new(LayerNorm::new(64)));
+        layers.push(Box::new(FfnBlock::he(64, 128, seed, s + 4)));
+        layers.push(Box::new(LayerNorm::new(64)));
+    }
+    layers.push(Box::new(PatchMeanPool { patches: 16, dim: 64 }));
+    layers.push(Box::new(Linear::he(64, 10, seed, 320)));
+    Sequential::new(layers)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,8 +207,13 @@ mod tests {
         assert!(is_supported("mlp"));
         assert!(is_supported("bagnet"));
         assert!(is_supported("vit"));
+        assert!(is_supported("bagnet_deep"));
+        assert!(is_supported("vit_deep"));
         assert!(!is_supported("resnet"));
-        assert_eq!(names(), vec!["mlp", "bagnet", "vit"]);
+        assert_eq!(
+            names(),
+            vec!["mlp", "bagnet", "vit", "bagnet_deep", "vit_deep"]
+        );
         assert!(build("resnet", 0).is_err());
     }
 
@@ -159,7 +224,7 @@ mod tests {
         let x = Mat::from_fn(7, 5, |_, _| rng.gaussian() as f32);
         let mut ws = m.workspace(7, 5);
         m.forward(&x, &mut ws);
-        assert_eq!(ws.acts.len(), 3);
+        assert_eq!(ws.dims, vec![5, 4, 4, 3]);
         assert_eq!((ws.output().rows, ws.output().cols), (7, 3));
         assert_eq!(m.num_params(), 5 * 4 + 4 + 4 * 3 + 3);
     }
@@ -171,8 +236,9 @@ mod tests {
         let x = Mat::from_fn(16, 3, |_, _| rng.gaussian() as f32);
         let mut ws = m.workspace(16, 3);
         m.forward(&x, &mut ws);
-        // the relu activation feeds the last linear
-        assert!(ws.acts[1].data.iter().all(|&v| v >= 0.0));
+        // 3 layers ping-pong as flow[0], flow[1], flow[0]: after the sweep
+        // flow[1] still holds the relu output that fed the last linear
+        assert!(ws.flow[1].data.iter().all(|&v| v >= 0.0));
         assert!(ws.output().data.iter().any(|&v| v < 0.0));
     }
 
@@ -205,23 +271,43 @@ mod tests {
     }
 
     #[test]
+    fn deep_variants_forward_shapes_and_sites() {
+        let mut rng = Pcg64::new(5, 0);
+        let x = Mat::from_fn(2, 3072, |_, _| rng.gaussian() as f32);
+        let b = bagnet_deep(0);
+        let mut wsb = b.workspace(2, 3072);
+        b.forward(&x, &mut wsb);
+        assert_eq!((wsb.output().rows, wsb.output().cols), (2, 10));
+        assert_eq!(b.num_sites(), 5);
+        let v = vit_deep(0);
+        let mut wsv = v.workspace(2, 3072);
+        v.forward(&x, &mut wsv);
+        assert_eq!((wsv.output().rows, wsv.output().cols), (2, 10));
+        assert_eq!(v.num_sites(), 8);
+        // stage 0 of the deep trunks reuses the shallow init streams
+        assert_eq!(
+            b.layers[1].params()[0][0],
+            bagnet(0).layers[1].params()[0][0]
+        );
+        assert_eq!(v.layers[3].params()[0][0], vit(0).layers[3].params()[0][0]);
+    }
+
+    #[test]
     fn backward_matches_finite_differences() {
         use crate::native::loss::{loss_and_grad_into, loss_value, LossKind};
-        use crate::native::SketchPolicy;
+        use crate::native::{ActivationPolicy, SketchPolicy};
         let m = mlp(&[4, 5, 3], 3);
         let mut rng = Pcg64::new(4, 0);
         let x = Mat::from_fn(6, 4, |_, _| rng.gaussian() as f32);
         let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
         let mut ws = m.workspace(6, 4);
-        m.forward(&x, &mut ws);
-        loss_and_grad_into(
-            LossKind::CrossEntropy,
-            ws.acts.last().unwrap(),
-            &y,
-            ws.grads.last_mut().unwrap(),
-        );
-        let plan = m.plan(&SketchPolicy::exact()).unwrap();
-        m.backward(&x, &mut ws, &plan, &mut rng);
+        let plan = m
+            .plan(&SketchPolicy::exact(), &ActivationPolicy::exact())
+            .unwrap();
+        m.forward_train(&x, &mut ws, &plan, &mut rng);
+        let (logits, gout) = ws.loss_io();
+        loss_and_grad_into(LossKind::CrossEntropy, logits, &y, gout);
+        m.backward(&mut ws, &plan, &mut rng);
         let grads = &ws.grad_slots;
         // finite-difference a few weight coordinates of each linear
         let eps = 1e-3f32;

@@ -1,0 +1,412 @@
+//! Per-layer activation caching policy (DESIGN.md §7.4): what the forward
+//! saves for the backward, and in what representation.
+//!
+//! The sketched backward only ever reads a layer's *input* on the
+//! parameter-gradient side (dW = Ĝᵀ·X); the gradient that keeps flowing,
+//! dX = Ĝ·W, never touches X. That asymmetry is what an
+//! [`ActivationPolicy`] exploits: under the kept-column mode the forward
+//! gates the input's own columns — l2 column scores, the same
+//! waterfilling as the backward's gate plan
+//! ([`crate::sketch::SketchScratch::plan_columns`]), always *correlated*
+//! (systematic) sampling so the kept count is deterministic — and stashes
+//! only the kept columns with their 1/pᵢ rescales. The backward then
+//! forms dW from the doubly-gated product (G-gates from the backward's
+//! own stream, X-gates from the forward's), which stays unbiased because
+//! the two gate streams are independent and dX never reads the stash:
+//! E[dW] = E_G E_X [scatter(Ĝᵀ·X̂)] = Gᵀ·X.
+//!
+//! Exactness is untouched where the theory requires it: exact (ungated)
+//! sites always stash full values, ReLU-style layers that only need the
+//! *signs* of their input may compact to a bitset (bit-for-bit identical
+//! masking, see [`crate::tensor::kernels::vec::mask_bits_from_pos`]), and
+//! layers whose backward never reads the input (LayerNorm re-materializes
+//! from its saved x̂/1σ statistics, permutations, pooling) stash nothing.
+
+use crate::rng::Pcg64;
+use crate::sketch::SketchScratch;
+use crate::tensor::kernels::vec;
+use crate::tensor::{Mat, MatView};
+use anyhow::{bail, Result};
+
+use super::layer::{Layer, SiteSketch};
+
+/// Score method used to gate stashed input columns. Fixed to `l2` (column
+/// energy of X): it minimizes the kept-column estimator's variance for
+/// dW = ĜᵀX̂ with no extra state, and — unlike the `*_ind` families — is
+/// always sampled with the correlated systematic scheme, so the kept
+/// count (and thus the stash footprint) is deterministic: ⌈budget·cols⌉±1.
+pub const ACT_METHOD: &str = "l2";
+
+/// What a layer's backward needs of the layer's *input* (not its cache).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputNeed {
+    /// Backward never reads the input (permutations, pooling, LayerNorm —
+    /// which re-materializes from saved statistics).
+    None,
+    /// Only the sign pattern matters (ReLU masks) — compactable to a
+    /// bitset with bit-identical results.
+    Signs,
+    /// Full values feed a dW GEMM — the kept-column stash target.
+    Values,
+}
+
+/// Activation-caching mode (the `--act-policy` axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActMode {
+    /// Full-value stashes everywhere: bit-identical to the historical
+    /// full-cache path.
+    Exact,
+    /// Kept-column stashes at gated sketch sites, bitset sign masks, empty
+    /// stashes where backward ignores the input.
+    Kept,
+}
+
+impl ActMode {
+    /// Parse `"exact" | "kept" | "auto"`; `"auto"` reads the
+    /// `UAVJP_ACTPOLICY` environment knob (the CI matrix axis) and falls
+    /// back to `"exact"`.
+    pub fn parse(s: &str) -> Result<ActMode> {
+        let eff = if s == "auto" {
+            match std::env::var("UAVJP_ACTPOLICY") {
+                Ok(v) if !v.is_empty() => v,
+                _ => "exact".to_string(),
+            }
+        } else {
+            s.to_string()
+        };
+        match eff.as_str() {
+            "exact" => Ok(ActMode::Exact),
+            "kept" => Ok(ActMode::Kept),
+            other => bail!(
+                "unknown activation policy {other} (want exact|kept|auto)"
+            ),
+        }
+    }
+
+    /// Canonical name, inverse of [`ActMode::parse`] for non-auto inputs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ActMode::Exact => "exact",
+            ActMode::Kept => "kept",
+        }
+    }
+}
+
+/// Per-run activation-caching configuration, the cache-side sibling of
+/// [`crate::native::SketchPolicy`]. Resolved per layer by
+/// [`crate::native::Sequential::plan`] into [`ActSite`] decisions.
+#[derive(Clone, Debug)]
+pub struct ActivationPolicy {
+    /// Caching mode.
+    pub mode: ActMode,
+    /// Kept-column budget for stashed inputs at gated sites; `0.0` means
+    /// *inherit* the site's sketch budget (the default — one knob moves
+    /// both axes together).
+    pub budget: f64,
+    /// Optional per-site act budgets (sketch-site order, like
+    /// `budget_schedule`); entries of `0.0` inherit that site's sketch
+    /// budget. Length must equal the model's site count.
+    pub schedule: Option<Vec<f64>>,
+}
+
+impl ActivationPolicy {
+    /// The full-cache policy (bit-identical to the historical path).
+    pub fn exact() -> ActivationPolicy {
+        ActivationPolicy { mode: ActMode::Exact, budget: 0.0, schedule: None }
+    }
+
+    /// Kept-column policy at an explicit budget (`0.0` inherits per site).
+    pub fn kept(budget: f64) -> ActivationPolicy {
+        ActivationPolicy { mode: ActMode::Kept, budget, schedule: None }
+    }
+
+    /// Policy from a run config (`act_policy` / `act_budget` /
+    /// `act_schedule` fields), validating ranges.
+    pub fn from_config(cfg: &crate::config::TrainConfig) -> Result<ActivationPolicy> {
+        let mode = ActMode::parse(&cfg.act_policy)?;
+        if !(0.0..=1.0).contains(&cfg.act_budget) {
+            bail!("act_budget {} outside [0, 1]", cfg.act_budget);
+        }
+        for &b in &cfg.act_schedule {
+            if !(0.0..=1.0).contains(&b) {
+                bail!("act_schedule entry {b} outside [0, 1]");
+            }
+        }
+        Ok(ActivationPolicy {
+            mode,
+            budget: cfg.act_budget,
+            schedule: if cfg.act_schedule.is_empty() {
+                None
+            } else {
+                Some(cfg.act_schedule.clone())
+            },
+        })
+    }
+
+    /// Act budget for sketch site `site` whose sketch budget is
+    /// `sketch_budget` (schedule > global > inherit).
+    pub(crate) fn budget_for(&self, site: usize, sketch_budget: f64) -> f64 {
+        let b = match &self.schedule {
+            Some(s) => s[site],
+            None => self.budget,
+        };
+        if b > 0.0 {
+            b
+        } else {
+            sketch_budget
+        }
+    }
+}
+
+/// The resolved activation-cache decision for one layer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ActSite {
+    /// Stash nothing (backward ignores the input).
+    None,
+    /// Stash the full input values (exact path).
+    Full,
+    /// Stash the sign pattern as a bitset (bit-identical ReLU masking).
+    Mask,
+    /// Stash only kept columns at this budget, gated by l2 column scores
+    /// with correlated sampling at forward time.
+    Kept {
+        /// Kept-column budget p ∈ (0, 1] for the input columns.
+        budget: f64,
+    },
+}
+
+/// One step's fully-resolved per-layer plan: the sketch decision (backward
+/// G-gates) and the activation decision (forward X-stash), always the same
+/// length as the layer stack.
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    /// Per-layer sketch decision (`None` = exact backward).
+    pub sketch: Vec<Option<SiteSketch>>,
+    /// Per-layer activation-cache decision.
+    pub act: Vec<ActSite>,
+}
+
+/// One layer's input stash, owned by the workspace: whatever
+/// representation the layer's [`ActSite`] selected, with buffers reused
+/// across steps (capacities only grow, so steady-state stashing
+/// allocates nothing).
+#[derive(Debug, Default)]
+pub enum Stash {
+    /// Nothing stashed.
+    #[default]
+    None,
+    /// Full input copy in the layer's view shape.
+    Full(Mat),
+    /// Packed sign bitset over the flat input (bit set = kept by ReLU).
+    Mask {
+        /// One bit per input slot, [`vec::mask_bits_from_pos`] layout.
+        bits: Vec<u64>,
+        /// Number of input slots the bitset covers.
+        len: usize,
+    },
+    /// Kept input columns in the layer's view shape.
+    Kept {
+        /// The gathered kept columns, `[view_rows, kept.len()]`.
+        xg: Mat,
+        /// Kept (column, 1/pᵢ) pairs, strictly increasing columns.
+        kept: Vec<(usize, f32)>,
+        /// Full input width the kept columns index into.
+        cols: usize,
+    },
+}
+
+impl Stash {
+    /// Bytes this stash holds (capacities, not lengths — what the
+    /// allocator reserves). Feeds [`crate::native::WorkspaceBytes`].
+    pub fn bytes(&self) -> usize {
+        use std::mem::size_of;
+        match self {
+            Stash::None => 0,
+            Stash::Full(m) => m.data.capacity() * size_of::<f32>(),
+            Stash::Mask { bits, .. } => bits.capacity() * size_of::<u64>(),
+            Stash::Kept { xg, kept, .. } => {
+                xg.data.capacity() * size_of::<f32>()
+                    + kept.capacity() * size_of::<(usize, f32)>()
+            }
+        }
+    }
+
+    /// Borrowed view handed to [`Layer::backward`].
+    pub fn as_input(&self) -> StashedInput<'_> {
+        match self {
+            Stash::None => StashedInput::None,
+            Stash::Full(m) => StashedInput::Full(m.view()),
+            Stash::Mask { bits, len } => {
+                StashedInput::Mask { bits, len: *len }
+            }
+            Stash::Kept { xg, kept, cols } => {
+                StashedInput::Kept { xg: xg.view(), kept, cols: *cols }
+            }
+        }
+    }
+}
+
+/// Borrowed form of a [`Stash`], the `x` a [`Layer::backward`] receives.
+/// `Copy` so layers with several projections over the same input
+/// (attention's Q/K/V) can consume it repeatedly.
+#[derive(Clone, Copy, Debug)]
+pub enum StashedInput<'a> {
+    /// Nothing stashed — the backward must not read the input.
+    None,
+    /// Full input values in the layer's view shape.
+    Full(MatView<'a>),
+    /// Sign bitset over the flat input.
+    Mask {
+        /// One bit per input slot.
+        bits: &'a [u64],
+        /// Number of input slots covered.
+        len: usize,
+    },
+    /// Kept input columns with their rescales.
+    Kept {
+        /// Gathered kept columns, `[view_rows, kept.len()]`.
+        xg: MatView<'a>,
+        /// Kept (column, 1/pᵢ) pairs.
+        kept: &'a [(usize, f32)],
+        /// Full input width.
+        cols: usize,
+    },
+}
+
+/// Produce layer `layer`'s input stash for this step, per its resolved
+/// [`ActSite`]: called by the container *before* the layer's forward runs
+/// (gates are decided at production time, so the cache is gathered — never
+/// written full and pruned later). Buffers in `slot` are reused across
+/// steps. Exact/Full/Mask/None sites consume no randomness from `rng`.
+pub(crate) fn stash_input(
+    layer: &dyn Layer,
+    x: &Mat,
+    site: &ActSite,
+    slot: &mut Stash,
+    scratch: &mut SketchScratch,
+    rng: &mut Pcg64,
+) {
+    match site {
+        ActSite::None => {
+            if !matches!(slot, Stash::None) {
+                *slot = Stash::None;
+            }
+        }
+        ActSite::Full => {
+            let (vr, vc) = layer.input_view_shape(x.rows, x.cols);
+            debug_assert_eq!(vr * vc, x.data.len(), "view shape");
+            if let Stash::Full(m) = slot {
+                m.resize_to(vr, vc);
+                m.data.copy_from_slice(&x.data);
+            } else {
+                let mut m = Mat::zeros(vr, vc);
+                m.data.copy_from_slice(&x.data);
+                *slot = Stash::Full(m);
+            }
+        }
+        ActSite::Mask => {
+            if !matches!(slot, Stash::Mask { .. }) {
+                *slot = Stash::Mask { bits: Vec::new(), len: 0 };
+            }
+            let Stash::Mask { bits, len } = slot else { unreachable!() };
+            vec::mask_bits_from_pos(&x.data, bits);
+            *len = x.data.len();
+        }
+        ActSite::Kept { budget } => {
+            let (vr, vc) = layer.input_view_shape(x.rows, x.cols);
+            let plan =
+                scratch.plan_columns(ACT_METHOD, *budget, x.reshape(vr, vc), None, rng);
+            if !matches!(slot, Stash::Kept { .. }) {
+                *slot = Stash::Kept {
+                    xg: Mat::zeros(0, 0),
+                    kept: Vec::new(),
+                    cols: vc,
+                };
+            }
+            let Stash::Kept { xg, kept, cols } = slot else { unreachable!() };
+            *cols = vc;
+            let m = plan.len();
+            xg.resize_to(vr, m);
+            for r in 0..vr {
+                let row = &x.data[r * vc..(r + 1) * vc];
+                let dst = &mut xg.data[r * m..(r + 1) * m];
+                for (c, &(j, _)) in plan.iter().enumerate() {
+                    dst[c] = row[j];
+                }
+            }
+            kept.clear();
+            kept.extend_from_slice(plan);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_mode_parses_explicit_values() {
+        assert_eq!(ActMode::parse("exact").unwrap(), ActMode::Exact);
+        assert_eq!(ActMode::parse("kept").unwrap(), ActMode::Kept);
+        assert!(ActMode::parse("lossy").is_err());
+        for m in [ActMode::Exact, ActMode::Kept] {
+            assert_eq!(ActMode::parse(m.as_str()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn budget_resolution_prefers_schedule_then_global_then_inherit() {
+        let p = ActivationPolicy {
+            mode: ActMode::Kept,
+            budget: 0.5,
+            schedule: Some(vec![0.1, 0.0]),
+        };
+        assert_eq!(p.budget_for(0, 0.25), 0.1); // schedule wins
+        assert_eq!(p.budget_for(1, 0.25), 0.25); // 0.0 entry inherits
+        let p = ActivationPolicy::kept(0.5);
+        assert_eq!(p.budget_for(0, 0.25), 0.5); // global wins
+        let p = ActivationPolicy::kept(0.0);
+        assert_eq!(p.budget_for(0, 0.25), 0.25); // inherit
+    }
+
+    #[test]
+    fn mask_bits_replay_matches_mask_nonpos_bit_for_bit() {
+        // includes the adversarial f32s: ±0.0 (dropped), NaN (kept, since
+        // NaN <= 0 is false), denormals, negatives
+        let gate = vec![
+            -1.0f32,
+            0.0,
+            -0.0,
+            2.5,
+            f32::NAN,
+            f32::MIN_POSITIVE / 2.0,
+            -3.0,
+            1e-30,
+            7.0,
+        ];
+        let g = vec![1.0f32; gate.len()];
+        let mut via_mask = g.clone();
+        vec::mask_nonpos(&mut via_mask, &gate);
+        let mut bits = Vec::new();
+        vec::mask_bits_from_pos(&gate, &mut bits);
+        let mut via_bits = g.clone();
+        vec::apply_mask_bits(&mut via_bits, &bits);
+        assert_eq!(via_mask, via_bits);
+    }
+
+    #[test]
+    fn stash_bytes_track_each_representation() {
+        assert_eq!(Stash::None.bytes(), 0);
+        let full = Stash::Full(Mat::zeros(4, 8));
+        assert!(full.bytes() >= 4 * 8 * 4);
+        let mask = Stash::Mask { bits: vec![0u64; 2], len: 128 };
+        assert!(mask.bytes() >= 16);
+        let kept = Stash::Kept {
+            xg: Mat::zeros(4, 2),
+            kept: vec![(0, 1.0), (5, 2.0)],
+            cols: 8,
+        };
+        assert!(kept.bytes() >= 4 * 2 * 4);
+        assert!(kept.bytes() < full.bytes());
+    }
+}

@@ -1,21 +1,32 @@
 //! [`Sequential`]: the container that owns the layer stack, and
 //! [`Workspace`]: the preallocated arenas one training step runs in.
 //! [`SketchPolicy`] is the per-layer sketch configuration that replaces
-//! the old single global `SketchSpec`.
+//! the old single global `SketchSpec`; [`super::policy::ActivationPolicy`]
+//! is its forward-side twin deciding what each layer's input stash keeps.
 //!
 //! Since the view-based kernel redesign (DESIGN.md §7.2) the container is
-//! destination-passing end to end: [`Sequential::workspace`] sizes one
-//! activation buffer, one gradient buffer and one layer [`Cache`] per
-//! depth — plus the flat parameter-gradient slots and the column-planning
-//! scratch — once at build, and [`Sequential::forward`] /
-//! [`Sequential::backward`] stream every step through those arenas. A
-//! steady-state optimizer step therefore performs no heap allocation.
+//! destination-passing end to end, and since the activation-policy
+//! redesign (§7.4) its memory model is depth-independent: instead of one
+//! activation and one gradient buffer per layer, [`Sequential::workspace`]
+//! sizes two ping-pong *flow* buffers (forward) and two *gradient-flow*
+//! buffers (backward) at the widest activation in the stack, plus one
+//! input [`Stash`] slot per layer. Layer `i` reads its input from
+//! `flow[(i−1) % 2]` and writes its output into `flow[i % 2]`; what the
+//! backward pass will need of that input is captured in the layer's stash
+//! slot *before* the forward call overwrites the other buffer. Under
+//! [`super::policy::ActivationPolicy::exact`] the stash is a bit-copy of
+//! the input (bit-identical semantics to the old per-depth arenas); under
+//! the kept policy, sketched sites store only the gathered kept columns
+//! and ReLU stores a sign bitset, so growing the stack deeper grows the
+//! footprint by the compact stashes only.
 //!
 //! Sketch *sites* are the layers reporting [`Layer::sketchable`], numbered
 //! in forward order; [`SketchPolicy::resolve`] maps the config's
 //! `location` mask (`all|first|last|none`) and optional per-depth budget
-//! schedule onto those sites. Exact sites consume no gate randomness, so
-//! a `location="none"` run is bit-identical to the baseline.
+//! schedule onto those sites, and [`Sequential::plan`] combines that with
+//! an activation policy into one [`StepPlan`]. Exact sites consume no
+//! gate randomness, so a `location="none"` run is bit-identical to the
+//! baseline, and an exact activation policy consumes no stash randomness.
 
 use crate::pool;
 use crate::rng::Pcg64;
@@ -26,6 +37,9 @@ use anyhow::{bail, Result};
 
 use super::layer::{Cache, Grads, Layer, SiteSketch, SketchCtx, NATIVE_METHODS};
 use super::optim::Optim;
+use super::policy::{
+    stash_input, ActMode, ActSite, ActivationPolicy, InputNeed, Stash, StepPlan,
+};
 
 /// Per-layer sketch configuration: one method, a default budget, the
 /// `location` site mask, and an optional per-site budget schedule (the
@@ -126,28 +140,67 @@ impl SketchPolicy {
     }
 }
 
-/// The preallocated arenas one training step runs in: per-depth activation
-/// and gradient buffers, per-layer caches, the flat parameter-gradient
-/// slots, and the column-planning scratch. Built once by
+/// Arena-by-arena byte accounting of a [`Workspace`], by *capacity* (what
+/// the allocator actually holds, not the current logical shapes). This is
+/// the tracked memory column in `BENCH_native.json` and the quantity the
+/// memory-regression suite pins: under the kept activation policy `stash`
+/// shrinks with the budget while every other arena is policy-independent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceBytes {
+    /// The two ping-pong forward activation buffers.
+    pub flow: usize,
+    /// The two ping-pong backward gradient buffers.
+    pub gflow: usize,
+    /// Per-layer input stashes — the only arena the activation policy
+    /// scales.
+    pub stash: usize,
+    /// Per-layer intermediate caches ([`Layer::cache_shapes`]).
+    pub caches: usize,
+    /// Flat parameter-gradient slots.
+    pub grad_slots: usize,
+    /// Column-planning scratch (scores, gate probabilities, kept lists).
+    pub planning: usize,
+    /// Sum of every arena above.
+    pub total: usize,
+}
+
+/// Bytes held by one matrix's allocation.
+fn mat_bytes(m: &Mat) -> usize {
+    m.data.capacity() * std::mem::size_of::<f32>()
+}
+
+/// The preallocated arenas one training step runs in: two ping-pong
+/// activation buffers, two ping-pong gradient buffers, one input stash
+/// slot per layer, per-layer caches, the flat parameter-gradient slots,
+/// and the column-planning scratch. Built once by
 /// [`Sequential::workspace`] for a fixed `(batch, in_dim)`; every buffer
 /// is overwritten each step (never read before written), so reuse across
 /// steps is safe and steady-state training allocates nothing.
 ///
 /// Lifetime rules: a workspace is only valid for the stack that built it
-/// (buffer shapes are per-layer) and for inputs of exactly `batch × in_dim`.
-/// After [`Sequential::forward`], `acts[i]` holds layer i's output —
-/// `backward` reads those as the layers' saved inputs, so the workspace
-/// must not be touched between the two sweeps of one step.
+/// (buffer shapes are per-layer) and for inputs of exactly
+/// `batch × in_dim`. After [`Sequential::forward_train`], `stash[i]`
+/// holds what layer i's backward needs of its input and the flow buffers
+/// hold the last two activations, so the workspace must not be touched
+/// between the two sweeps of one step.
 pub struct Workspace {
     /// Batch size every buffer is sized for.
     pub batch: usize,
     /// Input width the stack was sized for.
     pub in_dim: usize,
-    /// `acts[i]` = output of layer i (`batch × out_dim(i)`).
-    pub acts: Vec<Mat>,
-    /// `grads[i]` = gradient w.r.t. `acts[i]` (same shapes). The loss
-    /// writes `dL/d(output)` into the last entry before `backward`.
-    pub grads: Vec<Mat>,
+    /// `dims[i]` = layer i's input width; `dims[n]` = the output width.
+    pub dims: Vec<usize>,
+    /// Ping-pong forward buffers: layer i writes `flow[i % 2]`, sized at
+    /// the widest activation so `resize_to` never reallocates.
+    pub flow: [Mat; 2],
+    /// Ping-pong backward buffers, mirroring `flow`.
+    pub gflow: [Mat; 2],
+    /// Which flow/gflow buffer holds the stack output (`(n−1) % 2`).
+    pub out_ix: usize,
+    /// `stash[i]` = what layer i's backward will read of its forward
+    /// input, captured per the step's [`ActSite`] before the forward
+    /// overwrote the previous flow buffer.
+    pub stash: Vec<Stash>,
     /// Per-layer scratch ([`Layer::cache_shapes`]).
     pub caches: Vec<Cache>,
     /// Flat parameter-gradient slots, global slot order.
@@ -155,7 +208,8 @@ pub struct Workspace {
     /// `slot_offsets[i]..slot_offsets[i+1]` = layer i's slot range (so the
     /// backward walk never rebuilds the parameter registry).
     pub slot_offsets: Vec<usize>,
-    /// Reused column-planning buffers for the sketched sites.
+    /// Reused column-planning buffers for the sketched sites and the
+    /// kept-column activation gates.
     pub scratch: SketchScratch,
     /// Handle to the pack-buffer pool the SIMD kernels draw from. The
     /// pool is process-wide (`PackArena::global()` — kernels reach it
@@ -168,14 +222,55 @@ pub struct Workspace {
 }
 
 impl Workspace {
-    /// The stack output (logits) after a [`Sequential::forward`].
+    /// The stack output (logits) after a forward sweep.
     pub fn output(&self) -> &Mat {
-        self.acts.last().expect("stack is never empty")
+        &self.flow[self.out_ix]
+    }
+
+    /// The output activations and the loss-gradient destination read by
+    /// [`Sequential::backward`], as one disjoint borrow (the gradient
+    /// buffer is resized to the logits' shape before the split).
+    pub fn loss_io(&mut self) -> (&Mat, &mut Mat) {
+        let ix = self.out_ix;
+        let (r, c) = (self.flow[ix].rows, self.flow[ix].cols);
+        self.gflow[ix].resize_to(r, c);
+        (&self.flow[ix], &mut self.gflow[ix])
     }
 
     /// The loss-gradient destination read by [`Sequential::backward`].
     pub fn grad_out_mut(&mut self) -> &mut Mat {
-        self.grads.last_mut().expect("stack is never empty")
+        let ix = self.out_ix;
+        let (r, c) = (self.flow[ix].rows, self.flow[ix].cols);
+        self.gflow[ix].resize_to(r, c);
+        &mut self.gflow[ix]
+    }
+
+    /// Arena-by-arena byte accounting (allocator capacities).
+    pub fn workspace_bytes(&self) -> WorkspaceBytes {
+        let flow: usize = self.flow.iter().map(mat_bytes).sum();
+        let gflow: usize = self.gflow.iter().map(mat_bytes).sum();
+        let stash: usize = self.stash.iter().map(|s| s.bytes()).sum();
+        let caches: usize = self
+            .caches
+            .iter()
+            .map(|c| c.mats.iter().map(mat_bytes).sum::<usize>())
+            .sum();
+        let grad_slots: usize = self
+            .grad_slots
+            .slots
+            .iter()
+            .map(|s| s.capacity() * std::mem::size_of::<f32>())
+            .sum();
+        let planning = self.scratch.bytes();
+        WorkspaceBytes {
+            flow,
+            gflow,
+            stash,
+            caches,
+            grad_slots,
+            planning,
+            total: flow + gflow + stash + caches + grad_slots + planning,
+        }
     }
 }
 
@@ -225,22 +320,30 @@ impl Sequential {
     }
 
     /// Allocate every arena one training step needs for `batch × in_dim`
-    /// inputs: activations, gradients and caches per depth
+    /// inputs: the ping-pong flow/gradient buffers (sized at the widest
+    /// activation), empty stash slots, caches per depth
     /// ([`Layer::out_dim`] / [`Layer::cache_shapes`] size them), the
     /// parameter-gradient slots, and the sketch scratch.
     pub fn workspace(&self, batch: usize, in_dim: usize) -> Workspace {
-        let mut acts = Vec::with_capacity(self.layers.len());
-        let mut caches = Vec::with_capacity(self.layers.len());
+        let n = self.layers.len();
+        let mut dims = Vec::with_capacity(n + 1);
+        dims.push(in_dim);
+        let mut caches = Vec::with_capacity(n);
         let mut din = in_dim;
         for layer in &self.layers {
             let dout = layer.out_dim(din);
-            acts.push(Mat::zeros(batch, dout));
             caches.push(Cache::for_layer(layer.as_ref(), batch, din));
+            dims.push(dout);
             din = dout;
         }
-        let grads = acts.iter().map(|a| Mat::zeros(a.rows, a.cols)).collect();
+        // flow/gflow hold layer *outputs* only (layer 0 reads the caller's
+        // input directly), so the widest output bounds all four buffers.
+        let width = dims[1..].iter().copied().max().unwrap_or(1);
+        let flow = [Mat::zeros(batch, width), Mat::zeros(batch, width)];
+        let gflow = [Mat::zeros(batch, width), Mat::zeros(batch, width)];
+        let stash: Vec<Stash> = (0..n).map(|_| Stash::default()).collect();
         let mut slots = Vec::with_capacity(self.num_slots());
-        let mut slot_offsets = Vec::with_capacity(self.layers.len() + 1);
+        let mut slot_offsets = Vec::with_capacity(n + 1);
         slot_offsets.push(0);
         for layer in &self.layers {
             for p in layer.params() {
@@ -255,20 +358,18 @@ impl Sequential {
         // on demand — but it makes the *first* step's packing
         // allocation-free too.
         let pack = kernels::PackArena::global();
-        let max_act = acts
-            .iter()
-            .map(|a| a.data.len())
-            .max()
-            .unwrap_or(0)
-            .max(batch * in_dim);
+        let max_act = batch * dims.iter().copied().max().unwrap_or(in_dim);
         let max_param = slots.iter().map(|s| s.len()).max().unwrap_or(0);
         let panel = max_act.max(max_param);
         pack.reserve(pool::threads() + 1, panel + panel / 4 + 1024);
         Workspace {
             batch,
             in_dim,
-            acts,
-            grads,
+            dims,
+            flow,
+            gflow,
+            out_ix: (n - 1) % 2,
+            stash,
             caches,
             grad_slots: Grads { slots },
             slot_offsets,
@@ -277,51 +378,110 @@ impl Sequential {
         }
     }
 
-    /// Forward sweep: stream `x` through every layer, writing each output
-    /// into `ws.acts[i]`. The final activation is the stack output
-    /// ([`Workspace::output`]).
+    /// Inference forward sweep: stream `x` through every layer, layer i
+    /// writing `ws.flow[i % 2]`. Captures no input stashes and consumes
+    /// no randomness — [`Sequential::backward`] is only valid after
+    /// [`Sequential::forward_train`].
     pub fn forward(&self, x: &Mat, ws: &mut Workspace) {
         assert_eq!(
             (x.rows, x.cols),
             (ws.batch, ws.in_dim),
             "workspace sized for a different input shape"
         );
-        for i in 0..self.layers.len() {
-            let (prev, cur) = ws.acts.split_at_mut(i);
-            let input = if i == 0 { x } else { &prev[i - 1] };
-            self.layers[i].forward(input, &mut cur[0], &mut ws.caches[i]);
+        let n = self.layers.len();
+        for i in 0..n {
+            let [f0, f1] = &mut ws.flow;
+            let (input, out): (&Mat, &mut Mat) = if i == 0 {
+                (x, f0)
+            } else if i % 2 == 0 {
+                (&*f1, f0)
+            } else {
+                (&*f0, f1)
+            };
+            out.resize_to(ws.batch, ws.dims[i + 1]);
+            self.layers[i].forward(input, out, &mut ws.caches[i]);
         }
+        ws.out_ix = (n - 1) % 2;
     }
 
-    /// Reverse sweep under a per-layer `plan` from [`Sequential::plan`],
-    /// starting from the loss gradient the caller wrote into
-    /// `ws.grads.last()` ([`Workspace::grad_out_mut`]). Parameter
-    /// gradients land in `ws.grad_slots`; exact layers consume no
-    /// randomness from `rng`. `x` must be the same batch the forward saw.
-    pub fn backward(
+    /// Training forward sweep: like [`Sequential::forward`], but before
+    /// each layer runs, its input is captured into `ws.stash[i]` per the
+    /// step plan's [`ActSite`] — a bit-copy under the exact policy, a
+    /// sign bitset for ReLU, or the gathered kept columns (gates drawn
+    /// from `rng`) at sketched sites under the kept policy. The gates are
+    /// decided at production time, before the ping-pong overwrites the
+    /// input. Exact/Full/Mask/None sites consume no randomness.
+    pub fn forward_train(
         &self,
         x: &Mat,
         ws: &mut Workspace,
-        plan: &[Option<SiteSketch>],
+        plan: &StepPlan,
         rng: &mut Pcg64,
     ) {
+        assert_eq!(
+            (x.rows, x.cols),
+            (ws.batch, ws.in_dim),
+            "workspace sized for a different input shape"
+        );
         let n = self.layers.len();
-        assert_eq!(plan.len(), n, "plan length");
+        assert_eq!(plan.act.len(), n, "plan length");
+        for i in 0..n {
+            let [f0, f1] = &mut ws.flow;
+            let (input, out): (&Mat, &mut Mat) = if i == 0 {
+                (x, f0)
+            } else if i % 2 == 0 {
+                (&*f1, f0)
+            } else {
+                (&*f0, f1)
+            };
+            stash_input(
+                self.layers[i].as_ref(),
+                input,
+                &plan.act[i],
+                &mut ws.stash[i],
+                &mut ws.scratch,
+                rng,
+            );
+            out.resize_to(ws.batch, ws.dims[i + 1]);
+            self.layers[i].forward(input, out, &mut ws.caches[i]);
+        }
+        ws.out_ix = (n - 1) % 2;
+    }
+
+    /// Reverse sweep under a [`StepPlan`] from [`Sequential::plan`],
+    /// starting from the loss gradient the caller wrote into
+    /// [`Workspace::loss_io`]'s gradient buffer. Layer i reads its
+    /// upstream gradient from `ws.gflow[i % 2]`, its stashed input from
+    /// `ws.stash[i]`, and writes its input gradient into
+    /// `ws.gflow[(i−1) % 2]`. Parameter gradients land in
+    /// `ws.grad_slots`; exact layers consume no randomness from `rng`.
+    /// Only valid right after the [`Sequential::forward_train`] that
+    /// captured the stashes under the same plan.
+    pub fn backward(&self, ws: &mut Workspace, plan: &StepPlan, rng: &mut Pcg64) {
+        let n = self.layers.len();
+        assert_eq!(plan.sketch.len(), n, "plan length");
         for i in (0..n).rev() {
             let (slot_start, slot_end) =
                 (ws.slot_offsets[i], ws.slot_offsets[i + 1]);
-            let (gprev, gcur) = ws.grads.split_at_mut(i);
-            let gy: &Mat = &gcur[0];
-            let gx = if i > 0 { Some(&mut gprev[i - 1]) } else { None };
-            let input = if i == 0 { x } else { &ws.acts[i - 1] };
+            let [g0, g1] = &mut ws.gflow;
+            let (gy, gx): (&Mat, Option<&mut Mat>) = if i == 0 {
+                (&*g0, None)
+            } else if i % 2 == 0 {
+                g1.resize_to(ws.batch, ws.dims[i]);
+                (&*g0, Some(g1))
+            } else {
+                g0.resize_to(ws.batch, ws.dims[i]);
+                (&*g1, Some(g0))
+            };
+            let stash = ws.stash[i].as_input();
             let mut ctx = SketchCtx {
-                sketch: plan[i].as_ref(),
+                sketch: plan.sketch[i].as_ref(),
                 rng: &mut *rng,
                 scratch: &mut ws.scratch,
             };
             self.layers[i].backward(
                 gy,
-                input,
+                stash,
                 &mut ws.caches[i],
                 &mut ctx,
                 gx,
@@ -330,16 +490,66 @@ impl Sequential {
         }
     }
 
-    /// Resolve a policy into one decision per *layer* (`None` everywhere
-    /// except gated sketch sites).
-    pub fn plan(&self, policy: &SketchPolicy) -> Result<Vec<Option<SiteSketch>>> {
+    /// Resolve a sketch policy and an activation policy into one
+    /// [`StepPlan`]: per-layer sketch decisions (`None` everywhere except
+    /// gated sketch sites) and per-layer stash decisions. A layer's
+    /// [`ActSite`] follows its [`Layer::input_need`]: `None` stays
+    /// `None`; `Signs` compacts to a bitset under the kept policy;
+    /// `Values` compacts to kept columns only where the layer is a
+    /// *gated* sketch site (the gated backward already rescales, so
+    /// unbiasedness is preserved — see `policy.rs`), at the activation
+    /// budget resolved per site (schedule > global > inherit the site's
+    /// sketch budget).
+    pub fn plan(
+        &self,
+        policy: &SketchPolicy,
+        act: &ActivationPolicy,
+    ) -> Result<StepPlan> {
         let sites = self.sketch_sites();
         let per_site = policy.resolve(sites.len())?;
-        let mut plan: Vec<Option<SiteSketch>> = vec![None; self.layers.len()];
-        for (site, layer_idx) in sites.into_iter().enumerate() {
-            plan[layer_idx] = per_site[site].clone();
+        let mut sketch: Vec<Option<SiteSketch>> = vec![None; self.layers.len()];
+        for (site, &layer_idx) in sites.iter().enumerate() {
+            sketch[layer_idx] = per_site[site].clone();
         }
-        Ok(plan)
+        if let Some(s) = &act.schedule {
+            if s.len() != sites.len() {
+                bail!(
+                    "activation budget schedule has {} entries but the model \
+                     has {} sketchable layers",
+                    s.len(),
+                    sites.len()
+                );
+            }
+        }
+        let kept_mode = act.mode == ActMode::Kept;
+        let mut site_no = 0usize;
+        let mut act_sites = Vec::with_capacity(self.layers.len());
+        for (i, layer) in self.layers.iter().enumerate() {
+            let this_site = if layer.sketchable() {
+                let s = site_no;
+                site_no += 1;
+                Some(s)
+            } else {
+                None
+            };
+            act_sites.push(match layer.input_need() {
+                InputNeed::None => ActSite::None,
+                InputNeed::Signs => {
+                    if kept_mode {
+                        ActSite::Mask
+                    } else {
+                        ActSite::Full
+                    }
+                }
+                InputNeed::Values => match (kept_mode, this_site, &sketch[i]) {
+                    (true, Some(site), Some(sk)) => ActSite::Kept {
+                        budget: act.budget_for(site, sk.budget),
+                    },
+                    _ => ActSite::Full,
+                },
+            });
+        }
+        Ok(StepPlan { sketch, act: act_sites })
     }
 
     /// One optimizer update over every parameter tensor, global slot order
@@ -439,15 +649,60 @@ mod tests {
     fn workspace_arenas_match_layer_shapes() {
         let m = models::mlp(&[5, 4, 3], 0);
         let ws = m.workspace(6, 5);
-        assert_eq!(ws.acts.len(), 3);
-        assert_eq!((ws.acts[0].rows, ws.acts[0].cols), (6, 4));
-        assert_eq!((ws.acts[2].rows, ws.acts[2].cols), (6, 3));
-        for (a, g) in ws.acts.iter().zip(&ws.grads) {
-            assert_eq!((a.rows, a.cols), (g.rows, g.cols));
+        assert_eq!(ws.dims, vec![5, 4, 4, 3]);
+        // ping-pong buffers hold the widest output, not one mat per depth
+        for f in ws.flow.iter().chain(&ws.gflow) {
+            assert!(f.data.capacity() >= 6 * 4);
         }
+        assert_eq!(ws.stash.len(), 3);
+        assert!(ws.stash.iter().all(|s| matches!(s, Stash::None)));
         assert_eq!(ws.grad_slots.slots.len(), m.num_slots());
         assert_eq!(ws.grad_slots.slots[0].len(), 5 * 4);
         assert_eq!(ws.grad_slots.slots[1].len(), 4);
+    }
+
+    #[test]
+    fn plan_resolves_act_sites_per_input_need() {
+        let m = models::mlp(&[4, 6, 3], 1);
+        // exact mode: every value/sign consumer stashes a full copy
+        let p = m.plan(&SketchPolicy::exact(), &ActivationPolicy::exact()).unwrap();
+        assert_eq!(p.act, vec![ActSite::Full, ActSite::Full, ActSite::Full]);
+        // kept mode over gated sites: linears keep gathered columns at the
+        // activation budget, the relu drops to a sign bitset
+        let sk = SketchPolicy {
+            method: "l1".into(),
+            budget: 0.4,
+            location: "all".into(),
+            schedule: None,
+        };
+        let p = m.plan(&sk, &ActivationPolicy::kept(0.25)).unwrap();
+        assert_eq!(p.act[0], ActSite::Kept { budget: 0.25 });
+        assert_eq!(p.act[1], ActSite::Mask);
+        assert_eq!(p.act[2], ActSite::Kept { budget: 0.25 });
+        // a 0.0 activation budget inherits each site's sketch budget
+        let p = m.plan(&sk, &ActivationPolicy::kept(0.0)).unwrap();
+        assert_eq!(p.act[0], ActSite::Kept { budget: 0.4 });
+        // kept mode over an exact backward: no gated site, so values fall
+        // back to full stashes (kept columns without the rescaling
+        // backward would be biased)
+        let p = m.plan(&SketchPolicy::exact(), &ActivationPolicy::kept(0.25)).unwrap();
+        assert_eq!(p.act[0], ActSite::Full);
+        assert_eq!(p.act[1], ActSite::Mask);
+        assert_eq!(p.act[2], ActSite::Full);
+    }
+
+    #[test]
+    fn workspace_bytes_accounts_every_arena() {
+        let m = models::mlp(&[4, 6, 3], 1);
+        let ws = m.workspace(5, 4);
+        let wb = ws.workspace_bytes();
+        assert_eq!(
+            wb.total,
+            wb.flow + wb.gflow + wb.stash + wb.caches + wb.grad_slots
+                + wb.planning
+        );
+        assert!(wb.flow >= 2 * 5 * 6 * 4, "two buffers at the widest act");
+        assert_eq!(wb.stash, 0, "nothing stashed before the first step");
     }
 
     #[test]
@@ -460,23 +715,23 @@ mod tests {
         let x = Mat::from_fn(5, 4, |_, _| rng.gaussian() as f32);
         let y = vec![0i32, 1, 2, 0, 1];
         let plan = m
-            .plan(&SketchPolicy {
-                method: "l1".into(),
-                budget: 0.4,
-                location: "all".into(),
-                schedule: None,
-            })
+            .plan(
+                &SketchPolicy {
+                    method: "l1".into(),
+                    budget: 0.4,
+                    location: "all".into(),
+                    schedule: None,
+                },
+                &ActivationPolicy::kept(0.5),
+            )
             .unwrap();
         let run = |ws: &mut Workspace| {
-            m.forward(&x, ws);
-            loss_and_grad_into(
-                LossKind::CrossEntropy,
-                ws.acts.last().unwrap(),
-                &y,
-                ws.grads.last_mut().unwrap(),
-            );
+            let mut act_rng = Pcg64::new(50, 1);
+            m.forward_train(&x, ws, &plan, &mut act_rng);
+            let (logits, gout) = ws.loss_io();
+            loss_and_grad_into(LossKind::CrossEntropy, logits, &y, gout);
             let mut rng = Pcg64::new(77, 0);
-            m.backward(&x, ws, &plan, &mut rng);
+            m.backward(ws, &plan, &mut rng);
             ws.grad_slots.flatten()
         };
         let mut ws = m.workspace(5, 4);
@@ -505,16 +760,15 @@ mod tests {
             location: "none".into(),
             schedule: None,
         };
+        // one rng drives BOTH sweeps: an exact activation policy must not
+        // consume stash randomness either
         let grads_under = |policy: &SketchPolicy, rng: &mut Pcg64| {
             let mut ws = m.workspace(5, 4);
-            m.forward(&x, &mut ws);
-            loss_and_grad_into(
-                LossKind::CrossEntropy,
-                ws.acts.last().unwrap(),
-                &y,
-                ws.grads.last_mut().unwrap(),
-            );
-            m.backward(&x, &mut ws, &m.plan(policy).unwrap(), rng);
+            let plan = m.plan(policy, &ActivationPolicy::exact()).unwrap();
+            m.forward_train(&x, &mut ws, &plan, rng);
+            let (logits, gout) = ws.loss_io();
+            loss_and_grad_into(LossKind::CrossEntropy, logits, &y, gout);
+            m.backward(&mut ws, &plan, rng);
             ws.grad_slots.flatten()
         };
         let mut r1 = Pcg64::new(77, 0);

@@ -11,6 +11,10 @@
 //! steady-state step performs no heap allocation (DESIGN.md §7.2).
 //! `cfg.threads` (the `--threads` flag) sets the kernels' intra-op worker
 //! count — a pure wall-clock knob, bit-identical results at any value.
+//! `cfg.act_policy` (`--act-policy`) picks the activation stash policy
+//! (§7.4): `exact` keeps full input copies, `kept` compacts sketched
+//! sites to kept columns and ReLU inputs to sign bitsets;
+//! [`NativeTrainer::workspace_bytes`] reports the resulting footprint.
 
 use crate::config::TrainConfig;
 use crate::data::{self, BatchIter, Dataset, DatasetKind};
@@ -21,11 +25,11 @@ use crate::tensor::kernels;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
 
-use super::layer::SiteSketch;
 use super::loss::{accuracy, loss_and_grad_into, loss_value, LossKind};
 use super::models;
 use super::optim::{clip_global_norm, Optim};
-use super::sequential::{Sequential, SketchPolicy, Workspace};
+use super::policy::{ActivationPolicy, StepPlan};
+use super::sequential::{Sequential, SketchPolicy, Workspace, WorkspaceBytes};
 
 /// Max global gradient norm for every native recipe (§B.2: clip 1.0;
 /// ≤ 0 disables).
@@ -37,11 +41,12 @@ pub struct NativeTrainer {
     pub cfg: TrainConfig,
     model: Sequential,
     ws: Workspace,
-    plan: Vec<Option<SiteSketch>>,
+    plan: StepPlan,
     opt: Optim,
     loss: LossKind,
     data_kind: DatasetKind,
     sk_rng: Pcg64,
+    act_rng: Pcg64,
 }
 
 impl NativeTrainer {
@@ -71,11 +76,18 @@ impl NativeTrainer {
                 cfg.batch
             );
         }
-        let plan = model.plan(&SketchPolicy::from_config(&cfg))?;
+        let plan = model.plan(
+            &SketchPolicy::from_config(&cfg),
+            &ActivationPolicy::from_config(&cfg)?,
+        )?;
         let opt = Optim::parse(&cfg.optimizer)?;
         let loss = LossKind::parse(&cfg.loss)?;
         let data_kind = DatasetKind::for_model(&cfg.model)?;
         let sk_rng = Pcg64::new(cfg.seed ^ 0x9e3779b9, 11);
+        // Distinct stream for the forward-side activation gates: the
+        // §7.4 unbiasedness argument needs them independent of the
+        // backward's G-gates. Exact/full stashes consume none of it.
+        let act_rng = Pcg64::new(cfg.seed ^ 0x51ac7, 13);
         if cfg.threads > 0 {
             pool::set_threads(cfg.threads);
         }
@@ -86,7 +98,17 @@ impl NativeTrainer {
             kernels::set_kernel(kernel_kind);
         }
         let ws = model.workspace(cfg.batch, data_kind.dim());
-        Ok(NativeTrainer { cfg, model, ws, plan, opt, loss, data_kind, sk_rng })
+        Ok(NativeTrainer {
+            cfg,
+            model,
+            ws,
+            plan,
+            opt,
+            loss,
+            data_kind,
+            sk_rng,
+            act_rng,
+        })
     }
 
     /// Batch size of this run.
@@ -97,6 +119,19 @@ impl NativeTrainer {
     /// The model stack (e.g. for benches driving steps manually).
     pub fn model(&self) -> &Sequential {
         &self.model
+    }
+
+    /// The resolved step plan (sketch + activation decisions per layer).
+    pub fn plan(&self) -> &StepPlan {
+        &self.plan
+    }
+
+    /// Arena-by-arena byte accounting of the trainer's workspace — the
+    /// tracked memory column in `BENCH_native.json`. Call after at least
+    /// one step for steady-state stash sizes (before the first step the
+    /// stash arena is empty).
+    pub fn workspace_bytes(&self) -> WorkspaceBytes {
+        self.ws.workspace_bytes()
     }
 
     /// Generate this run's datasets — identical protocol to the PJRT
@@ -111,15 +146,11 @@ impl NativeTrainer {
     /// One optimizer step on a batch; returns the training loss. Runs
     /// entirely in the trainer's preallocated workspace.
     pub fn step(&mut self, x: &Mat, y: &[i32], step: usize) -> f64 {
-        self.model.forward(x, &mut self.ws);
-        let loss = loss_and_grad_into(
-            self.loss,
-            self.ws.acts.last().expect("non-empty stack"),
-            y,
-            self.ws.grads.last_mut().expect("non-empty stack"),
-        );
         self.model
-            .backward(x, &mut self.ws, &self.plan, &mut self.sk_rng);
+            .forward_train(x, &mut self.ws, &self.plan, &mut self.act_rng);
+        let (logits, gout) = self.ws.loss_io();
+        let loss = loss_and_grad_into(self.loss, logits, y, gout);
+        self.model.backward(&mut self.ws, &self.plan, &mut self.sk_rng);
         clip_global_norm(&mut self.ws.grad_slots, CLIP_NORM);
         let lr = self.cfg.lr_at(step);
         self.model
@@ -229,6 +260,19 @@ mod tests {
         assert!(NativeTrainer::new(cfg).is_err());
         let mut cfg = tiny_cfg("l1", 0.2);
         cfg.budget_schedule = vec![0.5, 0.1]; // mlp has 3 sites
+        assert!(NativeTrainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_act_policy_values() {
+        let mut cfg = tiny_cfg("l1", 0.3);
+        cfg.act_policy = "compressed".into();
+        assert!(NativeTrainer::new(cfg).is_err());
+        let mut cfg = tiny_cfg("l1", 0.3);
+        cfg.act_budget = 1.5;
+        assert!(NativeTrainer::new(cfg).is_err());
+        let mut cfg = tiny_cfg("l1", 0.3);
+        cfg.act_schedule = vec![0.5]; // mlp has 3 sites
         assert!(NativeTrainer::new(cfg).is_err());
     }
 

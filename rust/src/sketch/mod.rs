@@ -31,11 +31,33 @@ pub struct SketchScratch {
     pub z: Vec<bool>,
     /// Kept-column list (index, 1/pᵢ) of the last planned site.
     pub kept: Vec<(usize, f32)>,
+    /// Compact dW staging buffer for the kept-input backward
+    /// (`[d_out, m]` where m = kept input columns); taken with
+    /// `std::mem::take` around planning so it can coexist with the
+    /// borrowed kept list.
+    pub dwg: Vec<f32>,
 }
 
 impl SketchScratch {
     pub fn new() -> SketchScratch {
         SketchScratch::default()
+    }
+
+    /// Bytes currently held by the planning buffers (capacities, not
+    /// lengths — what the allocator actually reserves). Feeds the
+    /// workspace-byte accounting.
+    pub fn bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.abs.capacity() * size_of::<f64>()
+            + self.sq.capacity() * size_of::<f64>()
+            + self.sum.capacity() * size_of::<f64>()
+            + self.sort.capacity() * size_of::<(f64, usize)>()
+            + self.suffix.capacity() * size_of::<f64>()
+            + self.scores.capacity() * size_of::<f32>()
+            + self.p.capacity() * size_of::<f32>()
+            + self.z.capacity() * size_of::<bool>()
+            + self.kept.capacity() * size_of::<(usize, f32)>()
+            + self.dwg.capacity() * size_of::<f32>()
     }
 
     /// Run the full pipeline for one backward site on the output gradient

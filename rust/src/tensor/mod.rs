@@ -164,6 +164,17 @@ impl Mat {
         MatViewMut::new(rows, cols, &mut self.data)
     }
 
+    /// Re-dimension in place, preserving the buffer's capacity: the flow
+    /// and scratch arenas are retargeted to each layer's shape every step,
+    /// and after the first pass through a stack no call allocates.
+    /// Contents are unspecified afterwards (callers fully overwrite —
+    /// the same dirty-buffer contract every workspace arena has).
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {

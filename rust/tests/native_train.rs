@@ -14,6 +14,13 @@ fn parity_cfg(method: &str, budget: f64) -> TrainConfig {
     cfg.method = method.into();
     cfg.budget = budget;
     cfg.location = if method == "baseline" { "none".into() } else { "all".into() };
+    // This suite pins the G-sketch parity axis in isolation, so the
+    // activation policy is fixed to full caches regardless of the CI
+    // UAVJP_ACTPOLICY matrix leg: dual gating @0.25/0.25 costs ~0.07 extra
+    // eval loss (sim-measured), which is outside this bar's 10% slack by
+    // design. The doubly-gated quality bar lives in tests/act_policy.rs
+    // (mlp_parity_bar_survives_kept_caching).
+    cfg.act_policy = "exact".into();
     cfg.train_size = 1024;
     cfg.test_size = 512;
     cfg.steps = 320;
