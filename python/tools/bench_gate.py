@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the native kernel benches.
+
+Compares a freshly measured ``cargo bench -- --json`` record list against
+the checked-in snapshot (``BENCH_native.json`` at the repo root) and fails
+when any *headline* case's median slowed down by more than the threshold
+(default 25%). Headline cases are the ``gemm_scaling`` records the ISSUE-4
+acceptance bar reads off: the ``n512_*`` dense-GEMM matrix and the
+``bwd512_*`` kept-column backward matrix.
+
+Both files may be either a raw record list (what the bench harness writes)
+or a snapshot object with a ``records`` key (the repo-root format). An
+empty baseline is the bootstrap state: the gate passes with a note, and
+the snapshot gets populated by copying a measured CI artifact back in.
+
+Speedups and new cases never fail the gate; a baseline case missing from
+the measured set does (a silently dropped bench would otherwise disable
+its own gate).
+
+Usage:
+  python3 bench_gate.py --measured rust/results/BENCH_native.json \
+                        --baseline BENCH_native.json [--threshold 1.25]
+"""
+
+import argparse
+import json
+import sys
+
+GROUP = "gemm_scaling"
+HEADLINE_PREFIXES = ("n512_", "bwd512_")
+DEFAULT_THRESHOLD = 1.25
+
+
+def load_records(path):
+    """Record list from either the raw bench dump or the snapshot object."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):
+        data = data.get("records", [])
+    if not isinstance(data, list):
+        raise SystemExit(f"{path}: expected a record list or a snapshot object")
+    return data
+
+
+def headline_medians(records):
+    """{case: median_ms} over the gated headline cases."""
+    out = {}
+    for r in records:
+        case = r.get("case", "")
+        if r.get("group") == GROUP and case.startswith(HEADLINE_PREFIXES):
+            out[case] = float(r["median_ms"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--measured", required=True,
+                    help="freshly measured bench JSON (raw record list)")
+    ap.add_argument("--baseline", required=True,
+                    help="checked-in snapshot to gate against")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fail when measured > baseline * threshold "
+                         f"(default {DEFAULT_THRESHOLD})")
+    args = ap.parse_args()
+
+    measured = headline_medians(load_records(args.measured))
+    baseline = headline_medians(load_records(args.baseline))
+
+    if not baseline:
+        print(f"bench gate: baseline {args.baseline} has no headline "
+              f"records yet (bootstrap) — passing; populate it by copying "
+              f"a measured CI artifact back into the snapshot")
+        return 0
+    if not measured:
+        print(f"bench gate: measured file {args.measured} has no headline "
+              f"{GROUP} records — the bench did not run")
+        return 1
+
+    regressions = []
+    missing = []
+    for case, base_ms in sorted(baseline.items()):
+        if case not in measured:
+            missing.append(case)
+            continue
+        got_ms = measured[case]
+        ratio = got_ms / base_ms if base_ms > 0 else float("inf")
+        marker = "REGRESSED" if ratio > args.threshold else "ok"
+        print(f"  {GROUP}/{case}: baseline {base_ms:8.3f} ms, "
+              f"measured {got_ms:8.3f} ms  ({ratio:5.2f}x) {marker}")
+        if ratio > args.threshold:
+            regressions.append((case, base_ms, got_ms, ratio))
+
+    if missing:
+        print(f"bench gate: {len(missing)} baseline case(s) missing from "
+              f"the measured set: {', '.join(missing)}")
+        return 1
+    if regressions:
+        print(f"bench gate: {len(regressions)} headline case(s) slowed "
+              f"down by more than {(args.threshold - 1) * 100:.0f}%:")
+        for case, base_ms, got_ms, ratio in regressions:
+            print(f"  {GROUP}/{case}: {base_ms:.3f} ms -> {got_ms:.3f} ms "
+                  f"({ratio:.2f}x)")
+        return 1
+    print(f"bench gate: {len(baseline)} headline case(s) within "
+          f"{(args.threshold - 1) * 100:.0f}% of the snapshot")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,9 @@
 //!   native_memory  — workspace-byte accounting per (model, activation
 //!                    policy), including the 2–3× deeper registry models:
 //!                    the §7.4 memory claim as a tracked column
+//!   serve_throughput — inference serving qps + p50/p99 request latency
+//!                    across offered load × batch cap (open-loop clients
+//!                    over the dynamic batcher, DESIGN.md §7.5)
 //!   step_latency   — AOT train-step wall time per (model, method) through
 //!                    PJRT (requires --features pjrt + built artifacts)
 //!   eq6_gemm       — dense vs kept-column backward GEMMs (kernel-only view)
@@ -30,14 +33,17 @@
 //! memory column on the trainer-level records — for the perf trajectory;
 //! CI uploads the file as a workflow artifact).
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use uavjp::config::{Preset, TrainConfig};
+use uavjp::config::{Preset, ServeConfig, TrainConfig};
+use uavjp::data::{self, DatasetKind};
 use uavjp::json::Value;
-use uavjp::native::{sketched_linear_backward_into, NativeTrainer};
+use uavjp::native::{models, sketched_linear_backward_into, NativeTrainer};
 use uavjp::pipeline::{simulate, PipelineConfig};
 use uavjp::pool;
 use uavjp::rng::Pcg64;
+use uavjp::serve::run_server;
 use uavjp::sketch::{
     correlated_bernoulli, kept_columns, pstar_from_weights, SketchScratch,
 };
@@ -439,11 +445,48 @@ fn bench_native_memory(filter: &str, rep: &mut Report) {
     }
 }
 
+/// Serving throughput and latency quantiles across offered load × batch
+/// cap (open-loop clients, the `serve` CLI's measurement path). Records
+/// carry the p50/p99 request latency and the run's wall time per case;
+/// sustained qps is `requests / wall` (requests is fixed at 128 here).
+fn bench_serve_throughput(filter: &str, rep: &mut Report) {
+    if !"serve_throughput".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== serve_throughput (offered load × batch cap, open loop, mlp) ==");
+    let model = Arc::new(models::build("mlp", 3).expect("registry model"));
+    let kind = DatasetKind::for_model("mlp").expect("dataset kind");
+    let ds = data::generate(kind, 64, 1234, "test");
+    let mut inputs = uavjp::tensor::Mat::zeros(ds.n, ds.dim);
+    inputs.data.copy_from_slice(&ds.x);
+    for offered in [100.0f64, 400.0] {
+        for max_batch in [1usize, 8] {
+            let cfg = ServeConfig {
+                max_batch,
+                max_wait_us: 200,
+                workers: 1,
+                requests: 128,
+                offered_load: offered,
+                concurrency: 4,
+            };
+            let r = run_server(&model, ds.dim, &inputs, &cfg);
+            println!(
+                "  load={offered:>5.0} qps cap={max_batch}: {:7.1} qps \
+                 sustained, p50 {:7.3} ms, p99 {:7.3} ms, mean batch {:.2}",
+                r.throughput_qps, r.p50_ms, r.p99_ms, r.mean_batch
+            );
+            let case = format!("mlp_q{offered}_b{max_batch}");
+            rep.rec("serve_throughput", format!("{case}_p50"), r.p50_ms / 1e3);
+            rep.rec("serve_throughput", format!("{case}_p99"), r.p99_ms / 1e3);
+            rep.rec("serve_throughput", format!("{case}_wall"), r.wall_seconds);
+        }
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn bench_step_latency(filter: &str, rep: &mut Report) {
     use uavjp::coordinator::trainer::layer_mask;
     use uavjp::coordinator::Trainer;
-    use uavjp::data::{self, DatasetKind};
     use uavjp::runtime::Runtime;
     if !"step_latency".contains(filter) && !filter.is_empty() {
         return;
@@ -635,6 +678,7 @@ fn main() {
     bench_native_step(&filter, &mut rep);
     bench_native_models(&filter, &mut rep);
     bench_native_memory(&filter, &mut rep);
+    bench_serve_throughput(&filter, &mut rep);
     bench_step_latency(&filter, &mut rep);
     bench_eq6_gemm(&filter, &mut rep);
     bench_pipeline(&filter, &mut rep);

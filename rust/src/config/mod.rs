@@ -48,6 +48,42 @@ impl Backend {
     }
 }
 
+/// One serving session (`serve` subcommand / `serve_throughput` bench):
+/// the dynamic-batching policy plus the synthetic client discipline
+/// (`crate::serve::run_server` documents open vs closed loop).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Largest coalesced batch (`--max-batch`); serving engines size
+    /// their arenas to it.
+    pub max_batch: usize,
+    /// Batching deadline in microseconds (`--max-wait-us`): how long a
+    /// queued request may wait for co-riders before dispatching anyway.
+    pub max_wait_us: u64,
+    /// Serving worker threads, each with its own engine
+    /// (`--serve-workers`).
+    pub workers: usize,
+    /// Total synthetic requests to serve (`--requests`).
+    pub requests: usize,
+    /// Offered load in requests/second (`--offered-load`): `> 0` runs the
+    /// open-loop client, `0` the closed-loop client.
+    pub offered_load: f64,
+    /// In-flight requests under the closed-loop client (`--concurrency`).
+    pub concurrency: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 200,
+            workers: 1,
+            requests: 256,
+            offered_load: 0.0,
+            concurrency: 4,
+        }
+    }
+}
+
 /// One fully-specified training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {

@@ -6,13 +6,16 @@
 //! (method × budget × seed) sweeps ([`sweeps`]), gradient-variance
 //! measurement for the Prop 2.2 / Eq 6 analyses ([`variance`]), and the
 //! per-figure experiment registry ([`experiments`]) that regenerates every
-//! figure/table of §5 as CSV + markdown under `results/`. Sweeps,
+//! figure/table of §5 as CSV + markdown under `results/`, and the
+//! train → save → serve pipeline ([`serving`]) behind the `serve`
+//! subcommand. Sweeps,
 //! experiments and variance probes are backend-agnostic: they drive
 //! [`backend::TrainBackend`], so `--backend native` runs the whole protocol
 //! without artifacts (DESIGN.md §7).
 
 pub mod backend;
 pub mod experiments;
+pub mod serving;
 pub mod sweeps;
 pub mod trainer;
 pub mod variance;

@@ -1,0 +1,73 @@
+//! The train → save → serve pipeline: glue between the training
+//! coordinator, the checkpoint layer ([`crate::native::checkpoint`]) and
+//! the serving subsystem ([`crate::serve`]).
+//!
+//! [`train_and_save`] backs the `train --save-ckpt <path>` CLI flag;
+//! [`serve_checkpoint`] backs the `serve` subcommand: it rehydrates the
+//! registry model from the checkpoint in a fresh process and drives a
+//! measured serving session over synthetic test-split inputs — the same
+//! generator the trainer evaluates on, so served logits can be compared
+//! bitwise against an in-process forward (`tests/serve.rs`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{ServeConfig, TrainConfig};
+use crate::data::{self, DatasetKind};
+use crate::metrics::RunCurve;
+use crate::native::{checkpoint, NativeTrainer};
+use crate::serve::{run_server, ServeReport};
+use crate::tensor::Mat;
+use anyhow::Result;
+
+/// Run one native training session and persist the final parameters as a
+/// versioned checkpoint at `path`.
+pub fn train_and_save(cfg: &TrainConfig, path: &Path) -> Result<RunCurve> {
+    let mut trainer = NativeTrainer::new(cfg.clone())?;
+    let curve = trainer.run()?;
+    trainer.save_checkpoint(path)?;
+    Ok(curve)
+}
+
+/// Load the checkpoint at `path`, rebuild its registry model, and run one
+/// measured serving session under `cfg`, cycling requests from the
+/// model's synthetic test split (up to 512 distinct rows).
+pub fn serve_checkpoint(path: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
+    let ckpt = checkpoint::load(path)?;
+    let model = Arc::new(ckpt.build_model()?);
+    let kind = DatasetKind::for_model(&ckpt.model_name)?;
+    let ds = data::generate(kind, cfg.requests.clamp(1, 512), 1234, "test");
+    let mut inputs = Mat::zeros(ds.n, ds.dim);
+    inputs.data.copy_from_slice(&ds.x);
+    Ok(run_server(&model, ds.dim, &inputs, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+
+    #[test]
+    fn train_save_serve_pipeline_smokes() {
+        let mut cfg: TrainConfig = Preset::Smoke.base("mlp").unwrap();
+        cfg.steps = 4;
+        cfg.eval_every = 4;
+        cfg.train_size = 128;
+        cfg.test_size = 32;
+        let dir = std::env::temp_dir();
+        let path = dir.join("uavjp_serving_smoke.ckpt");
+        let curve = train_and_save(&cfg, &path).unwrap();
+        assert!(!curve.losses.is_empty());
+        let scfg = ServeConfig {
+            requests: 16,
+            concurrency: 2,
+            max_batch: 4,
+            max_wait_us: 50,
+            ..ServeConfig::default()
+        };
+        let report = serve_checkpoint(&path, &scfg).unwrap();
+        assert_eq!(report.completed, 16);
+        assert!(report.p99_ms >= report.p50_ms);
+        let _ = std::fs::remove_file(&path);
+    }
+}

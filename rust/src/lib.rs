@@ -17,8 +17,9 @@
 //!     `pjrt`; the offline build links a type-only stub).
 //!
 //!   Around them: data generation ([`data`]), LR/budget sweeps and the
-//!   paper's experiments ([`coordinator`]), pipeline-parallel gradient
-//!   compression ([`pipeline`]), and the offline substrates ([`json`],
+//!   paper's experiments ([`coordinator`]), inference serving over saved
+//!   checkpoints ([`serve`]), pipeline-parallel gradient compression
+//!   ([`pipeline`]), and the offline substrates ([`json`],
 //!   [`rng`], [`tensor`], [`sketch`], [`pool`], [`config`], [`metrics`],
 //!   [`ptest`], [`cli`]).
 
@@ -40,5 +41,6 @@ pub mod pool;
 pub mod ptest;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod tensor;

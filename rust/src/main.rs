@@ -4,8 +4,8 @@
 
 use anyhow::Result;
 use uavjp::cli::Args;
-use uavjp::config::{Backend, Preset, TrainConfig};
-use uavjp::coordinator::{backend, experiments, sweeps, TrainBackend};
+use uavjp::config::{Backend, Preset, ServeConfig, TrainConfig};
+use uavjp::coordinator::{backend, experiments, serving, sweeps, TrainBackend};
 use uavjp::json;
 use uavjp::pipeline;
 use uavjp::runtime::Manifest;
@@ -27,6 +27,15 @@ commands:
               --act-schedule p1,p2,..  (one act budget per sketch site)
               --optimizer sgd|momentum|adam --loss ce|mse --batch <n>
               [--preset smoke|ci|paper] [--out run.json]
+              [--save-ckpt model.ckpt]  (native backend: save the final
+                parameters as a versioned checkpoint `serve` can load)
+  serve       measured inference serving over a saved checkpoint
+              --ckpt model.ckpt  (from train --save-ckpt)
+              --requests <n> --max-batch <n> --max-wait-us <n>
+              --serve-workers <n>
+              --offered-load <qps>  (open-loop arrivals; 0 = closed loop
+                at --concurrency in-flight requests)
+              [--out serve_report.json]
   sweep       budget sweep for one method (LR cross-validated)
               --model <m> --method <m> [--budgets 0.05,0.1,...] [--preset ..]
   fig1a|fig1b|fig2a|fig2b|fig3|fig4|variance|eq6
@@ -75,6 +84,7 @@ fn main() -> Result<()> {
         "exec-bench" => cmd_exec_bench(&args, &artifacts),
         "hlo-stats" => cmd_hlo_stats(&args, &artifacts),
         "train" => cmd_train(&args, &artifacts),
+        "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args, &artifacts),
         "pipeline-sim" => cmd_pipeline(&args),
         "list" => cmd_list(&artifacts),
@@ -233,7 +243,20 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         cfg.steps
     );
     let t0 = std::time::Instant::now();
-    let curve = be.train(&cfg)?;
+    let curve = match args.str_opt("save-ckpt") {
+        Some(path) => {
+            if cfg.backend != Backend::Native {
+                anyhow::bail!(
+                    "--save-ckpt needs --backend native (checkpoints hold \
+                     the native flat parameter registry)"
+                );
+            }
+            let curve = serving::train_and_save(&cfg, std::path::Path::new(path))?;
+            eprintln!("saved checkpoint to {path}");
+            curve
+        }
+        None => be.train(&cfg)?,
+    };
     let dt = t0.elapsed().as_secs_f64();
     let (el, ea, _) = curve.evals.last().copied().unwrap_or((0, f64::NAN, f64::NAN));
     println!(
@@ -248,6 +271,53 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
             ("wall_seconds", json::Value::num(dt)),
         ]);
         std::fs::write(out, json::to_string_pretty(&v))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Measured inference serving over a saved checkpoint: load, rebuild the
+/// registry model, and run open- or closed-loop synthetic clients against
+/// the dynamic-batched engine (`crate::serve`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    if Backend::parse(&args.str_or("backend", "native"))? != Backend::Native {
+        anyhow::bail!(
+            "serve runs on the native backend (checkpoints hold the native \
+             flat parameter registry)"
+        );
+    }
+    let ckpt = args.str_opt("ckpt").ok_or_else(|| {
+        anyhow::anyhow!(
+            "serve needs --ckpt <path> (write one with train --save-ckpt)"
+        )
+    })?;
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        max_batch: args.usize_or("max-batch", d.max_batch)?,
+        max_wait_us: args.usize_or("max-wait-us", d.max_wait_us as usize)? as u64,
+        workers: args.usize_or("serve-workers", d.workers)?,
+        requests: args.usize_or("requests", d.requests)?,
+        offered_load: args.f64_or("offered-load", d.offered_load)?,
+        concurrency: args.usize_or("concurrency", d.concurrency)?,
+    };
+    let report = serving::serve_checkpoint(std::path::Path::new(ckpt), &cfg)?;
+    println!(
+        "served {} requests in {:.2}s: {:.1} qps sustained, p50 {:.3} ms, \
+         p99 {:.3} ms, mean batch {:.2}",
+        report.completed,
+        report.wall_seconds,
+        report.throughput_qps,
+        report.p50_ms,
+        report.p99_ms,
+        report.mean_batch
+    );
+    if let Some(out) = args.str_opt("out") {
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(out, json::to_string_pretty(&report.to_json()))?;
         eprintln!("wrote {out}");
     }
     Ok(())

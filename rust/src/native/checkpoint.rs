@@ -1,0 +1,432 @@
+//! Versioned binary checkpoints: the artifact training leaves behind and
+//! serving loads (DESIGN.md §7.5).
+//!
+//! A checkpoint is the flat parameter registry serialized in global slot
+//! order — exactly the tensors [`Layer::params`] exposes, in the order
+//! [`Sequential`] walks them — behind a small self-describing header. The
+//! format is endian-explicit (every integer and float is little-endian on
+//! the wire via `to_le_bytes`/`from_le_bytes`, so files move between
+//! hosts) and versioned (readers reject formats they don't speak instead
+//! of misparsing them). Layout, all offsets in bytes:
+//!
+//! | field        | size | contents                                      |
+//! |--------------|------|-----------------------------------------------|
+//! | magic        | 8    | `b"UAVJPCKP"`                                 |
+//! | version      | 4    | u32, currently [`CKPT_VERSION`]               |
+//! | key length   | 4    | u32 `n`, length of the registry key           |
+//! | registry key | n    | UTF-8 model name ([`models::REGISTRY`])       |
+//! | seed         | 8    | u64 init seed the architecture was built with |
+//! | arch digest  | 8    | u64 FNV-1a over key + slot count + slot lens  |
+//! | slot count   | 4    | u32 number of parameter tensors               |
+//! | slots        | —    | per slot: u64 length, then `len` f32 values   |
+//! | checksum     | 8    | u64 FNV-1a over every preceding byte          |
+//!
+//! Loading re-parses defensively and returns a typed [`CkptError`] (never
+//! a panic) for every failure class: short or oversized files, foreign
+//! magic, unknown versions, payload corruption (trailing checksum), a
+//! registry key this build doesn't know, or an architecture drift between
+//! writer and reader (the digest pins the slot-length vector, so a model
+//! whose code changed shape since the save is rejected instead of
+//! silently misloaded). Round-tripping is bit-exact: `f32` bits pass
+//! through `to_le_bytes`/`from_le_bytes` unchanged (NaN payloads
+//! included), so a loaded model's forward is bitwise identical to the
+//! trainer's in-process eval (`tests/checkpoint.rs` pins this for every
+//! registry model × kernel kind).
+//!
+//! To add a header field: append it to the layout *after* `arch digest`
+//! (readers locate slots via the cursor, not fixed offsets), bump
+//! [`CKPT_VERSION`], and teach [`load_bytes`] both versions — old readers
+//! then reject new files loudly ([`CkptError::UnsupportedVersion`])
+//! instead of misreading them.
+
+use std::path::Path;
+
+use super::layer::Layer;
+use super::models;
+use super::sequential::Sequential;
+
+/// File magic: the first 8 bytes of every checkpoint.
+pub const CKPT_MAGIC: [u8; 8] = *b"UAVJPCKP";
+
+/// Current wire-format version (see the module docs for the bump recipe).
+pub const CKPT_VERSION: u32 = 1;
+
+/// Typed checkpoint failure. Implements [`std::error::Error`], so `?`
+/// converts into `anyhow::Result` at CLI call sites while tests match on
+/// the precise variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CkptError {
+    /// Filesystem failure (path + OS message).
+    Io(String),
+    /// The file ends before the structure it declares (`need` bytes to
+    /// continue parsing, `have` in the file).
+    Truncated { need: usize, have: usize },
+    /// The first 8 bytes are not [`CKPT_MAGIC`] — not a checkpoint.
+    BadMagic,
+    /// The file declares a format version this reader doesn't speak.
+    UnsupportedVersion { found: u32 },
+    /// The registry key is not valid UTF-8.
+    BadKey,
+    /// Bytes remain after the declared structure + checksum trailer.
+    TrailingBytes { extra: usize },
+    /// The trailing FNV-1a checksum doesn't match the payload.
+    ChecksumMismatch,
+    /// The registry key names a model this build doesn't register.
+    UnknownModel(String),
+    /// The stored arch digest disagrees with the freshly built registry
+    /// model — the model code changed shape since the save.
+    ArchMismatch { expected: u64, found: u64 },
+    /// Slot-count disagreement between file and rebuilt model.
+    SlotCount { expected: usize, found: usize },
+    /// One slot's length disagrees with the rebuilt model's tensor.
+    SlotLen { slot: usize, expected: usize, found: usize },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io(msg) => write!(f, "checkpoint io: {msg}"),
+            CkptError::Truncated { need, have } => write!(
+                f,
+                "checkpoint truncated: needs {need} bytes, file has {have}"
+            ),
+            CkptError::BadMagic => {
+                write!(f, "not a checkpoint (bad magic; want {CKPT_MAGIC:?})")
+            }
+            CkptError::UnsupportedVersion { found } => write!(
+                f,
+                "checkpoint format v{found} unsupported (this build reads \
+                 v{CKPT_VERSION})"
+            ),
+            CkptError::BadKey => write!(f, "registry key is not UTF-8"),
+            CkptError::TrailingBytes { extra } => {
+                write!(f, "{extra} unexpected bytes after checkpoint trailer")
+            }
+            CkptError::ChecksumMismatch => {
+                write!(f, "checkpoint corrupt: trailing checksum mismatch")
+            }
+            CkptError::UnknownModel(name) => {
+                write!(f, "checkpoint is for unregistered model {name:?}")
+            }
+            CkptError::ArchMismatch { expected, found } => write!(
+                f,
+                "architecture drift: registry model digest {expected:#x} != \
+                 stored {found:#x}"
+            ),
+            CkptError::SlotCount { expected, found } => write!(
+                f,
+                "slot count mismatch: model has {expected}, file has {found}"
+            ),
+            CkptError::SlotLen { slot, expected, found } => write!(
+                f,
+                "slot {slot} length mismatch: model wants {expected}, file \
+                 has {found}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+/// FNV-1a 64-bit hash — the checkpoint's arch digest and trailer
+/// checksum. Public so tests can re-stamp a deliberately altered payload.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Digest pinning the writer's architecture: the registry key plus the
+/// slot-length vector (count and each length as 8 LE bytes). Any change
+/// to a registered model's parameter shapes changes this.
+pub fn arch_digest(model_name: &str, slot_lens: &[usize]) -> u64 {
+    let mut bytes = Vec::with_capacity(model_name.len() + 8 * (slot_lens.len() + 1));
+    bytes.extend_from_slice(model_name.as_bytes());
+    bytes.extend_from_slice(&(slot_lens.len() as u64).to_le_bytes());
+    for &len in slot_lens {
+        bytes.extend_from_slice(&(len as u64).to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+/// A parsed checkpoint: everything needed to rebuild the model in a fresh
+/// process ([`Checkpoint::build_model`]).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Registry key the architecture is rebuilt from.
+    pub model_name: String,
+    /// Init seed the writer built the architecture with (loaded params
+    /// overwrite the init, so this only has to rebuild the same shapes).
+    pub seed: u64,
+    /// The stored arch digest, verified against the rebuilt model.
+    pub arch_digest: u64,
+    /// Flat parameter tensors, global slot order.
+    pub slots: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Rebuild the registry model and fill its parameters from the slots,
+    /// in global slot order through [`Layer::params_mut`]. Verifies the
+    /// registry key, the arch digest, and every slot shape.
+    pub fn build_model(&self) -> Result<Sequential, CkptError> {
+        if !models::is_supported(&self.model_name) {
+            return Err(CkptError::UnknownModel(self.model_name.clone()));
+        }
+        let mut model = models::build(&self.model_name, self.seed)
+            .map_err(|_| CkptError::UnknownModel(self.model_name.clone()))?;
+        let lens: Vec<usize> = model
+            .layers
+            .iter()
+            .flat_map(|l| l.params())
+            .map(|p| p.len())
+            .collect();
+        let expected = arch_digest(&self.model_name, &lens);
+        if expected != self.arch_digest {
+            return Err(CkptError::ArchMismatch {
+                expected,
+                found: self.arch_digest,
+            });
+        }
+        if lens.len() != self.slots.len() {
+            return Err(CkptError::SlotCount {
+                expected: lens.len(),
+                found: self.slots.len(),
+            });
+        }
+        let mut slot = 0usize;
+        for layer in &mut model.layers {
+            for p in layer.params_mut() {
+                let src = &self.slots[slot];
+                if src.len() != p.len() {
+                    return Err(CkptError::SlotLen {
+                        slot,
+                        expected: p.len(),
+                        found: src.len(),
+                    });
+                }
+                p.copy_from_slice(src);
+                slot += 1;
+            }
+        }
+        Ok(model)
+    }
+}
+
+/// Serialize a model's flat parameter registry (see the module docs for
+/// the layout). `model_name` must be the registry key that rebuilds this
+/// architecture at `seed`.
+pub fn save_bytes(model_name: &str, seed: u64, model: &Sequential) -> Vec<u8> {
+    let slots: Vec<&[f32]> =
+        model.layers.iter().flat_map(|l| l.params()).collect();
+    let payload: usize = slots.iter().map(|s| 8 + 4 * s.len()).sum();
+    let mut out = Vec::with_capacity(44 + model_name.len() + payload);
+    out.extend_from_slice(&CKPT_MAGIC);
+    out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(model_name.len() as u32).to_le_bytes());
+    out.extend_from_slice(model_name.as_bytes());
+    out.extend_from_slice(&seed.to_le_bytes());
+    let lens: Vec<usize> = slots.iter().map(|s| s.len()).collect();
+    out.extend_from_slice(&arch_digest(model_name, &lens).to_le_bytes());
+    out.extend_from_slice(&(slots.len() as u32).to_le_bytes());
+    for s in &slots {
+        out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+        for v in s.iter() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Bounds-checked little-endian reader over a checkpoint byte buffer.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CkptError> {
+        let end = self.pos.checked_add(n).ok_or(CkptError::Truncated {
+            need: usize::MAX,
+            have: self.buf.len(),
+        })?;
+        if end > self.buf.len() {
+            return Err(CkptError::Truncated { need: end, have: self.buf.len() });
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32, CkptError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CkptError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Parse checkpoint bytes. Check order: magic, version, structure
+/// (bounds-checked field by field), trailer presence, then the checksum
+/// over the whole body — so a version bump reads as
+/// [`CkptError::UnsupportedVersion`], a cut-off file as
+/// [`CkptError::Truncated`], and a flipped payload byte as
+/// [`CkptError::ChecksumMismatch`].
+pub fn load_bytes(buf: &[u8]) -> Result<Checkpoint, CkptError> {
+    let mut cur = Cursor { buf, pos: 0 };
+    if cur.take(8)? != CKPT_MAGIC {
+        return Err(CkptError::BadMagic);
+    }
+    let version = cur.u32()?;
+    if version != CKPT_VERSION {
+        return Err(CkptError::UnsupportedVersion { found: version });
+    }
+    let key_len = cur.u32()? as usize;
+    let model_name = std::str::from_utf8(cur.take(key_len)?)
+        .map_err(|_| CkptError::BadKey)?
+        .to_string();
+    let seed = cur.u64()?;
+    let arch = cur.u64()?;
+    let slot_count = cur.u32()? as usize;
+    let mut slots = Vec::with_capacity(slot_count.min(1 << 16));
+    for _ in 0..slot_count {
+        let len = usize::try_from(cur.u64()?).map_err(|_| {
+            CkptError::Truncated { need: usize::MAX, have: buf.len() }
+        })?;
+        let nbytes =
+            len.checked_mul(4).ok_or(CkptError::Truncated {
+                need: usize::MAX,
+                have: buf.len(),
+            })?;
+        let raw = cur.take(nbytes)?;
+        let mut slot = Vec::with_capacity(len);
+        for chunk in raw.chunks_exact(4) {
+            slot.push(f32::from_le_bytes(chunk.try_into().expect("4 bytes")));
+        }
+        slots.push(slot);
+    }
+    match cur.remaining() {
+        8 => {}
+        r if r < 8 => {
+            return Err(CkptError::Truncated {
+                need: cur.pos + 8,
+                have: buf.len(),
+            })
+        }
+        r => return Err(CkptError::TrailingBytes { extra: r - 8 }),
+    }
+    let stored = u64::from_le_bytes(
+        buf[buf.len() - 8..].try_into().expect("8 bytes"),
+    );
+    if fnv1a(&buf[..buf.len() - 8]) != stored {
+        return Err(CkptError::ChecksumMismatch);
+    }
+    Ok(Checkpoint { model_name, seed, arch_digest: arch, slots })
+}
+
+/// Serialize to a file. See [`save_bytes`].
+pub fn save(
+    path: &Path,
+    model_name: &str,
+    seed: u64,
+    model: &Sequential,
+) -> Result<(), CkptError> {
+    std::fs::write(path, save_bytes(model_name, seed, model))
+        .map_err(|e| CkptError::Io(format!("{}: {e}", path.display())))
+}
+
+/// Read + parse a checkpoint file. See [`load_bytes`].
+pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| CkptError::Io(format!("{}: {e}", path.display())))?;
+    load_bytes(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_tracks_name_and_shapes() {
+        let a = arch_digest("mlp", &[10, 4]);
+        assert_eq!(a, arch_digest("mlp", &[10, 4]));
+        assert_ne!(a, arch_digest("vit", &[10, 4]));
+        assert_ne!(a, arch_digest("mlp", &[10, 5]));
+        assert_ne!(a, arch_digest("mlp", &[10, 4, 0]));
+    }
+
+    #[test]
+    fn header_errors_are_typed() {
+        assert_eq!(
+            load_bytes(&[1, 2, 3]).unwrap_err(),
+            CkptError::Truncated { need: 8, have: 3 }
+        );
+        assert_eq!(load_bytes(&[0u8; 16]).unwrap_err(), CkptError::BadMagic);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&CKPT_MAGIC);
+        buf.extend_from_slice(&7u32.to_le_bytes());
+        assert_eq!(
+            load_bytes(&buf).unwrap_err(),
+            CkptError::UnsupportedVersion { found: 7 }
+        );
+    }
+
+    #[test]
+    fn bytes_roundtrip_bit_exact() {
+        let model = models::build("mlp", 3).unwrap();
+        let bytes = save_bytes("mlp", 3, &model);
+        let ckpt = load_bytes(&bytes).unwrap();
+        assert_eq!(ckpt.model_name, "mlp");
+        assert_eq!(ckpt.seed, 3);
+        let flat: Vec<&[f32]> =
+            model.layers.iter().flat_map(|l| l.params()).collect();
+        assert_eq!(ckpt.slots.len(), flat.len());
+        for (a, b) in ckpt.slots.iter().zip(&flat) {
+            assert_eq!(a.as_slice(), *b);
+        }
+        let rebuilt = ckpt.build_model().unwrap();
+        let flat2: Vec<&[f32]> =
+            rebuilt.layers.iter().flat_map(|l| l.params()).collect();
+        for (a, b) in flat.iter().zip(&flat2) {
+            assert_eq!(*a, *b);
+        }
+    }
+
+    #[test]
+    fn corruption_and_mismatches_are_typed() {
+        let model = models::build("mlp", 0).unwrap();
+        let good = save_bytes("mlp", 0, &model);
+        // flipped payload byte → checksum
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert_eq!(load_bytes(&bad).unwrap_err(), CkptError::ChecksumMismatch);
+        // truncated mid-slot
+        let cut = &good[..good.len() - 20];
+        assert!(matches!(
+            load_bytes(cut).unwrap_err(),
+            CkptError::Truncated { .. }
+        ));
+        // key for an unregistered model
+        let ckpt = load_bytes(&save_bytes("resnet", 0, &model)).unwrap();
+        assert_eq!(
+            ckpt.build_model().unwrap_err(),
+            CkptError::UnknownModel("resnet".into())
+        );
+        // registered key over the wrong architecture → digest drift
+        let ckpt = load_bytes(&save_bytes("bagnet", 0, &model)).unwrap();
+        assert!(matches!(
+            ckpt.build_model().unwrap_err(),
+            CkptError::ArchMismatch { .. }
+        ));
+    }
+}

@@ -98,7 +98,10 @@ pub struct SketchCtx<'a> {
 /// * `forward` fully overwrites `y` and `backward` fully overwrites `gx`
 ///   (when given) and every `pg` slot — buffers are reused across steps
 ///   and arrive dirty.
-pub trait Layer {
+/// (Layers are plain owned data, so the `Send + Sync` supertrait is free;
+/// it lets serving workers share one `Sequential` across threads, each
+/// running forward sweeps in its own workspace.)
+pub trait Layer: Send + Sync {
     /// Short name for logs and debugging ("linear", "attention", …).
     fn name(&self) -> &'static str;
 

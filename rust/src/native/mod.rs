@@ -38,9 +38,11 @@
 //! container + `Workspace` + `SketchPolicy` + `StepPlan`), [`models`] (the
 //! registry of named architectures), [`loss`] (cross-entropy / MSE heads),
 //! [`optim`] (SGD, momentum, Adam, gradient clipping), [`trainer`] (the
-//! training loop behind `--backend native`).
+//! training loop behind `--backend native`), [`checkpoint`] (versioned
+//! binary save/load of the flat parameter registry — what `serve` loads).
 
 pub mod attention;
+pub mod checkpoint;
 pub mod conv;
 pub mod layer;
 pub mod loss;
@@ -51,6 +53,7 @@ pub mod sequential;
 pub mod trainer;
 
 pub use attention::{Attention, FfnBlock, LayerNorm, PosEmbed};
+pub use checkpoint::{Checkpoint, CkptError};
 pub use conv::{PatchConv, PatchMeanPool, Patchify};
 pub use layer::{
     affine, affine_into, exact_linear_backward, exact_linear_backward_into,

@@ -325,6 +325,23 @@ impl Sequential {
     /// ([`Layer::out_dim`] / [`Layer::cache_shapes`] size them), the
     /// parameter-gradient slots, and the sketch scratch.
     pub fn workspace(&self, batch: usize, in_dim: usize) -> Workspace {
+        self.build_workspace(batch, in_dim, true)
+    }
+
+    /// Forward-only arenas for inference serving: like
+    /// [`Sequential::workspace`] but with no gradient-flow buffers and no
+    /// parameter-gradient slots (a plain [`Sequential::forward`] touches
+    /// neither — every layer's `input_need` is effectively `None`), so
+    /// the footprint is the two flow buffers plus the per-layer caches.
+    /// `batch` is the *largest* batch the workspace will serve;
+    /// [`Sequential::retarget_batch`] re-points it at any smaller batch
+    /// (0 included) without allocating. Only forward sweeps are valid on
+    /// it — `forward_train`/`backward` need the training arenas.
+    pub fn inference_workspace(&self, batch: usize, in_dim: usize) -> Workspace {
+        self.build_workspace(batch, in_dim, false)
+    }
+
+    fn build_workspace(&self, batch: usize, in_dim: usize, training: bool) -> Workspace {
         let n = self.layers.len();
         let mut dims = Vec::with_capacity(n + 1);
         dims.push(in_dim);
@@ -340,14 +357,24 @@ impl Sequential {
         // input directly), so the widest output bounds all four buffers.
         let width = dims[1..].iter().copied().max().unwrap_or(1);
         let flow = [Mat::zeros(batch, width), Mat::zeros(batch, width)];
-        let gflow = [Mat::zeros(batch, width), Mat::zeros(batch, width)];
+        // Inference never reads the gradient arenas: leave them empty so a
+        // serving engine's footprint is flow + caches only.
+        let gflow = if training {
+            [Mat::zeros(batch, width), Mat::zeros(batch, width)]
+        } else {
+            [Mat::zeros(0, 0), Mat::zeros(0, 0)]
+        };
         let stash: Vec<Stash> = (0..n).map(|_| Stash::default()).collect();
         let mut slots = Vec::with_capacity(self.num_slots());
         let mut slot_offsets = Vec::with_capacity(n + 1);
         slot_offsets.push(0);
+        let mut max_param = 0usize;
         for layer in &self.layers {
             for p in layer.params() {
-                slots.push(vec![0.0f32; p.len()]);
+                max_param = max_param.max(p.len());
+                if training {
+                    slots.push(vec![0.0f32; p.len()]);
+                }
             }
             slot_offsets.push(slots.len());
         }
@@ -359,7 +386,6 @@ impl Sequential {
         // allocation-free too.
         let pack = kernels::PackArena::global();
         let max_act = batch * dims.iter().copied().max().unwrap_or(in_dim);
-        let max_param = slots.iter().map(|s| s.len()).max().unwrap_or(0);
         let panel = max_act.max(max_param);
         pack.reserve(pool::threads() + 1, panel + panel / 4 + 1024);
         Workspace {
@@ -375,6 +401,30 @@ impl Sequential {
             slot_offsets,
             scratch: SketchScratch::new(),
             pack,
+        }
+    }
+
+    /// Re-point a workspace at a different batch size for forward sweeps:
+    /// updates the logical batch and resizes every layer cache to
+    /// [`Layer::cache_shapes`] at the new batch (attention/LayerNorm
+    /// forwards read their cache mats at the mats' own shapes, so stale
+    /// shapes would compute the wrong thing). The flow buffers are
+    /// resized by the forward sweep itself. `Mat::resize_to` keeps
+    /// capacity, so retargeting at or below the batch the workspace was
+    /// built for never allocates — the serving engine's steady-state
+    /// contract — and `batch == 0` is valid, yielding empty logits.
+    /// Forward-only: the gradient arenas and stashes are left at their
+    /// old shapes, so retarget + `backward` is invalid.
+    pub fn retarget_batch(&self, ws: &mut Workspace, batch: usize) {
+        if ws.batch == batch {
+            return;
+        }
+        ws.batch = batch;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let shapes = layer.cache_shapes(batch, ws.dims[i]);
+            for (mat, (r, c)) in ws.caches[i].mats.iter_mut().zip(shapes) {
+                mat.resize_to(r, c);
+            }
         }
     }
 

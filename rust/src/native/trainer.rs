@@ -25,6 +25,7 @@ use crate::tensor::kernels;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
 
+use super::checkpoint;
 use super::loss::{accuracy, loss_and_grad_into, loss_value, LossKind};
 use super::models;
 use super::optim::{clip_global_norm, Optim};
@@ -132,6 +133,18 @@ impl NativeTrainer {
     /// stash arena is empty).
     pub fn workspace_bytes(&self) -> WorkspaceBytes {
         self.ws.workspace_bytes()
+    }
+
+    /// Persist the trained parameters as a versioned binary checkpoint
+    /// (DESIGN.md §7.5): the registry key + seed in the header let
+    /// [`checkpoint::load`] rebuild this exact architecture in a fresh
+    /// process and refill it bit-for-bit. Only registry-built trainers
+    /// produce loadable checkpoints — a [`NativeTrainer::with_dims`]
+    /// model under a registry key whose shapes differ is rejected at
+    /// *load* time by the arch digest.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        checkpoint::save(path, &self.cfg.model, self.cfg.seed, &self.model)?;
+        Ok(())
     }
 
     /// Generate this run's datasets — identical protocol to the PJRT

@@ -13,7 +13,11 @@
 //!   scratch state per worker (the packed SIMD GEMM's A-panel buffers);
 //! * [`run_dynamic`] — a work queue for skew-prone item lists
 //!   (`tensor::sparse_dw_into`'s kept-row chunks), preserving per-item
-//!   determinism while letting fast workers steal the tail.
+//!   determinism while letting fast workers steal the tail;
+//! * [`run_source`] — the generalization `run_dynamic` is built on:
+//!   workers pull from a caller-provided (possibly blocking) source until
+//!   it yields `None`. The inference batcher (`crate::serve`) plugs its
+//!   deadline-coalescing request queue in as the source.
 //!
 //! The intra-op worker count is a process-global set once at startup from
 //! `--threads` / `TrainConfig::threads` ([`set_threads`]; `0` = auto).
@@ -127,13 +131,48 @@ where
         return;
     }
     let queue = Mutex::new(items.into_iter());
+    run_source(
+        || queue.lock().unwrap_or_else(|e| e.into_inner()).next(),
+        &mut states[..workers],
+        f,
+    );
+}
+
+/// Source-driven work queue: `states.len()` workers repeatedly pull items
+/// from `next` — any shared `Fn() -> Option<T>`, e.g. a lock-guarded
+/// iterator ([`run_dynamic`]) or a blocking, deadline-coalescing request
+/// queue (`crate::serve::RequestQueue`) — and run `f(item, state)` until
+/// the source yields `None`. With a single state everything runs inline
+/// on the caller's thread.
+///
+/// The determinism contract of [`run_dynamic`] carries over: which worker
+/// handles an item is non-deterministic, so `f` must write only item-owned
+/// data and per-item results must not depend on processing order.
+///
+/// Termination: `None` must be terminal — once the source returns `None`
+/// to any worker it must keep returning `None` promptly to all of them
+/// (without blocking), or the scope never joins.
+pub fn run_source<T, S, N, F>(next: N, states: &mut [S], f: F)
+where
+    T: Send,
+    S: Send,
+    N: Fn() -> Option<T> + Sync,
+    F: Fn(T, &mut S) + Sync,
+{
+    assert!(!states.is_empty(), "need at least one worker state");
+    if states.len() == 1 {
+        while let Some(it) = next() {
+            f(it, &mut states[0]);
+        }
+        return;
+    }
     std::thread::scope(|scope| {
-        for st in states.iter_mut().take(workers) {
-            let (f, queue) = (&f, &queue);
-            scope.spawn(move || loop {
-                let item = queue.lock().unwrap_or_else(|e| e.into_inner()).next();
-                let Some(it) = item else { break };
-                f(it, &mut *st);
+        for st in states.iter_mut() {
+            let (f, next) = (&f, &next);
+            scope.spawn(move || {
+                while let Some(it) = next() {
+                    f(it, &mut *st);
+                }
             });
         }
     });
@@ -275,6 +314,30 @@ mod tests {
         }
         // empty input is a no-op
         run_dynamic(Vec::<usize>::new(), &mut [()], |_, _| panic!("no items"));
+    }
+
+    #[test]
+    fn source_queue_drains_and_terminates() {
+        for workers in [1usize, 2, 5] {
+            let next_ix = AtomicUsize::new(0);
+            let done: Vec<Mutex<usize>> = (0..17).map(|_| Mutex::new(0)).collect();
+            let mut states = vec![(); workers];
+            run_source(
+                || {
+                    let i = next_ix.fetch_add(1, Ordering::Relaxed);
+                    (i < 17).then_some(i)
+                },
+                &mut states,
+                |i, _| {
+                    *done[i].lock().unwrap() += 1;
+                },
+            );
+            for (i, d) in done.iter().enumerate() {
+                assert_eq!(*d.lock().unwrap(), 1, "item {i} w={workers}");
+            }
+        }
+        // an immediately-exhausted source is a no-op
+        run_source(|| None::<usize>, &mut [()], |_, _| panic!("no items"));
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Dynamic request batching: coalesce queued single-sample requests into
+//! GEMM-friendly batches under a latency deadline.
+//!
+//! Clients [`RequestQueue::submit`] individual rows; serving workers loop
+//! on [`RequestQueue::next_batch`] (the [`crate::pool::run_source`]
+//! source), which blocks until a batch is ready under the dispatch policy
+//! and returns `None` only after [`RequestQueue::close`] with the queue
+//! drained. Because every engine forward is batch-invariant
+//! (`serve::engine`), how requests get coalesced changes latency only —
+//! each request's logits are bitwise identical solo or in any batch.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batcher knobs (`--max-batch`, `--max-wait-us`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Largest coalesced batch (engine workspaces are sized to this).
+    pub max_batch: usize,
+    /// Longest a queued request may wait for co-riders before its batch
+    /// dispatches anyway — the bound on added queueing latency at low
+    /// offered load.
+    pub max_wait: Duration,
+}
+
+/// One queued inference request.
+pub struct Request {
+    /// Caller-assigned id, echoed in the [`Response`].
+    pub id: u64,
+    /// The input row (`in_dim` features).
+    pub x: Vec<f32>,
+    /// When the request entered the queue (latency origin).
+    pub enqueued: Instant,
+    /// Where the serving worker delivers the result.
+    pub reply: Reply,
+}
+
+impl Request {
+    /// Package a request now (stamps the queue-entry time and allocates a
+    /// fresh reply slot).
+    pub fn new(id: u64, x: Vec<f32>) -> Request {
+        Request { id, x, enqueued: Instant::now(), reply: Reply::new() }
+    }
+}
+
+/// One served result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// The request's id.
+    pub id: u64,
+    /// The model's output row (`out_dim` logits).
+    pub logits: Vec<f32>,
+    /// Queue-entry → completion latency.
+    pub latency: Duration,
+    /// How many requests shared the coalesced batch (telemetry).
+    pub batch_size: usize,
+}
+
+/// A one-shot completion slot: the serving worker [`Reply::fill`]s it,
+/// any number of readers block on [`Reply::wait`] (the response is
+/// cloned out, not taken, so a closed-loop client and the driver's final
+/// collection sweep can both read it).
+#[derive(Clone, Default)]
+pub struct Reply(Arc<(Mutex<Option<Response>>, Condvar)>);
+
+impl Reply {
+    /// An empty slot.
+    pub fn new() -> Reply {
+        Reply::default()
+    }
+
+    /// Deliver the response and wake every waiter.
+    pub fn fill(&self, r: Response) {
+        let (slot, cv) = &*self.0;
+        *slot.lock().unwrap() = Some(r);
+        cv.notify_all();
+    }
+
+    /// Block until the response is delivered.
+    pub fn wait(&self) -> Response {
+        let (slot, cv) = &*self.0;
+        let mut guard = slot.lock().unwrap();
+        loop {
+            if let Some(r) = guard.as_ref() {
+                return r.clone();
+            }
+            guard = cv.wait(guard).unwrap();
+        }
+    }
+}
+
+/// The shared submission queue between clients and serving workers.
+pub struct RequestQueue {
+    cfg: BatcherConfig,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    pending: VecDeque<Request>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    /// An open queue under the given batching policy.
+    pub fn new(cfg: BatcherConfig) -> RequestQueue {
+        assert!(cfg.max_batch > 0, "batcher needs max_batch >= 1");
+        RequestQueue {
+            cfg,
+            state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The batching policy this queue dispatches under.
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+
+    /// Enqueue one request (clients). Panics if the queue is closed —
+    /// drivers close only after every client finished submitting.
+    pub fn submit(&self, req: Request) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "submit after close");
+        st.pending.push_back(req);
+        self.cv.notify_one();
+    }
+
+    /// Close the queue: no new submissions; workers drain what's pending
+    /// and then observe `None` (terminal, per the [`crate::pool::run_source`]
+    /// contract).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Requests currently queued (telemetry).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+
+    /// Dequeue the next coalesced batch (serving workers; blocking).
+    ///
+    /// Dispatch policy, checked in order under the queue lock:
+    /// 1. `max_batch` requests pending → dispatch a full batch now;
+    /// 2. queue closed → drain up to `max_batch`, or `None` when empty
+    ///    (worker shutdown);
+    /// 3. the *oldest* pending request has waited ≥ `max_wait` →
+    ///    dispatch whatever is pending (≤ `max_batch`);
+    /// 4. otherwise sleep until a submit/close wakes the worker or the
+    ///    oldest request's deadline expires.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.pending.len() >= self.cfg.max_batch {
+                return Some(drain(&mut st.pending, self.cfg.max_batch));
+            }
+            if st.closed {
+                if st.pending.is_empty() {
+                    return None;
+                }
+                return Some(drain(&mut st.pending, self.cfg.max_batch));
+            }
+            let waited = st.pending.front().map(|r| r.enqueued.elapsed());
+            match waited {
+                Some(w) if w >= self.cfg.max_wait => {
+                    return Some(drain(&mut st.pending, self.cfg.max_batch));
+                }
+                Some(w) => {
+                    st = self
+                        .cv
+                        .wait_timeout(st, self.cfg.max_wait - w)
+                        .unwrap()
+                        .0;
+                }
+                None => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+}
+
+/// Pop up to `n` requests off the queue front, FIFO order.
+fn drain(q: &mut VecDeque<Request>, n: usize) -> Vec<Request> {
+    let take = n.min(q.len());
+    q.drain(..take).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![id as f32])
+    }
+
+    fn queue(max_batch: usize, max_wait: Duration) -> RequestQueue {
+        RequestQueue::new(BatcherConfig { max_batch, max_wait })
+    }
+
+    #[test]
+    fn full_batches_dispatch_immediately_and_fifo() {
+        let q = queue(3, Duration::from_secs(60));
+        for id in 0..7 {
+            q.submit(req(id));
+        }
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4, 5]);
+        assert_eq!(q.depth(), 1);
+        // the tail is under the (long) deadline; close drains it
+        q.close();
+        let b3 = q.next_batch().unwrap();
+        assert_eq!(b3.len(), 1);
+        assert!(q.next_batch().is_none());
+        assert!(q.next_batch().is_none(), "None is terminal");
+    }
+
+    #[test]
+    fn deadline_dispatches_partial_batches() {
+        // zero deadline: any pending request dispatches without co-riders
+        let q = queue(8, Duration::from_micros(0));
+        q.submit(req(0));
+        q.submit(req(1));
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.len(), 2, "drains everything pending at deadline");
+        q.close();
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn close_with_empty_queue_terminates_workers() {
+        let q = queue(4, Duration::from_secs(60));
+        q.close();
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn reply_slot_delivers_to_every_waiter() {
+        let r = Reply::new();
+        let resp = Response {
+            id: 9,
+            logits: vec![1.0, 2.0],
+            latency: Duration::from_millis(1),
+            batch_size: 4,
+        };
+        r.fill(resp);
+        assert_eq!(r.wait().id, 9);
+        // cloned out, not taken: a second reader sees it too
+        assert_eq!(r.wait().logits, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn blocked_worker_wakes_on_submit() {
+        let q = queue(1, Duration::from_secs(60));
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.next_batch());
+            std::thread::sleep(Duration::from_millis(10));
+            q.submit(req(5));
+            let b = h.join().unwrap().unwrap();
+            assert_eq!(b[0].id, 5);
+        });
+    }
+}

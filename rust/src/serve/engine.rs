@@ -1,0 +1,132 @@
+//! [`InferenceEngine`]: the forward-only executor serving workers run.
+
+use std::sync::Arc;
+
+use crate::native::checkpoint::Checkpoint;
+use crate::native::{CkptError, Sequential, Workspace, WorkspaceBytes};
+use crate::tensor::Mat;
+
+/// A forward-only executor for one model: owns an inference
+/// [`Workspace`] sized at `max_batch` plus a staging batch buffer, and
+/// shares the (immutable) model stack via `Arc` so every serving worker
+/// runs the same parameters ([`crate::native::Layer`] is `Send + Sync`).
+///
+/// Steady-state contract: no entry point allocates. Batches at or below
+/// `max_batch` re-point the preallocated arenas
+/// ([`Sequential::retarget_batch`] — `Mat::resize_to` keeps capacity),
+/// and the SIMD kernels draw pack buffers from the process-wide pool the
+/// workspace pre-warmed. Batch 0 is valid and yields empty logits.
+///
+/// Determinism: every layer's forward computes per sample with a fixed
+/// per-element accumulation order (DESIGN.md §7.3), so each row's logits
+/// are bitwise independent of which other rows share the batch — the
+/// batch-invariance the dynamic batcher relies on (`tests/serve.rs`).
+pub struct InferenceEngine {
+    model: Arc<Sequential>,
+    ws: Workspace,
+    staging: Mat,
+    in_dim: usize,
+    out_dim: usize,
+    max_batch: usize,
+}
+
+impl InferenceEngine {
+    /// Engine serving batches of up to `max_batch` rows of `in_dim`
+    /// features each.
+    pub fn new(model: Arc<Sequential>, in_dim: usize, max_batch: usize) -> InferenceEngine {
+        assert!(max_batch > 0, "engine needs max_batch >= 1");
+        let ws = model.inference_workspace(max_batch, in_dim);
+        let out_dim = *ws.dims.last().expect("non-empty stack");
+        InferenceEngine {
+            staging: Mat::zeros(max_batch, in_dim),
+            ws,
+            in_dim,
+            out_dim,
+            max_batch,
+            model,
+        }
+    }
+
+    /// Engine over a loaded checkpoint: rebuilds the registry model and
+    /// refills its parameters bit-for-bit ([`Checkpoint::build_model`]).
+    pub fn from_checkpoint(
+        ckpt: &Checkpoint,
+        in_dim: usize,
+        max_batch: usize,
+    ) -> Result<InferenceEngine, CkptError> {
+        Ok(InferenceEngine::new(Arc::new(ckpt.build_model()?), in_dim, max_batch))
+    }
+
+    /// Largest batch this engine's arenas serve without allocating.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Input width per request row.
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Logits width per request row.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// The shared model stack.
+    pub fn model(&self) -> &Arc<Sequential> {
+        &self.model
+    }
+
+    /// Arena accounting of the inference workspace (no gradient arenas —
+    /// the `serve_throughput` bench's memory column).
+    pub fn workspace_bytes(&self) -> WorkspaceBytes {
+        self.ws.workspace_bytes()
+    }
+
+    /// Batched entry point: forward `x` (`x.rows ≤ max_batch`) and return
+    /// the logits (`x.rows × out_dim`). `x.rows == 0` cleanly yields an
+    /// empty logits matrix.
+    pub fn infer_batch(&mut self, x: &Mat) -> &Mat {
+        assert!(
+            x.rows <= self.max_batch,
+            "batch {} exceeds engine cap {}",
+            x.rows,
+            self.max_batch
+        );
+        assert_eq!(x.cols, self.in_dim, "request width");
+        self.model.retarget_batch(&mut self.ws, x.rows);
+        self.model.forward(x, &mut self.ws);
+        self.ws.output()
+    }
+
+    /// Coalescing entry point: stage `rows` request payloads (the batcher
+    /// holds them as individual vectors) by calling `fill(r, dst)` once
+    /// per row, then forward the staged batch. Returns the logits
+    /// (`rows × out_dim`).
+    pub fn infer_staged<F>(&mut self, rows: usize, mut fill: F) -> &Mat
+    where
+        F: FnMut(usize, &mut [f32]),
+    {
+        assert!(
+            rows <= self.max_batch,
+            "batch {rows} exceeds engine cap {}",
+            self.max_batch
+        );
+        self.staging.resize_to(rows, self.in_dim);
+        for r in 0..rows {
+            fill(r, &mut self.staging.data[r * self.in_dim..(r + 1) * self.in_dim]);
+        }
+        self.model.retarget_batch(&mut self.ws, rows);
+        self.model.forward(&self.staging, &mut self.ws);
+        self.ws.output()
+    }
+
+    /// Single-sample entry point: logits for one request row, written
+    /// into `out` (`out_dim` long).
+    pub fn infer_one(&mut self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.in_dim, "request width");
+        assert_eq!(out.len(), self.out_dim, "logits width");
+        let logits = self.infer_staged(1, |_, dst| dst.copy_from_slice(x));
+        out.copy_from_slice(logits.row(0));
+    }
+}

@@ -1,0 +1,279 @@
+//! Inference serving subsystem (DESIGN.md §7.5): load a
+//! [`crate::native::checkpoint`] into a forward-only [`InferenceEngine`],
+//! coalesce single-sample requests into GEMM-friendly batches with the
+//! dynamic [`batcher`], and drive it all from synthetic clients measuring
+//! throughput and latency quantiles.
+//!
+//! The pieces compose left to right:
+//!
+//! - [`engine`] — [`InferenceEngine`]: one worker's forward executor over
+//!   an `Arc<Sequential>`, preallocated inference arenas, no allocation
+//!   in steady state, batch-invariant by construction.
+//! - [`batcher`] — [`RequestQueue`]: clients submit rows, serving workers
+//!   pull coalesced batches under a `max_batch`/`max_wait` policy through
+//!   [`crate::pool::run_source`].
+//! - [`run_server`] — the measurement driver behind the `serve` CLI
+//!   subcommand and the `serve_throughput` bench group: open-loop clients
+//!   submit at a fixed offered load (qps) while closed-loop clients keep
+//!   a fixed concurrency, and the [`ServeReport`] carries sustained qps
+//!   plus p50/p99 request latency.
+//!
+//! Batching here is a latency/throughput knob only: every engine forward
+//! computes each row with a fixed per-element accumulation order, so a
+//! request's logits are bitwise identical whether it was served solo or
+//! coalesced (`tests/serve.rs` pins this).
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::{BatcherConfig, Reply, Request, RequestQueue, Response};
+pub use engine::InferenceEngine;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::json::Value;
+use crate::native::Sequential;
+use crate::pool;
+use crate::tensor::Mat;
+
+/// What one serving run measured; `to_json` flattens it (config included)
+/// into the record the `serve` CLI writes and CI asserts on.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Requests served to completion.
+    pub completed: usize,
+    /// First submission → last reply, seconds.
+    pub wall_seconds: f64,
+    /// `completed / wall_seconds` — the sustained rate (under open loop,
+    /// compare against the offered load to spot saturation).
+    pub throughput_qps: f64,
+    /// Median queue-entry → completion latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile latency, milliseconds (nearest-rank).
+    pub p99_ms: f64,
+    /// Mean coalesced batch size over completed requests — how well the
+    /// batcher amortized the forward sweeps.
+    pub mean_batch: f64,
+    /// The configuration the run executed under.
+    pub cfg: ServeConfig,
+}
+
+impl ServeReport {
+    /// Flatten the report (metrics + the config that produced them) into
+    /// one JSON object.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("completed", Value::num(self.completed as f64)),
+            ("wall_seconds", Value::num(self.wall_seconds)),
+            ("throughput_qps", Value::num(self.throughput_qps)),
+            ("p50_ms", Value::num(self.p50_ms)),
+            ("p99_ms", Value::num(self.p99_ms)),
+            ("mean_batch", Value::num(self.mean_batch)),
+            ("max_batch", Value::num(self.cfg.max_batch as f64)),
+            ("max_wait_us", Value::num(self.cfg.max_wait_us as f64)),
+            ("workers", Value::num(self.cfg.workers as f64)),
+            ("requests", Value::num(self.cfg.requests as f64)),
+            ("offered_load", Value::num(self.cfg.offered_load)),
+            ("concurrency", Value::num(self.cfg.concurrency as f64)),
+        ])
+    }
+}
+
+/// Nearest-rank quantile over ascending latencies, in milliseconds
+/// (0.0 for an empty run).
+pub fn quantile_ms(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1].as_secs_f64() * 1e3
+}
+
+/// One serving worker's loop body: stage the coalesced batch, run one
+/// forward sweep, and deliver each request's logits row to its reply slot.
+fn serve_batch(batch: Vec<Request>, engine: &mut InferenceEngine) {
+    let n = batch.len();
+    let out_dim = engine.out_dim();
+    let logits =
+        engine.infer_staged(n, |r, dst| dst.copy_from_slice(&batch[r].x));
+    for (r, req) in batch.iter().enumerate() {
+        req.reply.fill(Response {
+            id: req.id,
+            logits: logits.data[r * out_dim..(r + 1) * out_dim].to_vec(),
+            latency: req.enqueued.elapsed(),
+            batch_size: n,
+        });
+    }
+}
+
+/// Run one measured serving session over `model`: a server thread pulls
+/// coalesced batches off a [`RequestQueue`] into `cfg.workers` engines
+/// (via [`pool::run_source`]) while synthetic clients submit
+/// `cfg.requests` rows cycled from `inputs`.
+///
+/// Client discipline:
+/// - `cfg.offered_load > 0` — **open loop**: request `i` is submitted at
+///   `t0 + i / offered_load` regardless of completions, so queueing delay
+///   shows up in the latency quantiles once the engine saturates.
+/// - otherwise — **closed loop**: `cfg.concurrency` clients each submit,
+///   wait for the reply, and repeat; the system sees a fixed number of
+///   requests in flight.
+///
+/// `cfg.requests == 0` is a valid no-op run (empty-queue shutdown path):
+/// the report comes back with `completed == 0` and zeroed quantiles.
+pub fn run_server(
+    model: &Arc<Sequential>,
+    in_dim: usize,
+    inputs: &Mat,
+    cfg: &ServeConfig,
+) -> ServeReport {
+    assert_eq!(inputs.cols, in_dim, "request width");
+    assert!(
+        cfg.requests == 0 || inputs.rows > 0,
+        "need at least one input row to cycle requests from"
+    );
+    let queue = RequestQueue::new(BatcherConfig {
+        max_batch: cfg.max_batch,
+        max_wait: Duration::from_micros(cfg.max_wait_us),
+    });
+    let n = cfg.requests;
+    let replies: Vec<Reply> = (0..n).map(|_| Reply::new()).collect();
+    let next_req = AtomicUsize::new(0);
+    let workers = cfg.workers.max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let queue = &queue;
+        let server = scope.spawn(move || {
+            let mut engines: Vec<InferenceEngine> = (0..workers)
+                .map(|_| {
+                    InferenceEngine::new(Arc::clone(model), in_dim, cfg.max_batch)
+                })
+                .collect();
+            pool::run_source(|| queue.next_batch(), &mut engines, serve_batch);
+        });
+        if cfg.offered_load > 0.0 {
+            // open loop: a single submitter paces the arrival process
+            for (i, reply) in replies.iter().enumerate() {
+                let due =
+                    t0 + Duration::from_secs_f64(i as f64 / cfg.offered_load);
+                if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
+                let mut req =
+                    Request::new(i as u64, inputs.row(i % inputs.rows).to_vec());
+                req.reply = reply.clone();
+                queue.submit(req);
+            }
+        } else {
+            // closed loop: fixed in-flight concurrency
+            let clients = cfg.concurrency.max(1).min(n.max(1));
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    scope.spawn(|| loop {
+                        let i = next_req.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let mut req = Request::new(
+                            i as u64,
+                            inputs.row(i % inputs.rows).to_vec(),
+                        );
+                        req.reply = replies[i].clone();
+                        queue.submit(req);
+                        let _ = replies[i].wait();
+                    })
+                })
+                .collect();
+            // clients must finish submitting before the queue closes
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        queue.close();
+        server.join().unwrap();
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    // every reply is filled by now (the server drained the queue before
+    // exiting), so these waits never block
+    let mut latencies = Vec::with_capacity(n);
+    let mut batch_sum = 0usize;
+    for reply in &replies {
+        let resp = reply.wait();
+        latencies.push(resp.latency);
+        batch_sum += resp.batch_size;
+    }
+    latencies.sort();
+    let completed = latencies.len();
+    ServeReport {
+        completed,
+        wall_seconds: wall,
+        throughput_qps: if wall > 0.0 { completed as f64 / wall } else { 0.0 },
+        p50_ms: quantile_ms(&latencies, 0.50),
+        p99_ms: quantile_ms(&latencies, 0.99),
+        mean_batch: if completed > 0 {
+            batch_sum as f64 / completed as f64
+        } else {
+            0.0
+        },
+        cfg: cfg.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::models;
+
+    #[test]
+    fn quantiles_use_nearest_rank() {
+        let ms: Vec<Duration> =
+            (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(quantile_ms(&ms, 0.50), 50.0);
+        assert_eq!(quantile_ms(&ms, 0.99), 99.0);
+        assert_eq!(quantile_ms(&ms, 1.0), 100.0);
+        assert_eq!(quantile_ms(&[], 0.5), 0.0);
+        let one = [Duration::from_millis(7)];
+        assert_eq!(quantile_ms(&one, 0.5), 7.0);
+        assert_eq!(quantile_ms(&one, 0.99), 7.0);
+    }
+
+    #[test]
+    fn closed_loop_serves_every_request() {
+        let model = Arc::new(models::build("mlp", 3).unwrap());
+        let inputs = Mat::from_fn(4, 784, |r, c| ((r * 31 + c) % 17) as f32 * 0.1);
+        let cfg = ServeConfig {
+            requests: 24,
+            concurrency: 3,
+            max_batch: 4,
+            max_wait_us: 100,
+            workers: 2,
+            offered_load: 0.0,
+        };
+        let report = run_server(&model, 784, &inputs, &cfg);
+        assert_eq!(report.completed, 24);
+        assert!(report.p50_ms > 0.0);
+        assert!(report.p99_ms >= report.p50_ms);
+        assert!(report.mean_batch >= 1.0);
+        let j = report.to_json();
+        assert_eq!(j.get("completed").as_usize(), Some(24));
+        assert_eq!(j.get("max_batch").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn zero_request_run_is_a_clean_noop() {
+        let model = Arc::new(models::build("mlp", 3).unwrap());
+        let inputs = Mat::zeros(0, 784);
+        let cfg = ServeConfig {
+            requests: 0,
+            offered_load: 400.0,
+            ..ServeConfig::default()
+        };
+        let report = run_server(&model, 784, &inputs, &cfg);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.p50_ms, 0.0);
+        assert_eq!(report.mean_batch, 0.0);
+    }
+}

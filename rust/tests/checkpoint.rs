@@ -1,0 +1,161 @@
+//! Checkpoint integration suite (DESIGN.md §7.5): bit-exact
+//! save → load → forward round-trips for every registry model under both
+//! kernel kinds, the trainer's `--save-ckpt` hook, and typed errors for
+//! every file-level failure class (wrong magic, truncation, version bump,
+//! trailing garbage, registry-key mismatch, missing file).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use uavjp::config::Preset;
+use uavjp::data::{self, DatasetKind};
+use uavjp::native::checkpoint::{
+    self, fnv1a, load, save_bytes, CkptError, CKPT_VERSION,
+};
+use uavjp::native::{models, NativeTrainer, Sequential};
+use uavjp::tensor::kernels::{self, KernelKind};
+use uavjp::tensor::Mat;
+
+/// `set_kernel` is a process-wide knob and the test harness runs tests
+/// concurrently: every test that compares two forwards bit-for-bit takes
+/// this lock so the kernel cannot flip mid-comparison.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
+
+/// Every registry model the round-trip suite must cover.
+const ALL_MODELS: &[&str] = &["mlp", "bagnet", "vit", "bagnet_deep", "vit_deep"];
+
+/// A small batch from the model's synthetic test split.
+fn test_inputs(model: &str, n: usize) -> Mat {
+    let kind = DatasetKind::for_model(model).unwrap();
+    let ds = data::generate(kind, n, 99, "test");
+    let mut x = Mat::zeros(ds.n, ds.dim);
+    x.data.copy_from_slice(&ds.x);
+    x
+}
+
+/// One inference forward sweep, logits flattened out.
+fn forward_logits(model: &Sequential, x: &Mat) -> Vec<f32> {
+    let mut ws = model.inference_workspace(x.rows, x.cols);
+    model.forward(x, &mut ws);
+    ws.output().data.clone()
+}
+
+/// Unique-per-test temp path (tests share one process).
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("uavjp_ckpt_{}_{name}", std::process::id()))
+}
+
+/// The headline acceptance bar: for every registry model × kernel kind,
+/// a checkpoint loaded back from disk rebuilds a model whose forward is
+/// bitwise identical to the original's.
+#[test]
+fn save_load_forward_roundtrip_every_model_and_kernel() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for kernel in ["scalar", "simd"] {
+        kernels::set_kernel(KernelKind::parse(kernel).unwrap());
+        for name in ALL_MODELS {
+            let model = models::build(name, 7).unwrap();
+            let path = tmp(&format!("rt_{kernel}_{name}"));
+            checkpoint::save(&path, name, 7, &model).unwrap();
+            let ckpt = checkpoint::load(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_eq!(ckpt.model_name, *name);
+            assert_eq!(ckpt.seed, 7);
+            let loaded = ckpt.build_model().unwrap();
+            let x = test_inputs(name, 3);
+            assert_eq!(
+                forward_logits(&model, &x),
+                forward_logits(&loaded, &x),
+                "round-trip drift for {kernel}/{name}"
+            );
+        }
+    }
+    kernels::set_kernel(KernelKind::Auto);
+}
+
+/// The trainer's save hook writes a checkpoint whose rebuilt model serves
+/// the *trained* parameters: its forward is bitwise identical to the
+/// in-process trainer model's.
+#[test]
+fn trainer_save_hook_roundtrips_trained_params() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = Preset::Smoke.base("mlp").unwrap();
+    cfg.steps = 6;
+    cfg.eval_every = 6;
+    cfg.train_size = 128;
+    cfg.test_size = 32;
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+    trainer.run().unwrap();
+    let path = tmp("trained");
+    trainer.save_checkpoint(&path).unwrap();
+    let ckpt = checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(ckpt.model_name, "mlp");
+    let loaded = ckpt.build_model().unwrap();
+    let x = test_inputs("mlp", 5);
+    assert_eq!(
+        forward_logits(trainer.model(), &x),
+        forward_logits(&loaded, &x),
+        "loaded model must serve the trained parameters bit-for-bit"
+    );
+}
+
+/// Every file-level failure class comes back as its typed [`CkptError`]
+/// variant — never a panic, never a misparse.
+#[test]
+fn file_level_failures_are_typed() {
+    let model = models::build("mlp", 0).unwrap();
+    let good = save_bytes("mlp", 0, &model);
+    let path = tmp("neg");
+
+    // foreign magic: not a checkpoint at all
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    std::fs::write(&path, &bad).unwrap();
+    assert_eq!(load(&path).unwrap_err(), CkptError::BadMagic);
+
+    // cut mid-payload: structural truncation
+    std::fs::write(&path, &good[..good.len() - 9]).unwrap();
+    assert!(matches!(
+        load(&path).unwrap_err(),
+        CkptError::Truncated { .. }
+    ));
+
+    // future format version with a *valid* checksum: rejected loudly as
+    // unsupported, not misread and not reported as corruption
+    let mut v2 = good.clone();
+    v2[8..12].copy_from_slice(&(CKPT_VERSION + 1).to_le_bytes());
+    let body = v2.len() - 8;
+    let sum = fnv1a(&v2[..body]);
+    v2[body..].copy_from_slice(&sum.to_le_bytes());
+    std::fs::write(&path, &v2).unwrap();
+    assert_eq!(
+        load(&path).unwrap_err(),
+        CkptError::UnsupportedVersion { found: CKPT_VERSION + 1 }
+    );
+
+    // bytes past the trailer
+    let mut padded = good.clone();
+    padded.extend_from_slice(&[0u8; 5]);
+    std::fs::write(&path, &padded).unwrap();
+    assert_eq!(
+        load(&path).unwrap_err(),
+        CkptError::TrailingBytes { extra: 5 }
+    );
+
+    // a registered key over the wrong architecture: the parse succeeds
+    // (the file is well-formed) but rebuilding trips the arch digest
+    std::fs::write(&path, save_bytes("bagnet", 0, &model)).unwrap();
+    assert!(matches!(
+        load(&path).unwrap().build_model().unwrap_err(),
+        CkptError::ArchMismatch { .. }
+    ));
+
+    // missing file surfaces as Io with the path in the message
+    std::fs::remove_file(&path).unwrap();
+    match load(&path).unwrap_err() {
+        CkptError::Io(msg) => assert!(msg.contains("uavjp_ckpt"), "{msg}"),
+        other => panic!("want Io, got {other:?}"),
+    }
+}

@@ -1,0 +1,210 @@
+//! Serving integration suite (DESIGN.md §7.5): batch invariance (a
+//! request's logits are bitwise identical solo, chunked, or coalesced by
+//! the dynamic batcher), empty-batch/empty-run handling, and the
+//! train → save → serve end-to-end pipeline.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use uavjp::config::{Preset, ServeConfig};
+use uavjp::coordinator::serving;
+use uavjp::data::{self, DatasetKind};
+use uavjp::native::{checkpoint, models, NativeTrainer, Sequential};
+use uavjp::pool;
+use uavjp::serve::{
+    run_server, BatcherConfig, InferenceEngine, Request, RequestQueue,
+    Response,
+};
+use uavjp::tensor::kernels::{self, KernelKind};
+use uavjp::tensor::Mat;
+
+/// `set_kernel` is a process-wide knob and the test harness runs tests
+/// concurrently: every test that compares two forwards bit-for-bit takes
+/// this lock so the kernel cannot flip mid-comparison.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
+
+/// A small batch from the MLP's synthetic test split (784-wide).
+fn mlp_inputs(n: usize) -> Mat {
+    let kind = DatasetKind::for_model("mlp").unwrap();
+    let ds = data::generate(kind, n, 99, "test");
+    let mut x = Mat::zeros(ds.n, ds.dim);
+    x.data.copy_from_slice(&ds.x);
+    x
+}
+
+/// One inference forward sweep, logits flattened out.
+fn forward_logits(model: &Sequential, x: &Mat) -> Vec<f32> {
+    let mut ws = model.inference_workspace(x.rows, x.cols);
+    model.forward(x, &mut ws);
+    ws.output().data.clone()
+}
+
+/// Batch invariance at the engine level, under both kernel kinds: a full
+/// batch, row-at-a-time serving, and a 3+5 chunking all produce bitwise
+/// identical logits per row — and agree with a plain `Sequential`
+/// forward. This is the property that makes dynamic batching a pure
+/// latency/throughput knob.
+#[test]
+fn engine_batches_are_bitwise_invariant_per_row() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for kernel in ["scalar", "simd"] {
+        kernels::set_kernel(KernelKind::parse(kernel).unwrap());
+        let model = Arc::new(models::build("mlp", 3).unwrap());
+        let x = mlp_inputs(8);
+        let mut engine = InferenceEngine::new(Arc::clone(&model), 784, 8);
+        let out_dim = engine.out_dim();
+        let full = engine.infer_batch(&x).data.clone();
+        assert_eq!(full.len(), 8 * out_dim);
+        // solo: each row served alone matches its slice of the full batch
+        let mut one = vec![0.0f32; out_dim];
+        for r in 0..8 {
+            engine.infer_one(x.row(r), &mut one);
+            assert_eq!(
+                one.as_slice(),
+                &full[r * out_dim..(r + 1) * out_dim],
+                "row {r} drifts solo under {kernel}"
+            );
+        }
+        // coalesced differently: a 3-batch then a 5-batch
+        let head = engine
+            .infer_staged(3, |r, dst| dst.copy_from_slice(x.row(r)))
+            .data
+            .clone();
+        assert_eq!(head.as_slice(), &full[..3 * out_dim], "{kernel}");
+        let tail = engine
+            .infer_staged(5, |r, dst| dst.copy_from_slice(x.row(3 + r)))
+            .data
+            .clone();
+        assert_eq!(tail.as_slice(), &full[3 * out_dim..], "{kernel}");
+        // and the engine agrees with a plain forward sweep
+        assert_eq!(full, forward_logits(&model, &x), "{kernel}");
+    }
+    kernels::set_kernel(KernelKind::Auto);
+}
+
+/// End-to-end through the dynamic batcher: many requests submitted at
+/// once, coalesced into batches of up to 4 across two racing workers —
+/// every reply's logits are bitwise identical to the reference forward of
+/// that request's row, regardless of which batch served it.
+#[test]
+fn dynamic_batcher_delivers_bitwise_identical_logits() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let model = Arc::new(models::build("mlp", 5).unwrap());
+    let x = mlp_inputs(6);
+    let reference = forward_logits(&model, &x);
+    let out_dim = reference.len() / 6;
+    let queue = RequestQueue::new(BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+    });
+    let n = 18usize;
+    let mut handles = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let queue = &queue;
+        let server = scope.spawn(|| {
+            let mut engines: Vec<InferenceEngine> = (0..2)
+                .map(|_| InferenceEngine::new(Arc::clone(&model), 784, 4))
+                .collect();
+            pool::run_source(
+                || queue.next_batch(),
+                &mut engines,
+                |batch: Vec<Request>, engine: &mut InferenceEngine| {
+                    let bsz = batch.len();
+                    let logits = engine
+                        .infer_staged(bsz, |r, dst| dst.copy_from_slice(&batch[r].x));
+                    for (r, req) in batch.iter().enumerate() {
+                        req.reply.fill(Response {
+                            id: req.id,
+                            logits: logits.data
+                                [r * out_dim..(r + 1) * out_dim]
+                                .to_vec(),
+                            latency: req.enqueued.elapsed(),
+                            batch_size: bsz,
+                        });
+                    }
+                },
+            );
+        });
+        for i in 0..n {
+            let req = Request::new(i as u64, x.row(i % 6).to_vec());
+            handles.push(req.reply.clone());
+            queue.submit(req);
+        }
+        queue.close();
+        server.join().unwrap();
+    });
+    for (i, handle) in handles.iter().enumerate() {
+        let resp = handle.wait();
+        assert_eq!(resp.id, i as u64);
+        let row = i % 6;
+        assert_eq!(
+            resp.logits.as_slice(),
+            &reference[row * out_dim..(row + 1) * out_dim],
+            "request {i} (row {row}) drifts when coalesced"
+        );
+        assert!((1..=4).contains(&resp.batch_size));
+    }
+}
+
+/// Batch size 0 and request count 0 are clean no-ops: empty logits, no
+/// panic, and the engine keeps serving afterwards.
+#[test]
+fn empty_batches_and_empty_runs_are_clean() {
+    let model = Arc::new(models::build("mlp", 1).unwrap());
+    let mut engine = InferenceEngine::new(Arc::clone(&model), 784, 4);
+    let out_dim = engine.out_dim();
+    let shape = {
+        let out = engine.infer_batch(&Mat::zeros(0, 784));
+        (out.rows, out.cols)
+    };
+    assert_eq!(shape, (0, out_dim), "empty batch yields empty logits");
+    // a normal batch still works after the empty one
+    let x = mlp_inputs(2);
+    assert_eq!(engine.infer_batch(&x).rows, 2);
+    // a zero-request serving session reports a clean zeroed summary
+    let cfg = ServeConfig { requests: 0, ..ServeConfig::default() };
+    let report = run_server(&model, 784, &Mat::zeros(0, 784), &cfg);
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.p50_ms, 0.0);
+}
+
+/// The full pipeline: train a few steps, save a checkpoint, serve it back
+/// through the coordinator (as the CLI would from a fresh process), and
+/// pin that a checkpoint-loaded engine's logits are bitwise identical to
+/// the in-process trainer model's forward.
+#[test]
+fn train_save_serve_end_to_end() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = Preset::Smoke.base("mlp").unwrap();
+    cfg.steps = 8;
+    cfg.eval_every = 8;
+    cfg.train_size = 128;
+    cfg.test_size = 32;
+    let path = std::env::temp_dir()
+        .join(format!("uavjp_serve_e2e_{}.ckpt", std::process::id()));
+    let mut trainer = NativeTrainer::new(cfg).unwrap();
+    trainer.run().unwrap();
+    trainer.save_checkpoint(&path).unwrap();
+    let scfg = ServeConfig {
+        requests: 32,
+        concurrency: 4,
+        max_batch: 8,
+        max_wait_us: 100,
+        workers: 2,
+        offered_load: 0.0,
+    };
+    let report = serving::serve_checkpoint(&path, &scfg).unwrap();
+    assert_eq!(report.completed, 32);
+    assert!(report.p50_ms > 0.0);
+    assert!(report.p99_ms >= report.p50_ms);
+    // checkpoint-loaded engine == in-process eval, bit for bit
+    let ckpt = checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let mut engine = InferenceEngine::from_checkpoint(&ckpt, 784, 8).unwrap();
+    let x = mlp_inputs(5);
+    assert_eq!(
+        engine.infer_batch(&x).data.clone(),
+        forward_logits(trainer.model(), &x),
+        "served logits must match in-process eval bitwise"
+    );
+}
