@@ -4,9 +4,10 @@
 Compares a freshly measured ``cargo bench -- --json`` record list against
 the checked-in snapshot (``BENCH_native.json`` at the repo root) and fails
 when any *headline* case's median slowed down by more than the threshold
-(default 25%). Headline cases are the ``gemm_scaling`` records the ISSUE-4
-acceptance bar reads off: the ``n512_*`` dense-GEMM matrix and the
-``bwd512_*`` kept-column backward matrix.
+(default 25%). Headline cases per group: the ``gemm_scaling`` records the
+ISSUE-4 acceptance bar reads off (the ``n512_*`` dense-GEMM matrix and the
+``bwd512_*`` kept-column backward matrix), plus the ``dp_scaling``
+sparse-reduce data-parallel step (``mlp_r2_sparse``, DESIGN.md §7.6).
 
 Both files may be either a raw record list (what the bench harness writes)
 or a snapshot object with a ``records`` key (the repo-root format). An
@@ -26,8 +27,11 @@ import argparse
 import json
 import sys
 
-GROUP = "gemm_scaling"
-HEADLINE_PREFIXES = ("n512_", "bwd512_")
+# group -> case prefixes gated within it
+HEADLINES = {
+    "gemm_scaling": ("n512_", "bwd512_"),
+    "dp_scaling": ("mlp_r2_sparse",),
+}
 DEFAULT_THRESHOLD = 1.25
 
 
@@ -43,12 +47,13 @@ def load_records(path):
 
 
 def headline_medians(records):
-    """{case: median_ms} over the gated headline cases."""
+    """{"group/case": median_ms} over the gated headline cases."""
     out = {}
     for r in records:
         case = r.get("case", "")
-        if r.get("group") == GROUP and case.startswith(HEADLINE_PREFIXES):
-            out[case] = float(r["median_ms"])
+        prefixes = HEADLINES.get(r.get("group"), ())
+        if prefixes and case.startswith(prefixes):
+            out[f"{r['group']}/{case}"] = float(r["median_ms"])
     return out
 
 
@@ -73,7 +78,7 @@ def main():
         return 0
     if not measured:
         print(f"bench gate: measured file {args.measured} has no headline "
-              f"{GROUP} records — the bench did not run")
+              f"records — the benches did not run")
         return 1
 
     regressions = []
@@ -85,7 +90,7 @@ def main():
         got_ms = measured[case]
         ratio = got_ms / base_ms if base_ms > 0 else float("inf")
         marker = "REGRESSED" if ratio > args.threshold else "ok"
-        print(f"  {GROUP}/{case}: baseline {base_ms:8.3f} ms, "
+        print(f"  {case}: baseline {base_ms:8.3f} ms, "
               f"measured {got_ms:8.3f} ms  ({ratio:5.2f}x) {marker}")
         if ratio > args.threshold:
             regressions.append((case, base_ms, got_ms, ratio))
@@ -98,7 +103,7 @@ def main():
         print(f"bench gate: {len(regressions)} headline case(s) slowed "
               f"down by more than {(args.threshold - 1) * 100:.0f}%:")
         for case, base_ms, got_ms, ratio in regressions:
-            print(f"  {GROUP}/{case}: {base_ms:.3f} ms -> {got_ms:.3f} ms "
+            print(f"  {case}: {base_ms:.3f} ms -> {got_ms:.3f} ms "
                   f"({ratio:.2f}x)")
         return 1
     print(f"bench gate: {len(baseline)} headline case(s) within "

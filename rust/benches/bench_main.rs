@@ -21,6 +21,11 @@
 //!   serve_throughput — inference serving qps + p50/p99 request latency
 //!                    across offered load × batch cap (open-loop clients
 //!                    over the dynamic batcher, DESIGN.md §7.5)
+//!   dp_scaling     — data-parallel replica-group step time and modeled
+//!                    exchange traffic across replica count × reduce mode
+//!                    (DESIGN.md §7.6); the `wire_bytes_per_step` column
+//!                    is the acceptance bar — sparse tracks the sketch
+//!                    budget fraction of dense
 //!   step_latency   — AOT train-step wall time per (model, method) through
 //!                    PJRT (requires --features pjrt + built artifacts)
 //!   eq6_gemm       — dense vs kept-column backward GEMMs (kernel-only view)
@@ -73,6 +78,7 @@ struct Record {
     case: String,
     secs: f64,
     workspace_bytes: Option<u64>,
+    wire_bytes_per_step: Option<u64>,
 }
 
 /// Collected records, printed as we go and optionally dumped as JSON for
@@ -89,6 +95,7 @@ impl Report {
             case: case.into(),
             secs,
             workspace_bytes: None,
+            wire_bytes_per_step: None,
         });
     }
 
@@ -104,6 +111,23 @@ impl Report {
             case: case.into(),
             secs,
             workspace_bytes: Some(bytes),
+            wire_bytes_per_step: None,
+        });
+    }
+
+    fn rec_wire(
+        &mut self,
+        group: &str,
+        case: impl Into<String>,
+        secs: f64,
+        bytes: u64,
+    ) {
+        self.records.push(Record {
+            group: group.to_string(),
+            case: case.into(),
+            secs,
+            workspace_bytes: None,
+            wire_bytes_per_step: Some(bytes),
         });
     }
 
@@ -119,6 +143,10 @@ impl Report {
                     ];
                     if let Some(b) = r.workspace_bytes {
                         fields.push(("workspace_bytes", Value::num(b as f64)));
+                    }
+                    if let Some(b) = r.wire_bytes_per_step {
+                        fields
+                            .push(("wire_bytes_per_step", Value::num(b as f64)));
                     }
                     Value::obj(fields)
                 })
@@ -468,6 +496,7 @@ fn bench_serve_throughput(filter: &str, rep: &mut Report) {
                 requests: 128,
                 offered_load: offered,
                 concurrency: 4,
+                queue_cap: 0,
             };
             let r = run_server(&model, ds.dim, &inputs, &cfg);
             println!(
@@ -479,6 +508,66 @@ fn bench_serve_throughput(filter: &str, rep: &mut Report) {
             rep.rec("serve_throughput", format!("{case}_p50"), r.p50_ms / 1e3);
             rep.rec("serve_throughput", format!("{case}_p99"), r.p99_ms / 1e3);
             rep.rec("serve_throughput", format!("{case}_wall"), r.wall_seconds);
+        }
+    }
+}
+
+/// Data-parallel replica-group step time and modeled exchange traffic
+/// across replica count × reduce mode (DESIGN.md §7.6). Trajectories are
+/// replica-invariant by construction (`tests/replicate.rs`), so the
+/// replica axis here is pure executor scaling; the reduce axis is the
+/// wire story — `wire_bytes_per_step` for sparse should sit near the
+/// sketch budget fraction of dense (plus per-row index overhead).
+fn bench_dp_scaling(filter: &str, rep: &mut Report) {
+    if !"dp_scaling".contains(filter) && !filter.is_empty() {
+        return;
+    }
+    println!("\n== dp_scaling (replicas × reduce mode, mlp, l1 p=0.25) ==");
+    for replicas in [1usize, 2, 4] {
+        for reduce in ["dense", "sparse"] {
+            let mut cfg: TrainConfig = Preset::Smoke.base("mlp").expect("preset");
+            cfg.method = "l1".into();
+            cfg.budget = 0.25;
+            cfg.train_size = 512;
+            cfg.test_size = 128;
+            cfg.batch = 64;
+            cfg.replicas = replicas;
+            cfg.reduce = reduce.into();
+            let mut trainer = NativeTrainer::new(cfg).expect("trainer");
+            let (train_ds, _) = trainer.datasets();
+            let batch = trainer.batch_size();
+            let dim = train_ds.dim;
+            let x = Mat {
+                rows: batch,
+                cols: dim,
+                data: train_ds.x[..batch * dim].to_vec(),
+            };
+            let y = train_ds.y[..batch].to_vec();
+            let mut step = 0usize;
+            let med = time_median(5, || {
+                trainer.step(&x, &y, step);
+                step += 1;
+            });
+            let stats = trainer.exchange_stats().expect("replica stats");
+            let wire = if reduce == "dense" {
+                stats.dense_per_step()
+            } else {
+                stats.sparse_per_step()
+            };
+            println!(
+                "  r={replicas} {reduce:<6}: {:8.2} ms/step  ({:6.1} steps/s, \
+                 wire {:8.1} KB/step, sparse/dense {:.3})",
+                med * 1e3,
+                1.0 / med,
+                wire / 1024.0,
+                stats.ratio()
+            );
+            rep.rec_wire(
+                "dp_scaling",
+                format!("mlp_r{replicas}_{reduce}"),
+                med,
+                wire as u64,
+            );
         }
     }
 }
@@ -679,6 +768,7 @@ fn main() {
     bench_native_models(&filter, &mut rep);
     bench_native_memory(&filter, &mut rep);
     bench_serve_throughput(&filter, &mut rep);
+    bench_dp_scaling(&filter, &mut rep);
     bench_step_latency(&filter, &mut rep);
     bench_eq6_gemm(&filter, &mut rep);
     bench_pipeline(&filter, &mut rep);

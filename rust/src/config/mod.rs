@@ -69,6 +69,10 @@ pub struct ServeConfig {
     pub offered_load: f64,
     /// In-flight requests under the closed-loop client (`--concurrency`).
     pub concurrency: usize,
+    /// Admission-control bound on queued requests (`--queue-cap`): a
+    /// submit that would grow the queue past this is rejected with a
+    /// typed error instead of waiting. `0` = unbounded (the default).
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -80,6 +84,7 @@ impl Default for ServeConfig {
             requests: 256,
             offered_load: 0.0,
             concurrency: 4,
+            queue_cap: 0,
         }
     }
 }
@@ -147,6 +152,19 @@ pub struct TrainConfig {
     /// `budget_schedule`); when non-empty its length must equal the
     /// model's site count and it overrides `act_budget`.
     pub act_schedule: Vec<f64>,
+    /// Data-parallel replica count (`--replicas`): `0` (the default) runs
+    /// the plain single-stream trainer; `≥ 1` runs the replica group
+    /// (DESIGN.md §7.6), whose fixed 8-lane grid requires a divisor of 8
+    /// and keeps trajectories bit-identical at every valid value.
+    pub replicas: usize,
+    /// Gradient-exchange mode under `--replicas` (`--reduce`):
+    /// `"dense" | "sparse"` (kept-column union-merge). Trajectories
+    /// match; the modeled wire bytes differ.
+    pub reduce: String,
+    /// Gradient staleness under `--replicas` (`--stale`): `1` applies
+    /// each step's reduced gradient one step late (communication-hiding
+    /// model), `0` synchronously.
+    pub stale: usize,
 }
 
 impl Default for TrainConfig {
@@ -174,6 +192,9 @@ impl Default for TrainConfig {
             act_policy: "auto".into(),
             act_budget: 0.0,
             act_schedule: Vec::new(),
+            replicas: 0,
+            reduce: "dense".into(),
+            stale: 0,
         }
     }
 }
@@ -218,6 +239,9 @@ impl TrainConfig {
             ("act_policy", Value::str(&self.act_policy)),
             ("act_budget", Value::num(self.act_budget)),
             ("act_schedule", Value::arr_f64(&self.act_schedule)),
+            ("replicas", Value::num(self.replicas as f64)),
+            ("reduce", Value::str(&self.reduce)),
+            ("stale", Value::num(self.stale as f64)),
         ])
     }
 
@@ -273,6 +297,9 @@ impl TrainConfig {
                 .to_string(),
             act_budget: v.get("act_budget").as_f64().unwrap_or(d.act_budget),
             act_schedule,
+            replicas: v.get("replicas").as_usize().unwrap_or(d.replicas),
+            reduce: v.get("reduce").as_str().unwrap_or(&d.reduce).to_string(),
+            stale: v.get("stale").as_usize().unwrap_or(d.stale),
         })
     }
 }
@@ -580,6 +607,29 @@ mod tests {
         // present-but-invalid entries are loud errors
         let bad = crate::json::parse(r#"{"act_schedule":[0.5,"x"]}"#).unwrap();
         assert!(TrainConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn dp_fields_roundtrip_and_default() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.replicas, 0);
+        assert_eq!(c.reduce, "dense");
+        assert_eq!(c.stale, 0);
+        c.replicas = 4;
+        c.reduce = "sparse".into();
+        c.stale = 1;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.replicas, 4);
+        assert_eq!(c2.reduce, "sparse");
+        assert_eq!(c2.stale, 1);
+        // configs without the new keys fall back to defaults
+        let legacy = crate::json::parse(r#"{"model":"mlp"}"#).unwrap();
+        let c3 = TrainConfig::from_json(&legacy).unwrap();
+        assert_eq!(c3.replicas, 0);
+        assert_eq!(c3.reduce, "dense");
+        assert_eq!(c3.stale, 0);
+        // serve admission control: default unbounded
+        assert_eq!(ServeConfig::default().queue_cap, 0);
     }
 
     #[test]

@@ -19,9 +19,10 @@
 //!   Around them: data generation ([`data`]), LR/budget sweeps and the
 //!   paper's experiments ([`coordinator`]), inference serving over saved
 //!   checkpoints ([`serve`]), pipeline-parallel gradient compression
-//!   ([`pipeline`]), and the offline substrates ([`json`],
-//!   [`rng`], [`tensor`], [`sketch`], [`pool`], [`config`], [`metrics`],
-//!   [`ptest`], [`cli`]).
+//!   ([`pipeline`]), data-parallel replica groups with sketch-compressed
+//!   gradient all-reduce ([`replicate`]), and the offline substrates
+//!   ([`json`], [`rng`], [`tensor`], [`sketch`], [`pool`], [`config`],
+//!   [`metrics`], [`ptest`], [`cli`]).
 
 // Unsafe hygiene for the SIMD kernels (`tensor::kernels`): every unsafe
 // op inside an `unsafe fn` needs its own block, and every block needs a
@@ -39,6 +40,7 @@ pub mod native;
 pub mod pipeline;
 pub mod pool;
 pub mod ptest;
+pub mod replicate;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

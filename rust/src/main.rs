@@ -26,6 +26,11 @@ commands:
               --act-budget <p>  (kept-stash budget; 0 = inherit sketch)
               --act-schedule p1,p2,..  (one act budget per sketch site)
               --optimizer sgd|momentum|adam --loss ce|mse --batch <n>
+              --replicas <n>  (data-parallel replica group, n in 1|2|4|8;
+                trajectories are bit-identical at every n for a seed)
+              --reduce dense|sparse  (gradient exchange under --replicas:
+                sparse union-merges the gated GEMMs' kept columns)
+              --stale 0|1  (apply each reduced gradient one step late)
               [--preset smoke|ci|paper] [--out run.json]
               [--save-ckpt model.ckpt]  (native backend: save the final
                 parameters as a versioned checkpoint `serve` can load)
@@ -35,6 +40,7 @@ commands:
               --serve-workers <n>
               --offered-load <qps>  (open-loop arrivals; 0 = closed loop
                 at --concurrency in-flight requests)
+              --queue-cap <n>  (reject submits past n queued; 0 = unbounded)
               [--out serve_report.json]
   sweep       budget sweep for one method (LR cross-validated)
               --model <m> --method <m> [--budgets 0.05,0.1,...] [--preset ..]
@@ -232,6 +238,29 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.act_policy = args.str_or("act-policy", &cfg.act_policy);
     cfg.act_budget = args.f64_or("act-budget", cfg.act_budget)?;
     cfg.act_schedule = args.f64_list_or("act-schedule", &[])?;
+    cfg.replicas = args.usize_or("replicas", cfg.replicas)?;
+    cfg.reduce = args.str_or("reduce", &cfg.reduce);
+    cfg.stale = args.usize_or("stale", cfg.stale)?;
+    // Reject nonsense DP flags here with the usage hint rather than deep
+    // in the trainer: an *explicit* `--replicas 0` is a contradiction
+    // (0 means "no replica group", which is the absence of the flag).
+    if args.str_opt("replicas").is_some() && cfg.replicas == 0 {
+        anyhow::bail!(
+            "--replicas 0 makes no sense; pass 1|2|4|8 or drop the flag \
+             (run with no arguments for usage)"
+        );
+    }
+    uavjp::replicate::ReduceMode::parse(&cfg.reduce)?;
+    if cfg.stale > 1 {
+        anyhow::bail!(
+            "--stale {} out of range (want 0|1; run with no arguments for \
+             usage)",
+            cfg.stale
+        );
+    }
+    if cfg.replicas > 0 && cfg.backend != Backend::Native {
+        anyhow::bail!("--replicas runs on the native backend only");
+    }
 
     eprintln!(
         "[train:{}] {} / {} p={} lr={} steps={}",
@@ -243,6 +272,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         cfg.steps
     );
     let t0 = std::time::Instant::now();
+    let mut exchange: Option<uavjp::replicate::ExchangeStats> = None;
     let curve = match args.str_opt("save-ckpt") {
         Some(path) => {
             if cfg.backend != Backend::Native {
@@ -255,6 +285,14 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
             eprintln!("saved checkpoint to {path}");
             curve
         }
+        // data-parallel runs drive the native trainer directly so the
+        // gradient-exchange byte accounting survives the run
+        None if cfg.replicas > 0 => {
+            let mut t = uavjp::native::NativeTrainer::new(cfg.clone())?;
+            let curve = t.run()?;
+            exchange = t.exchange_stats();
+            curve
+        }
         None => be.train(&cfg)?,
     };
     let dt = t0.elapsed().as_secs_f64();
@@ -264,12 +302,33 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         el, ea, curve.final_acc().unwrap_or(f64::NAN), dt,
         curve.losses.len() as f64 / dt
     );
+    if let Some(s) = exchange {
+        println!(
+            "exchange[{}]: dense {:.1} KB/step, sparse {:.1} KB/step \
+             ({:.1}% of dense)",
+            cfg.reduce,
+            s.dense_per_step() / 1024.0,
+            s.sparse_per_step() / 1024.0,
+            100.0 * s.ratio()
+        );
+    }
     if let Some(out) = args.str_opt("out") {
-        let v = json::Value::obj(vec![
+        let mut fields = vec![
             ("config", cfg.to_json()),
             ("curve", curve.to_json()),
             ("wall_seconds", json::Value::num(dt)),
-        ]);
+        ];
+        if let Some(s) = exchange {
+            fields.push((
+                "exchange",
+                json::Value::obj(vec![
+                    ("steps", json::Value::num(s.steps as f64)),
+                    ("dense_bytes", json::Value::num(s.dense_bytes as f64)),
+                    ("sparse_bytes", json::Value::num(s.sparse_bytes as f64)),
+                ]),
+            ));
+        }
+        let v = json::Value::obj(fields);
         std::fs::write(out, json::to_string_pretty(&v))?;
         eprintln!("wrote {out}");
     }
@@ -299,13 +358,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests: args.usize_or("requests", d.requests)?,
         offered_load: args.f64_or("offered-load", d.offered_load)?,
         concurrency: args.usize_or("concurrency", d.concurrency)?,
+        queue_cap: args.usize_or("queue-cap", d.queue_cap)?,
     };
     let report = serving::serve_checkpoint(std::path::Path::new(ckpt), &cfg)?;
     println!(
-        "served {} requests in {:.2}s: {:.1} qps sustained, p50 {:.3} ms, \
-         p99 {:.3} ms, mean batch {:.2}",
+        "served {} requests in {:.2}s ({} rejected): {:.1} qps sustained, \
+         p50 {:.3} ms, p99 {:.3} ms, mean batch {:.2}",
         report.completed,
         report.wall_seconds,
+        report.rejected,
         report.throughput_qps,
         report.p50_ms,
         report.p99_ms,

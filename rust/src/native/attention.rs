@@ -498,6 +498,12 @@ impl Layer for Attention {
     fn sketchable(&self) -> bool {
         true
     }
+
+    fn sketch_gemm_slots(&self) -> Vec<(usize, usize)> {
+        // backward plans columns for o first, then q, k, v — see the
+        // `linear_backward_ctx` / `linear_backward_stash` calls above
+        vec![(6, 7), (0, 1), (2, 3), (4, 5)]
+    }
 }
 
 /// Per-token feed-forward sublayer with its own residual:
@@ -639,6 +645,11 @@ impl Layer for FfnBlock {
 
     fn sketchable(&self) -> bool {
         true
+    }
+
+    fn sketch_gemm_slots(&self) -> Vec<(usize, usize)> {
+        // backward plans columns for w2 first, then w1
+        vec![(2, 3), (0, 1)]
     }
 }
 

@@ -171,6 +171,18 @@ pub trait Layer: Send + Sync {
         false
     }
 
+    /// Map from this layer's gated-GEMM `plan_columns` call order to its
+    /// *local* `(weight, bias)` slot indices in [`Layer::params`] order —
+    /// entry k describes the k-th kept list a gated backward appends to
+    /// the [`SketchScratch`] kept log. Only meaningful when
+    /// [`Layer::sketchable`]; single-GEMM layers keep the default
+    /// `[(0, 1)]`, multi-GEMM layers (attention, FFN) override to their
+    /// backward's planning order. The sparse data-parallel reducer uses
+    /// this to attribute logged kept lists to gradient slots.
+    fn sketch_gemm_slots(&self) -> Vec<(usize, usize)> {
+        vec![(0, 1)]
+    }
+
     /// Total parameter count.
     fn num_params(&self) -> usize {
         self.params().iter().map(|p| p.len()).sum()

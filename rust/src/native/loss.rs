@@ -53,8 +53,34 @@ pub fn loss_and_grad_into(
     g: &mut Mat,
 ) -> f64 {
     let (b, c) = (logits.rows, logits.cols);
+    let sum = loss_and_grad_scaled_into(kind, logits, y, g, b);
+    match kind {
+        LossKind::CrossEntropy => sum / b as f64,
+        LossKind::Mse => sum / (b * c) as f64,
+    }
+}
+
+/// Like [`loss_and_grad_into`] but normalized against a *global* row count
+/// `denom_rows` instead of this matrix's own batch — the data-parallel
+/// shard path, where each replica holds `b < denom_rows` rows of a global
+/// batch and the gradients must sum (not average) across shards into
+/// exactly the full-batch mean gradient. Returns the **unnormalized**
+/// f64 loss sum over this shard's rows (CE: Σ −ln p; MSE: Σ resid²);
+/// the caller divides the cross-shard total by `denom_rows` (CE) or
+/// `denom_rows · cols` (MSE). With `denom_rows == logits.rows` the
+/// gradient and (post-division) loss are bitwise identical to
+/// [`loss_and_grad_into`].
+pub fn loss_and_grad_scaled_into(
+    kind: LossKind,
+    logits: &Mat,
+    y: &[i32],
+    g: &mut Mat,
+    denom_rows: usize,
+) -> f64 {
+    let (b, c) = (logits.rows, logits.cols);
     assert_eq!(y.len(), b, "label batch size");
     assert_eq!((g.rows, g.cols), (b, c), "loss gradient shape");
+    assert!(denom_rows >= b, "global divisor smaller than shard");
     g.data.copy_from_slice(&logits.data);
     match kind {
         LossKind::CrossEntropy => {
@@ -65,21 +91,21 @@ pub fn loss_and_grad_into(
                 loss -= (p as f64).ln();
                 g.data[i * c + yi as usize] -= 1.0;
             }
-            vec::div_scalar(&mut g.data, b as f32);
-            loss / b as f64
+            vec::div_scalar(&mut g.data, denom_rows as f32);
+            loss
         }
         LossKind::Mse => {
             let mut loss = 0.0f64;
             for (i, &yi) in y.iter().enumerate() {
                 g.data[i * c + yi as usize] -= 1.0;
             }
-            let n = (b * c) as f64;
+            let n = (denom_rows * c) as f64;
             for v in &g.data {
                 loss += (*v as f64) * (*v as f64);
             }
             let scale = 2.0 / n as f32;
             vec::scale(&mut g.data, scale);
-            loss / n
+            loss
         }
     }
 }
@@ -188,6 +214,45 @@ mod tests {
         let logits = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 0.0]]);
         assert_eq!(accuracy(&logits, &[1, 0]), 1.0);
         assert_eq!(accuracy(&logits, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn scaled_shards_recompose_the_full_batch_loss() {
+        // Two 2-row shards with the global divisor reproduce the 4-row
+        // mean loss; every gradient row is bitwise what the full-batch
+        // call produces for that row (CE grads are row-local).
+        let logits = Mat::from_rows(vec![
+            vec![1.0, -0.5, 0.25],
+            vec![0.0, 2.0, -1.0],
+            vec![0.5, 0.5, 0.5],
+            vec![-2.0, 1.0, 0.0],
+        ]);
+        let y = [0i32, 1, 2, 0];
+        for kind in [LossKind::CrossEntropy, LossKind::Mse] {
+            let (full_loss, full_g) = loss_and_grad(kind, &logits, &y);
+            let mut sum = 0.0f64;
+            let mut rows = Vec::new();
+            for s in 0..2 {
+                let shard = Mat::from_rows(
+                    (0..2).map(|i| logits.row(2 * s + i).to_vec()).collect(),
+                );
+                let mut g = Mat::zeros(2, 3);
+                sum += loss_and_grad_scaled_into(
+                    kind,
+                    &shard,
+                    &y[2 * s..2 * s + 2],
+                    &mut g,
+                    4,
+                );
+                rows.extend_from_slice(&g.data);
+            }
+            let denom = match kind {
+                LossKind::CrossEntropy => 4.0,
+                LossKind::Mse => 12.0,
+            };
+            assert!((sum / denom - full_loss).abs() < 1e-12);
+            assert_eq!(rows, full_g.data);
+        }
     }
 
     #[test]

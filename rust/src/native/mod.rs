@@ -61,7 +61,10 @@ pub use layer::{
     sketched_linear_backward, sketched_linear_backward_into, Cache, Grads,
     Layer, Linear, Relu, SiteSketch, SketchCtx, NATIVE_METHODS,
 };
-pub use loss::{accuracy, loss_and_grad, loss_and_grad_into, loss_value, LossKind};
+pub use loss::{
+    accuracy, loss_and_grad, loss_and_grad_into, loss_and_grad_scaled_into,
+    loss_value, LossKind,
+};
 pub use optim::{clip_global_norm, Optim};
 pub use policy::{
     ActMode, ActSite, ActivationPolicy, InputNeed, Stash, StashedInput,

@@ -20,6 +20,7 @@ use crate::config::TrainConfig;
 use crate::data::{self, BatchIter, Dataset, DatasetKind};
 use crate::metrics::RunCurve;
 use crate::pool;
+use crate::replicate::{ExchangeStats, ReplicaGroup};
 use crate::rng::Pcg64;
 use crate::tensor::kernels;
 use crate::tensor::Mat;
@@ -48,6 +49,9 @@ pub struct NativeTrainer {
     data_kind: DatasetKind,
     sk_rng: Pcg64,
     act_rng: Pcg64,
+    /// Data-parallel step engine when `cfg.replicas ≥ 1` (DESIGN.md
+    /// §7.6); `None` runs the plain single-stream step.
+    group: Option<ReplicaGroup>,
 }
 
 impl NativeTrainer {
@@ -99,6 +103,14 @@ impl NativeTrainer {
             kernels::set_kernel(kernel_kind);
         }
         let ws = model.workspace(cfg.batch, data_kind.dim());
+        // `--replicas ≥ 1` builds the data-parallel group; it revalidates
+        // the lane grid (batch % 8, replicas | 8) and that the stack is
+        // the registry model `cfg.model` names, with loud bails.
+        let group = if cfg.replicas > 0 {
+            Some(ReplicaGroup::new(&cfg, &model)?)
+        } else {
+            None
+        };
         Ok(NativeTrainer {
             cfg,
             model,
@@ -109,6 +121,7 @@ impl NativeTrainer {
             data_kind,
             sk_rng,
             act_rng,
+            group,
         })
     }
 
@@ -156,9 +169,26 @@ impl NativeTrainer {
         (train, test)
     }
 
+    /// Modeled gradient-exchange traffic accumulated so far; `None`
+    /// unless the trainer runs data-parallel (`cfg.replicas ≥ 1`).
+    pub fn exchange_stats(&self) -> Option<ExchangeStats> {
+        self.group.as_ref().map(|g| g.stats())
+    }
+
     /// One optimizer step on a batch; returns the training loss. Runs
     /// entirely in the trainer's preallocated workspace.
     pub fn step(&mut self, x: &Mat, y: &[i32], step: usize) -> f64 {
+        if let Some(group) = self.group.as_mut() {
+            // data-parallel path: the group shards the batch across its
+            // lane grid and reduces into the master gradient slots;
+            // clip / LR / apply stay identical to the plain path.
+            let loss = group.step(&self.model, x, y, &mut self.ws.grad_slots);
+            clip_global_norm(&mut self.ws.grad_slots, CLIP_NORM);
+            let lr = self.cfg.lr_at(step);
+            self.model
+                .apply_grads(&mut self.opt, &self.ws.grad_slots, lr);
+            return loss;
+        }
         self.model
             .forward_train(x, &mut self.ws, &self.plan, &mut self.act_rng);
         let (logits, gout) = self.ws.loss_io();

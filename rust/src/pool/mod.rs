@@ -178,6 +178,30 @@ where
     });
 }
 
+/// Replica-level fan-out: run `f(index, state)` once per entry of
+/// `states`, each on its own scoped thread (inline when there is only
+/// one). This is the data-parallel trainer's outer axis — one state per
+/// model replica, coarser than the row-chunking the tensor kernels use
+/// *inside* each replica's GEMMs. Replica results must be combined by the
+/// caller in a fixed order afterwards; the fan-out itself imposes no
+/// ordering, so `f` must write only replica-owned data.
+pub fn run_replicas<S, F>(states: &mut [S], f: F)
+where
+    S: Send,
+    F: Fn(usize, &mut S) + Sync,
+{
+    if states.len() == 1 {
+        f(0, &mut states[0]);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (i, st) in states.iter_mut().enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, st));
+        }
+    });
+}
+
 /// Map `f` over `items` with up to `workers` OS threads, preserving order.
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
@@ -338,6 +362,21 @@ mod tests {
         }
         // an immediately-exhausted source is a no-op
         run_source(|| None::<usize>, &mut [()], |_, _| panic!("no items"));
+    }
+
+    #[test]
+    fn replica_fanout_runs_every_state_once_with_its_index() {
+        for n in [1usize, 2, 4, 8] {
+            let mut states: Vec<(usize, usize)> =
+                (0..n).map(|_| (0, 0)).collect();
+            run_replicas(&mut states, |i, st| {
+                st.0 += 1;
+                st.1 = i * 10;
+            });
+            for (i, st) in states.iter().enumerate() {
+                assert_eq!(*st, (1, i * 10), "n={n}");
+            }
+        }
     }
 
     #[test]

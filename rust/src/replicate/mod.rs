@@ -1,0 +1,584 @@
+//! Data-parallel training with sketch-compressed gradient exchange
+//! (DESIGN.md §7.6).
+//!
+//! A [`ReplicaGroup`] owns N model replicas and runs each optimizer step
+//! as: broadcast the master parameters, shard the global batch, run
+//! forward/backward per shard concurrently ([`crate::pool::run_replicas`]
+//! — one OS thread per replica, each still row-chunking its GEMMs on the
+//! intra-op pool), and reduce the per-shard gradients through the flat
+//! slot registry into the trainer's master gradient slots.
+//!
+//! **The determinism contract** — bit-identical trajectories at any
+//! `--replicas` for a fixed seed — is carried by a *fixed lane grid*: the
+//! global batch is always cut into [`LANES`] micro-shards ("lanes"),
+//! independent of the replica count. Each lane owns a persistent
+//! workspace and two persistent RNG streams derived disjointly from the
+//! seed (`1100 + lane` for backward gates, `1300 + lane` for activation
+//! gates), and the reduction is a flat fold over lanes in ascending lane
+//! index — the same accumulation tree no matter how lanes are packed onto
+//! replicas. `--replicas R` only chooses how many OS threads *execute*
+//! the lanes (replica r runs lanes `r·8/R .. (r+1)·8/R` serially), so R
+//! must divide [`LANES`]. This is the replica-axis analogue of the
+//! `--threads` invariance the GEMM row-chunking guarantees, and
+//! `tests/replicate.rs` pins it the same way `tests/gemm_kernels.rs` pins
+//! thread-invariance.
+//!
+//! **Exchange modes.** `dense` folds full slots. `sparse` exploits the
+//! paper's estimator structure: a gated GEMM's dW/db are *exactly zero*
+//! outside the kept columns (the 1/pᵢ-rescaled kept-column gradients are
+//! already an unbiased compressed representation), so the reducer
+//! union-merges the lanes' kept-column indices — replayed from the
+//! [`crate::sketch::SketchScratch`] kept log, attributed to slots via
+//! [`Layer::sketch_gemm_slots`] — and scatter-accumulates only those rows
+//! into the dense master slot. Both modes use the same ascending-lane
+//! per-element fold, so they produce the same trajectories (up to signed
+//! zeros, which no downstream op distinguishes), and both are R-invariant.
+//! [`ExchangeStats`] models what each mode would put on a wire.
+
+use crate::config::TrainConfig;
+use crate::data::DatasetKind;
+use crate::pool;
+use crate::rng::Pcg64;
+use crate::tensor::kernels::vec;
+use crate::tensor::Mat;
+use anyhow::{bail, Result};
+
+use crate::native::layer::Grads;
+use crate::native::loss::{loss_and_grad_scaled_into, LossKind};
+use crate::native::models;
+use crate::native::policy::{ActivationPolicy, StepPlan};
+use crate::native::sequential::{Sequential, SketchPolicy, Workspace};
+
+/// Number of fixed micro-shards ("lanes") every global batch is cut into,
+/// independent of `--replicas`. The reduction tree folds lanes in
+/// ascending index, so any replica count that divides this executes the
+/// identical computation.
+pub const LANES: usize = 8;
+
+/// How per-lane gradients are merged into the master slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceMode {
+    /// Baseline: fold every slot densely (full tensors on the wire).
+    Dense,
+    /// Union-merge kept-column indices of gated GEMMs with their
+    /// 1/pᵢ-rescaled values; scatter-accumulate only those rows. Ungated
+    /// slots still fold densely.
+    Sparse,
+}
+
+impl ReduceMode {
+    /// Parse `"dense"` / `"sparse"`.
+    pub fn parse(s: &str) -> Result<ReduceMode> {
+        match s {
+            "dense" => Ok(ReduceMode::Dense),
+            "sparse" => Ok(ReduceMode::Sparse),
+            other => bail!("unknown reduce mode {other} (want dense|sparse)"),
+        }
+    }
+
+    /// Canonical config string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReduceMode::Dense => "dense",
+            ReduceMode::Sparse => "sparse",
+        }
+    }
+}
+
+/// Modeled wire traffic of the gradient exchange, accumulated over steps.
+/// Both modes are accounted on every step regardless of which one the run
+/// reduces with, so one run yields the full comparison. The wire unit is
+/// the *lane* payload (the all-reduce participant is a lane; replicas are
+/// executors): dense ships each lane's full flat gradient; sparse ships,
+/// per gated GEMM, a u32 row count plus `(u32 index, f32 bias entry,
+/// d_in × f32 weight row)` per kept row, and full tensors for ungated
+/// slots. Lane-framed payloads keep the numbers replica-count-invariant —
+/// like the trajectories themselves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExchangeStats {
+    /// Steps accumulated.
+    pub steps: u64,
+    /// Total bytes the dense exchange would move.
+    pub dense_bytes: u64,
+    /// Total bytes the sparse exchange would move.
+    pub sparse_bytes: u64,
+}
+
+impl ExchangeStats {
+    /// Dense bytes per step.
+    pub fn dense_per_step(&self) -> f64 {
+        self.dense_bytes as f64 / self.steps.max(1) as f64
+    }
+
+    /// Sparse bytes per step.
+    pub fn sparse_per_step(&self) -> f64 {
+        self.sparse_bytes as f64 / self.steps.max(1) as f64
+    }
+
+    /// sparse / dense byte ratio (1.0 when nothing was accumulated).
+    pub fn ratio(&self) -> f64 {
+        if self.dense_bytes == 0 {
+            1.0
+        } else {
+            self.sparse_bytes as f64 / self.dense_bytes as f64
+        }
+    }
+}
+
+/// One gated GEMM's reduction metadata: where its weight/bias gradients
+/// live in the global slot registry and the weight row width. Entry k
+/// corresponds to the k-th kept list in every lane's per-step kept log
+/// (backward layer order, each layer's `sketch_gemm_slots` order within).
+struct GemmSite {
+    w_slot: usize,
+    b_slot: usize,
+    din: usize,
+}
+
+/// Per-lane persistent state: the lane's workspace, its staged batch
+/// shard, its two disjoint RNG streams, and the last step's loss partial.
+struct LaneState {
+    ws: Workspace,
+    stage_x: Mat,
+    stage_y: Vec<i32>,
+    sk_rng: Pcg64,
+    act_rng: Pcg64,
+    loss_partial: f64,
+}
+
+/// One executor: an owned model copy (refreshed from the master every
+/// step) plus the contiguous run of lanes it executes serially.
+struct ReplicaWorker {
+    model: Sequential,
+    lanes: Vec<LaneState>,
+}
+
+/// N-replica data-parallel step engine. See the module docs for the lane
+/// grid, the determinism contract and the exchange modes.
+pub struct ReplicaGroup {
+    replicas: usize,
+    lanes_per_replica: usize,
+    reduce: ReduceMode,
+    stale: bool,
+    loss_kind: LossKind,
+    batch: usize,
+    lane_rows: usize,
+    out_cols: usize,
+    plan: StepPlan,
+    workers: Vec<ReplicaWorker>,
+    gemm_map: Vec<GemmSite>,
+    slot_lens: Vec<usize>,
+    /// Bytes of the slots sparse mode still ships densely.
+    dense_extra_bytes: u64,
+    /// Bytes of one lane's full flat gradient.
+    lane_dense_bytes: u64,
+    /// `--stale 1`: last step's reduced gradients (applied this step) and
+    /// a spare buffer the current reduction lands in.
+    prev: Grads,
+    spare: Grads,
+    stats: ExchangeStats,
+}
+
+impl ReplicaGroup {
+    /// Validate the data-parallel knobs of `cfg` and build the group.
+    /// `master` is the trainer's model — replicas are rebuilt from the
+    /// registry (same architecture; parameters are re-broadcast from the
+    /// master every step, so initial values are irrelevant).
+    pub fn new(cfg: &TrainConfig, master: &Sequential) -> Result<ReplicaGroup> {
+        let r = cfg.replicas;
+        if r == 0 || LANES % r != 0 {
+            bail!(
+                "--replicas {r} must be a divisor of the {LANES}-lane grid \
+                 (1|2|4|8); the fixed grid is what keeps trajectories \
+                 bit-identical at every replica count"
+            );
+        }
+        if cfg.batch % LANES != 0 {
+            bail!(
+                "--replicas needs --batch divisible by the {LANES}-lane \
+                 grid, got batch {}",
+                cfg.batch
+            );
+        }
+        if cfg.stale > 1 {
+            bail!("--stale {} out of range (want 0|1)", cfg.stale);
+        }
+        let reduce = ReduceMode::parse(&cfg.reduce)?;
+        let loss_kind = LossKind::parse(&cfg.loss)?;
+        let in_dim = DatasetKind::for_model(&cfg.model)?.dim();
+        let plan = master.plan(
+            &SketchPolicy::from_config(cfg),
+            &ActivationPolicy::from_config(cfg)?,
+        )?;
+        let lane_rows = cfg.batch / LANES;
+        let lanes_per_replica = LANES / r;
+
+        // Flat slot registry metadata from the master stack.
+        let slot_lens: Vec<usize> = master
+            .layers
+            .iter()
+            .flat_map(|l| l.params().iter().map(|p| p.len()).collect::<Vec<_>>())
+            .collect();
+        let mut slot_offsets = Vec::with_capacity(master.layers.len() + 1);
+        slot_offsets.push(0usize);
+        for layer in &master.layers {
+            slot_offsets.push(slot_offsets.last().unwrap() + layer.params().len());
+        }
+        // Gated-GEMM map in kept-log order: the backward walks layers in
+        // reverse, and each gated layer plans once per entry of its
+        // `sketch_gemm_slots` (in that order).
+        let mut gemm_map = Vec::new();
+        for i in (0..master.layers.len()).rev() {
+            if plan.sketch[i].is_none() {
+                continue;
+            }
+            for (wl, bl) in master.layers[i].sketch_gemm_slots() {
+                let w_slot = slot_offsets[i] + wl;
+                let b_slot = slot_offsets[i] + bl;
+                gemm_map.push(GemmSite {
+                    w_slot,
+                    b_slot,
+                    din: slot_lens[w_slot] / slot_lens[b_slot],
+                });
+            }
+        }
+        let mut is_gemm = vec![false; slot_lens.len()];
+        for s in &gemm_map {
+            is_gemm[s.w_slot] = true;
+            is_gemm[s.b_slot] = true;
+        }
+        let dense_extra_bytes: u64 = slot_lens
+            .iter()
+            .zip(&is_gemm)
+            .filter(|(_, &g)| !g)
+            .map(|(&l, _)| (l * 4) as u64)
+            .sum();
+        let lane_dense_bytes: u64 =
+            slot_lens.iter().map(|&l| (l * 4) as u64).sum();
+
+        let mut out_cols = in_dim;
+        for layer in &master.layers {
+            out_cols = layer.out_dim(out_cols);
+        }
+
+        let mut workers = Vec::with_capacity(r);
+        for rep in 0..r {
+            let model = models::build(&cfg.model, cfg.seed)?;
+            let rep_lens: Vec<usize> = model
+                .layers
+                .iter()
+                .flat_map(|l| {
+                    l.params().iter().map(|p| p.len()).collect::<Vec<_>>()
+                })
+                .collect();
+            if rep_lens != slot_lens {
+                bail!(
+                    "--replicas needs a registry-built model: the trainer's \
+                     stack does not match registry model {}",
+                    cfg.model
+                );
+            }
+            let lanes = (0..lanes_per_replica)
+                .map(|li| {
+                    let lane = rep * lanes_per_replica + li;
+                    LaneState {
+                        ws: model.workspace(lane_rows, in_dim),
+                        stage_x: Mat::zeros(lane_rows, in_dim),
+                        stage_y: vec![0i32; lane_rows],
+                        sk_rng: Pcg64::new(
+                            cfg.seed ^ 0x9e3779b9,
+                            1100 + lane as u64,
+                        ),
+                        act_rng: Pcg64::new(
+                            cfg.seed ^ 0x51ac7,
+                            1300 + lane as u64,
+                        ),
+                        loss_partial: 0.0,
+                    }
+                })
+                .collect();
+            workers.push(ReplicaWorker { model, lanes });
+        }
+
+        let zero_grads = || Grads {
+            slots: slot_lens.iter().map(|&l| vec![0.0f32; l]).collect(),
+        };
+        Ok(ReplicaGroup {
+            replicas: r,
+            lanes_per_replica,
+            reduce,
+            stale: cfg.stale == 1,
+            loss_kind,
+            batch: cfg.batch,
+            lane_rows,
+            out_cols,
+            plan,
+            workers,
+            gemm_map,
+            slot_lens,
+            dense_extra_bytes,
+            lane_dense_bytes,
+            prev: zero_grads(),
+            spare: zero_grads(),
+            stats: ExchangeStats::default(),
+        })
+    }
+
+    /// Replica count.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Active exchange mode.
+    pub fn reduce_mode(&self) -> ReduceMode {
+        self.reduce
+    }
+
+    /// Accumulated wire-traffic model.
+    pub fn stats(&self) -> ExchangeStats {
+        self.stats
+    }
+
+    /// One data-parallel step: broadcast `master`'s parameters, run every
+    /// lane's forward/backward (replicas in parallel, each lane on its
+    /// own RNG streams), and reduce the per-lane gradients into `out`
+    /// (the trainer's master gradient slots). Returns the global-batch
+    /// mean training loss. Under `--stale 1`, `out` receives the
+    /// *previous* step's reduced gradients (zeros on the first step)
+    /// while this step's reduction is held back one step; the returned
+    /// loss is always the current step's.
+    pub fn step(
+        &mut self,
+        master: &Sequential,
+        x: &Mat,
+        y: &[i32],
+        out: &mut Grads,
+    ) -> f64 {
+        assert_eq!(
+            (x.rows, x.cols),
+            (self.batch, self.workers[0].lanes[0].ws.in_dim),
+            "global batch shape"
+        );
+        assert_eq!(y.len(), self.batch, "label batch size");
+        let master_slots: Vec<&[f32]> =
+            master.layers.iter().flat_map(|l| l.params()).collect();
+        assert_eq!(master_slots.len(), self.slot_lens.len(), "master slots");
+        let (dim, lane_rows, lanes_per, batch) =
+            (x.cols, self.lane_rows, self.lanes_per_replica, self.batch);
+        let (plan, loss_kind) = (&self.plan, self.loss_kind);
+        pool::run_replicas(&mut self.workers, |rep, w| {
+            // broadcast: replica models mirror the master bit-for-bit
+            let mut s = 0usize;
+            for layer in &mut w.model.layers {
+                layer.visit_params_mut(&mut |p| {
+                    p.copy_from_slice(master_slots[s]);
+                    s += 1;
+                });
+            }
+            for (li, lane) in w.lanes.iter_mut().enumerate() {
+                let r0 = (rep * lanes_per + li) * lane_rows;
+                lane.stage_x
+                    .data
+                    .copy_from_slice(&x.data[r0 * dim..(r0 + lane_rows) * dim]);
+                lane.stage_y.copy_from_slice(&y[r0..r0 + lane_rows]);
+                w.model.forward_train(
+                    &lane.stage_x,
+                    &mut lane.ws,
+                    plan,
+                    &mut lane.act_rng,
+                );
+                let (logits, gout) = lane.ws.loss_io();
+                lane.loss_partial = loss_and_grad_scaled_into(
+                    loss_kind,
+                    logits,
+                    &lane.stage_y,
+                    gout,
+                    batch,
+                );
+                // arm the kept log around the backward only — the kept
+                // activation policy also plans columns during the forward
+                lane.ws.scratch.begin_kept_log();
+                w.model.backward(&mut lane.ws, plan, &mut lane.sk_rng);
+                lane.ws.scratch.end_kept_log();
+            }
+        });
+
+        self.accumulate_stats();
+        if self.stale {
+            let mut cur =
+                std::mem::replace(&mut self.spare, Grads { slots: Vec::new() });
+            self.reduce_into(&mut cur);
+            for (o, p) in out.slots.iter_mut().zip(&self.prev.slots) {
+                o.copy_from_slice(p);
+            }
+            self.spare = std::mem::replace(&mut self.prev, cur);
+        } else {
+            self.reduce_into(out);
+        }
+
+        // global-batch mean loss: unnormalized lane partials folded in
+        // ascending lane order, divided by the global count — replica-
+        // count-invariant like the gradients.
+        let mut sum = 0.0f64;
+        for w in &self.workers {
+            for lane in &w.lanes {
+                sum += lane.loss_partial;
+            }
+        }
+        match self.loss_kind {
+            LossKind::CrossEntropy => sum / self.batch as f64,
+            LossKind::Mse => sum / (self.batch * self.out_cols) as f64,
+        }
+    }
+
+    /// Flat ascending-lane fold of every lane's gradient slots into
+    /// `out`. Dense mode folds full slots; sparse mode scatter-
+    /// accumulates only the kept rows of gated GEMMs (everything else in
+    /// those slots is exactly zero) and folds ungated slots densely. Both
+    /// accumulate each element in the identical ascending-lane order, for
+    /// any replica count.
+    fn reduce_into(&self, out: &mut Grads) {
+        assert_eq!(out.slots.len(), self.slot_lens.len(), "slot registry");
+        let lanes: Vec<&LaneState> =
+            self.workers.iter().flat_map(|w| w.lanes.iter()).collect();
+        let sparse_slot = |s: usize| {
+            self.reduce == ReduceMode::Sparse
+                && self.gemm_map.iter().any(|g| g.w_slot == s || g.b_slot == s)
+        };
+        for (s, dst) in out.slots.iter_mut().enumerate() {
+            if sparse_slot(s) {
+                dst.fill(0.0);
+            } else {
+                dst.copy_from_slice(&lanes[0].ws.grad_slots.slots[s]);
+                for lane in &lanes[1..] {
+                    vec::add_assign(dst, &lane.ws.grad_slots.slots[s]);
+                }
+            }
+        }
+        if self.reduce == ReduceMode::Sparse {
+            for (g_ix, site) in self.gemm_map.iter().enumerate() {
+                for lane in &lanes {
+                    let log = lane.ws.scratch.kept_log();
+                    assert_eq!(
+                        log.len(),
+                        self.gemm_map.len(),
+                        "kept log entries per lane"
+                    );
+                    let lw = &lane.ws.grad_slots.slots[site.w_slot];
+                    let lb = &lane.ws.grad_slots.slots[site.b_slot];
+                    // split the two destination slots out of `out`
+                    let (lo, hi) = (
+                        site.w_slot.min(site.b_slot),
+                        site.w_slot.max(site.b_slot),
+                    );
+                    let (head, tail) = out.slots.split_at_mut(hi);
+                    let (a, b) = (&mut head[lo], &mut tail[0]);
+                    let (dw, db) = if site.w_slot < site.b_slot {
+                        (a, b)
+                    } else {
+                        (b, a)
+                    };
+                    for &(j, _) in &log[g_ix] {
+                        let d = site.din;
+                        vec::add_assign(
+                            &mut dw[j * d..(j + 1) * d],
+                            &lw[j * d..(j + 1) * d],
+                        );
+                        db[j] += lb[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accumulate both modes' modeled wire bytes for the step just run
+    /// (reads the lanes' kept logs; call before the logs are re-armed).
+    fn accumulate_stats(&mut self) {
+        let mut sparse: u64 = 0;
+        for w in &self.workers {
+            for lane in &w.lanes {
+                let log = lane.ws.scratch.kept_log();
+                for (g_ix, site) in self.gemm_map.iter().enumerate() {
+                    let kept = log.get(g_ix).map_or(0, |l| l.len()) as u64;
+                    // u32 count + per row: u32 index, f32 bias, din f32s
+                    sparse += 4 + kept * (4 + 4 * (site.din as u64 + 1));
+                }
+                sparse += self.dense_extra_bytes;
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.dense_bytes += LANES as u64 * self.lane_dense_bytes;
+        self.stats.sparse_bytes += sparse;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+    use crate::native::models;
+
+    fn dp_cfg(replicas: usize) -> TrainConfig {
+        let mut cfg = Preset::Smoke.base("mlp").unwrap();
+        cfg.batch = 32;
+        cfg.replicas = replicas;
+        cfg.method = "l1".into();
+        cfg.budget = 0.25;
+        cfg
+    }
+
+    #[test]
+    fn parse_reduce_modes() {
+        assert_eq!(ReduceMode::parse("dense").unwrap(), ReduceMode::Dense);
+        assert_eq!(ReduceMode::parse("sparse").unwrap(), ReduceMode::Sparse);
+        let err = format!("{}", ReduceMode::parse("topk").unwrap_err());
+        assert!(err.contains("dense|sparse"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_replica_grid_and_batch() {
+        let master = models::build("mlp", 0).unwrap();
+        for bad in [3usize, 5, 6, 7, 16] {
+            let cfg = dp_cfg(bad);
+            let err = format!("{}", ReplicaGroup::new(&cfg, &master).unwrap_err());
+            assert!(err.contains("divisor"), "r={bad}: {err}");
+        }
+        let mut cfg = dp_cfg(2);
+        cfg.batch = 36;
+        let err = format!("{}", ReplicaGroup::new(&cfg, &master).unwrap_err());
+        assert!(err.contains("divisible"), "{err}");
+        let mut cfg = dp_cfg(2);
+        cfg.stale = 2;
+        let err = format!("{}", ReplicaGroup::new(&cfg, &master).unwrap_err());
+        assert!(err.contains("0|1"), "{err}");
+        let mut cfg = dp_cfg(2);
+        cfg.reduce = "topk".into();
+        assert!(ReplicaGroup::new(&cfg, &master).is_err());
+    }
+
+    #[test]
+    fn gemm_map_covers_every_gated_site_in_backward_order() {
+        // vit: Patchify, PatchConv, PosEmbed, Attention, LayerNorm,
+        // FfnBlock, LayerNorm, PatchMeanPool, Linear — gated GEMMs under
+        // location=all: Linear(1) + FfnBlock(2) + Attention(4) +
+        // PatchConv(1) = 8 kept-log entries, reverse layer order.
+        let master = models::build("vit", 0).unwrap();
+        let mut cfg = dp_cfg(2);
+        cfg.model = "vit".into();
+        let g = ReplicaGroup::new(&cfg, &master).unwrap();
+        assert_eq!(g.gemm_map.len(), 8);
+        // every mapped slot pair is (dout·din, dout)-shaped
+        for site in &g.gemm_map {
+            assert_eq!(
+                g.slot_lens[site.w_slot],
+                site.din * g.slot_lens[site.b_slot]
+            );
+        }
+        // location=none → nothing gated → empty map, sparse == dense
+        let mut cfg = dp_cfg(2);
+        cfg.model = "vit".into();
+        cfg.location = "none".into();
+        let g = ReplicaGroup::new(&cfg, &master).unwrap();
+        assert!(g.gemm_map.is_empty());
+    }
+}

@@ -13,7 +13,7 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Batcher knobs (`--max-batch`, `--max-wait-us`).
+/// Batcher knobs (`--max-batch`, `--max-wait-us`, `--queue-cap`).
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Largest coalesced batch (engine workspaces are sized to this).
@@ -22,7 +22,28 @@ pub struct BatcherConfig {
     /// dispatches anyway — the bound on added queueing latency at low
     /// offered load.
     pub max_wait: Duration,
+    /// Admission control: a submit that would grow the queue past this
+    /// many pending requests is rejected with [`QueueFull`] instead of
+    /// queueing unboundedly. `0` = unbounded.
+    pub queue_cap: usize,
 }
+
+/// Typed rejection from [`RequestQueue::submit`] under admission control:
+/// the queue already held `queue_cap` pending requests. The request was
+/// not enqueued and its reply will never be filled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull {
+    /// The bound the queue enforced when it rejected.
+    pub cap: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request queue full (cap {})", self.cap)
+    }
+}
+
+impl std::error::Error for QueueFull {}
 
 /// One queued inference request.
 pub struct Request {
@@ -118,13 +139,19 @@ impl RequestQueue {
         self.cfg
     }
 
-    /// Enqueue one request (clients). Panics if the queue is closed —
+    /// Enqueue one request (clients). Rejects with [`QueueFull`] when
+    /// `queue_cap > 0` and that many requests are already pending (the
+    /// request is dropped, not queued). Panics if the queue is closed —
     /// drivers close only after every client finished submitting.
-    pub fn submit(&self, req: Request) {
+    pub fn submit(&self, req: Request) -> Result<(), QueueFull> {
         let mut st = self.state.lock().unwrap();
         assert!(!st.closed, "submit after close");
+        if self.cfg.queue_cap > 0 && st.pending.len() >= self.cfg.queue_cap {
+            return Err(QueueFull { cap: self.cfg.queue_cap });
+        }
         st.pending.push_back(req);
         self.cv.notify_one();
+        Ok(())
     }
 
     /// Close the queue: no new submissions; workers drain what's pending
@@ -195,14 +222,14 @@ mod tests {
     }
 
     fn queue(max_batch: usize, max_wait: Duration) -> RequestQueue {
-        RequestQueue::new(BatcherConfig { max_batch, max_wait })
+        RequestQueue::new(BatcherConfig { max_batch, max_wait, queue_cap: 0 })
     }
 
     #[test]
     fn full_batches_dispatch_immediately_and_fifo() {
         let q = queue(3, Duration::from_secs(60));
         for id in 0..7 {
-            q.submit(req(id));
+            q.submit(req(id)).unwrap();
         }
         let b1 = q.next_batch().unwrap();
         assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
@@ -221,12 +248,34 @@ mod tests {
     fn deadline_dispatches_partial_batches() {
         // zero deadline: any pending request dispatches without co-riders
         let q = queue(8, Duration::from_micros(0));
-        q.submit(req(0));
-        q.submit(req(1));
+        q.submit(req(0)).unwrap();
+        q.submit(req(1)).unwrap();
         let b = q.next_batch().unwrap();
         assert_eq!(b.len(), 2, "drains everything pending at deadline");
         q.close();
         assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full_and_admits_after_drain() {
+        let q = RequestQueue::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+            queue_cap: 3,
+        });
+        q.submit(req(0)).unwrap();
+        q.submit(req(1)).unwrap();
+        q.submit(req(2)).unwrap();
+        let err = q.submit(req(3)).unwrap_err();
+        assert_eq!(err, QueueFull { cap: 3 });
+        assert!(format!("{err}").contains("cap 3"));
+        assert_eq!(q.depth(), 3, "rejected request was not enqueued");
+        // draining a batch frees capacity again
+        assert_eq!(q.next_batch().unwrap().len(), 2);
+        q.submit(req(4)).unwrap();
+        q.close();
+        let tail = q.next_batch().unwrap();
+        assert_eq!(tail.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
     }
 
     #[test]
@@ -257,7 +306,7 @@ mod tests {
         std::thread::scope(|s| {
             let h = s.spawn(|| q.next_batch());
             std::thread::sleep(Duration::from_millis(10));
-            q.submit(req(5));
+            q.submit(req(5)).unwrap();
             let b = h.join().unwrap().unwrap();
             assert_eq!(b[0].id, 5);
         });

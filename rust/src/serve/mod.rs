@@ -26,10 +26,10 @@
 pub mod batcher;
 pub mod engine;
 
-pub use batcher::{BatcherConfig, Reply, Request, RequestQueue, Response};
+pub use batcher::{BatcherConfig, QueueFull, Reply, Request, RequestQueue, Response};
 pub use engine::InferenceEngine;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -45,6 +45,9 @@ use crate::tensor::Mat;
 pub struct ServeReport {
     /// Requests served to completion.
     pub completed: usize,
+    /// Requests the queue's admission control turned away
+    /// ([`QueueFull`]; always 0 when `cfg.queue_cap == 0`).
+    pub rejected: usize,
     /// First submission → last reply, seconds.
     pub wall_seconds: f64,
     /// `completed / wall_seconds` — the sustained rate (under open loop,
@@ -67,6 +70,7 @@ impl ServeReport {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("completed", Value::num(self.completed as f64)),
+            ("rejected", Value::num(self.rejected as f64)),
             ("wall_seconds", Value::num(self.wall_seconds)),
             ("throughput_qps", Value::num(self.throughput_qps)),
             ("p50_ms", Value::num(self.p50_ms)),
@@ -78,6 +82,7 @@ impl ServeReport {
             ("requests", Value::num(self.cfg.requests as f64)),
             ("offered_load", Value::num(self.cfg.offered_load)),
             ("concurrency", Value::num(self.cfg.concurrency as f64)),
+            ("queue_cap", Value::num(self.cfg.queue_cap as f64)),
         ])
     }
 }
@@ -138,9 +143,14 @@ pub fn run_server(
     let queue = RequestQueue::new(BatcherConfig {
         max_batch: cfg.max_batch,
         max_wait: Duration::from_micros(cfg.max_wait_us),
+        queue_cap: cfg.queue_cap,
     });
     let n = cfg.requests;
     let replies: Vec<Reply> = (0..n).map(|_| Reply::new()).collect();
+    // admission control can turn a submit away (`QueueFull`); a rejected
+    // request's reply is never filled, so the final collection sweep must
+    // know to skip it
+    let turned_away: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
     let next_req = AtomicUsize::new(0);
     let workers = cfg.workers.max(1);
     let t0 = Instant::now();
@@ -165,7 +175,9 @@ pub fn run_server(
                 let mut req =
                     Request::new(i as u64, inputs.row(i % inputs.rows).to_vec());
                 req.reply = reply.clone();
-                queue.submit(req);
+                if queue.submit(req).is_err() {
+                    turned_away[i].store(true, Ordering::Relaxed);
+                }
             }
         } else {
             // closed loop: fixed in-flight concurrency
@@ -182,7 +194,11 @@ pub fn run_server(
                             inputs.row(i % inputs.rows).to_vec(),
                         );
                         req.reply = replies[i].clone();
-                        queue.submit(req);
+                        if queue.submit(req).is_err() {
+                            // no reply is coming; move on to the next id
+                            turned_away[i].store(true, Ordering::Relaxed);
+                            continue;
+                        }
                         let _ = replies[i].wait();
                     })
                 })
@@ -196,11 +212,17 @@ pub fn run_server(
         server.join().unwrap();
     });
     let wall = t0.elapsed().as_secs_f64();
-    // every reply is filled by now (the server drained the queue before
-    // exiting), so these waits never block
+    // every admitted request's reply is filled by now (the server drained
+    // the queue before exiting), so these waits never block; rejected
+    // requests have no reply coming and are skipped
     let mut latencies = Vec::with_capacity(n);
     let mut batch_sum = 0usize;
-    for reply in &replies {
+    let mut rejected = 0usize;
+    for (i, reply) in replies.iter().enumerate() {
+        if turned_away[i].load(Ordering::Relaxed) {
+            rejected += 1;
+            continue;
+        }
         let resp = reply.wait();
         latencies.push(resp.latency);
         batch_sum += resp.batch_size;
@@ -209,6 +231,7 @@ pub fn run_server(
     let completed = latencies.len();
     ServeReport {
         completed,
+        rejected,
         wall_seconds: wall,
         throughput_qps: if wall > 0.0 { completed as f64 / wall } else { 0.0 },
         p50_ms: quantile_ms(&latencies, 0.50),
@@ -251,15 +274,47 @@ mod tests {
             max_wait_us: 100,
             workers: 2,
             offered_load: 0.0,
+            queue_cap: 0,
         };
         let report = run_server(&model, 784, &inputs, &cfg);
         assert_eq!(report.completed, 24);
+        assert_eq!(report.rejected, 0, "unbounded queue never rejects");
         assert!(report.p50_ms > 0.0);
         assert!(report.p99_ms >= report.p50_ms);
         assert!(report.mean_batch >= 1.0);
         let j = report.to_json();
         assert_eq!(j.get("completed").as_usize(), Some(24));
+        assert_eq!(j.get("rejected").as_usize(), Some(0));
         assert_eq!(j.get("max_batch").as_usize(), Some(4));
+        assert_eq!(j.get("queue_cap").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn bounded_queue_run_completes_and_counts_rejections() {
+        // open loop far above the engine's drain rate with a 1-deep queue
+        // and a long batching deadline: most submits land while the queue
+        // is occupied and are turned away, yet the run terminates and
+        // accounts for every request either way
+        let model = Arc::new(models::build("mlp", 3).unwrap());
+        let inputs = Mat::from_fn(4, 784, |r, c| ((r * 31 + c) % 17) as f32 * 0.1);
+        let cfg = ServeConfig {
+            requests: 64,
+            offered_load: 1e6,
+            max_batch: 1,
+            max_wait_us: 2_000,
+            workers: 1,
+            concurrency: 4,
+            queue_cap: 1,
+        };
+        let report = run_server(&model, 784, &inputs, &cfg);
+        assert_eq!(report.completed + report.rejected, 64);
+        assert!(report.completed >= 1, "admitted head of the burst");
+        let j = report.to_json();
+        assert_eq!(
+            j.get("rejected").as_usize(),
+            Some(report.rejected),
+            "report JSON carries the rejection count"
+        );
     }
 
     #[test]

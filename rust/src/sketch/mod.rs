@@ -36,6 +36,16 @@ pub struct SketchScratch {
     /// `std::mem::take` around planning so it can coexist with the
     /// borrowed kept list.
     pub dwg: Vec<f32>,
+    /// When armed (see [`SketchScratch::begin_kept_log`]), every
+    /// `plan_columns` call appends a copy of its kept list here, in call
+    /// order. The data-parallel sparse reducer replays this log to know
+    /// which gradient rows each gated GEMM actually populated, without
+    /// re-running the gates. Off by default — the activation-stash path
+    /// also plans columns during the forward, and only backward plans
+    /// describe gradient sparsity.
+    log_on: bool,
+    log_len: usize,
+    log: Vec<Vec<(usize, f32)>>,
 }
 
 impl SketchScratch {
@@ -58,6 +68,31 @@ impl SketchScratch {
             + self.z.capacity() * size_of::<bool>()
             + self.kept.capacity() * size_of::<(usize, f32)>()
             + self.dwg.capacity() * size_of::<f32>()
+            + self
+                .log
+                .iter()
+                .map(|l| l.capacity() * size_of::<(usize, f32)>())
+                .sum::<usize>()
+    }
+
+    /// Arm the kept-list log and reset its cursor. The entry buffers are
+    /// reused across steps (clear + refill), so a steady-state logged
+    /// backward allocates nothing once warm.
+    pub fn begin_kept_log(&mut self) {
+        self.log_on = true;
+        self.log_len = 0;
+    }
+
+    /// Disarm the kept-list log (entries stay readable until the next
+    /// [`SketchScratch::begin_kept_log`]).
+    pub fn end_kept_log(&mut self) {
+        self.log_on = false;
+    }
+
+    /// Kept lists recorded since the last `begin_kept_log`, one per
+    /// `plan_columns` call, in call order.
+    pub fn kept_log(&self) -> &[Vec<(usize, f32)>] {
+        &self.log[..self.log_len]
     }
 
     /// Run the full pipeline for one backward site on the output gradient
@@ -89,6 +124,15 @@ impl SketchScratch {
             correlated_bernoulli_into(rng, &self.p, &mut self.z);
         }
         kept_columns_into(&self.z, &self.p, &mut self.kept);
+        if self.log_on {
+            if self.log_len == self.log.len() {
+                self.log.push(Vec::new());
+            }
+            let entry = &mut self.log[self.log_len];
+            entry.clear();
+            entry.extend_from_slice(&self.kept);
+            self.log_len += 1;
+        }
         &self.kept
     }
 

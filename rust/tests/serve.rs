@@ -96,6 +96,7 @@ fn dynamic_batcher_delivers_bitwise_identical_logits() {
     let queue = RequestQueue::new(BatcherConfig {
         max_batch: 4,
         max_wait: Duration::from_micros(100),
+        queue_cap: 0,
     });
     let n = 18usize;
     let mut handles = Vec::with_capacity(n);
@@ -128,7 +129,7 @@ fn dynamic_batcher_delivers_bitwise_identical_logits() {
         for i in 0..n {
             let req = Request::new(i as u64, x.row(i % 6).to_vec());
             handles.push(req.reply.clone());
-            queue.submit(req);
+            queue.submit(req).unwrap();
         }
         queue.close();
         server.join().unwrap();
@@ -192,9 +193,11 @@ fn train_save_serve_end_to_end() {
         max_wait_us: 100,
         workers: 2,
         offered_load: 0.0,
+        queue_cap: 0,
     };
     let report = serving::serve_checkpoint(&path, &scfg).unwrap();
     assert_eq!(report.completed, 32);
+    assert_eq!(report.rejected, 0);
     assert!(report.p50_ms > 0.0);
     assert!(report.p99_ms >= report.p50_ms);
     // checkpoint-loaded engine == in-process eval, bit for bit
