@@ -347,7 +347,7 @@ fn bench_native_step(filter: &str, rep: &mut Report) {
         let y = train_ds.y[..batch].to_vec();
         let mut step = 0usize;
         let med = time_median(7, || {
-            trainer.step(&x, &y, step);
+            trainer.step(&x, &y, step).expect("step");
             step += 1;
         });
         println!(
@@ -388,7 +388,7 @@ fn bench_native_models(filter: &str, rep: &mut Report) {
             let y = train_ds.y[..batch].to_vec();
             let mut step = 0usize;
             let med = time_median(5, || {
-                trainer.step(&x, &y, step);
+                trainer.step(&x, &y, step).expect("step");
                 step += 1;
             });
             let wb = trainer.workspace_bytes();
@@ -443,7 +443,7 @@ fn bench_native_memory(filter: &str, rep: &mut Report) {
             let y = train_ds.y[..batch].to_vec();
             let mut step = 0usize;
             let med = time_median(5, || {
-                trainer.step(&x, &y, step);
+                trainer.step(&x, &y, step).expect("step");
                 step += 1;
             });
             // steady-state footprint: stash arenas are populated after
@@ -497,6 +497,7 @@ fn bench_serve_throughput(filter: &str, rep: &mut Report) {
                 offered_load: offered,
                 concurrency: 4,
                 queue_cap: 0,
+                request_timeout_us: 0,
             };
             let r = run_server(&model, ds.dim, &inputs, &cfg);
             println!(
@@ -545,7 +546,7 @@ fn bench_dp_scaling(filter: &str, rep: &mut Report) {
             let y = train_ds.y[..batch].to_vec();
             let mut step = 0usize;
             let med = time_median(5, || {
-                trainer.step(&x, &y, step);
+                trainer.step(&x, &y, step).expect("step");
                 step += 1;
             });
             let stats = trainer.exchange_stats().expect("replica stats");

@@ -73,6 +73,11 @@ pub struct ServeConfig {
     /// submit that would grow the queue past this is rejected with a
     /// typed error instead of waiting. `0` = unbounded (the default).
     pub queue_cap: usize,
+    /// Per-request deadline in microseconds (`--request-timeout-us`): a
+    /// queued request older than this is resolved with a typed
+    /// `DeadlineExceeded` instead of being served. `0` = no deadline
+    /// (the default).
+    pub request_timeout_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -85,6 +90,7 @@ impl Default for ServeConfig {
             offered_load: 0.0,
             concurrency: 4,
             queue_cap: 0,
+            request_timeout_us: 0,
         }
     }
 }
@@ -165,6 +171,22 @@ pub struct TrainConfig {
     /// each step's reduced gradient one step late (communication-hiding
     /// model), `0` synchronously.
     pub stale: usize,
+    /// Fault-injection spec (`--fault-spec`, DESIGN.md §7.7): comma-
+    /// separated `name@key=value` terms parsed by
+    /// `crate::faults::FaultPlan`. Empty (the default) falls back to the
+    /// `UAVJP_FAULTS` env var, then to the no-fault plan.
+    pub fault_spec: String,
+    /// Write a resumable (version-2) checkpoint to `ckpt_path` every this
+    /// many steps (`--ckpt-every`); `0` (the default) disables periodic
+    /// checkpointing.
+    pub ckpt_every: usize,
+    /// Destination of periodic checkpoints (the CLI wires `--save-ckpt`
+    /// here); must be non-empty when `ckpt_every > 0`.
+    pub ckpt_path: String,
+    /// Resume from this checkpoint (`--resume`): restore parameters,
+    /// optimizer state, step counter and every RNG stream, then continue
+    /// the interrupted trajectory bit-identically. Empty = fresh run.
+    pub resume: String,
 }
 
 impl Default for TrainConfig {
@@ -195,6 +217,10 @@ impl Default for TrainConfig {
             replicas: 0,
             reduce: "dense".into(),
             stale: 0,
+            fault_spec: String::new(),
+            ckpt_every: 0,
+            ckpt_path: String::new(),
+            resume: String::new(),
         }
     }
 }
@@ -242,6 +268,10 @@ impl TrainConfig {
             ("replicas", Value::num(self.replicas as f64)),
             ("reduce", Value::str(&self.reduce)),
             ("stale", Value::num(self.stale as f64)),
+            ("fault_spec", Value::str(&self.fault_spec)),
+            ("ckpt_every", Value::num(self.ckpt_every as f64)),
+            ("ckpt_path", Value::str(&self.ckpt_path)),
+            ("resume", Value::str(&self.resume)),
         ])
     }
 
@@ -300,6 +330,18 @@ impl TrainConfig {
             replicas: v.get("replicas").as_usize().unwrap_or(d.replicas),
             reduce: v.get("reduce").as_str().unwrap_or(&d.reduce).to_string(),
             stale: v.get("stale").as_usize().unwrap_or(d.stale),
+            fault_spec: v
+                .get("fault_spec")
+                .as_str()
+                .unwrap_or(&d.fault_spec)
+                .to_string(),
+            ckpt_every: v.get("ckpt_every").as_usize().unwrap_or(d.ckpt_every),
+            ckpt_path: v
+                .get("ckpt_path")
+                .as_str()
+                .unwrap_or(&d.ckpt_path)
+                .to_string(),
+            resume: v.get("resume").as_str().unwrap_or(&d.resume).to_string(),
         })
     }
 }
@@ -630,6 +672,32 @@ mod tests {
         assert_eq!(c3.stale, 0);
         // serve admission control: default unbounded
         assert_eq!(ServeConfig::default().queue_cap, 0);
+    }
+
+    #[test]
+    fn fault_fields_roundtrip_and_default() {
+        let mut c = TrainConfig::default();
+        assert!(c.fault_spec.is_empty());
+        assert_eq!(c.ckpt_every, 0);
+        assert!(c.ckpt_path.is_empty());
+        assert!(c.resume.is_empty());
+        c.fault_spec = "lane_drop@p=0.1,kill@step=20".into();
+        c.ckpt_every = 20;
+        c.ckpt_path = "results/chaos.ckpt".into();
+        c.resume = "results/chaos.ckpt".into();
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.fault_spec, "lane_drop@p=0.1,kill@step=20");
+        assert_eq!(c2.ckpt_every, 20);
+        assert_eq!(c2.ckpt_path, "results/chaos.ckpt");
+        assert_eq!(c2.resume, "results/chaos.ckpt");
+        // configs without the new keys fall back to defaults
+        let legacy = crate::json::parse(r#"{"model":"mlp"}"#).unwrap();
+        let c3 = TrainConfig::from_json(&legacy).unwrap();
+        assert!(c3.fault_spec.is_empty());
+        assert_eq!(c3.ckpt_every, 0);
+        assert!(c3.resume.is_empty());
+        // serve deadline: default disabled
+        assert_eq!(ServeConfig::default().request_timeout_us, 0);
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Deterministic fault injection (DESIGN.md §7.7).
+//!
+//! A [`FaultPlan`] is parsed once from `--fault-spec` (or the
+//! `UAVJP_FAULTS` env var, the CI hook) and drives every injection point
+//! in the stack from its **own** PCG64 stream ([`FaultPlan::stream`]), so
+//! a chaos run replays bit-for-bit and never perturbs the training
+//! streams: a run whose spec arms no stochastic fault consumes zero
+//! fault-stream draws and is byte-identical to a run with no spec at all.
+//!
+//! Grammar: comma-separated `name@key=value` terms, each kind at most
+//! once —
+//!
+//! | term | injection point |
+//! |---|---|
+//! | `lane_drop@p=P` | each of the 8 reduce lanes is dropped i.i.d. with probability `P` every step; survivors are `1/(1-P)`-rescaled ([`crate::replicate`]) |
+//! | `nan_grad@step=K` | poison the reduced gradient with a NaN at step `K` (one step) |
+//! | `nan_grad@from=K` | poison every step ≥ `K` (drives the consecutive-skip bail) |
+//! | `ckpt_truncate@step=K` | the periodic checkpoint at step `K` tears mid-write: half the bytes land in `<path>.tmp`, no rename |
+//! | `kill@step=K` | the trainer exits with a typed [`InjectedKill`] after executing step `K` (and its periodic save, if scheduled) |
+//! | `worker_panic@step=K` | replica 0's step closure panics at step `K` (exercises `catch_unwind` + degraded reduce end to end) |
+
+use crate::replicate::LANES;
+use crate::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Typed error for a gradient that stayed non-finite for
+/// [`MAX_CONSECUTIVE_SKIPS`] consecutive steps: the trainer skips
+/// non-finite updates, but a persistent one means the run has diverged
+/// and silent spinning would only burn the step budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NonFiniteLoss {
+    /// Step at which the bail triggered.
+    pub step: usize,
+    /// Consecutive skipped steps at that point.
+    pub skips: u32,
+}
+
+impl fmt::Display for NonFiniteLoss {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "non-finite gradient for {} consecutive steps (last at step {}): \
+             run has diverged",
+            self.skips, self.step
+        )
+    }
+}
+
+impl std::error::Error for NonFiniteLoss {}
+
+/// Skipped-step budget before [`NonFiniteLoss`] aborts the run.
+pub const MAX_CONSECUTIVE_SKIPS: u32 = 5;
+
+/// Typed error for an injected `kill@step=K`: the trainer stops after
+/// step `K` exactly where a real SIGKILL would land (post-step, after
+/// any periodic checkpoint), so CI can assert `--resume` reconstructs
+/// the uninterrupted trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedKill {
+    /// Last step that executed before the kill.
+    pub step: usize,
+}
+
+impl fmt::Display for InjectedKill {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected kill after step {}", self.step)
+    }
+}
+
+impl std::error::Error for InjectedKill {}
+
+/// Parsed, validated fault schedule. `Default` is the no-fault plan.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Per-lane i.i.d. drop probability (`0` disarms lane dropout).
+    pub lane_drop_p: f64,
+    /// Poison the gradient at exactly this step.
+    pub nan_grad_step: Option<usize>,
+    /// Poison the gradient at every step ≥ this.
+    pub nan_grad_from: Option<usize>,
+    /// Tear the periodic checkpoint written at this step.
+    pub ckpt_truncate_step: Option<usize>,
+    /// Bail with [`InjectedKill`] after this step.
+    pub kill_step: Option<usize>,
+    /// Panic replica 0's worker closure at this step.
+    pub worker_panic_step: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Parse a `--fault-spec` string. Empty spec → the no-fault plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let mut seen: Vec<&str> = Vec::new();
+        for term in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (name, kv) = term.split_once('@').unwrap_or((term, ""));
+            let (key, val) = kv.split_once('=').unwrap_or((kv, ""));
+            if seen.contains(&name) {
+                bail!("fault spec repeats `{name}` (each kind at most once)");
+            }
+            let step = || -> Result<usize> {
+                if key != "step" {
+                    bail!("fault `{name}` wants `@step=K`, got `{term}`");
+                }
+                val.parse().map_err(|_| {
+                    anyhow::anyhow!("fault `{name}`: bad step `{val}` in `{term}`")
+                })
+            };
+            match name {
+                "lane_drop" => {
+                    if key != "p" {
+                        bail!("fault `lane_drop` wants `@p=P`, got `{term}`");
+                    }
+                    let p: f64 = val.parse().map_err(|_| {
+                        anyhow::anyhow!("fault `lane_drop`: bad p `{val}`")
+                    })?;
+                    if !(0.0..1.0).contains(&p) {
+                        bail!("fault `lane_drop`: p={p} out of [0,1)");
+                    }
+                    plan.lane_drop_p = p;
+                }
+                "nan_grad" => match key {
+                    "step" => plan.nan_grad_step = Some(step()?),
+                    "from" => {
+                        plan.nan_grad_from = Some(val.parse().map_err(|_| {
+                            anyhow::anyhow!("fault `nan_grad`: bad from `{val}`")
+                        })?)
+                    }
+                    _ => bail!(
+                        "fault `nan_grad` wants `@step=K` or `@from=K`, \
+                         got `{term}`"
+                    ),
+                },
+                "ckpt_truncate" => plan.ckpt_truncate_step = Some(step()?),
+                "kill" => plan.kill_step = Some(step()?),
+                "worker_panic" => plan.worker_panic_step = Some(step()?),
+                other => bail!(
+                    "unknown fault `{other}` (want \
+                     lane_drop@p=|nan_grad@step=|nan_grad@from=|\
+                     ckpt_truncate@step=|kill@step=|worker_panic@step=)"
+                ),
+            }
+            seen.push(name);
+        }
+        Ok(plan)
+    }
+
+    /// Resolve a config's `fault_spec`, falling back to the
+    /// `UAVJP_FAULTS` env var when the config carries none (the same
+    /// idiom `UAVJP_ACTPOLICY` uses for the CI matrix).
+    pub fn from_config(spec: &str) -> Result<FaultPlan> {
+        let env = std::env::var("UAVJP_FAULTS").ok();
+        Self::from_spec_or_env(spec, env.as_deref())
+    }
+
+    /// [`FaultPlan::from_config`] with the env value injected — the
+    /// testable seam (tests never mutate process-global env).
+    pub fn from_spec_or_env(spec: &str, env: Option<&str>) -> Result<FaultPlan> {
+        if !spec.is_empty() {
+            Self::parse(spec)
+        } else {
+            Self::parse(env.unwrap_or(""))
+        }
+    }
+
+    /// The dedicated fault stream: disjoint from every training stream
+    /// (gate `seed^0x9e3779b9`, act `seed^0x51ac7`, batch `seed+77`).
+    pub fn stream(seed: u64) -> Pcg64 {
+        Pcg64::new(seed ^ 0xfa0175, 17)
+    }
+
+    /// Whether any fault is armed at all (a disarmed plan lets the
+    /// trainer skip the fault bookkeeping entirely).
+    pub fn is_armed(&self) -> bool {
+        *self != FaultPlan::default()
+    }
+
+    /// Inverse inclusion probability for injected lane dropout. Applied
+    /// on **every** step while `lane_drop` is armed — rescaling only the
+    /// steps that happen to drop a lane would bias the estimator.
+    pub fn lane_gain(&self) -> f32 {
+        if self.lane_drop_p > 0.0 {
+            (1.0 / (1.0 - self.lane_drop_p)) as f32
+        } else {
+            1.0
+        }
+    }
+
+    /// Draw this step's lane-drop mask: 8 i.i.d. Bernoulli draws when
+    /// armed, **zero** draws when not — so arming an unrelated fault
+    /// never shifts the stream.
+    pub fn draw_lane_drops(&self, rng: &mut Pcg64) -> [bool; LANES] {
+        let mut drops = [false; LANES];
+        if self.lane_drop_p > 0.0 {
+            for d in drops.iter_mut() {
+                *d = rng.bernoulli(self.lane_drop_p);
+            }
+        }
+        drops
+    }
+
+    /// Should this step's reduced gradient be poisoned with a NaN?
+    pub fn nan_grad_at(&self, step: usize) -> bool {
+        self.nan_grad_step == Some(step)
+            || self.nan_grad_from.is_some_and(|k| step >= k)
+    }
+
+    /// Should the periodic checkpoint at this step tear mid-write?
+    pub fn truncate_ckpt_at(&self, step: usize) -> bool {
+        self.ckpt_truncate_step == Some(step)
+    }
+
+    /// Should the trainer die after executing this step?
+    pub fn kill_after(&self, step: usize) -> bool {
+        self.kill_step == Some(step)
+    }
+
+    /// Replica whose worker closure panics at this step (always 0: one
+    /// deterministic victim is enough to exercise the unwind path).
+    pub fn worker_panic_at(&self, step: usize) -> Option<usize> {
+        (self.worker_panic_step == Some(step)).then_some(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "lane_drop@p=0.1, ckpt_truncate@step=40, nan_grad@step=25, \
+             kill@step=60, worker_panic@step=3",
+        )
+        .unwrap();
+        assert_eq!(p.lane_drop_p, 0.1);
+        assert_eq!(p.nan_grad_step, Some(25));
+        assert_eq!(p.ckpt_truncate_step, Some(40));
+        assert_eq!(p.kill_step, Some(60));
+        assert_eq!(p.worker_panic_step, Some(3));
+        assert!(p.is_armed());
+        assert!(!FaultPlan::parse("").unwrap().is_armed());
+        let from = FaultPlan::parse("nan_grad@from=7").unwrap();
+        assert!(!from.nan_grad_at(6));
+        assert!(from.nan_grad_at(7) && from.nan_grad_at(99));
+    }
+
+    #[test]
+    fn bad_specs_fail_loudly() {
+        for (spec, needle) in [
+            ("lane_drop@p=1.5", "out of [0,1)"),
+            ("lane_drop@step=3", "wants `@p=P`"),
+            ("nan_grad@p=0.1", "wants `@step=K` or `@from=K`"),
+            ("kill@step=x", "bad step"),
+            ("kill@step=1,kill@step=2", "repeats"),
+            ("gamma_ray@step=1", "unknown fault"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(format!("{err}").contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn env_fallback_only_fills_an_empty_spec() {
+        let p = FaultPlan::from_spec_or_env("", Some("kill@step=9")).unwrap();
+        assert_eq!(p.kill_step, Some(9));
+        let p =
+            FaultPlan::from_spec_or_env("kill@step=1", Some("kill@step=9"))
+                .unwrap();
+        assert_eq!(p.kill_step, Some(1));
+        assert!(!FaultPlan::from_spec_or_env("", None).unwrap().is_armed());
+    }
+
+    #[test]
+    fn lane_draws_are_deterministic_and_gated_on_p() {
+        let plan = FaultPlan::parse("lane_drop@p=0.5").unwrap();
+        let mut a = FaultPlan::stream(7);
+        let mut b = FaultPlan::stream(7);
+        let masks: Vec<[bool; LANES]> =
+            (0..50).map(|_| plan.draw_lane_drops(&mut a)).collect();
+        assert_eq!(
+            masks,
+            (0..50).map(|_| plan.draw_lane_drops(&mut b)).collect::<Vec<_>>()
+        );
+        assert!(masks.iter().flatten().any(|&d| d));
+        assert!(masks.iter().flatten().any(|&d| !d));
+        // a disarmed (or lane_drop-free) plan consumes zero draws
+        let quiet = FaultPlan::parse("kill@step=3").unwrap();
+        let mut c = FaultPlan::stream(7);
+        assert_eq!(quiet.draw_lane_drops(&mut c), [false; LANES]);
+        assert_eq!(c.next_u64(), FaultPlan::stream(7).next_u64());
+        assert_eq!(quiet.lane_gain(), 1.0);
+        assert_eq!(plan.lane_gain(), 2.0);
+    }
+
+    #[test]
+    fn typed_errors_render_their_context() {
+        let e = NonFiniteLoss { step: 12, skips: 5 };
+        assert!(format!("{e}").contains("5 consecutive"));
+        let k = InjectedKill { step: 40 };
+        assert!(format!("{k}").contains("step 40"));
+    }
+}

@@ -20,7 +20,8 @@
 //!   paper's experiments ([`coordinator`]), inference serving over saved
 //!   checkpoints ([`serve`]), pipeline-parallel gradient compression
 //!   ([`pipeline`]), data-parallel replica groups with sketch-compressed
-//!   gradient all-reduce ([`replicate`]), and the offline substrates
+//!   gradient all-reduce ([`replicate`]), deterministic fault injection
+//!   and recovery ([`faults`]), and the offline substrates
 //!   ([`json`], [`rng`], [`tensor`], [`sketch`], [`pool`], [`config`],
 //!   [`metrics`], [`ptest`], [`cli`]).
 
@@ -34,6 +35,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod faults;
 pub mod json;
 pub mod metrics;
 pub mod native;

@@ -31,6 +31,12 @@ commands:
               --reduce dense|sparse  (gradient exchange under --replicas:
                 sparse union-merges the gated GEMMs' kept columns)
               --stale 0|1  (apply each reduced gradient one step late)
+              --fault-spec s  (deterministic fault injection, e.g.
+                lane_drop@p=0.1,kill@step=20; env UAVJP_FAULTS when unset)
+              --ckpt-every <n>  (write a resumable checkpoint to the
+                --save-ckpt path every n steps; atomic tmp+rename)
+              --resume <ckpt>  (continue an interrupted run bit-identically
+                from a resumable checkpoint)
               [--preset smoke|ci|paper] [--out run.json]
               [--save-ckpt model.ckpt]  (native backend: save the final
                 parameters as a versioned checkpoint `serve` can load)
@@ -41,6 +47,8 @@ commands:
               --offered-load <qps>  (open-loop arrivals; 0 = closed loop
                 at --concurrency in-flight requests)
               --queue-cap <n>  (reject submits past n queued; 0 = unbounded)
+              --request-timeout-us <n>  (expire requests still queued after
+                n µs with a typed DeadlineExceeded; 0 = no deadline)
               [--out serve_report.json]
   sweep       budget sweep for one method (LR cross-validated)
               --model <m> --method <m> [--budgets 0.05,0.1,...] [--preset ..]
@@ -241,6 +249,12 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.replicas = args.usize_or("replicas", cfg.replicas)?;
     cfg.reduce = args.str_or("reduce", &cfg.reduce);
     cfg.stale = args.usize_or("stale", cfg.stale)?;
+    cfg.fault_spec = args.str_or("fault-spec", &cfg.fault_spec);
+    cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every)?;
+    cfg.resume = args.str_or("resume", &cfg.resume);
+    if let Some(path) = args.str_opt("save-ckpt") {
+        cfg.ckpt_path = path.to_string();
+    }
     // Reject nonsense DP flags here with the usage hint rather than deep
     // in the trainer: an *explicit* `--replicas 0` is a contradiction
     // (0 means "no replica group", which is the absence of the flag).
@@ -261,6 +275,16 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     if cfg.replicas > 0 && cfg.backend != Backend::Native {
         anyhow::bail!("--replicas runs on the native backend only");
     }
+    if cfg.backend != Backend::Native
+        && (!cfg.fault_spec.is_empty()
+            || cfg.ckpt_every > 0
+            || !cfg.resume.is_empty())
+    {
+        anyhow::bail!(
+            "--fault-spec/--ckpt-every/--resume run on the native backend \
+             only"
+        );
+    }
 
     eprintln!(
         "[train:{}] {} / {} p={} lr={} steps={}",
@@ -273,27 +297,34 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     );
     let t0 = std::time::Instant::now();
     let mut exchange: Option<uavjp::replicate::ExchangeStats> = None;
-    let curve = match args.str_opt("save-ckpt") {
-        Some(path) => {
-            if cfg.backend != Backend::Native {
-                anyhow::bail!(
-                    "--save-ckpt needs --backend native (checkpoints hold \
-                     the native flat parameter registry)"
-                );
-            }
-            let curve = serving::train_and_save(&cfg, std::path::Path::new(path))?;
-            eprintln!("saved checkpoint to {path}");
-            curve
+    let mut steps_skipped = 0u64;
+    // Runs that checkpoint, resume, inject faults, or reduce across
+    // replicas drive the native trainer directly so the exchange byte
+    // accounting and fault counters survive the run.
+    let direct = cfg.replicas > 0
+        || !cfg.ckpt_path.is_empty()
+        || cfg.ckpt_every > 0
+        || !cfg.resume.is_empty()
+        || !cfg.fault_spec.is_empty();
+    let curve = if direct {
+        if cfg.backend != Backend::Native {
+            anyhow::bail!(
+                "--save-ckpt needs --backend native (checkpoints hold the \
+                 native flat parameter registry)"
+            );
         }
-        // data-parallel runs drive the native trainer directly so the
-        // gradient-exchange byte accounting survives the run
-        None if cfg.replicas > 0 => {
-            let mut t = uavjp::native::NativeTrainer::new(cfg.clone())?;
-            let curve = t.run()?;
-            exchange = t.exchange_stats();
-            curve
+        let mut t = uavjp::native::NativeTrainer::new(cfg.clone())?;
+        let run = t.run();
+        exchange = t.exchange_stats();
+        steps_skipped = t.steps_skipped();
+        let curve = run?;
+        if !cfg.ckpt_path.is_empty() {
+            t.save_checkpoint(std::path::Path::new(&cfg.ckpt_path))?;
+            eprintln!("saved checkpoint to {}", cfg.ckpt_path);
         }
-        None => be.train(&cfg)?,
+        curve
+    } else {
+        be.train(&cfg)?
     };
     let dt = t0.elapsed().as_secs_f64();
     let (el, ea, _) = curve.evals.last().copied().unwrap_or((0, f64::NAN, f64::NAN));
@@ -311,12 +342,23 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
             s.sparse_per_step() / 1024.0,
             100.0 * s.ratio()
         );
+        if s.lanes_dropped > 0 {
+            println!(
+                "faults: {} lanes dropped over {} degraded steps \
+                 (unbiased inverse-probability compensation applied)",
+                s.lanes_dropped, s.steps_degraded
+            );
+        }
+    }
+    if steps_skipped > 0 {
+        println!("faults: {steps_skipped} non-finite optimizer steps skipped");
     }
     if let Some(out) = args.str_opt("out") {
         let mut fields = vec![
             ("config", cfg.to_json()),
             ("curve", curve.to_json()),
             ("wall_seconds", json::Value::num(dt)),
+            ("steps_skipped", json::Value::num(steps_skipped as f64)),
         ];
         if let Some(s) = exchange {
             fields.push((
@@ -325,6 +367,14 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
                     ("steps", json::Value::num(s.steps as f64)),
                     ("dense_bytes", json::Value::num(s.dense_bytes as f64)),
                     ("sparse_bytes", json::Value::num(s.sparse_bytes as f64)),
+                    (
+                        "lanes_dropped",
+                        json::Value::num(s.lanes_dropped as f64),
+                    ),
+                    (
+                        "steps_degraded",
+                        json::Value::num(s.steps_degraded as f64),
+                    ),
                 ]),
             ));
         }
@@ -359,14 +409,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         offered_load: args.f64_or("offered-load", d.offered_load)?,
         concurrency: args.usize_or("concurrency", d.concurrency)?,
         queue_cap: args.usize_or("queue-cap", d.queue_cap)?,
+        request_timeout_us: args
+            .usize_or("request-timeout-us", d.request_timeout_us as usize)?
+            as u64,
     };
     let report = serving::serve_checkpoint(std::path::Path::new(ckpt), &cfg)?;
     println!(
-        "served {} requests in {:.2}s ({} rejected): {:.1} qps sustained, \
-         p50 {:.3} ms, p99 {:.3} ms, mean batch {:.2}",
+        "served {} requests in {:.2}s ({} rejected, {} timed out): \
+         {:.1} qps sustained, p50 {:.3} ms, p99 {:.3} ms, mean batch {:.2}",
         report.completed,
         report.wall_seconds,
         report.rejected,
+        report.timed_out,
         report.throughput_qps,
         report.p50_ms,
         report.p99_ms,

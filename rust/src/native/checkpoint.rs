@@ -21,6 +21,28 @@
 //! | slots        | —    | per slot: u64 length, then `len` f32 values   |
 //! | checksum     | 8    | u64 FNV-1a over every preceding byte          |
 //!
+//! **Version 2** (what `--ckpt-every` and the trainer's save hook write)
+//! inserts a [`TrainState`] block between `arch digest` and `slot count`
+//! — everything `train --resume` needs to continue bit-identically:
+//!
+//! | field             | size | contents                                  |
+//! |-------------------|------|-------------------------------------------|
+//! | step              | 8    | u64 steps already executed                |
+//! | steps skipped     | 8    | u64 non-finite-gradient skips so far      |
+//! | consecutive skips | 4    | u32 current skip streak                   |
+//! | optimizer kind    | 1    | u8: 0 = sgd, 1 = momentum, 2 = adam       |
+//! | opt t             | —    | u32 count, then count f64-bit u64 values  |
+//! | opt m             | —    | slot-vec (sgd/momentum velocity, adam m)  |
+//! | opt v             | —    | slot-vec (adam v; empty for sgd)          |
+//! | sk / act / fault  | 96   | 3 × 4 u64 raw PCG64 words per stream      |
+//! | lane count        | 1    | u8: 0 (plain) or 8 (replicated)           |
+//! | lane streams      | —    | per lane: sk + act raw words (8 u64)      |
+//!
+//! where *slot-vec* is a u32 count followed by per-entry u64 length +
+//! f32 values. [`save_bytes`] still emits version 1 (param-only, what
+//! `serve` needs), so pre-existing artifacts stay bit-identical; version
+//! 1 files load with `train: None`.
+//!
 //! Loading re-parses defensively and returns a typed [`CkptError`] (never
 //! a panic) for every failure class: short or oversized files, foreign
 //! magic, unknown versions, payload corruption (trailing checksum), a
@@ -39,7 +61,7 @@
 //! then reject new files loudly ([`CkptError::UnsupportedVersion`])
 //! instead of misreading them.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use super::layer::Layer;
 use super::models;
@@ -49,7 +71,8 @@ use super::sequential::Sequential;
 pub const CKPT_MAGIC: [u8; 8] = *b"UAVJPCKP";
 
 /// Current wire-format version (see the module docs for the bump recipe).
-pub const CKPT_VERSION: u32 = 1;
+/// Readers speak every version in `1..=CKPT_VERSION`.
+pub const CKPT_VERSION: u32 = 2;
 
 /// Typed checkpoint failure. Implements [`std::error::Error`], so `?`
 /// converts into `anyhow::Result` at CLI call sites while tests match on
@@ -96,7 +119,7 @@ impl std::fmt::Display for CkptError {
             CkptError::UnsupportedVersion { found } => write!(
                 f,
                 "checkpoint format v{found} unsupported (this build reads \
-                 v{CKPT_VERSION})"
+                 v1..=v{CKPT_VERSION})"
             ),
             CkptError::BadKey => write!(f, "registry key is not UTF-8"),
             CkptError::TrailingBytes { extra } => {
@@ -152,6 +175,38 @@ pub fn arch_digest(model_name: &str, slot_lens: &[usize]) -> u64 {
     fnv1a(&bytes)
 }
 
+/// Mid-run training state, the version-2 payload: step counters,
+/// optimizer slots and the raw PCG64 words of every RNG stream, so
+/// `train --resume` continues the interrupted trajectory bit-for-bit
+/// (DESIGN.md §7.7). Plain data — the trainer re-validates everything
+/// against its own config before applying it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrainState {
+    /// Steps already executed (resume starts at this step index).
+    pub step: u64,
+    /// Non-finite-gradient steps skipped so far.
+    pub steps_skipped: u64,
+    /// Current consecutive-skip streak.
+    pub consecutive_skips: u32,
+    /// Optimizer kind tag: 0 = sgd, 1 = momentum, 2 = adam.
+    pub opt_kind: u8,
+    /// Adam per-slot timestep counters (empty for sgd/momentum).
+    pub opt_t: Vec<f64>,
+    /// First optimizer moment: sgd/momentum velocity, adam `m`.
+    pub opt_m: Vec<Vec<f32>>,
+    /// Second optimizer moment: adam `v` (empty for sgd/momentum).
+    pub opt_v: Vec<Vec<f32>>,
+    /// Backward-gate stream ([`crate::rng::Pcg64::state_words`]).
+    pub sk: [u64; 4],
+    /// Activation-gate stream.
+    pub act: [u64; 4],
+    /// Fault-injection stream.
+    pub fault: [u64; 4],
+    /// Per-lane (sk, act) stream pairs; empty for plain runs, one entry
+    /// per lane of the fixed 8-lane grid for replicated runs.
+    pub lanes: Vec<[[u64; 4]; 2]>,
+}
+
 /// A parsed checkpoint: everything needed to rebuild the model in a fresh
 /// process ([`Checkpoint::build_model`]).
 #[derive(Clone, Debug)]
@@ -165,6 +220,9 @@ pub struct Checkpoint {
     pub arch_digest: u64,
     /// Flat parameter tensors, global slot order.
     pub slots: Vec<Vec<f32>>,
+    /// Mid-run training state (version ≥ 2 files only; `build_model`
+    /// ignores it, so serving never pays for it).
+    pub train: Option<TrainState>,
 }
 
 impl Checkpoint {
@@ -215,21 +273,81 @@ impl Checkpoint {
     }
 }
 
-/// Serialize a model's flat parameter registry (see the module docs for
-/// the layout). `model_name` must be the registry key that rebuilds this
-/// architecture at `seed`.
+/// Serialize a model's flat parameter registry as a **version 1**
+/// (param-only) checkpoint — everything `serve` needs, and bit-identical
+/// to what this crate has always written. `model_name` must be the
+/// registry key that rebuilds this architecture at `seed`.
 pub fn save_bytes(model_name: &str, seed: u64, model: &Sequential) -> Vec<u8> {
+    save_impl(model_name, seed, model, None)
+}
+
+/// Serialize a **version 2** checkpoint: the parameter registry plus the
+/// mid-run [`TrainState`] `train --resume` replays from.
+pub fn save_state_bytes(
+    model_name: &str,
+    seed: u64,
+    model: &Sequential,
+    train: &TrainState,
+) -> Vec<u8> {
+    save_impl(model_name, seed, model, Some(train))
+}
+
+/// Append a slot-vec (u32 count, per entry u64 length + f32 LE values).
+fn put_slot_vec(out: &mut Vec<u8>, slots: &[Vec<f32>]) {
+    out.extend_from_slice(&(slots.len() as u32).to_le_bytes());
+    for s in slots {
+        out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+        for v in s {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Append raw PCG64 words.
+fn put_pcg(out: &mut Vec<u8>, words: &[u64; 4]) {
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+fn save_impl(
+    model_name: &str,
+    seed: u64,
+    model: &Sequential,
+    train: Option<&TrainState>,
+) -> Vec<u8> {
     let slots: Vec<&[f32]> =
         model.layers.iter().flat_map(|l| l.params()).collect();
     let payload: usize = slots.iter().map(|s| 8 + 4 * s.len()).sum();
+    let version: u32 = if train.is_some() { 2 } else { 1 };
     let mut out = Vec::with_capacity(44 + model_name.len() + payload);
     out.extend_from_slice(&CKPT_MAGIC);
-    out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(model_name.len() as u32).to_le_bytes());
     out.extend_from_slice(model_name.as_bytes());
     out.extend_from_slice(&seed.to_le_bytes());
     let lens: Vec<usize> = slots.iter().map(|s| s.len()).collect();
     out.extend_from_slice(&arch_digest(model_name, &lens).to_le_bytes());
+    if let Some(t) = train {
+        out.extend_from_slice(&t.step.to_le_bytes());
+        out.extend_from_slice(&t.steps_skipped.to_le_bytes());
+        out.extend_from_slice(&t.consecutive_skips.to_le_bytes());
+        out.push(t.opt_kind);
+        out.extend_from_slice(&(t.opt_t.len() as u32).to_le_bytes());
+        for v in &t.opt_t {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        put_slot_vec(&mut out, &t.opt_m);
+        put_slot_vec(&mut out, &t.opt_v);
+        put_pcg(&mut out, &t.sk);
+        put_pcg(&mut out, &t.act);
+        put_pcg(&mut out, &t.fault);
+        out.push(t.lanes.len() as u8);
+        for lane in &t.lanes {
+            put_pcg(&mut out, &lane[0]);
+            put_pcg(&mut out, &lane[1]);
+        }
+    }
     out.extend_from_slice(&(slots.len() as u32).to_le_bytes());
     for s in &slots {
         out.extend_from_slice(&(s.len() as u64).to_le_bytes());
@@ -262,12 +380,47 @@ impl<'a> Cursor<'a> {
         Ok(out)
     }
 
+    fn u8(&mut self) -> Result<u8, CkptError> {
+        Ok(self.take(1)?[0])
+    }
+
     fn u32(&mut self) -> Result<u32, CkptError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
     fn u64(&mut self) -> Result<u64, CkptError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn pcg(&mut self) -> Result<[u64; 4], CkptError> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+
+    /// One f32 slot: u64 length then the values.
+    fn slot(&mut self) -> Result<Vec<f32>, CkptError> {
+        let len = usize::try_from(self.u64()?).map_err(|_| {
+            CkptError::Truncated { need: usize::MAX, have: self.buf.len() }
+        })?;
+        let nbytes = len.checked_mul(4).ok_or(CkptError::Truncated {
+            need: usize::MAX,
+            have: self.buf.len(),
+        })?;
+        let raw = self.take(nbytes)?;
+        let mut out = Vec::with_capacity(len);
+        for chunk in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().expect("4 bytes")));
+        }
+        Ok(out)
+    }
+
+    /// A slot-vec: u32 count then that many slots.
+    fn slot_vec(&mut self) -> Result<Vec<Vec<f32>>, CkptError> {
+        let count = self.u32()? as usize;
+        let mut out = Vec::with_capacity(count.min(1 << 16));
+        for _ in 0..count {
+            out.push(self.slot()?);
+        }
+        Ok(out)
     }
 
     fn remaining(&self) -> usize {
@@ -287,7 +440,7 @@ pub fn load_bytes(buf: &[u8]) -> Result<Checkpoint, CkptError> {
         return Err(CkptError::BadMagic);
     }
     let version = cur.u32()?;
-    if version != CKPT_VERSION {
+    if !(1..=CKPT_VERSION).contains(&version) {
         return Err(CkptError::UnsupportedVersion { found: version });
     }
     let key_len = cur.u32()? as usize;
@@ -296,23 +449,46 @@ pub fn load_bytes(buf: &[u8]) -> Result<Checkpoint, CkptError> {
         .to_string();
     let seed = cur.u64()?;
     let arch = cur.u64()?;
+    let train = if version >= 2 {
+        let step = cur.u64()?;
+        let steps_skipped = cur.u64()?;
+        let consecutive_skips = cur.u32()?;
+        let opt_kind = cur.u8()?;
+        let t_count = cur.u32()? as usize;
+        let mut opt_t = Vec::with_capacity(t_count.min(1 << 16));
+        for _ in 0..t_count {
+            opt_t.push(f64::from_bits(cur.u64()?));
+        }
+        let opt_m = cur.slot_vec()?;
+        let opt_v = cur.slot_vec()?;
+        let sk = cur.pcg()?;
+        let act = cur.pcg()?;
+        let fault = cur.pcg()?;
+        let lane_count = cur.u8()? as usize;
+        let mut lanes = Vec::with_capacity(lane_count);
+        for _ in 0..lane_count {
+            lanes.push([cur.pcg()?, cur.pcg()?]);
+        }
+        Some(TrainState {
+            step,
+            steps_skipped,
+            consecutive_skips,
+            opt_kind,
+            opt_t,
+            opt_m,
+            opt_v,
+            sk,
+            act,
+            fault,
+            lanes,
+        })
+    } else {
+        None
+    };
     let slot_count = cur.u32()? as usize;
     let mut slots = Vec::with_capacity(slot_count.min(1 << 16));
     for _ in 0..slot_count {
-        let len = usize::try_from(cur.u64()?).map_err(|_| {
-            CkptError::Truncated { need: usize::MAX, have: buf.len() }
-        })?;
-        let nbytes =
-            len.checked_mul(4).ok_or(CkptError::Truncated {
-                need: usize::MAX,
-                have: buf.len(),
-            })?;
-        let raw = cur.take(nbytes)?;
-        let mut slot = Vec::with_capacity(len);
-        for chunk in raw.chunks_exact(4) {
-            slot.push(f32::from_le_bytes(chunk.try_into().expect("4 bytes")));
-        }
-        slots.push(slot);
+        slots.push(cur.slot()?);
     }
     match cur.remaining() {
         8 => {}
@@ -330,18 +506,50 @@ pub fn load_bytes(buf: &[u8]) -> Result<Checkpoint, CkptError> {
     if fnv1a(&buf[..buf.len() - 8]) != stored {
         return Err(CkptError::ChecksumMismatch);
     }
-    Ok(Checkpoint { model_name, seed, arch_digest: arch, slots })
+    Ok(Checkpoint { model_name, seed, arch_digest: arch, slots, train })
 }
 
-/// Serialize to a file. See [`save_bytes`].
+/// The sibling staging path atomic writes go through: `<path>.tmp`.
+/// Public so fault injection can tear a write at exactly the real
+/// staging location.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Atomic file write: stage the full payload at [`tmp_path`], then
+/// rename over `path`. A kill mid-write leaves at worst a stale `.tmp`
+/// next to the previous checkpoint, never a torn checkpoint
+/// (`tests/checkpoint.rs` pins this).
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), CkptError> {
+    let tmp = tmp_path(path);
+    std::fs::write(&tmp, bytes)
+        .map_err(|e| CkptError::Io(format!("{}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| CkptError::Io(format!("{}: {e}", path.display())))
+}
+
+/// Serialize to a file (version 1, atomic write). See [`save_bytes`].
 pub fn save(
     path: &Path,
     model_name: &str,
     seed: u64,
     model: &Sequential,
 ) -> Result<(), CkptError> {
-    std::fs::write(path, save_bytes(model_name, seed, model))
-        .map_err(|e| CkptError::Io(format!("{}: {e}", path.display())))
+    write_atomic(path, &save_bytes(model_name, seed, model))
+}
+
+/// Serialize a resumable checkpoint to a file (version 2, atomic
+/// write). See [`save_state_bytes`].
+pub fn save_with_state(
+    path: &Path,
+    model_name: &str,
+    seed: u64,
+    model: &Sequential,
+    train: &TrainState,
+) -> Result<(), CkptError> {
+    write_atomic(path, &save_state_bytes(model_name, seed, model, train))
 }
 
 /// Read + parse a checkpoint file. See [`load_bytes`].
@@ -399,6 +607,38 @@ mod tests {
         for (a, b) in flat.iter().zip(&flat2) {
             assert_eq!(*a, *b);
         }
+    }
+
+    #[test]
+    fn v2_train_state_roundtrips_and_v1_loads_without_it() {
+        let model = models::build("mlp", 3).unwrap();
+        let state = TrainState {
+            step: 41,
+            steps_skipped: 2,
+            consecutive_skips: 1,
+            opt_kind: 2,
+            opt_t: vec![40.0, 41.0],
+            opt_m: vec![vec![0.5f32, -1.25], vec![f32::MIN_POSITIVE]],
+            opt_v: vec![vec![2.0f32], vec![]],
+            sk: [1, 2, 3, 4],
+            act: [5, 6, 7, 8],
+            fault: [9, 10, 11, 12],
+            lanes: vec![[[13, 14, 15, 16], [17, 18, 19, 20]]; 8],
+        };
+        let bytes = save_state_bytes("mlp", 3, &model, &state);
+        assert_eq!(bytes[8..12], 2u32.to_le_bytes());
+        let ckpt = load_bytes(&bytes).unwrap();
+        assert_eq!(ckpt.train.as_ref(), Some(&state));
+        // the train block is transparent to serving: params round-trip
+        // and the model rebuilds exactly as from a v1 file
+        let v1 = load_bytes(&save_bytes("mlp", 3, &model)).unwrap();
+        assert!(v1.train.is_none());
+        assert_eq!(ckpt.slots, v1.slots);
+        ckpt.build_model().unwrap();
+        // a flipped byte inside the train block still trips the checksum
+        let mut bad = bytes.clone();
+        bad[40] ^= 0x10;
+        assert_eq!(load_bytes(&bad).unwrap_err(), CkptError::ChecksumMismatch);
     }
 
     #[test]

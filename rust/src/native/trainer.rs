@@ -18,9 +18,10 @@
 
 use crate::config::TrainConfig;
 use crate::data::{self, BatchIter, Dataset, DatasetKind};
+use crate::faults::{FaultPlan, InjectedKill, NonFiniteLoss, MAX_CONSECUTIVE_SKIPS};
 use crate::metrics::RunCurve;
 use crate::pool;
-use crate::replicate::{ExchangeStats, ReplicaGroup};
+use crate::replicate::{ExchangeStats, ReplicaGroup, StepFaults};
 use crate::rng::Pcg64;
 use crate::tensor::kernels;
 use crate::tensor::Mat;
@@ -37,6 +38,24 @@ use super::sequential::{Sequential, SketchPolicy, Workspace, WorkspaceBytes};
 /// ≤ 0 disables).
 pub const CLIP_NORM: f64 = 1.0;
 
+/// The checkpoint's optimizer-kind tag (0 = sgd, 1 = momentum, 2 = adam).
+fn opt_kind_tag(opt: &Optim) -> u8 {
+    match opt {
+        Optim::Sgd { momentum, .. } => u8::from(*momentum != 0.0),
+        Optim::Adam { .. } => 2,
+    }
+}
+
+/// Human name for an optimizer-kind tag (resume-mismatch messages).
+fn opt_kind_name(tag: u8) -> &'static str {
+    match tag {
+        0 => "sgd",
+        1 => "momentum",
+        2 => "adam",
+        _ => "unknown",
+    }
+}
+
 /// CPU-native trainer over a [`Sequential`] model stack.
 pub struct NativeTrainer {
     /// The run configuration (steps, LR schedule, sketch policy, …).
@@ -52,6 +71,24 @@ pub struct NativeTrainer {
     /// Data-parallel step engine when `cfg.replicas ≥ 1` (DESIGN.md
     /// §7.6); `None` runs the plain single-stream step.
     group: Option<ReplicaGroup>,
+    /// Parsed fault schedule (`--fault-spec` / `UAVJP_FAULTS`, §7.7);
+    /// the default plan injects nothing and costs nothing.
+    fault_plan: FaultPlan,
+    /// The dedicated fault stream — disjoint from every training stream,
+    /// checkpointed like them so chaos runs resume bit-identically.
+    fault_rng: Pcg64,
+    /// Steps whose non-finite gradient was skipped instead of applied.
+    steps_skipped: u64,
+    /// Current consecutive-skip streak (≥ [`MAX_CONSECUTIVE_SKIPS`] aborts
+    /// with [`NonFiniteLoss`]).
+    consecutive_skips: u32,
+    /// Steps already executed by the run this trainer resumes
+    /// (`--resume`); [`NativeTrainer::run`] fast-forwards the batch
+    /// stream past them by replay.
+    start_step: usize,
+    /// Steps executed so far (start + this process); what the v2
+    /// checkpoint records as its step counter.
+    steps_done: usize,
 }
 
 impl NativeTrainer {
@@ -111,7 +148,18 @@ impl NativeTrainer {
         } else {
             None
         };
-        Ok(NativeTrainer {
+        let fault_plan = FaultPlan::from_config(&cfg.fault_spec)?;
+        if fault_plan.lane_drop_p > 0.0 && group.is_none() {
+            bail!(
+                "fault `lane_drop` drops reduce lanes, which need a replica \
+                 group: add --replicas (1|2|4|8)"
+            );
+        }
+        if cfg.ckpt_every > 0 && cfg.ckpt_path.is_empty() {
+            bail!("--ckpt-every needs a checkpoint path (--save-ckpt <path>)");
+        }
+        let fault_rng = FaultPlan::stream(cfg.seed);
+        let mut trainer = NativeTrainer {
             cfg,
             model,
             ws,
@@ -122,7 +170,108 @@ impl NativeTrainer {
             sk_rng,
             act_rng,
             group,
-        })
+            fault_plan,
+            fault_rng,
+            steps_skipped: 0,
+            consecutive_skips: 0,
+            start_step: 0,
+            steps_done: 0,
+        };
+        if !trainer.cfg.resume.is_empty() {
+            let path = std::path::PathBuf::from(&trainer.cfg.resume);
+            trainer.restore_from(&path)?;
+        }
+        Ok(trainer)
+    }
+
+    /// Restore the mid-run state a `--resume` checkpoint carries:
+    /// parameters, optimizer slots, step counters and the raw words of
+    /// every RNG stream — after which [`NativeTrainer::run`] continues
+    /// the interrupted trajectory bit-identically (DESIGN.md §7.7).
+    fn restore_from(&mut self, path: &std::path::Path) -> Result<()> {
+        let ckpt = checkpoint::load(path)?;
+        if ckpt.model_name != self.cfg.model {
+            bail!(
+                "--resume checkpoint is for model {:?}, this run trains {:?}",
+                ckpt.model_name,
+                self.cfg.model
+            );
+        }
+        let Some(state) = ckpt.train.clone() else {
+            bail!(
+                "--resume needs a resumable (v2) checkpoint; {} is a \
+                 param-only (v1) file",
+                path.display()
+            );
+        };
+        // params: fill the live stack through the same slot walk
+        // `Checkpoint::build_model` uses, with the same shape checks
+        let mut slot = 0usize;
+        for layer in &mut self.model.layers {
+            for p in layer.params_mut() {
+                let src = ckpt.slots.get(slot).ok_or_else(|| {
+                    anyhow::anyhow!("--resume checkpoint is missing slot {slot}")
+                })?;
+                if src.len() != p.len() {
+                    bail!(
+                        "--resume slot {slot} length {} != model's {}",
+                        src.len(),
+                        p.len()
+                    );
+                }
+                p.copy_from_slice(src);
+                slot += 1;
+            }
+        }
+        if slot != ckpt.slots.len() {
+            bail!(
+                "--resume checkpoint has {} slots, model wants {slot}",
+                ckpt.slots.len()
+            );
+        }
+        // optimizer: the stored kind must match this run's config —
+        // resuming sgd state into adam would be a silent divergence
+        let kind = opt_kind_tag(&self.opt);
+        if kind != state.opt_kind {
+            bail!(
+                "--resume optimizer mismatch: checkpoint stores kind {} \
+                 ({}), config asks for {} ({})",
+                state.opt_kind,
+                opt_kind_name(state.opt_kind),
+                kind,
+                opt_kind_name(kind)
+            );
+        }
+        match &mut self.opt {
+            Optim::Sgd { vel, .. } => *vel = state.opt_m.clone(),
+            Optim::Adam { t, m, v, .. } => {
+                *t = state.opt_t.clone();
+                *m = state.opt_m.clone();
+                *v = state.opt_v.clone();
+            }
+        }
+        // RNG streams: raw-word restore puts every generator exactly
+        // where the interrupted run left it
+        self.sk_rng = Pcg64::from_state_words(state.sk);
+        self.act_rng = Pcg64::from_state_words(state.act);
+        self.fault_rng = Pcg64::from_state_words(state.fault);
+        match (&mut self.group, state.lanes.is_empty()) {
+            (Some(group), false) => group.restore_lane_streams(&state.lanes)?,
+            (Some(_), true) => bail!(
+                "--resume checkpoint was written by a plain run; \
+                 it cannot resume under --replicas"
+            ),
+            (None, false) => bail!(
+                "--resume checkpoint was written under --replicas; \
+                 add --replicas (1|2|4|8) to resume it"
+            ),
+            (None, true) => {}
+        }
+        self.steps_skipped = state.steps_skipped;
+        self.consecutive_skips = state.consecutive_skips;
+        self.start_step = state.step as usize;
+        self.steps_done = self.start_step;
+        Ok(())
     }
 
     /// Batch size of this run.
@@ -154,10 +303,66 @@ impl NativeTrainer {
     /// process and refill it bit-for-bit. Only registry-built trainers
     /// produce loadable checkpoints — a [`NativeTrainer::with_dims`]
     /// model under a registry key whose shapes differ is rejected at
-    /// *load* time by the arch digest.
+    /// *load* time by the arch digest. Since the fault-tolerance work
+    /// (§7.7) this writes a resumable version-2 file — the [`TrainState`]
+    /// block is transparent to serving, and the write is atomic
+    /// (staged at `<path>.tmp`, then renamed).
+    ///
+    /// [`TrainState`]: checkpoint::TrainState
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
-        checkpoint::save(path, &self.cfg.model, self.cfg.seed, &self.model)?;
+        checkpoint::save_with_state(
+            path,
+            &self.cfg.model,
+            self.cfg.seed,
+            &self.model,
+            &self.train_state(),
+        )?;
         Ok(())
+    }
+
+    /// Snapshot the mid-run state a resumable checkpoint persists: step
+    /// counters, optimizer slots and the raw words of every RNG stream.
+    fn train_state(&self) -> checkpoint::TrainState {
+        let (opt_t, opt_m, opt_v) = match &self.opt {
+            Optim::Sgd { vel, .. } => (Vec::new(), vel.clone(), Vec::new()),
+            Optim::Adam { t, m, v, .. } => (t.clone(), m.clone(), v.clone()),
+        };
+        checkpoint::TrainState {
+            step: self.steps_done as u64,
+            steps_skipped: self.steps_skipped,
+            consecutive_skips: self.consecutive_skips,
+            opt_kind: opt_kind_tag(&self.opt),
+            opt_t,
+            opt_m,
+            opt_v,
+            sk: self.sk_rng.state_words(),
+            act: self.act_rng.state_words(),
+            fault: self.fault_rng.state_words(),
+            lanes: self
+                .group
+                .as_ref()
+                .map_or_else(Vec::new, |g| g.lane_stream_words()),
+        }
+    }
+
+    /// Write the periodic checkpoint scheduled after `steps_done` steps —
+    /// or, under an armed `ckpt_truncate` fault, tear the write exactly
+    /// where a kill mid-`fs::write` would: half the payload lands in the
+    /// staging file, the rename never happens, and the previous
+    /// checkpoint survives untouched.
+    fn periodic_checkpoint(&self) -> Result<()> {
+        let path = std::path::PathBuf::from(&self.cfg.ckpt_path);
+        if self.fault_plan.truncate_ckpt_at(self.steps_done) {
+            let bytes = checkpoint::save_state_bytes(
+                &self.cfg.model,
+                self.cfg.seed,
+                &self.model,
+                &self.train_state(),
+            );
+            std::fs::write(checkpoint::tmp_path(&path), &bytes[..bytes.len() / 2])?;
+            return Ok(());
+        }
+        self.save_checkpoint(&path)
     }
 
     /// Generate this run's datasets — identical protocol to the PJRT
@@ -175,30 +380,74 @@ impl NativeTrainer {
         self.group.as_ref().map(|g| g.stats())
     }
 
+    /// Steps whose non-finite gradient was skipped instead of applied
+    /// (the train report's `steps_skipped`).
+    pub fn steps_skipped(&self) -> u64 {
+        self.steps_skipped
+    }
+
+    /// Steps the `--resume` checkpoint had already executed (0 for a
+    /// fresh run); [`NativeTrainer::run`] fast-forwards past them.
+    pub fn start_step(&self) -> usize {
+        self.start_step
+    }
+
     /// One optimizer step on a batch; returns the training loss. Runs
-    /// entirely in the trainer's preallocated workspace.
-    pub fn step(&mut self, x: &Mat, y: &[i32], step: usize) -> f64 {
-        if let Some(group) = self.group.as_mut() {
+    /// entirely in the trainer's preallocated workspace. Errors are
+    /// fault-path only — a fresh trainer with no `--fault-spec` never
+    /// returns one: an armed plan can poison the gradient (skipped, and
+    /// [`NonFiniteLoss`] after [`MAX_CONSECUTIVE_SKIPS`] in a row), drop
+    /// reduce lanes (survivors rescaled, see [`StepFaults`]), or panic a
+    /// replica worker (caught; fatal only if every replica dies).
+    pub fn step(&mut self, x: &Mat, y: &[i32], step: usize) -> Result<f64> {
+        let loss = if let Some(group) = self.group.as_mut() {
             // data-parallel path: the group shards the batch across its
             // lane grid and reduces into the master gradient slots;
             // clip / LR / apply stay identical to the plain path.
-            let loss = group.step(&self.model, x, y, &mut self.ws.grad_slots);
-            clip_global_norm(&mut self.ws.grad_slots, CLIP_NORM);
-            let lr = self.cfg.lr_at(step);
+            if self.fault_plan.is_armed() {
+                let faults = StepFaults {
+                    drops: self.fault_plan.draw_lane_drops(&mut self.fault_rng),
+                    gain: self.fault_plan.lane_gain(),
+                    panic_replica: self.fault_plan.worker_panic_at(step),
+                };
+                group.step_faulted(&self.model, x, y, &mut self.ws.grad_slots, &faults)?
+            } else {
+                group.step(&self.model, x, y, &mut self.ws.grad_slots)
+            }
+        } else {
             self.model
-                .apply_grads(&mut self.opt, &self.ws.grad_slots, lr);
-            return loss;
+                .forward_train(x, &mut self.ws, &self.plan, &mut self.act_rng);
+            let (logits, gout) = self.ws.loss_io();
+            let loss = loss_and_grad_into(self.loss, logits, y, gout);
+            self.model.backward(&mut self.ws, &self.plan, &mut self.sk_rng);
+            loss
+        };
+        if self.fault_plan.nan_grad_at(step) {
+            if let Some(v) = self.ws.grad_slots.slots.iter_mut().flatten().next() {
+                *v = f32::NAN;
+            }
         }
-        self.model
-            .forward_train(x, &mut self.ws, &self.plan, &mut self.act_rng);
-        let (logits, gout) = self.ws.loss_io();
-        let loss = loss_and_grad_into(self.loss, logits, y, gout);
-        self.model.backward(&mut self.ws, &self.plan, &mut self.sk_rng);
-        clip_global_norm(&mut self.ws.grad_slots, CLIP_NORM);
+        // Non-finite guard: clip's pre-clip norm is a free global scan of
+        // the reduced gradient. A NaN norm compares false against the
+        // cap, so the clip itself never rescales a poisoned gradient.
+        let norm = clip_global_norm(&mut self.ws.grad_slots, CLIP_NORM);
+        if !norm.is_finite() {
+            self.steps_skipped += 1;
+            self.consecutive_skips += 1;
+            if self.consecutive_skips >= MAX_CONSECUTIVE_SKIPS {
+                return Err(NonFiniteLoss {
+                    step,
+                    skips: self.consecutive_skips,
+                }
+                .into());
+            }
+            return Ok(loss);
+        }
+        self.consecutive_skips = 0;
         let lr = self.cfg.lr_at(step);
         self.model
             .apply_grads(&mut self.opt, &self.ws.grad_slots, lr);
-        loss
+        Ok(loss)
     }
 
     /// Evaluate on the full test set; returns (mean loss, accuracy).
@@ -228,6 +477,16 @@ impl NativeTrainer {
 
     /// Full training run; returns the loss/eval curve (same shape as the
     /// PJRT trainer's so sweeps and experiments are backend-agnostic).
+    ///
+    /// Under `--resume` the first `start_step` batches are *replayed*
+    /// without stepping — the batch stream is a pure function of the
+    /// seed, so skipping exactly that many draws lands the iterator where
+    /// the interrupted run left it (the params/optimizer/gate streams
+    /// come from the checkpoint). With `--ckpt-every N` a resumable
+    /// checkpoint lands atomically at `cfg.ckpt_path` after every N-th
+    /// executed step; an armed `kill@step=K` fault then aborts with
+    /// [`InjectedKill`] right after step `K` (and its save, if
+    /// scheduled), which is what the CI chaos leg resumes from.
     pub fn run(&mut self) -> Result<RunCurve> {
         let (train_ds, test_ds) = self.datasets();
         let mut curve = RunCurve::default();
@@ -246,16 +505,28 @@ impl NativeTrainer {
                 if step >= self.cfg.steps {
                     break 'outer;
                 }
-                let loss = self.step(&xmat, &ybuf, step);
+                if step < self.start_step {
+                    // resume fast-forward: consume the batch, don't step
+                    step += 1;
+                    continue;
+                }
+                let loss = self.step(&xmat, &ybuf, step)?;
                 if !loss.is_finite() {
                     curve.record_loss(step, f64::INFINITY);
                     break 'outer;
                 }
                 curve.record_loss(step, loss);
                 step += 1;
+                self.steps_done = step;
                 if step % self.cfg.eval_every == 0 || step == self.cfg.steps {
                     let (el, ea) = self.evaluate(&test_ds)?;
                     curve.record_eval(step, el, ea);
+                }
+                if self.cfg.ckpt_every > 0 && step % self.cfg.ckpt_every == 0 {
+                    self.periodic_checkpoint()?;
+                }
+                if self.fault_plan.kill_after(step - 1) {
+                    return Err(InjectedKill { step: step - 1 }.into());
                 }
             }
             if step >= self.cfg.steps {

@@ -25,8 +25,42 @@
 //! near-sequential execution, but the structure matches what a multi-core
 //! deployment would use, and the unit tests exercise real concurrency.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Typed error for a worker closure that panicked: the panic is caught
+/// at the worker boundary ([`try_run_replicas`] / [`try_parallel_map`])
+/// so one dying replica degrades the step instead of unwinding the whole
+/// run (DESIGN.md §7.7). When several workers panic, the smallest worker
+/// index wins (deterministic reporting).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerPanicked {
+    /// Index of the panicking worker (replica index for
+    /// [`try_run_replicas`], item index for [`try_parallel_map`]).
+    pub worker: usize,
+    /// The panic payload, when it was a string (the common case).
+    pub msg: String,
+}
+
+impl std::fmt::Display for WorkerPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} panicked: {}", self.worker, self.msg)
+    }
+}
+
+impl std::error::Error for WorkerPanicked {}
+
+/// Best-effort string form of a caught panic payload.
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Intra-op worker count for the tensor kernels (see [`set_threads`]).
 static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(1);
@@ -190,16 +224,50 @@ where
     S: Send,
     F: Fn(usize, &mut S) + Sync,
 {
-    if states.len() == 1 {
-        f(0, &mut states[0]);
-        return;
+    if let Err(e) = try_run_replicas(states, f) {
+        panic!("{e}");
     }
-    std::thread::scope(|scope| {
-        for (i, st) in states.iter_mut().enumerate() {
-            let f = &f;
-            scope.spawn(move || f(i, st));
+}
+
+/// Panic-isolated [`run_replicas`]: every replica closure runs inside
+/// `catch_unwind`, so one panicking replica surfaces as a typed
+/// [`WorkerPanicked`] (smallest replica index wins) while the other
+/// replicas finish their work undisturbed — the hook `ReplicaGroup`'s
+/// degraded mode builds on.
+pub fn try_run_replicas<S, F>(
+    states: &mut [S],
+    f: F,
+) -> Result<(), WorkerPanicked>
+where
+    S: Send,
+    F: Fn(usize, &mut S) + Sync,
+{
+    let panics: Vec<Mutex<Option<String>>> =
+        states.iter().map(|_| Mutex::new(None)).collect();
+    let run = |i: usize, st: &mut S| {
+        // AssertUnwindSafe: on panic the caller either aborts the run or
+        // discards the replica's lane outputs, so torn state is never read
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i, st))) {
+            *panics[i].lock().unwrap_or_else(|e| e.into_inner()) =
+                Some(panic_msg(p));
         }
-    });
+    };
+    if states.len() == 1 {
+        run(0, &mut states[0]);
+    } else {
+        std::thread::scope(|scope| {
+            for (i, st) in states.iter_mut().enumerate() {
+                let run = &run;
+                scope.spawn(move || run(i, st));
+            }
+        });
+    }
+    for (i, p) in panics.iter().enumerate() {
+        if let Some(msg) = p.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            return Err(WorkerPanicked { worker: i, msg });
+        }
+    }
+    Ok(())
 }
 
 /// Map `f` over `items` with up to `workers` OS threads, preserving order.
@@ -209,33 +277,68 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    match try_parallel_map(items, workers, f) {
+        Ok(out) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Panic-isolated [`parallel_map`]: item closures run inside
+/// `catch_unwind`, every non-panicking item still completes, and the
+/// first panic (smallest item index) comes back as a typed
+/// [`WorkerPanicked`] instead of unwinding the caller.
+pub fn try_parallel_map<T, R, F>(
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+) -> Result<Vec<R>, WorkerPanicked>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let workers = workers.max(1).min(n);
-    if workers == 1 {
-        return items.iter().map(|t| f(t)).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> =
+    let results: Vec<Mutex<Option<Result<R, String>>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
+    let run = |i: usize| {
+        // AssertUnwindSafe: a panicking item's result slot stays None /
+        // Err and is never read as a value
+        let r = catch_unwind(AssertUnwindSafe(|| f(&items[i])))
+            .map_err(panic_msg);
+        *results[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+    };
+    if workers == 1 {
+        for i in 0..n {
+            run(i);
         }
-    });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker panicked"))
-        .collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let (run, next) = (&run, &next);
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    run(i);
+                });
+            }
+        });
+    }
+    let mut out = Vec::with_capacity(n);
+    for (i, m) in results.into_iter().enumerate() {
+        match m.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(msg)) => return Err(WorkerPanicked { worker: i, msg }),
+            None => unreachable!("item {i} neither completed nor panicked"),
+        }
+    }
+    Ok(out)
 }
 
 /// Number of workers to use by default (leave one core for the OS).
@@ -377,6 +480,46 @@ mod tests {
                 assert_eq!(*st, (1, i * 10), "n={n}");
             }
         }
+    }
+
+    #[test]
+    fn panicking_replica_surfaces_typed_and_spares_the_others() {
+        for n in [1usize, 4] {
+            let mut states: Vec<usize> = vec![0; n];
+            let err = try_run_replicas(&mut states, |i, st| {
+                if i == n - 1 {
+                    panic!("injected panic in replica {i}");
+                }
+                *st = i + 1;
+            })
+            .unwrap_err();
+            assert_eq!(err.worker, n - 1);
+            assert!(err.msg.contains("injected panic"), "{err}");
+            // the surviving replicas' work landed
+            for (i, st) in states.iter().enumerate().take(n - 1) {
+                assert_eq!(*st, i + 1, "n={n}");
+            }
+        }
+        // no panic → Ok, same semantics as run_replicas
+        let mut states = vec![0usize; 3];
+        try_run_replicas(&mut states, |i, st| *st = i).unwrap();
+        assert_eq!(states, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn panicking_map_item_surfaces_smallest_index() {
+        let err = try_parallel_map((0..10).collect::<Vec<usize>>(), 4, |&x| {
+            if x % 4 == 3 {
+                panic!("bad item {x}");
+            }
+            x * 2
+        })
+        .unwrap_err();
+        assert_eq!(err.worker, 3);
+        assert!(err.msg.contains("bad item"), "{err}");
+        let ok = try_parallel_map((0..10).collect::<Vec<usize>>(), 4, |&x| x)
+            .unwrap();
+        assert_eq!(ok, (0..10).collect::<Vec<_>>());
     }
 
     #[test]

@@ -102,6 +102,13 @@ pub struct ExchangeStats {
     pub dense_bytes: u64,
     /// Total bytes the sparse exchange would move.
     pub sparse_bytes: u64,
+    /// Lanes excluded from the reduce (injected dropout ∪ worker
+    /// panics), summed over steps. Injected drops come from the
+    /// trainer's fault stream, so they are replica-count-invariant like
+    /// everything else; panic drops are executor events and are not.
+    pub lanes_dropped: u64,
+    /// Steps on which at least one lane was excluded.
+    pub steps_degraded: u64,
 }
 
 impl ExchangeStats {
@@ -147,10 +154,39 @@ struct LaneState {
 }
 
 /// One executor: an owned model copy (refreshed from the master every
-/// step) plus the contiguous run of lanes it executes serially.
+/// step) plus the contiguous run of lanes it executes serially. `token`
+/// records the last step this worker *completed* — a worker whose token
+/// lags the group's after a step panicked mid-flight, and its lanes are
+/// excluded from the reduce (DESIGN.md §7.7).
 struct ReplicaWorker {
     model: Sequential,
     lanes: Vec<LaneState>,
+    token: u64,
+}
+
+/// Faults injected into one data-parallel step (DESIGN.md §7.7). The
+/// trainer derives this per step from its [`crate::faults::FaultPlan`];
+/// [`StepFaults::default`] is the fault-free step [`ReplicaGroup::step`]
+/// runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepFaults {
+    /// Lanes whose gradient contribution is dropped on the wire (the
+    /// forward still runs, so the reported loss stays exact).
+    pub drops: [bool; LANES],
+    /// Inverse-inclusion-probability rescale `1/(1-p)` applied to the
+    /// surviving lanes' reduced gradient — on **every** step while lane
+    /// dropout is armed, which is what makes the estimator unbiased:
+    /// E[Σ_{survivors} g_l / (1-p)] = Σ_l g_l.
+    pub gain: f32,
+    /// Replica whose worker closure panics this step (exercises the
+    /// `catch_unwind` isolation end to end).
+    pub panic_replica: Option<usize>,
+}
+
+impl Default for StepFaults {
+    fn default() -> Self {
+        StepFaults { drops: [false; LANES], gain: 1.0, panic_replica: None }
+    }
 }
 
 /// N-replica data-parallel step engine. See the module docs for the lane
@@ -177,6 +213,8 @@ pub struct ReplicaGroup {
     prev: Grads,
     spare: Grads,
     stats: ExchangeStats,
+    /// Monotonic step token workers stamp on completion (panic detection).
+    step_token: u64,
 }
 
 impl ReplicaGroup {
@@ -297,7 +335,7 @@ impl ReplicaGroup {
                     }
                 })
                 .collect();
-            workers.push(ReplicaWorker { model, lanes });
+            workers.push(ReplicaWorker { model, lanes, token: 0 });
         }
 
         let zero_grads = || Grads {
@@ -321,6 +359,7 @@ impl ReplicaGroup {
             prev: zero_grads(),
             spare: zero_grads(),
             stats: ExchangeStats::default(),
+            step_token: 0,
         })
     }
 
@@ -339,6 +378,36 @@ impl ReplicaGroup {
         self.stats
     }
 
+    /// Raw PCG64 words of every lane's (backward-gate, activation-gate)
+    /// streams, ascending lane index — what the resumable checkpoint
+    /// persists. Lane-framed, so a run resumed at a different
+    /// `--replicas` continues bit-identically.
+    pub fn lane_stream_words(&self) -> Vec<[[u64; 4]; 2]> {
+        self.workers
+            .iter()
+            .flat_map(|w| w.lanes.iter())
+            .map(|l| [l.sk_rng.state_words(), l.act_rng.state_words()])
+            .collect()
+    }
+
+    /// Restore every lane's streams from [`ReplicaGroup::lane_stream_words`]
+    /// output (one entry per lane of the fixed grid).
+    pub fn restore_lane_streams(&mut self, lanes: &[[[u64; 4]; 2]]) -> Result<()> {
+        if lanes.len() != LANES {
+            bail!(
+                "checkpoint stores {} lane streams, the grid has {LANES}",
+                lanes.len()
+            );
+        }
+        for (lane, words) in
+            self.workers.iter_mut().flat_map(|w| w.lanes.iter_mut()).zip(lanes)
+        {
+            lane.sk_rng = Pcg64::from_state_words(words[0]);
+            lane.act_rng = Pcg64::from_state_words(words[1]);
+        }
+        Ok(())
+    }
+
     /// One data-parallel step: broadcast `master`'s parameters, run every
     /// lane's forward/backward (replicas in parallel, each lane on its
     /// own RNG streams), and reduce the per-lane gradients into `out`
@@ -354,6 +423,26 @@ impl ReplicaGroup {
         y: &[i32],
         out: &mut Grads,
     ) -> f64 {
+        self.step_faulted(master, x, y, out, &StepFaults::default())
+            .expect("a fault-free step cannot fail")
+    }
+
+    /// [`ReplicaGroup::step`] with injected faults: lanes in
+    /// `faults.drops` are excluded from the reduce and the survivors
+    /// rescaled by `faults.gain`; `faults.panic_replica`'s closure
+    /// panics, is caught at the worker boundary
+    /// ([`crate::pool::try_run_replicas`]), and its lanes join the drop
+    /// set with a mean-preserving `LANES/survivors` rescale of gradient
+    /// and loss. Errors only when every replica panicked (the typed
+    /// [`crate::pool::WorkerPanicked`] message surfaces in the chain).
+    pub fn step_faulted(
+        &mut self,
+        master: &Sequential,
+        x: &Mat,
+        y: &[i32],
+        out: &mut Grads,
+        faults: &StepFaults,
+    ) -> Result<f64> {
         assert_eq!(
             (x.rows, x.cols),
             (self.batch, self.workers[0].lanes[0].ws.in_dim),
@@ -366,7 +455,12 @@ impl ReplicaGroup {
         let (dim, lane_rows, lanes_per, batch) =
             (x.cols, self.lane_rows, self.lanes_per_replica, self.batch);
         let (plan, loss_kind) = (&self.plan, self.loss_kind);
-        pool::run_replicas(&mut self.workers, |rep, w| {
+        self.step_token += 1;
+        let token = self.step_token;
+        let run = pool::try_run_replicas(&mut self.workers, |rep, w| {
+            if faults.panic_replica == Some(rep) {
+                panic!("injected worker panic (replica {rep})");
+            }
             // broadcast: replica models mirror the master bit-for-bit
             let mut s = 0usize;
             for layer in &mut w.model.layers {
@@ -401,63 +495,103 @@ impl ReplicaGroup {
                 w.model.backward(&mut lane.ws, plan, &mut lane.sk_rng);
                 lane.ws.scratch.end_kept_log();
             }
+            w.token = token;
         });
 
-        self.accumulate_stats();
+        // degraded mode: a panicking replica's lanes hold stale data —
+        // fold them out of gradient *and* loss, rescaled mean-preserving
+        // over the surviving lanes. `token` catches every victim even if
+        // several replicas die at once.
+        let mut drops = faults.drops;
+        let mut panicked = [false; LANES];
+        let mut n_panic_lanes = 0usize;
+        if let Err(ref e) = run {
+            for (rep, w) in self.workers.iter().enumerate() {
+                if w.token != token {
+                    for li in 0..lanes_per {
+                        panicked[rep * lanes_per + li] = true;
+                        n_panic_lanes += 1;
+                    }
+                }
+            }
+            if n_panic_lanes == LANES {
+                bail!("every replica panicked, no surviving lanes: {e}");
+            }
+            for (d, &p) in drops.iter_mut().zip(&panicked) {
+                *d |= p;
+            }
+        }
+        let panic_gain = LANES as f64 / (LANES - n_panic_lanes) as f64;
+        let scale = faults.gain * panic_gain as f32;
+
+        self.accumulate_stats(&drops);
         if self.stale {
             let mut cur =
                 std::mem::replace(&mut self.spare, Grads { slots: Vec::new() });
-            self.reduce_into(&mut cur);
+            self.reduce_into(&mut cur, &drops, scale);
             for (o, p) in out.slots.iter_mut().zip(&self.prev.slots) {
                 o.copy_from_slice(p);
             }
             self.spare = std::mem::replace(&mut self.prev, cur);
         } else {
-            self.reduce_into(out);
+            self.reduce_into(out, &drops, scale);
         }
 
         // global-batch mean loss: unnormalized lane partials folded in
         // ascending lane order, divided by the global count — replica-
-        // count-invariant like the gradients.
+        // count-invariant like the gradients. Injected drops only cut
+        // the gradient wire (their forward ran), so only panicked lanes
+        // leave the loss.
         let mut sum = 0.0f64;
-        for w in &self.workers {
-            for lane in &w.lanes {
+        for (lane_ix, lane) in
+            self.workers.iter().flat_map(|w| w.lanes.iter()).enumerate()
+        {
+            if !panicked[lane_ix] {
                 sum += lane.loss_partial;
             }
         }
-        match self.loss_kind {
+        sum *= panic_gain;
+        Ok(match self.loss_kind {
             LossKind::CrossEntropy => sum / self.batch as f64,
             LossKind::Mse => sum / (self.batch * self.out_cols) as f64,
-        }
+        })
     }
 
     /// Flat ascending-lane fold of every lane's gradient slots into
-    /// `out`. Dense mode folds full slots; sparse mode scatter-
-    /// accumulates only the kept rows of gated GEMMs (everything else in
-    /// those slots is exactly zero) and folds ungated slots densely. Both
-    /// accumulate each element in the identical ascending-lane order, for
-    /// any replica count.
-    fn reduce_into(&self, out: &mut Grads) {
+    /// `out`, skipping dropped lanes and rescaling the survivors by
+    /// `scale` (1.0 on the fault-free path, which then touches no value
+    /// — bit-identity preserved). Dense mode folds full slots; sparse
+    /// mode scatter-accumulates only the kept rows of gated GEMMs
+    /// (everything else in those slots is exactly zero) and folds
+    /// ungated slots densely. Both accumulate each element in the
+    /// identical ascending-lane order, for any replica count.
+    fn reduce_into(&self, out: &mut Grads, drops: &[bool; LANES], scale: f32) {
         assert_eq!(out.slots.len(), self.slot_lens.len(), "slot registry");
         let lanes: Vec<&LaneState> =
             self.workers.iter().flat_map(|w| w.lanes.iter()).collect();
+        let survivors: Vec<&LaneState> = lanes
+            .iter()
+            .zip(drops)
+            .filter(|(_, &d)| !d)
+            .map(|(l, _)| *l)
+            .collect();
         let sparse_slot = |s: usize| {
             self.reduce == ReduceMode::Sparse
                 && self.gemm_map.iter().any(|g| g.w_slot == s || g.b_slot == s)
         };
         for (s, dst) in out.slots.iter_mut().enumerate() {
-            if sparse_slot(s) {
+            if sparse_slot(s) || survivors.is_empty() {
                 dst.fill(0.0);
             } else {
-                dst.copy_from_slice(&lanes[0].ws.grad_slots.slots[s]);
-                for lane in &lanes[1..] {
+                dst.copy_from_slice(&survivors[0].ws.grad_slots.slots[s]);
+                for lane in &survivors[1..] {
                     vec::add_assign(dst, &lane.ws.grad_slots.slots[s]);
                 }
             }
         }
         if self.reduce == ReduceMode::Sparse {
             for (g_ix, site) in self.gemm_map.iter().enumerate() {
-                for lane in &lanes {
+                for lane in &survivors {
                     let log = lane.ws.scratch.kept_log();
                     assert_eq!(
                         log.len(),
@@ -489,26 +623,40 @@ impl ReplicaGroup {
                 }
             }
         }
+        if scale != 1.0 {
+            for dst in out.slots.iter_mut() {
+                vec::scale(dst, scale);
+            }
+        }
     }
 
     /// Accumulate both modes' modeled wire bytes for the step just run
     /// (reads the lanes' kept logs; call before the logs are re-armed).
-    fn accumulate_stats(&mut self) {
+    /// Dropped lanes ship nothing, and the drop counters feed the train
+    /// report's `lanes_dropped`/`steps_degraded`.
+    fn accumulate_stats(&mut self, drops: &[bool; LANES]) {
+        let n_dropped = drops.iter().filter(|&&d| d).count();
         let mut sparse: u64 = 0;
-        for w in &self.workers {
-            for lane in &w.lanes {
-                let log = lane.ws.scratch.kept_log();
-                for (g_ix, site) in self.gemm_map.iter().enumerate() {
-                    let kept = log.get(g_ix).map_or(0, |l| l.len()) as u64;
-                    // u32 count + per row: u32 index, f32 bias, din f32s
-                    sparse += 4 + kept * (4 + 4 * (site.din as u64 + 1));
-                }
-                sparse += self.dense_extra_bytes;
+        for (lane_ix, lane) in
+            self.workers.iter().flat_map(|w| w.lanes.iter()).enumerate()
+        {
+            if drops[lane_ix] {
+                continue;
             }
+            let log = lane.ws.scratch.kept_log();
+            for (g_ix, site) in self.gemm_map.iter().enumerate() {
+                let kept = log.get(g_ix).map_or(0, |l| l.len()) as u64;
+                // u32 count + per row: u32 index, f32 bias, din f32s
+                sparse += 4 + kept * (4 + 4 * (site.din as u64 + 1));
+            }
+            sparse += self.dense_extra_bytes;
         }
         self.stats.steps += 1;
-        self.stats.dense_bytes += LANES as u64 * self.lane_dense_bytes;
+        self.stats.dense_bytes +=
+            (LANES - n_dropped) as u64 * self.lane_dense_bytes;
         self.stats.sparse_bytes += sparse;
+        self.stats.lanes_dropped += n_dropped as u64;
+        self.stats.steps_degraded += (n_dropped > 0) as u64;
     }
 }
 

@@ -13,7 +13,8 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Batcher knobs (`--max-batch`, `--max-wait-us`, `--queue-cap`).
+/// Batcher knobs (`--max-batch`, `--max-wait-us`, `--queue-cap`,
+/// `--request-timeout-us`).
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Largest coalesced batch (engine workspaces are sized to this).
@@ -26,6 +27,10 @@ pub struct BatcherConfig {
     /// many pending requests is rejected with [`QueueFull`] instead of
     /// queueing unboundedly. `0` = unbounded.
     pub queue_cap: usize,
+    /// Per-request deadline: a request still *queued* after this long is
+    /// resolved with [`DeadlineExceeded`] instead of served (once
+    /// dispatched into a batch it always completes). Zero = no deadline.
+    pub timeout: Duration,
 }
 
 /// Typed rejection from [`RequestQueue::submit`] under admission control:
@@ -44,6 +49,31 @@ impl std::fmt::Display for QueueFull {
 }
 
 impl std::error::Error for QueueFull {}
+
+/// Typed resolution for a request that out-waited its deadline in the
+/// queue (`timeout` in [`BatcherConfig`]): the serving worker expired it
+/// instead of serving it, and [`Reply::wait`] returns this error. The
+/// waiter is released — an expired request never wedges the batcher or
+/// its client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineExceeded {
+    /// The expired request's id.
+    pub id: u64,
+    /// How long it had been queued when it expired.
+    pub waited: Duration,
+}
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request {} exceeded its deadline after {:?} queued",
+            self.id, self.waited
+        )
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
 
 /// One queued inference request.
 pub struct Request {
@@ -78,12 +108,13 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// A one-shot completion slot: the serving worker [`Reply::fill`]s it,
-/// any number of readers block on [`Reply::wait`] (the response is
-/// cloned out, not taken, so a closed-loop client and the driver's final
+/// A one-shot completion slot: the serving worker [`Reply::fill`]s it
+/// (or [`Reply::expire`]s it past its deadline — first write wins), any
+/// number of readers block on [`Reply::wait`] (the resolution is cloned
+/// out, not taken, so a closed-loop client and the driver's final
 /// collection sweep can both read it).
 #[derive(Clone, Default)]
-pub struct Reply(Arc<(Mutex<Option<Response>>, Condvar)>);
+pub struct Reply(Arc<(Mutex<Option<Result<Response, DeadlineExceeded>>>, Condvar)>);
 
 impl Reply {
     /// An empty slot.
@@ -93,13 +124,28 @@ impl Reply {
 
     /// Deliver the response and wake every waiter.
     pub fn fill(&self, r: Response) {
+        self.resolve(Ok(r));
+    }
+
+    /// Expire the request and wake every waiter.
+    pub fn expire(&self, e: DeadlineExceeded) {
+        self.resolve(Err(e));
+    }
+
+    /// First write wins: a request served right at its deadline keeps
+    /// whichever resolution landed first.
+    fn resolve(&self, r: Result<Response, DeadlineExceeded>) {
         let (slot, cv) = &*self.0;
-        *slot.lock().unwrap() = Some(r);
+        let mut guard = slot.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(r);
+        }
         cv.notify_all();
     }
 
-    /// Block until the response is delivered.
-    pub fn wait(&self) -> Response {
+    /// Block until the request is resolved — with its response, or with
+    /// [`DeadlineExceeded`] if it expired in the queue.
+    pub fn wait(&self) -> Result<Response, DeadlineExceeded> {
         let (slot, cv) = &*self.0;
         let mut guard = slot.lock().unwrap();
         loop {
@@ -121,6 +167,7 @@ pub struct RequestQueue {
 struct QueueState {
     pending: VecDeque<Request>,
     closed: bool,
+    timed_out: usize,
 }
 
 impl RequestQueue {
@@ -129,7 +176,11 @@ impl RequestQueue {
         assert!(cfg.max_batch > 0, "batcher needs max_batch >= 1");
         RequestQueue {
             cfg,
-            state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                closed: false,
+                timed_out: 0,
+            }),
             cv: Condvar::new(),
         }
     }
@@ -167,19 +218,49 @@ impl RequestQueue {
         self.state.lock().unwrap().pending.len()
     }
 
+    /// Requests expired with [`DeadlineExceeded`] so far (telemetry; the
+    /// serve report's `timed_out`).
+    pub fn timed_out(&self) -> usize {
+        self.state.lock().unwrap().timed_out
+    }
+
+    /// Expire every pending request past its deadline. FIFO order makes
+    /// the expired set a queue *prefix* (enqueue times are monotone), so
+    /// this pops from the front until the first survivor. Each expired
+    /// request's reply resolves with [`DeadlineExceeded`] — its waiter is
+    /// released, never wedged. No-op when `timeout` is zero.
+    fn expire_prefix(&self, st: &mut QueueState) {
+        if self.cfg.timeout.is_zero() {
+            return;
+        }
+        while let Some(front) = st.pending.front() {
+            let waited = front.enqueued.elapsed();
+            if waited < self.cfg.timeout {
+                break;
+            }
+            let req = st.pending.pop_front().expect("front exists");
+            req.reply.expire(DeadlineExceeded { id: req.id, waited });
+            st.timed_out += 1;
+        }
+    }
+
     /// Dequeue the next coalesced batch (serving workers; blocking).
     ///
     /// Dispatch policy, checked in order under the queue lock:
+    /// 0. requests past their per-request deadline (`timeout > 0`) are
+    ///    expired with [`DeadlineExceeded`] and leave the queue;
     /// 1. `max_batch` requests pending → dispatch a full batch now;
     /// 2. queue closed → drain up to `max_batch`, or `None` when empty
     ///    (worker shutdown);
     /// 3. the *oldest* pending request has waited ≥ `max_wait` →
     ///    dispatch whatever is pending (≤ `max_batch`);
-    /// 4. otherwise sleep until a submit/close wakes the worker or the
-    ///    oldest request's deadline expires.
+    /// 4. otherwise sleep until a submit/close wakes the worker, the
+    ///    oldest request's batching deadline expires, or its request
+    ///    deadline does.
     pub fn next_batch(&self) -> Option<Vec<Request>> {
         let mut st = self.state.lock().unwrap();
         loop {
+            self.expire_prefix(&mut st);
             if st.pending.len() >= self.cfg.max_batch {
                 return Some(drain(&mut st.pending, self.cfg.max_batch));
             }
@@ -195,11 +276,11 @@ impl RequestQueue {
                     return Some(drain(&mut st.pending, self.cfg.max_batch));
                 }
                 Some(w) => {
-                    st = self
-                        .cv
-                        .wait_timeout(st, self.cfg.max_wait - w)
-                        .unwrap()
-                        .0;
+                    let mut sleep = self.cfg.max_wait - w;
+                    if !self.cfg.timeout.is_zero() {
+                        sleep = sleep.min(self.cfg.timeout.saturating_sub(w));
+                    }
+                    st = self.cv.wait_timeout(st, sleep).unwrap().0;
                 }
                 None => st = self.cv.wait(st).unwrap(),
             }
@@ -222,7 +303,12 @@ mod tests {
     }
 
     fn queue(max_batch: usize, max_wait: Duration) -> RequestQueue {
-        RequestQueue::new(BatcherConfig { max_batch, max_wait, queue_cap: 0 })
+        RequestQueue::new(BatcherConfig {
+            max_batch,
+            max_wait,
+            queue_cap: 0,
+            timeout: Duration::ZERO,
+        })
     }
 
     #[test]
@@ -262,6 +348,7 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::from_secs(60),
             queue_cap: 3,
+            timeout: Duration::ZERO,
         });
         q.submit(req(0)).unwrap();
         q.submit(req(1)).unwrap();
@@ -295,9 +382,48 @@ mod tests {
             batch_size: 4,
         };
         r.fill(resp);
-        assert_eq!(r.wait().id, 9);
+        assert_eq!(r.wait().unwrap().id, 9);
         // cloned out, not taken: a second reader sees it too
-        assert_eq!(r.wait().logits, vec![1.0, 2.0]);
+        assert_eq!(r.wait().unwrap().logits, vec![1.0, 2.0]);
+        // first write wins: a late expiry cannot claw back a served reply
+        r.expire(DeadlineExceeded { id: 9, waited: Duration::from_secs(1) });
+        assert_eq!(r.wait().unwrap().id, 9);
+    }
+
+    #[test]
+    fn expired_requests_resolve_typed_without_wedging_the_queue() {
+        let q = RequestQueue::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(60),
+            queue_cap: 0,
+            timeout: Duration::from_millis(50),
+        });
+        let stale = req(0);
+        let stale_reply = stale.reply.clone();
+        q.submit(stale).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        // a fresh co-rider: the expired prefix stops at it
+        let fresh = req(1);
+        let fresh_reply = fresh.reply.clone();
+        q.submit(fresh).unwrap();
+        q.close();
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(q.timed_out(), 1);
+        // the expired waiter was released with the typed error…
+        let err = stale_reply.wait().unwrap_err();
+        assert_eq!(err.id, 0);
+        assert!(err.waited >= Duration::from_millis(50));
+        assert!(format!("{err}").contains("deadline"), "{err}");
+        // …and the batcher still serves what it dispatched
+        fresh_reply.fill(Response {
+            id: 1,
+            logits: vec![],
+            latency: Duration::ZERO,
+            batch_size: 1,
+        });
+        assert_eq!(fresh_reply.wait().unwrap().id, 1);
+        assert!(q.next_batch().is_none(), "queue drained clean");
     }
 
     #[test]

@@ -26,7 +26,10 @@
 pub mod batcher;
 pub mod engine;
 
-pub use batcher::{BatcherConfig, QueueFull, Reply, Request, RequestQueue, Response};
+pub use batcher::{
+    BatcherConfig, DeadlineExceeded, QueueFull, Reply, Request, RequestQueue,
+    Response,
+};
 pub use engine::InferenceEngine;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -48,6 +51,9 @@ pub struct ServeReport {
     /// Requests the queue's admission control turned away
     /// ([`QueueFull`]; always 0 when `cfg.queue_cap == 0`).
     pub rejected: usize,
+    /// Requests that out-waited their per-request deadline in the queue
+    /// ([`DeadlineExceeded`]; always 0 when `cfg.request_timeout_us == 0`).
+    pub timed_out: usize,
     /// First submission → last reply, seconds.
     pub wall_seconds: f64,
     /// `completed / wall_seconds` — the sustained rate (under open loop,
@@ -71,6 +77,7 @@ impl ServeReport {
         Value::obj(vec![
             ("completed", Value::num(self.completed as f64)),
             ("rejected", Value::num(self.rejected as f64)),
+            ("timed_out", Value::num(self.timed_out as f64)),
             ("wall_seconds", Value::num(self.wall_seconds)),
             ("throughput_qps", Value::num(self.throughput_qps)),
             ("p50_ms", Value::num(self.p50_ms)),
@@ -83,6 +90,10 @@ impl ServeReport {
             ("offered_load", Value::num(self.cfg.offered_load)),
             ("concurrency", Value::num(self.cfg.concurrency as f64)),
             ("queue_cap", Value::num(self.cfg.queue_cap as f64)),
+            (
+                "request_timeout_us",
+                Value::num(self.cfg.request_timeout_us as f64),
+            ),
         ])
     }
 }
@@ -144,6 +155,7 @@ pub fn run_server(
         max_batch: cfg.max_batch,
         max_wait: Duration::from_micros(cfg.max_wait_us),
         queue_cap: cfg.queue_cap,
+        timeout: Duration::from_micros(cfg.request_timeout_us),
     });
     let n = cfg.requests;
     let replies: Vec<Reply> = (0..n).map(|_| Reply::new()).collect();
@@ -212,26 +224,33 @@ pub fn run_server(
         server.join().unwrap();
     });
     let wall = t0.elapsed().as_secs_f64();
-    // every admitted request's reply is filled by now (the server drained
-    // the queue before exiting), so these waits never block; rejected
-    // requests have no reply coming and are skipped
+    // every admitted request's reply is resolved by now — served, or
+    // expired with `DeadlineExceeded` (the server drained the queue
+    // before exiting) — so these waits never block; rejected requests
+    // have no reply coming and are skipped
     let mut latencies = Vec::with_capacity(n);
     let mut batch_sum = 0usize;
     let mut rejected = 0usize;
+    let mut timed_out = 0usize;
     for (i, reply) in replies.iter().enumerate() {
         if turned_away[i].load(Ordering::Relaxed) {
             rejected += 1;
             continue;
         }
-        let resp = reply.wait();
-        latencies.push(resp.latency);
-        batch_sum += resp.batch_size;
+        match reply.wait() {
+            Ok(resp) => {
+                latencies.push(resp.latency);
+                batch_sum += resp.batch_size;
+            }
+            Err(_) => timed_out += 1,
+        }
     }
     latencies.sort();
     let completed = latencies.len();
     ServeReport {
         completed,
         rejected,
+        timed_out,
         wall_seconds: wall,
         throughput_qps: if wall > 0.0 { completed as f64 / wall } else { 0.0 },
         p50_ms: quantile_ms(&latencies, 0.50),
@@ -275,10 +294,12 @@ mod tests {
             workers: 2,
             offered_load: 0.0,
             queue_cap: 0,
+            request_timeout_us: 0,
         };
         let report = run_server(&model, 784, &inputs, &cfg);
         assert_eq!(report.completed, 24);
         assert_eq!(report.rejected, 0, "unbounded queue never rejects");
+        assert_eq!(report.timed_out, 0, "no deadline armed");
         assert!(report.p50_ms > 0.0);
         assert!(report.p99_ms >= report.p50_ms);
         assert!(report.mean_batch >= 1.0);
@@ -287,6 +308,8 @@ mod tests {
         assert_eq!(j.get("rejected").as_usize(), Some(0));
         assert_eq!(j.get("max_batch").as_usize(), Some(4));
         assert_eq!(j.get("queue_cap").as_usize(), Some(0));
+        assert_eq!(j.get("timed_out").as_usize(), Some(0));
+        assert_eq!(j.get("request_timeout_us").as_usize(), Some(0));
     }
 
     #[test]
@@ -305,6 +328,7 @@ mod tests {
             workers: 1,
             concurrency: 4,
             queue_cap: 1,
+            request_timeout_us: 0,
         };
         let report = run_server(&model, 784, &inputs, &cfg);
         assert_eq!(report.completed + report.rejected, 64);

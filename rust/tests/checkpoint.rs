@@ -159,3 +159,37 @@ fn file_level_failures_are_typed() {
         other => panic!("want Io, got {other:?}"),
     }
 }
+
+/// Atomic-write discipline: a crash mid-save leaves at most a dangling
+/// `<path>.tmp` — the live checkpoint at `<path>` is only ever replaced by
+/// a complete rename, so a truncated tmp file never shadows or corrupts
+/// it.
+#[test]
+fn truncated_tmp_file_never_corrupts_the_live_checkpoint() {
+    let model = models::build("mlp", 3).unwrap();
+    let path = tmp("atomic");
+    checkpoint::save(&path, "mlp", 3, &model).unwrap();
+    assert!(
+        !checkpoint::tmp_path(&path).exists(),
+        "a completed save must not leave its tmp file behind"
+    );
+
+    // simulate a crash mid-write: half the bytes land in the tmp file and
+    // the rename never happens
+    let bytes = save_bytes("mlp", 3, &model);
+    std::fs::write(checkpoint::tmp_path(&path), &bytes[..bytes.len() / 2])
+        .unwrap();
+
+    // the live checkpoint is untouched and still loads clean
+    let ckpt = checkpoint::load(&path).unwrap();
+    assert_eq!(ckpt.model_name, "mlp");
+    ckpt.build_model().unwrap();
+
+    // while the torn tmp file itself is structurally truncated
+    assert!(matches!(
+        load(&checkpoint::tmp_path(&path)).unwrap_err(),
+        CkptError::Truncated { .. }
+    ));
+    std::fs::remove_file(checkpoint::tmp_path(&path)).unwrap();
+    std::fs::remove_file(&path).unwrap();
+}

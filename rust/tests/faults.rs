@@ -1,0 +1,469 @@
+//! Fault-injection and fault-tolerance suite (DESIGN.md §7.7).
+//!
+//! The headline contracts: (1) chaos runs are **deterministic** — the
+//! fault plan draws from its own PCG64 stream, so a spec replays
+//! bit-for-bit and stays replica-count invariant; (2) injected lane
+//! dropout is **unbiased** — survivors rescaled by `1/(1-p)` every armed
+//! step reproduce the exact reduce in MC mean (the unrescaled control
+//! fails the same bar); (3) a run killed at step k and `--resume`d from
+//! its periodic checkpoint reconstructs the uninterrupted trajectory
+//! **bitwise** (params, optimizer slots and every RNG stream restore;
+//! the batch stream fast-forwards by replay); (4) torn checkpoint
+//! writes never corrupt the live file (atomic tmp+rename); (5) poisoned
+//! gradients are skipped, then bail typed after five in a row; (6) a
+//! panicking replica worker degrades the reduce instead of taking the
+//! run down; (7) serve-side deadlines expire queued requests with a
+//! typed error without wedging the batcher.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use uavjp::config::{Preset, ServeConfig, TrainConfig};
+use uavjp::faults::FaultPlan;
+use uavjp::native::{checkpoint, models, NativeTrainer, Sequential};
+use uavjp::replicate::{ReplicaGroup, StepFaults};
+use uavjp::rng::Pcg64;
+use uavjp::serve::run_server;
+use uavjp::tensor::kernels::{self, Kernel, KernelKind};
+use uavjp::tensor::Mat;
+
+/// `set_kernel` / `set_threads` are process-global knobs; tests that pin
+/// a kernel kind for bitwise comparisons hold this lock (same discipline
+/// as `tests/replicate.rs`).
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+/// Pin the kernel knob; the guard restores the previous resolution on
+/// drop, including on panic.
+fn pin_kernel(kind: KernelKind) -> KernelGuard {
+    let prev = kernels::active();
+    kernels::set_kernel(kind);
+    KernelGuard(match prev {
+        Kernel::Scalar => KernelKind::Scalar,
+        _ => KernelKind::Simd,
+    })
+}
+
+struct KernelGuard(KernelKind);
+
+impl Drop for KernelGuard {
+    fn drop(&mut self) {
+        kernels::set_kernel(self.0);
+    }
+}
+
+/// Unique-per-test temp path (tests share one process).
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("uavjp_fault_{}_{name}", std::process::id()))
+}
+
+/// Short run sized for trajectory comparison: 12 steps, batch 32 (4 rows
+/// per lane on the 8-lane grid when replicated).
+fn chaos_cfg(model: &str, spec: &str) -> TrainConfig {
+    let mut cfg = Preset::Smoke.base(model).unwrap();
+    cfg.method = "l1".into();
+    cfg.budget = 0.25;
+    cfg.act_policy = "exact".into(); // decouple from the UAVJP_ACTPOLICY env
+    cfg.train_size = 256;
+    cfg.test_size = 64;
+    cfg.batch = 32;
+    cfg.steps = 12;
+    cfg.eval_every = 12;
+    cfg.fault_spec = spec.into();
+    cfg
+}
+
+fn losses_of(cfg: TrainConfig) -> Vec<f64> {
+    NativeTrainer::new(cfg).unwrap().run().unwrap().losses
+}
+
+/// One inference forward over the model's synthetic test split, logits
+/// flattened out — the bitwise fingerprint resume comparisons use.
+fn final_logits(trainer: &NativeTrainer) -> Vec<f32> {
+    let (_, test) = trainer.datasets();
+    let n = 5usize.min(test.n);
+    let mut x = Mat::zeros(n, test.dim);
+    x.data.copy_from_slice(&test.x[..n * test.dim]);
+    let model = trainer.model();
+    let mut ws = model.inference_workspace(n, test.dim);
+    model.forward(&x, &mut ws);
+    ws.output().data.clone()
+}
+
+#[test]
+fn chaos_runs_replay_bit_identically_and_stay_replica_invariant() {
+    // the fault stream is disjoint from every training stream, so a
+    // lane-drop spec is a pure function of (seed, spec): same losses on
+    // a repeat run and at every replica count — while still actually
+    // changing the trajectory relative to the fault-free run
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
+    let with = |r: usize, spec: &str| {
+        let mut cfg = chaos_cfg("mlp", spec);
+        cfg.replicas = r;
+        losses_of(cfg)
+    };
+    let chaos = with(1, "lane_drop@p=0.2");
+    assert!(chaos.iter().all(|l| l.is_finite()), "chaos run diverged");
+    assert_eq!(chaos, with(1, "lane_drop@p=0.2"), "replay drifts");
+    assert_eq!(chaos, with(2, "lane_drop@p=0.2"), "replica count leaks in");
+    assert_eq!(chaos, with(4, "lane_drop@p=0.2"), "replica count leaks in");
+    let clean = with(1, "");
+    // dropped lanes never touch the loss (the forward ran; only the
+    // gradient wire dropped): step 0 sees identical params either way
+    assert_eq!(chaos[0], clean[0], "lane drops must not perturb the loss");
+    assert_ne!(chaos, clean, "armed lane dropout must change the trajectory");
+}
+
+#[test]
+fn injected_lane_dropout_compensation_is_unbiased() {
+    // MC mean of the lane-dropped, 1/(1-p)-rescaled reduce over fresh
+    // drop masks must match the exact (fault-free) reduce. Margin
+    // calibration via python/tools/native_sim.py: with the mlp at init
+    // on this batch, Σ‖g_l‖²/‖g‖² ≈ 0.93 (lane gradients are near
+    // orthogonal), so at p=0.3, T=400 the expected relative deviation
+    // is sqrt(p/(1-p)·0.93/400) ≈ 0.032 and 0.10 is a ≈3σ bar — while
+    // the unrescaled control sits at ≈ p = 0.3, failing it decisively.
+    let mut cfg = chaos_cfg("mlp", "");
+    cfg.replicas = 4;
+    cfg.location = "none".into(); // no gate noise: the exact reduce is fixed
+    let master = models::build("mlp", 0).unwrap();
+    let mut ws = master.workspace(cfg.batch, 784);
+
+    let mut rng = Pcg64::new(41, 7);
+    let x = Mat::from_fn(cfg.batch, 784, |_, _| rng.gaussian() as f32);
+    let y: Vec<i32> =
+        (0..cfg.batch).map(|_| (rng.next_u64() % 10) as i32).collect();
+
+    let mut group = ReplicaGroup::new(&cfg, &master).unwrap();
+    group.step(&master, &x, &y, &mut ws.grad_slots);
+    let exact: Vec<f64> = ws
+        .grad_slots
+        .slots
+        .iter()
+        .flat_map(|s| s.iter().map(|&v| v as f64).collect::<Vec<_>>())
+        .collect();
+
+    let plan = FaultPlan::parse("lane_drop@p=0.3").unwrap();
+    let mut frng = FaultPlan::stream(0);
+    let trials = 400usize;
+    let mut acc = vec![0.0f64; exact.len()];
+    for _ in 0..trials {
+        let faults = StepFaults {
+            drops: plan.draw_lane_drops(&mut frng),
+            gain: plan.lane_gain(),
+            panic_replica: None,
+        };
+        group
+            .step_faulted(&master, &x, &y, &mut ws.grad_slots, &faults)
+            .unwrap();
+        let mut k = 0usize;
+        for slot in &ws.grad_slots.slots {
+            for &v in slot {
+                acc[k] += v as f64;
+                k += 1;
+            }
+        }
+    }
+    let rel_of = |scale: f64| -> f64 {
+        let t = trials as f64;
+        let mut err = 0.0f64;
+        let mut norm = 0.0f64;
+        for (a, e) in acc.iter().zip(&exact) {
+            let d = scale * a / t - e;
+            err += d * d;
+            norm += e * e;
+        }
+        (err / norm.max(1e-12)).sqrt()
+    };
+    let rel = rel_of(1.0);
+    assert!(rel < 0.10, "compensated lane dropout deviates: {rel}");
+    // negative control: an estimator missing the 1/(1-p) rescale keeps
+    // only the surviving (1-p) fraction in expectation; simulate it by
+    // scaling the compensated mean back down — it must fail the same
+    // bar, proving the margin has teeth
+    let biased = rel_of(1.0 - 0.3);
+    assert!(biased > 0.10, "unrescaled control passed the bar: {biased}");
+}
+
+#[test]
+fn killed_and_resumed_runs_match_uninterrupted_bitwise() {
+    // kill@step=7 executes steps 0..=7; --ckpt-every 4 leaves a step-8
+    // checkpoint (saved before the kill fires); resuming it replays the
+    // batch stream past step 8 and restores params / optimizer slots /
+    // every RNG stream — so the tail losses, the final eval and the
+    // final logits are all bitwise identical to the uninterrupted run.
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    for kind in [KernelKind::Scalar, KernelKind::Simd] {
+        let _restore = pin_kernel(kind);
+        for (model, optimizer) in [("mlp", "momentum"), ("vit", "adam")] {
+            let base = || {
+                let mut cfg = chaos_cfg(model, "");
+                cfg.optimizer = optimizer.into();
+                cfg
+            };
+            let mut control = NativeTrainer::new(base()).unwrap();
+            let control_curve = control.run().unwrap();
+
+            let path = tmp(&format!("resume_{model}_{kind:?}"));
+            let mut cfg = base();
+            cfg.fault_spec = "kill@step=7".into();
+            cfg.ckpt_every = 4;
+            cfg.ckpt_path = path.to_str().unwrap().into();
+            let err =
+                NativeTrainer::new(cfg).unwrap().run().unwrap_err();
+            assert!(
+                format!("{err}").contains("injected kill after step 7"),
+                "{model}/{kind:?}: {err}"
+            );
+
+            let mut cfg = base();
+            cfg.resume = path.to_str().unwrap().into();
+            let mut resumed = NativeTrainer::new(cfg).unwrap();
+            assert_eq!(resumed.start_step(), 8, "{model}/{kind:?}");
+            let resumed_curve = resumed.run().unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_eq!(
+                resumed_curve.losses,
+                control_curve.losses[8..],
+                "{model}/{kind:?}: resumed tail losses drift"
+            );
+            assert_eq!(
+                resumed_curve.evals, control_curve.evals,
+                "{model}/{kind:?}: resumed final eval drifts"
+            );
+            assert_eq!(
+                final_logits(&resumed),
+                final_logits(&control),
+                "{model}/{kind:?}: resumed parameters drift"
+            );
+        }
+    }
+}
+
+#[test]
+fn resume_is_bitwise_under_replicas_and_armed_lane_dropout() {
+    // the stochastic case: lane dropout stays armed across the kill, so
+    // the resumed run's fault stream must restart mid-sequence (raw-word
+    // restore), and the per-lane gate streams must restore onto the
+    // lane-framed grid — both replica-count independent
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
+    let base = |spec: &str| {
+        let mut cfg = chaos_cfg("mlp", spec);
+        cfg.replicas = 2;
+        cfg
+    };
+    let mut control = NativeTrainer::new(base("lane_drop@p=0.2")).unwrap();
+    let control_curve = control.run().unwrap();
+
+    let path = tmp("resume_dp");
+    let mut cfg = base("lane_drop@p=0.2,kill@step=7");
+    cfg.ckpt_every = 4;
+    cfg.ckpt_path = path.to_str().unwrap().into();
+    NativeTrainer::new(cfg).unwrap().run().unwrap_err();
+
+    let mut cfg = base("lane_drop@p=0.2");
+    cfg.resume = path.to_str().unwrap().into();
+    cfg.replicas = 4; // lane-framed state resumes at any replica count
+    let mut resumed = NativeTrainer::new(cfg).unwrap();
+    let resumed_curve = resumed.run().unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(resumed_curve.losses, control_curve.losses[8..]);
+    assert_eq!(final_logits(&resumed), final_logits(&control));
+}
+
+#[test]
+fn torn_periodic_checkpoint_never_corrupts_resume() {
+    // ckpt_truncate@step=4 tears the step-4 periodic save mid-write
+    // (half the bytes land in `<path>.tmp`, no rename) and kill@step=3
+    // dies right after — exactly a crash during checkpointing. The live
+    // file still holds the intact step-2 checkpoint, and resuming it
+    // reconstructs the uninterrupted run bitwise.
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
+    let mut control = NativeTrainer::new(chaos_cfg("mlp", "")).unwrap();
+    let control_curve = control.run().unwrap();
+
+    let path = tmp("torn");
+    let mut cfg = chaos_cfg("mlp", "ckpt_truncate@step=4,kill@step=3");
+    cfg.ckpt_every = 2;
+    cfg.ckpt_path = path.to_str().unwrap().into();
+    let err = NativeTrainer::new(cfg).unwrap().run().unwrap_err();
+    assert!(format!("{err}").contains("injected kill"), "{err}");
+
+    // the torn tmp file is on disk and truncated; the live file is not
+    let torn = checkpoint::tmp_path(&path);
+    assert!(matches!(
+        checkpoint::load(&torn).unwrap_err(),
+        checkpoint::CkptError::Truncated { .. }
+    ));
+    std::fs::remove_file(&torn).unwrap();
+    let ckpt = checkpoint::load(&path).unwrap();
+    assert_eq!(ckpt.train.as_ref().unwrap().step, 2, "surviving save");
+
+    let mut cfg = chaos_cfg("mlp", "");
+    cfg.resume = path.to_str().unwrap().into();
+    let mut resumed = NativeTrainer::new(cfg).unwrap();
+    assert_eq!(resumed.start_step(), 2);
+    let resumed_curve = resumed.run().unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(resumed_curve.losses, control_curve.losses[2..]);
+    assert_eq!(final_logits(&resumed), final_logits(&control));
+}
+
+#[test]
+fn resume_rejects_mismatched_checkpoints_loudly() {
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
+    // a param-only (v1) checkpoint has no train state to resume
+    let v1 = tmp("v1");
+    let model = models::build("mlp", 0).unwrap();
+    checkpoint::save(&v1, "mlp", 0, &model).unwrap();
+    let mut cfg = chaos_cfg("mlp", "");
+    cfg.resume = v1.to_str().unwrap().into();
+    let err = NativeTrainer::new(cfg).unwrap_err();
+    assert!(format!("{err}").contains("param-only"), "{err}");
+    std::fs::remove_file(&v1).unwrap();
+
+    // a resumable checkpoint written under one optimizer cannot silently
+    // seed another's slots
+    let v2 = tmp("v2");
+    let mut cfg = chaos_cfg("mlp", "");
+    cfg.optimizer = "momentum".into();
+    cfg.steps = 2;
+    cfg.eval_every = 2;
+    let mut t = NativeTrainer::new(cfg).unwrap();
+    t.run().unwrap();
+    t.save_checkpoint(&v2).unwrap();
+    let mut cfg = chaos_cfg("mlp", "");
+    cfg.optimizer = "adam".into();
+    cfg.resume = v2.to_str().unwrap().into();
+    let err = NativeTrainer::new(cfg).unwrap_err();
+    assert!(format!("{err}").contains("optimizer mismatch"), "{err}");
+    // ... nor can it resume a different registry model
+    let mut cfg = chaos_cfg("vit", "");
+    cfg.resume = v2.to_str().unwrap().into();
+    let err = NativeTrainer::new(cfg).unwrap_err();
+    assert!(format!("{err}").contains("this run trains"), "{err}");
+    // ... and a plain-run checkpoint cannot restore lane streams
+    let mut cfg = chaos_cfg("mlp", "");
+    cfg.optimizer = "momentum".into();
+    cfg.resume = v2.to_str().unwrap().into();
+    cfg.replicas = 2;
+    let err = NativeTrainer::new(cfg).unwrap_err();
+    assert!(format!("{err}").contains("plain run"), "{err}");
+    std::fs::remove_file(&v2).unwrap();
+}
+
+#[test]
+fn poisoned_gradients_are_skipped_then_bail_typed() {
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
+    // one poisoned step: the update is skipped (counted), the loss stays
+    // finite, and the run completes — diverging from the clean
+    // trajectory only after the skipped step
+    let clean = losses_of(chaos_cfg("mlp", ""));
+    let mut t =
+        NativeTrainer::new(chaos_cfg("mlp", "nan_grad@step=3")).unwrap();
+    let curve = t.run().unwrap();
+    assert_eq!(t.steps_skipped(), 1);
+    assert!(curve.losses.iter().all(|l| l.is_finite()));
+    assert_eq!(curve.losses[..=3], clean[..=3], "loss precedes the poison");
+    assert_ne!(curve.losses[4..], clean[4..], "a skipped step must show");
+
+    // persistent poison: five consecutive skips bail with the typed
+    // NonFiniteLoss instead of silently burning the step budget
+    let mut t =
+        NativeTrainer::new(chaos_cfg("mlp", "nan_grad@from=2")).unwrap();
+    let err = t.run().unwrap_err();
+    assert_eq!(t.steps_skipped(), 5);
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("5 consecutive steps") && msg.contains("diverged"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn a_panicking_replica_degrades_the_step_instead_of_the_run() {
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
+    let mut cfg = chaos_cfg("mlp", "worker_panic@step=3");
+    cfg.replicas = 2;
+    let mut t = NativeTrainer::new(cfg).unwrap();
+    let curve = t.run().unwrap();
+    assert!(curve.losses.iter().all(|l| l.is_finite()));
+    let stats = t.exchange_stats().unwrap();
+    // replica 0 owns 4 of the 8 lanes at --replicas 2; its panic drops
+    // exactly those, on exactly one step
+    assert_eq!(stats.lanes_dropped, 4);
+    assert_eq!(stats.steps_degraded, 1);
+}
+
+#[test]
+fn serve_deadlines_expire_typed_without_wedging_the_batcher() {
+    // max_batch 16 with 4 in flight and a 50 ms coalesce window means no
+    // dispatch trigger fires before the 1 µs deadline: every request
+    // expires in the queue with a typed DeadlineExceeded, the closed
+    // loop keeps cycling (no wedge), and the report accounts for every
+    // request exactly once
+    let model = Arc::new(models::build("mlp", 2).unwrap());
+    let x = {
+        let mut rng = Pcg64::new(5, 9);
+        Mat::from_fn(4, 784, |_, _| rng.gaussian() as f32)
+    };
+    let cfg = ServeConfig {
+        requests: 12,
+        concurrency: 4,
+        max_batch: 16,
+        max_wait_us: 50_000,
+        workers: 1,
+        offered_load: 0.0,
+        queue_cap: 0,
+        request_timeout_us: 1,
+    };
+    let report = run_server(&model, 784, &x, &cfg);
+    assert!(report.timed_out > 0, "no request expired");
+    assert_eq!(
+        report.completed + report.timed_out + report.rejected,
+        12,
+        "every request must resolve exactly once"
+    );
+    assert_eq!(
+        report.to_json().get("timed_out").as_usize(),
+        Some(report.timed_out)
+    );
+}
+
+fn model_forward_fingerprint(model: &Sequential, x: &Mat) -> Vec<f32> {
+    let mut ws = model.inference_workspace(x.rows, x.cols);
+    model.forward(x, &mut ws);
+    ws.output().data.clone()
+}
+
+#[test]
+fn periodic_checkpoints_stay_serveable() {
+    // the v2 train state rides behind the v1 payload: a periodic
+    // checkpoint loads as a serving artifact too, and rebuilds a model
+    // whose forward matches the trainer's at the save point
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = pin_kernel(KernelKind::Scalar);
+    let path = tmp("serveable");
+    let mut cfg = chaos_cfg("mlp", "kill@step=7");
+    cfg.ckpt_every = 8;
+    cfg.ckpt_path = path.to_str().unwrap().into();
+    let mut t = NativeTrainer::new(cfg).unwrap();
+    t.run().unwrap_err(); // the injected kill, right after the step-8 save
+    let ckpt = checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let served = ckpt.build_model().unwrap();
+    let (_, test) = t.datasets();
+    let mut x = Mat::zeros(4, test.dim);
+    x.data.copy_from_slice(&test.x[..4 * test.dim]);
+    assert_eq!(
+        model_forward_fingerprint(&served, &x),
+        model_forward_fingerprint(t.model(), &x),
+        "a periodic checkpoint must serve the params it froze"
+    );
+}

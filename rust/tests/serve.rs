@@ -97,6 +97,7 @@ fn dynamic_batcher_delivers_bitwise_identical_logits() {
         max_batch: 4,
         max_wait: Duration::from_micros(100),
         queue_cap: 0,
+        timeout: Duration::ZERO,
     });
     let n = 18usize;
     let mut handles = Vec::with_capacity(n);
@@ -135,7 +136,7 @@ fn dynamic_batcher_delivers_bitwise_identical_logits() {
         server.join().unwrap();
     });
     for (i, handle) in handles.iter().enumerate() {
-        let resp = handle.wait();
+        let resp = handle.wait().unwrap();
         assert_eq!(resp.id, i as u64);
         let row = i % 6;
         assert_eq!(
@@ -194,6 +195,7 @@ fn train_save_serve_end_to_end() {
         workers: 2,
         offered_load: 0.0,
         queue_cap: 0,
+        request_timeout_us: 0,
     };
     let report = serving::serve_checkpoint(&path, &scfg).unwrap();
     assert_eq!(report.completed, 32);
