@@ -1,0 +1,496 @@
+#!/usr/bin/env python3
+"""Python mirror of rust/src/analyze — used to pre-verify (no rust toolchain
+in the authoring container) that the Rust analyzer's passes land green on the
+real tree, and to enumerate violations that need fixing. Semantics mirror
+rust/src/analyze/{scan,passes}.rs one-for-one; keep them in sync.
+"""
+import os
+import re
+import sys
+
+# --- config (mirror of analyze::config) -----------------------------------
+UNSAFE_ALLOWLIST = [
+    "src/tensor/kernels/gemm.rs",
+    "src/tensor/kernels/vec.rs",
+    "src/tensor/kernels/lane.rs",
+    "src/lib.rs",
+    "tests/alloc_discipline.rs",
+]
+DET_MODULES = [
+    "src/tensor/", "src/native/", "src/sketch/", "src/replicate/",
+    "src/data/", "src/rng/", "src/faults/", "src/pool/",
+]
+DET_BANNED = ["HashMap", "HashSet", "Instant", "SystemTime"]
+HOT_FILES = [
+    "src/tensor/kernels/gemm.rs",
+    "src/tensor/kernels/vec.rs",
+    "src/tensor/kernels/lane.rs",
+]
+HOT_FNS = {
+    "src/native/trainer.rs": ["step"],
+    "src/native/sequential.rs": [
+        "forward", "forward_train", "backward", "apply_grads",
+        "retarget_batch",
+    ],
+    "src/replicate/mod.rs": [
+        "step", "step_faulted", "reduce_into", "accumulate_stats",
+    ],
+    "src/serve/engine.rs": ["infer_batch", "infer_staged", "infer_one"],
+    "src/native/loss.rs": ["loss_and_grad_into", "loss_and_grad_scaled_into"],
+    "src/tensor/mod.rs": ["gemm_into", "sparse_dx_into", "sparse_dw_into"],
+}
+ALLOC_TOKENS = [
+    "Vec::new", "vec!", "with_capacity", "to_vec", ".clone(", ".push(",
+    "Box::new", "format!", "to_string", "String::new", ".collect(",
+    "to_owned",
+]
+ALLOW_KINDS = ["rng", "unsafe", "nondet", "alloc"]
+# registry mirror: (name, mix_kind, mix_const, lo, hi)
+REGISTRY = [
+    ("data-split",        "raw", 0,          1, 2),
+    ("train-batch",       "add", 77,         3, 3),
+    ("sketch-gates",      "xor", 0x9e3779b9, 11, 11),
+    ("act-gates",         "xor", 0x51AC7,    13, 13),
+    ("faults",            "xor", 0xFA0175,   17, 17),
+    ("mnist-anchor",      "xor", 0xA17C,     100, 109),
+    ("cifar-anchor",      "xor", 0xC1FA,     200, 209),
+    ("layer-init",        "xor", 0x1E57,     300, 999),
+    ("lane-sketch-gates", "xor", 0x9e3779b9, 1100, 1107),
+    ("lane-act-gates",    "xor", 0x51AC7,    1300, 1307),
+    ("variance-trial",    "xor", 0xABCD,     0, 4095),
+    ("null",              "fixed", 0,        0, 0),
+    ("ptest",             "raw", 0,          0x9E37, 0x9E37),
+]
+
+
+# --- scanner ----------------------------------------------------------------
+def sanitize(text):
+    """Split each line into (code, comment): literal contents blanked, comment
+    text removed from code but kept aside for SAFETY/allow detection."""
+    code_lines, comment_lines = [], []
+    code, comment = [], []
+    i, n = 0, len(text)
+    mode = "normal"  # normal|line_comment|block_comment|string|raw_string
+    block_depth = 0
+    raw_hashes = 0
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            code_lines.append("".join(code))
+            comment_lines.append("".join(comment))
+            code, comment = [], []
+            if mode == "line_comment":
+                mode = "normal"
+            i += 1
+            continue
+        if mode == "line_comment":
+            comment.append(c)
+            i += 1
+        elif mode == "block_comment":
+            comment.append(c)
+            if c == "/" and nxt == "*":
+                block_depth += 1
+                comment.append(nxt)
+                i += 2
+            elif c == "*" and nxt == "/":
+                block_depth -= 1
+                comment.append(nxt)
+                i += 2
+                if block_depth == 0:
+                    mode = "normal"
+            else:
+                i += 1
+        elif mode == "string":
+            if c == "\\":
+                if nxt == "\n":
+                    code_lines.append("".join(code))
+                    comment_lines.append("".join(comment))
+                    code, comment = [], []
+                i += 2
+            elif c == '"':
+                code.append('"')
+                mode = "normal"
+                i += 1
+            else:
+                i += 1
+        elif mode == "raw_string":
+            if c == '"' and text[i + 1:i + 1 + raw_hashes] == "#" * raw_hashes:
+                code.append('"')
+                mode = "normal"
+                i += 1 + raw_hashes
+            else:
+                i += 1
+        else:  # normal
+            if c == "/" and nxt == "/":
+                comment.append("//")
+                mode = "line_comment"
+                i += 2
+            elif c == "/" and nxt == "*":
+                comment.append("/*")
+                mode = "block_comment"
+                block_depth = 1
+                i += 2
+            elif c == '"':
+                code.append('"')
+                mode = "string"
+                i += 1
+            elif c == "r" and (nxt == '"' or nxt == "#") and not (
+                code and (code[-1].isalnum() or code[-1] == "_")
+            ):
+                j = i + 1
+                h = 0
+                while j < n and text[j] == "#":
+                    h += 1
+                    j += 1
+                if j < n and text[j] == '"':
+                    code.append('r"')
+                    raw_hashes = h
+                    mode = "raw_string"
+                    i = j + 1
+                else:
+                    code.append(c)
+                    i += 1
+            elif c == "'":
+                m = re.match(r"'(\\.[^']*|[^'\\])'", text[i:])
+                if m:
+                    code.append("' '")
+                    i += len(m.group(0))
+                else:
+                    code.append(c)  # lifetime tick
+                    i += 1
+            else:
+                code.append(c)
+                i += 1
+    if code or comment:
+        code_lines.append("".join(code))
+        comment_lines.append("".join(comment))
+    return code_lines, comment_lines
+
+
+def depths(code_lines):
+    """Brace depth *before* each line."""
+    out = []
+    d = 0
+    for ln in code_lines:
+        out.append(d)
+        d += ln.count("{") - ln.count("}")
+    return out
+
+
+def test_regions(code_lines):
+    """Bool per line: inside a #[cfg(test)] mod region."""
+    n = len(code_lines)
+    is_test = [False] * n
+    dep = depths(code_lines)
+    i = 0
+    while i < n:
+        if re.search(r"#\[cfg\((all\()?\s*test", code_lines[i]):
+            j = i + 1
+            while j < n and (
+                code_lines[j].strip() == ""
+                or code_lines[j].strip().startswith("#[")
+            ):
+                j += 1
+            if j < n and re.match(r"\s*(pub\s+)?mod\b", code_lines[j]):
+                d0 = dep[j]
+                k = j
+                d = d0
+                while k < n:
+                    is_test[k] = True
+                    d = dep[k] + code_lines[k].count("{") - code_lines[k].count("}")
+                    if k > j or "{" in code_lines[k]:
+                        if d <= d0 and "{" in "".join(code_lines[j:k + 1]):
+                            break
+                    k += 1
+                i = k + 1
+                continue
+            elif j < n:
+                is_test[j] = True
+                i = j + 1
+                continue
+        i += 1
+    return is_test
+
+
+def fn_regions(code_lines, names):
+    """Bool per line: inside the body of a fn whose name is in `names`."""
+    n = len(code_lines)
+    hot = [False] * n
+    for i, ln in enumerate(code_lines):
+        m = re.search(r"\bfn\s+(\w+)", ln)
+        if not m or m.group(1) not in names:
+            continue
+        # find opening brace from this line on
+        d = 0
+        opened = False
+        k = i
+        while k < n:
+            for ch in code_lines[k]:
+                if ch == "{":
+                    d += 1
+                    opened = True
+                elif ch == "}":
+                    d -= 1
+            hot[k] = True
+            if opened and d <= 0:
+                break
+            k += 1
+    return hot
+
+
+def word_in(tok, line):
+    return re.search(r"(?<![A-Za-z0-9_])" + re.escape(tok) + r"(?![A-Za-z0-9_])", line)
+
+
+def has_allow(kind, code_lines, comment_lines, i):
+    """An allow comment covers its own line (trailing) and, when placed on
+    its own line, the remainder of the statement that follows it — the
+    walk back from the finding stops at the first earlier line ending in
+    a statement/block terminator (`;`, `{`, `}`), capped at 12 lines."""
+    for j in range(i, max(-1, i - 13), -1):
+        m = re.search(r"analyze:\s*allow\((\w+),\s*[^)]+\)", comment_lines[j])
+        if m and m.group(1) == kind:
+            return True
+        if j < i and code_lines[j].rstrip()[-1:] in (";", "{", "}"):
+            break
+    return False
+
+
+def parse_rng_args(args):
+    """(mix_kind, mix_const, stream) with None for unparseable parts."""
+    parts = split_top(args)
+    if len(parts) > 1 and parts[-1].strip() == "":
+        parts = parts[:-1]  # trailing comma in a multi-line call
+    if len(parts) != 2:
+        return None, None, None
+    seed, stream = parts[0].strip(), parts[1].strip()
+    mix = None
+    const = None
+    m = re.match(r".*\^\s*(0x[0-9a-fA-F_]+|\d+)\s*$", seed)
+    if m:
+        mix, const = "xor", int(m.group(1).replace("_", ""), 0)
+    elif re.match(r"^.*\.wrapping_add\((\d+)\)$", seed):
+        mix = "add"
+        const = int(re.match(r"^.*\.wrapping_add\((\d+)\)$", seed).group(1))
+    elif re.match(r"^(0x[0-9a-fA-F_]+|\d+)$", seed):
+        mix, const = "fixed", int(seed.replace("_", ""), 0)
+    elif re.match(r"^[\w.]+$", seed):
+        mix, const = "raw", 0
+    sid = None
+    m = re.match(r"^(0x[0-9a-fA-F_]+|\d+)$", stream)
+    if m:
+        sid = int(m.group(1).replace("_", ""), 0)
+    else:
+        m = re.match(r"^(\d+)\s*\+", stream)
+        if m:
+            sid = int(m.group(1))
+    return mix, const, sid
+
+
+def split_top(s):
+    parts, d, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            d += 1
+        elif ch in ")]}":
+            d -= 1
+        if ch == "," and d == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
+def extract_call(code_lines, i, col):
+    """Balanced-paren arg text of a call starting at line i, col of '('."""
+    buf = []
+    d = 0
+    k = i
+    pos = col
+    while k < len(code_lines):
+        ln = code_lines[k]
+        while pos < len(ln):
+            ch = ln[pos]
+            if ch == "(":
+                d += 1
+                if d == 1:
+                    pos += 1
+                    continue
+            elif ch == ")":
+                d -= 1
+                if d == 0:
+                    return "".join(buf)
+            if d >= 1:
+                buf.append(ch)
+            pos += 1
+        buf.append(" ")
+        k += 1
+        pos = 0
+    return None
+
+
+def registry_match(mix, const, sid):
+    for (name, rk, rc, lo, hi) in REGISTRY:
+        if rk == mix and rc == const and sid is not None and lo <= sid <= hi:
+            return name
+    return None
+
+
+# --- passes -----------------------------------------------------------------
+def analyze_file(relpath, text, counts=None):
+    findings = []
+    counts = {} if counts is None else counts
+    code, comment = sanitize(text)
+    in_test = test_regions(code)
+    if relpath.startswith("tests/"):
+        in_test = [True] * len(code)
+
+    is_src = relpath.startswith("src/")
+
+    # pass 1: rng streams
+    if is_src and not relpath.startswith("src/rng/"):
+        for i, ln in enumerate(code):
+            if in_test[i]:
+                continue
+            m = re.search(r"\bPcg64::new\s*(\()", ln)
+            if m:
+                if has_allow("rng", code, comment, i):
+                    continue
+                args = extract_call(code, i, m.start(1))
+                mix, const, sid = parse_rng_args(args or "")
+                hit = registry_match(mix, const, sid)
+                if hit:
+                    msg = (
+                        f"ad-hoc derivation of declared stream `{hit}` — "
+                        f"route through rng::streams"
+                    )
+                else:
+                    msg = (
+                        "undeclared RNG stream derivation — declare it in "
+                        "rng::streams and route through its constructor"
+                    )
+                findings.append(("rng-stream", relpath, i + 1, msg))
+
+    # pass 2: unsafe discipline
+    allowed = any(relpath == a or relpath.endswith(a) for a in UNSAFE_ALLOWLIST)
+    for i, ln in enumerate(code):
+        if not word_in("unsafe", ln):
+            continue
+        if has_allow("unsafe", code, comment, i):
+            continue
+        if not allowed:
+            findings.append((
+                "unsafe", relpath, i + 1,
+                "`unsafe` outside the kernel-file allowlist",
+            ))
+            continue
+        # need a SAFETY: comment on the line or within 6 lines above
+        ok = False
+        for j in range(i, max(-1, i - 7), -1):
+            if "SAFETY:" in comment[j] or "# Safety" in comment[j]:
+                ok = True
+                break
+            if j < i and code[j].strip() and not code[j].strip().startswith("#["):
+                break
+        if not ok:
+            findings.append((
+                "unsafe", relpath, i + 1,
+                "`unsafe` without a `// SAFETY:` justification",
+            ))
+
+    # pass 3: determinism
+    if is_src and any(relpath.startswith(p) for p in DET_MODULES):
+        for i, ln in enumerate(code):
+            if in_test[i] or has_allow("nondet", code, comment, i):
+                continue
+            for tok in DET_BANNED:
+                if word_in(tok, ln):
+                    findings.append((
+                        "determinism", relpath, i + 1,
+                        f"`{tok}` in a deterministic compute module",
+                    ))
+                    break
+            else:
+                if re.search(r"\.(values|keys)\(\)[\w\s().]*\.\s*(sum|fold|product)\b", ln) \
+                        or word_in("par_iter", ln):
+                    findings.append((
+                        "determinism", relpath, i + 1,
+                        "unordered reduction in a deterministic compute module",
+                    ))
+
+    # pass 4: hot-path allocations
+    hot = None
+    if any(relpath == h or relpath.endswith(h) for h in HOT_FILES):
+        hot = [not t for t in in_test]
+    else:
+        for suf, names in HOT_FNS.items():
+            if relpath == suf or relpath.endswith(suf):
+                hot = fn_regions(code, set(names))
+                for i, t in enumerate(in_test):
+                    if t:
+                        hot[i] = False
+    if hot:
+        for i, ln in enumerate(code):
+            if not hot[i]:
+                continue
+            for tok in ALLOC_TOKENS:
+                if tok in ln:
+                    if has_allow("alloc", code, comment, i):
+                        break
+                    findings.append((
+                        "hot-alloc", relpath, i + 1,
+                        f"`{tok}` in a steady-state function",
+                    ))
+                    break
+
+    # pass 5: allow-comment audit (counts well-formed waivers per kind,
+    # flags malformed attempts — mirrors passes::allow_audit)
+    for i, com in enumerate(comment):
+        p = com.find("analyze:")
+        if p < 0 or not com[p + 8:].lstrip().startswith("allow("):
+            continue
+        m = re.search(r"analyze:\s*allow\((\w+),([^)]*)\)", com)
+        if m and m.group(2).strip():
+            kind = m.group(1)
+            if kind in ALLOW_KINDS:
+                counts[kind] = counts.get(kind, 0) + 1
+            else:
+                findings.append((
+                    "allow-grammar", relpath, i + 1,
+                    f"unknown allow kind `{kind}` — expected one of {ALLOW_KINDS}",
+                ))
+        else:
+            findings.append((
+                "allow-grammar", relpath, i + 1,
+                "malformed allow comment — grammar is "
+                "`analyze: allow(<kind>, <reason>)`",
+            ))
+    return findings
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "/root/repo/rust"
+    all_f = []
+    counts = {}
+    for base in ("src", "tests"):
+        for dirpath, _, files in os.walk(os.path.join(root, base)):
+            for f in sorted(files):
+                if not f.endswith(".rs"):
+                    continue
+                p = os.path.join(dirpath, f)
+                rel = os.path.relpath(p, root)
+                with open(p) as fh:
+                    all_f += analyze_file(rel, fh.read(), counts)
+    all_f.sort(key=lambda x: (x[1], x[2]))
+    for (p, f, l, m) in all_f:
+        print(f"{f}:{l}: [{p}] {m}")
+    waivers = ", ".join(f"{k}: {v}" for k, v in sorted(counts.items())) or "none"
+    print(f"-- {len(all_f)} findings, waivers: {waivers}")
+    return 1 if all_f else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

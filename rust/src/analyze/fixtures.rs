@@ -1,0 +1,111 @@
+//! Inline source fixtures for the analyzer's own test suite
+//! (`tests/analyze_lints.rs`): one snippet per lint pass that must fire
+//! exactly once, a clean snippet that must fire nothing, and
+//! allow-comment snippets for the waiver grammar. Everything lives in
+//! string literals, so the analyzer scanning its own tree blanks them.
+
+/// Fires nothing under any pass (analyzed as `src/native/clean.rs`).
+pub const CLEAN: &str = r#"
+use crate::tensor::Mat;
+
+pub fn double(m: &mut Mat) {
+    for v in m.data.iter_mut() {
+        *v *= 2.0;
+    }
+}
+"#;
+
+/// Exactly one `rng-stream` finding: an undeclared (xor, stream) pair
+/// (analyzed as `src/native/clean.rs` — any non-`src/rng/` source path).
+pub const RNG_UNDECLARED: &str = r#"
+use crate::rng::Pcg64;
+
+fn make(seed: u64) -> Pcg64 {
+    Pcg64::new(seed ^ 0xbeef, 4242)
+}
+"#;
+
+/// Exactly one `rng-stream` finding: an ad-hoc derivation of the
+/// *declared* `sketch-gates` stream that should route through
+/// `rng::streams::sketch_gates`.
+pub const RNG_ADHOC_DECLARED: &str = r#"
+use crate::rng::Pcg64;
+
+fn make(seed: u64) -> Pcg64 {
+    Pcg64::new(seed ^ 0x9e3779b9, 11)
+}
+"#;
+
+/// Exactly one `unsafe` finding when analyzed under a non-allowlisted
+/// path such as `src/serve/engine.rs`.
+pub const UNSAFE_OUTSIDE: &str = r#"
+fn poke(p: *mut f32) {
+    unsafe { *p = 1.0 };
+}
+"#;
+
+/// Exactly one `unsafe` finding (missing `// SAFETY:`) when analyzed
+/// under an allowlisted path such as `src/tensor/kernels/vec.rs`.
+pub const UNSAFE_NO_SAFETY: &str = r#"
+fn poke(p: *mut f32) {
+    unsafe { *p = 1.0 };
+}
+"#;
+
+/// Zero findings: allowlisted path and a `SAFETY:` justification.
+pub const UNSAFE_JUSTIFIED: &str = r#"
+fn poke(p: *mut f32) {
+    // SAFETY: caller guarantees p is valid and exclusively owned.
+    unsafe { *p = 1.0 };
+}
+"#;
+
+/// Exactly one `determinism` finding when analyzed under a deterministic
+/// module path such as `src/native/clean.rs`.
+pub const DET_HASHMAP: &str = r#"
+use std::collections::HashMap;
+
+pub fn tally(xs: &[u32]) -> usize {
+    xs.len()
+}
+"#;
+
+/// Exactly one `determinism` finding: unordered float reduction.
+pub const DET_UNORDERED_SUM: &str = r#"
+pub fn total(m: &std::collections::BTreeMap<u32, f32>) -> f32 {
+    m.values().copied().sum()
+}
+"#;
+
+/// Exactly one `hot-alloc` finding when analyzed as
+/// `src/native/trainer.rs` (whose declared steady-state fn is `step`).
+pub const ALLOC_IN_STEP: &str = r#"
+pub fn step(out: &mut [f32]) {
+    let tmp = vec![0.0f32; out.len()];
+    out.copy_from_slice(&tmp);
+}
+
+pub fn evaluate(out: &mut [f32]) {
+    let tmp = vec![1.0f32; out.len()];
+    out.copy_from_slice(&tmp);
+}
+"#;
+
+/// Zero findings, one counted `alloc` waiver: the same allocation with a
+/// well-formed allow comment.
+pub const ALLOC_ALLOWED: &str = r#"
+pub fn step(out: &mut [f32]) {
+    // analyze: allow(alloc, fixture waiver exercising the grammar)
+    let tmp = vec![0.0f32; out.len()];
+    out.copy_from_slice(&tmp);
+}
+"#;
+
+/// Exactly one `allow-grammar` finding: waiver missing its reason.
+pub const ALLOW_MALFORMED: &str = r#"
+pub fn step(out: &mut [f32]) {
+    // analyze: allow(alloc)
+    let tmp = vec![0.0f32; out.len()];
+    out.copy_from_slice(&tmp);
+}
+"#;

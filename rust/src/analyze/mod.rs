@@ -1,0 +1,154 @@
+//! `uavjp-analyze` — repo-invariant static analysis (DESIGN.md §7.8).
+//!
+//! A zero-dependency, line/token-level analyzer (no external parser
+//! crates, matching the repo's vendored-shim ethos) that turns the
+//! correctness contracts DESIGN.md documents into machine-checked,
+//! regression-proof properties:
+//!
+//! 1. **RNG stream hygiene** ([`passes::rng_pass`]) — every non-test
+//!    `Pcg64::new` outside `src/rng/` is flagged; production streams
+//!    must route through the named constructors of
+//!    [`crate::rng::streams`], whose registry the analyzer reads
+//!    directly (no mirrored table to drift).
+//! 2. **Unsafe discipline** ([`passes::unsafe_pass`]) — `unsafe` stays
+//!    confined to the kernel-file allowlist and every use carries a
+//!    `// SAFETY:` justification (§7.3).
+//! 3. **Determinism** ([`passes::det_pass`]) — no `HashMap`/`HashSet`,
+//!    wall-clock reads, or unordered reductions in the deterministic
+//!    compute modules (§7.4–§7.7).
+//! 4. **Hot-path allocation** ([`passes::alloc_pass`]) — the declared
+//!    steady-state functions may not allocate (§7.2); justified
+//!    exceptions carry `analyze:`-prefixed `allow(alloc, reason)`
+//!    waivers, which are counted and reported.
+//!
+//! Run it with `cargo run --release --bin uavjp-analyze`; CI fails on
+//! any finding. Diagnostics are `file:line: [pass] message`, sorted and
+//! deterministic.
+
+pub mod fixtures;
+pub mod passes;
+pub mod scan;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Which lint pass produced a finding. The slug is part of the stable
+/// diagnostic format (golden-tested in `tests/analyze_lints.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    RngStream,
+    Unsafe,
+    Determinism,
+    HotAlloc,
+    AllowGrammar,
+}
+
+impl Pass {
+    pub fn slug(self) -> &'static str {
+        match self {
+            Pass::RngStream => "rng-stream",
+            Pass::Unsafe => "unsafe",
+            Pass::Determinism => "determinism",
+            Pass::HotAlloc => "hot-alloc",
+            Pass::AllowGrammar => "allow-grammar",
+        }
+    }
+}
+
+/// One diagnostic: `{file}:{line}: [{pass}] {message}`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub pass: Pass,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(pass: Pass, file: &str, line: usize, message: String) -> Finding {
+        Finding { pass, file: file.to_string(), line, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass.slug(), self.message)
+    }
+}
+
+/// Result of analyzing one file or a whole tree: sorted findings plus
+/// the per-kind count of well-formed `analyze: allow` waivers.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub allows: BTreeMap<&'static str, usize>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable waiver summary, e.g. `alloc: 6, nondet: 1`.
+    pub fn allow_summary(&self) -> String {
+        let mut parts: Vec<String> =
+            self.allows.iter().map(|(k, v)| format!("{k}: {v}")).collect();
+        if parts.is_empty() {
+            parts.push("none".to_string());
+        }
+        parts.join(", ")
+    }
+
+    fn sort(&mut self) {
+        self.findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    }
+}
+
+/// Analyze one file's source text under its repo-relative path
+/// (`src/...` or `tests/...` — the path decides pass applicability).
+pub fn analyze_source(relpath: &str, text: &str) -> Report {
+    let mut rep = Report { files_scanned: 1, ..Report::default() };
+    rep.findings = passes::analyze_file(relpath, text, &mut rep.allows);
+    rep.sort();
+    rep
+}
+
+/// Analyze every `.rs` file under `<root>/src` and `<root>/tests`
+/// (`root` is the crate dir, e.g. `rust/`). Traversal is sorted, so the
+/// report is deterministic.
+pub fn analyze_tree(root: &Path) -> std::io::Result<Report> {
+    let mut rep = Report::default();
+    for base in ["src", "tests"] {
+        let dir = root.join(base);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&dir, &mut files)?;
+        files.sort();
+        for path in files {
+            let rel = path.strip_prefix(root).unwrap_or(&path).to_string_lossy();
+            let rel = rel.replace('\\', "/");
+            let text = std::fs::read_to_string(&path)?;
+            rep.findings.extend(passes::analyze_file(&rel, &text, &mut rep.allows));
+            rep.files_scanned += 1;
+        }
+    }
+    rep.sort();
+    Ok(rep)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

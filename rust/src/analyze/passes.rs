@@ -1,0 +1,427 @@
+//! The four lint passes of `uavjp-analyze` (DESIGN.md §7.8).
+//!
+//! Each pass walks the sanitized lines of one file (see
+//! [`crate::analyze::scan`]) and emits [`Finding`]s. Pass applicability
+//! is path-driven: the constants below declare which files are
+//! deterministic compute modules, which may contain `unsafe`, and which
+//! functions are steady-state hot paths. The RNG pass checks call sites
+//! against the *live* [`crate::rng::streams::REGISTRY`] — the analyzer
+//! and the production constructors read the same table, so they cannot
+//! drift apart.
+
+use crate::rng::streams::{SeedMix, REGISTRY};
+
+use super::scan::{
+    self, extract_call, fn_regions, has_allow, split_top, test_regions, word_in,
+    Lines,
+};
+use super::{Finding, Pass};
+
+/// Files allowed to contain `unsafe` at all (each use still needs a
+/// `// SAFETY:` justification). Everything else must stay safe Rust —
+/// DESIGN.md §7.3 confines SIMD intrinsics to the kernel files, and the
+/// allocation-discipline harness needs its counting global allocator.
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    "src/tensor/kernels/gemm.rs",
+    "src/tensor/kernels/vec.rs",
+    "src/tensor/kernels/lane.rs",
+    "src/lib.rs",
+    "tests/alloc_discipline.rs",
+];
+
+/// Module prefixes whose non-test code must stay bitwise deterministic
+/// (replay and replica-count-invariance contracts, §7.4–§7.7). Serve
+/// timing and the CLI are deliberately outside this list.
+const DET_MODULES: &[&str] = &[
+    "src/tensor/",
+    "src/native/",
+    "src/sketch/",
+    "src/replicate/",
+    "src/data/",
+    "src/rng/",
+    "src/faults/",
+    "src/pool/",
+];
+
+/// Tokens banned in deterministic modules: unordered iteration
+/// (`HashMap`/`HashSet`) and wall-clock reads.
+const DET_BANNED: &[&str] = &["HashMap", "HashSet", "Instant", "SystemTime"];
+
+/// Files that are hot path in their entirety (every non-test line).
+const HOT_FILES: &[&str] = &[
+    "src/tensor/kernels/gemm.rs",
+    "src/tensor/kernels/vec.rs",
+    "src/tensor/kernels/lane.rs",
+];
+
+/// Declared steady-state functions per file: their bodies may not touch
+/// the heap (§7.2) — `tests/alloc_discipline.rs` verifies the same
+/// contract at runtime with a counting global allocator.
+const HOT_FNS: &[(&str, &[&str])] = &[
+    ("src/native/trainer.rs", &["step"]),
+    (
+        "src/native/sequential.rs",
+        &["forward", "forward_train", "backward", "apply_grads", "retarget_batch"],
+    ),
+    ("src/replicate/mod.rs", &["step", "step_faulted", "reduce_into", "accumulate_stats"]),
+    ("src/serve/engine.rs", &["infer_batch", "infer_staged", "infer_one"]),
+    ("src/native/loss.rs", &["loss_and_grad_into", "loss_and_grad_scaled_into"]),
+    ("src/tensor/mod.rs", &["gemm_into", "sparse_dx_into", "sparse_dw_into"]),
+];
+
+/// Allocation/owning-conversion tokens denied on hot paths.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "with_capacity",
+    "to_vec",
+    ".clone(",
+    ".push(",
+    "Box::new",
+    "format!",
+    "to_string",
+    "String::new",
+    ".collect(",
+    "to_owned",
+];
+
+/// The allow-comment kinds the grammar accepts.
+pub const ALLOW_KINDS: &[&str] = &["rng", "unsafe", "nondet", "alloc"];
+
+fn path_matches(relpath: &str, entry: &str) -> bool {
+    relpath == entry || relpath.ends_with(entry)
+}
+
+/// Seed-mix + stream id parsed out of a raw `Pcg64::new(seed, stream)`
+/// call site's argument text. `None` components mean unparseable.
+fn parse_rng_args(args: &str) -> (Option<SeedMix>, Option<u64>) {
+    let mut parts = split_top(args);
+    if parts.len() > 1 && parts.last().map(|p| p.trim().is_empty()).unwrap_or(false) {
+        parts.pop(); // trailing comma in a multi-line call
+    }
+    if parts.len() != 2 {
+        return (None, None);
+    }
+    let seed = parts[0].trim();
+    let stream = parts[1].trim();
+    let mix = if let Some(p) = seed.rfind('^') {
+        parse_num(seed[p + 1..].trim()).map(SeedMix::Xor)
+    } else if let Some(c) = wrapping_add_const(seed) {
+        Some(SeedMix::Add(c))
+    } else if let Some(c) = parse_num(seed) {
+        Some(SeedMix::Fixed(c))
+    } else if !seed.is_empty()
+        && seed.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.')
+    {
+        Some(SeedMix::Raw)
+    } else {
+        None
+    };
+    let sid = parse_num(stream).or_else(|| leading_num_before_plus(stream));
+    (mix, sid)
+}
+
+/// `0x…` (underscores allowed) or decimal literal.
+fn parse_num(s: &str) -> Option<u64> {
+    if let Some(hex) = s.strip_prefix("0x") {
+        let clean: String = hex.chars().filter(|&c| c != '_').collect();
+        if clean.is_empty() || !hex.chars().all(|c| c.is_ascii_hexdigit() || c == '_') {
+            return None;
+        }
+        u64::from_str_radix(&clean, 16).ok()
+    } else if !s.is_empty() && s.chars().all(|c| c.is_ascii_digit()) {
+        s.parse().ok()
+    } else {
+        None
+    }
+}
+
+/// `<expr>.wrapping_add(<decimal>)` suffix form.
+fn wrapping_add_const(seed: &str) -> Option<u64> {
+    let inner = seed.strip_suffix(')')?;
+    let p = inner.rfind(".wrapping_add(")?;
+    let digits = &inner[p + ".wrapping_add(".len()..];
+    if digits.is_empty() || !digits.chars().all(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// `<decimal> + <expr>` base form (`100 + cls as u64`).
+fn leading_num_before_plus(stream: &str) -> Option<u64> {
+    let end = stream.find(|c: char| !c.is_ascii_digit())?;
+    if end == 0 {
+        return None;
+    }
+    if stream[end..].trim_start().starts_with('+') {
+        stream[..end].parse().ok()
+    } else {
+        None
+    }
+}
+
+/// Name of the registry entry a parsed (mix, stream) pair falls into.
+fn registry_match(mix: Option<SeedMix>, sid: Option<u64>) -> Option<&'static str> {
+    let (mix, sid) = (mix?, sid?);
+    REGISTRY
+        .iter()
+        .find(|s| s.mix == mix && (s.lo..=s.hi).contains(&sid))
+        .map(|s| s.name)
+}
+
+/// Pass 1 — RNG stream hygiene: every non-test `Pcg64::new` outside
+/// `src/rng/` is ad-hoc; declared derivations must route through their
+/// `rng::streams` constructor and undeclared ones must be registered.
+pub fn rng_pass(relpath: &str, l: &Lines, in_test: &[bool], out: &mut Vec<Finding>) {
+    if !relpath.starts_with("src/") || relpath.starts_with("src/rng/") {
+        return;
+    }
+    let needle = ["Pcg64", "::new"].concat(); // not a literal: the analyzer scans itself
+    for (i, ln) in l.code.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        let Some(p) = ln.find(&needle) else { continue };
+        let bytes = ln.as_bytes();
+        if p > 0 && (bytes[p - 1].is_ascii_alphanumeric() || bytes[p - 1] == b'_') {
+            continue;
+        }
+        let after = &ln[p + needle.len()..];
+        let ws = after.len() - after.trim_start().len();
+        if !after.trim_start().starts_with('(') {
+            continue;
+        }
+        if has_allow("rng", &l.code, &l.comment, i) {
+            continue;
+        }
+        let col = ln[..p + needle.len() + ws].chars().count();
+        let args = extract_call(&l.code, i, col).unwrap_or_default();
+        let (mix, sid) = parse_rng_args(&args);
+        let msg = match registry_match(mix, sid) {
+            Some(hit) => format!(
+                "ad-hoc derivation of declared stream `{hit}` — route through rng::streams"
+            ),
+            None => "undeclared RNG stream derivation — declare it in rng::streams \
+                     and route through its constructor"
+                .to_string(),
+        };
+        out.push(Finding::new(Pass::RngStream, relpath, i + 1, msg));
+    }
+}
+
+/// Pass 2 — unsafe discipline: `unsafe` only in allowlisted files, and
+/// every use carries a `// SAFETY:` justification (tests included —
+/// intrinsics are intrinsics wherever they run).
+pub fn unsafe_pass(relpath: &str, l: &Lines, out: &mut Vec<Finding>) {
+    let kw = ["un", "safe"].concat(); // not a literal: the analyzer scans itself
+    let allowed = UNSAFE_ALLOWLIST.iter().any(|a| path_matches(relpath, a));
+    for (i, ln) in l.code.iter().enumerate() {
+        if !word_in(&kw, ln) {
+            continue;
+        }
+        if has_allow("unsafe", &l.code, &l.comment, i) {
+            continue;
+        }
+        if !allowed {
+            out.push(Finding::new(
+                Pass::Unsafe,
+                relpath,
+                i + 1,
+                format!("`{kw}` outside the kernel-file allowlist"),
+            ));
+            continue;
+        }
+        // need a SAFETY: comment on the line or within 6 lines above
+        // (attribute lines don't break the chain)
+        let mut ok = false;
+        for j in (i.saturating_sub(6)..=i).rev() {
+            if l.comment[j].contains("SAFETY:") || l.comment[j].contains("# Safety") {
+                ok = true;
+                break;
+            }
+            if j < i {
+                let t = l.code[j].trim();
+                if !t.is_empty() && !t.starts_with("#[") {
+                    break;
+                }
+            }
+        }
+        if !ok {
+            out.push(Finding::new(
+                Pass::Unsafe,
+                relpath,
+                i + 1,
+                format!("`{kw}` without a `// SAFETY:` justification"),
+            ));
+        }
+    }
+}
+
+/// Pass 3 — determinism: no unordered containers, wall-clock reads or
+/// order-sensitive parallel reductions in the deterministic modules.
+pub fn det_pass(relpath: &str, l: &Lines, in_test: &[bool], out: &mut Vec<Finding>) {
+    if !relpath.starts_with("src/") || !DET_MODULES.iter().any(|m| relpath.starts_with(m)) {
+        return;
+    }
+    for (i, ln) in l.code.iter().enumerate() {
+        if in_test[i] || has_allow("nondet", &l.code, &l.comment, i) {
+            continue;
+        }
+        if let Some(tok) = DET_BANNED.iter().find(|t| word_in(t, ln)) {
+            out.push(Finding::new(
+                Pass::Determinism,
+                relpath,
+                i + 1,
+                format!("`{tok}` in a deterministic compute module"),
+            ));
+            continue;
+        }
+        if unordered_reduction(ln) || word_in("par_iter", ln) {
+            out.push(Finding::new(
+                Pass::Determinism,
+                relpath,
+                i + 1,
+                "unordered reduction in a deterministic compute module".to_string(),
+            ));
+        }
+    }
+}
+
+/// `.values()`/`.keys()` feeding `.sum()`/`.fold()`/`.product()` with
+/// only simple chain characters between — iteration order leaks into an
+/// order-sensitive float reduction.
+fn unordered_reduction(ln: &str) -> bool {
+    for src in [".values()", ".keys()"] {
+        let mut start = 0usize;
+        while let Some(p) = ln[start..].find(src) {
+            let rest = &ln[start + p + src.len()..];
+            let chain_end = rest
+                .find(|c: char| {
+                    !(c.is_alphanumeric()
+                        || c == '_'
+                        || c.is_whitespace()
+                        || c == '('
+                        || c == ')'
+                        || c == '.')
+                })
+                .unwrap_or(rest.len());
+            let chain = &rest[..chain_end];
+            for sink in ["sum", "fold", "product"] {
+                let mut s2 = 0usize;
+                while let Some(q) = chain[s2..].find(sink) {
+                    let q = s2 + q;
+                    let pre = chain[..q].trim_end();
+                    if pre.ends_with('.') {
+                        let post = &chain[q + sink.len()..];
+                        let post_ok = post
+                            .chars()
+                            .next()
+                            .map(|c| !(c.is_alphanumeric() || c == '_'))
+                            .unwrap_or(true);
+                        if post_ok {
+                            return true;
+                        }
+                    }
+                    s2 = q + sink.len();
+                }
+            }
+            start += p + src.len();
+        }
+    }
+    false
+}
+
+/// Pass 4 — hot-path allocations: the declared steady-state functions
+/// (and the kernel files wholesale) may not allocate; justified
+/// exceptions carry an `analyze:`-prefixed `allow(alloc, reason)`
+/// waiver and are counted.
+pub fn alloc_pass(relpath: &str, l: &Lines, in_test: &[bool], out: &mut Vec<Finding>) {
+    let hot: Vec<bool> = if HOT_FILES.iter().any(|h| path_matches(relpath, h)) {
+        in_test.iter().map(|t| !t).collect()
+    } else if let Some((_, names)) =
+        HOT_FNS.iter().find(|(f, _)| path_matches(relpath, f))
+    {
+        let mut hot = fn_regions(&l.code, names);
+        for (h, t) in hot.iter_mut().zip(in_test) {
+            if *t {
+                *h = false;
+            }
+        }
+        hot
+    } else {
+        return;
+    };
+    for (i, ln) in l.code.iter().enumerate() {
+        if !hot[i] {
+            continue;
+        }
+        if let Some(tok) = ALLOC_TOKENS.iter().find(|t| ln.contains(*t)) {
+            if !has_allow("alloc", &l.code, &l.comment, i) {
+                out.push(Finding::new(
+                    Pass::HotAlloc,
+                    relpath,
+                    i + 1,
+                    format!("`{tok}` in a steady-state function"),
+                ));
+            }
+        }
+    }
+}
+
+/// Allow-comment audit: counts well-formed waivers per kind and flags
+/// malformed attempts (wrong kind, missing reason) as findings — a
+/// waiver that silently fails to parse would otherwise *look* like
+/// suppression while suppressing nothing.
+pub fn allow_audit(
+    relpath: &str,
+    l: &Lines,
+    counts: &mut std::collections::BTreeMap<&'static str, usize>,
+    out: &mut Vec<Finding>,
+) {
+    for (i, com) in l.comment.iter().enumerate() {
+        if !scan::allow_intent(com) {
+            continue;
+        }
+        match scan::allow_in(com) {
+            Some(kind) => {
+                if let Some(k) = ALLOW_KINDS.iter().find(|k| **k == kind) {
+                    *counts.entry(*k).or_insert(0) += 1;
+                } else {
+                    out.push(Finding::new(
+                        Pass::AllowGrammar,
+                        relpath,
+                        i + 1,
+                        format!("unknown allow kind `{kind}` — expected one of {ALLOW_KINDS:?}"),
+                    ));
+                }
+            }
+            None => out.push(Finding::new(
+                Pass::AllowGrammar,
+                relpath,
+                i + 1,
+                "malformed allow comment — grammar is `analyze: allow(<kind>, <reason>)`"
+                    .to_string(),
+            )),
+        }
+    }
+}
+
+/// Run every pass over one file's source text.
+pub fn analyze_file(
+    relpath: &str,
+    text: &str,
+    counts: &mut std::collections::BTreeMap<&'static str, usize>,
+) -> Vec<Finding> {
+    let l = scan::sanitize(text);
+    let mut in_test = test_regions(&l.code);
+    if relpath.starts_with("tests/") {
+        in_test = vec![true; l.code.len()];
+    }
+    let mut out = Vec::new();
+    rng_pass(relpath, &l, &in_test, &mut out);
+    unsafe_pass(relpath, &l, &mut out);
+    det_pass(relpath, &l, &in_test, &mut out);
+    alloc_pass(relpath, &l, &in_test, &mut out);
+    allow_audit(relpath, &l, counts, &mut out);
+    out
+}

@@ -1,0 +1,541 @@
+//! Line/token-level Rust source scanner for `uavjp-analyze`.
+//!
+//! No external parser crates (the repo's vendored-shim ethos): the
+//! scanner splits each line into a (code, comment) pair with string and
+//! char literal *contents* blanked — a token inside a literal can never
+//! trigger a lint, which is also what lets the analyzer scan its own
+//! sources and fixtures without tripping over them. On top of that it
+//! offers brace-depth tracking, `#[cfg(test)] mod` region detection and
+//! named-fn body extraction, which is all the passes in
+//! [`crate::analyze::passes`] need.
+//!
+//! Semantics are mirrored one-for-one by `python/tools/analyze_mirror.py`
+//! (used to pre-verify tree-wide results); keep the two in sync.
+
+/// Per-line split of a source file: `code[i]` is line `i` with comments
+/// removed and literal contents blanked (quotes kept as markers);
+/// `comment[i]` is the comment text of line `i` (kept aside so
+/// `SAFETY:` and allow-waiver detection still work).
+pub struct Lines {
+    pub code: Vec<String>,
+    pub comment: Vec<String>,
+}
+
+enum Mode {
+    Normal,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+}
+
+/// Split `text` into sanitized code/comment lines (see [`Lines`]).
+/// Handles nested block comments, raw strings (`r#"…"#`), char literals
+/// vs. lifetime ticks, and escaped-newline string continuations (the
+/// line break is still emitted so diagnostics keep true line numbers).
+pub fn sanitize(text: &str) -> Lines {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Normal;
+    let mut block_depth = 0i32;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        let nxt = if i + 1 < n { cs[i + 1] } else { '\0' };
+        if c == '\n' {
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment => {
+                comment.push(c);
+                if c == '/' && nxt == '*' {
+                    block_depth += 1;
+                    comment.push(nxt);
+                    i += 2;
+                } else if c == '*' && nxt == '/' {
+                    block_depth -= 1;
+                    comment.push(nxt);
+                    i += 2;
+                    if block_depth == 0 {
+                        mode = Mode::Normal;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    if nxt == '\n' {
+                        // escaped-newline continuation: the literal spans
+                        // the break, but the diagnostic line count must
+                        // not drift — emit the line boundary.
+                        code_lines.push(std::mem::take(&mut code));
+                        comment_lines.push(std::mem::take(&mut comment));
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                let closes = c == '"'
+                    && i + raw_hashes < n
+                    && cs[i + 1..i + 1 + raw_hashes].iter().all(|&h| h == '#');
+                if closes {
+                    code.push('"');
+                    mode = Mode::Normal;
+                    i += 1 + raw_hashes;
+                } else {
+                    if c == '\n' {
+                        // raw strings may span lines; keep line numbers
+                        code_lines.push(std::mem::take(&mut code));
+                        comment_lines.push(std::mem::take(&mut comment));
+                    }
+                    i += 1;
+                }
+            }
+            Mode::Normal => {
+                if c == '/' && nxt == '/' {
+                    comment.push_str("//");
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    comment.push_str("/*");
+                    mode = Mode::BlockComment;
+                    block_depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r'
+                    && (nxt == '"' || nxt == '#')
+                    && !code
+                        .chars()
+                        .last()
+                        .map(|p| p.is_alphanumeric() || p == '_')
+                        .unwrap_or(false)
+                {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        code.push_str("r\"");
+                        raw_hashes = h;
+                        mode = Mode::RawStr;
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal ('x' or '\x…') vs. lifetime tick
+                    if let Some(len) = char_literal_len(&cs[i..]) {
+                        code.push_str("' '");
+                        i += len;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        code_lines.push(code);
+        comment_lines.push(comment);
+    }
+    Lines { code: code_lines, comment: comment_lines }
+}
+
+/// Length (in chars, including both quotes) of a char literal starting
+/// at `cs[0] == '\''`, or `None` when this tick is a lifetime.
+fn char_literal_len(cs: &[char]) -> Option<usize> {
+    if cs.len() < 3 {
+        return None;
+    }
+    if cs[1] == '\\' {
+        // '\x…': backslash, one escaped char, then anything up to the
+        // closing quote
+        let mut k = 3;
+        while k < cs.len() && cs[k] != '\'' {
+            k += 1;
+        }
+        if k < cs.len() {
+            return Some(k + 1);
+        }
+        None
+    } else if cs[1] != '\'' && cs[2] == '\'' {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// Brace depth *before* each line.
+pub fn depths(code: &[String]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(code.len());
+    let mut d = 0i32;
+    for ln in code {
+        out.push(d);
+        d += brace_delta(ln);
+    }
+    out
+}
+
+fn brace_delta(ln: &str) -> i32 {
+    let mut d = 0i32;
+    for ch in ln.chars() {
+        if ch == '{' {
+            d += 1;
+        } else if ch == '}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+/// True when the line carries a `#[cfg(test)]` / `#[cfg(all(test, …))]`
+/// attribute.
+fn has_cfg_test(ln: &str) -> bool {
+    let Some(p) = ln.find("#[cfg(") else { return false };
+    let rest = ln[p + 6..].trim_start();
+    let rest = match rest.strip_prefix("all(") {
+        Some(r) => r.trim_start(),
+        None => rest,
+    };
+    rest.starts_with("test")
+}
+
+/// True when the trimmed line opens a `mod` / `pub mod` declaration.
+fn is_mod_decl(ln: &str) -> bool {
+    let t = ln.trim_start();
+    let t = match t.strip_prefix("pub") {
+        Some(r) if r.starts_with(char::is_whitespace) => r.trim_start(),
+        Some(_) => return false,
+        None => t,
+    };
+    match t.strip_prefix("mod") {
+        Some(r) => r.chars().next().map(|c| !c.is_alphanumeric() && c != '_').unwrap_or(true),
+        None => false,
+    }
+}
+
+/// Bool per line: inside a `#[cfg(test)] mod …` region (or the single
+/// item a bare `#[cfg(test)]` attribute guards).
+pub fn test_regions(code: &[String]) -> Vec<bool> {
+    let n = code.len();
+    let mut is_test = vec![false; n];
+    let dep = depths(code);
+    let mut i = 0usize;
+    while i < n {
+        if has_cfg_test(&code[i]) {
+            let mut j = i + 1;
+            while j < n
+                && (code[j].trim().is_empty() || code[j].trim().starts_with("#["))
+            {
+                j += 1;
+            }
+            if j < n && is_mod_decl(&code[j]) {
+                let d0 = dep[j];
+                let mut k = j;
+                while k < n {
+                    is_test[k] = true;
+                    let d = dep[k] + brace_delta(&code[k]);
+                    if (k > j || code[k].contains('{'))
+                        && d <= d0
+                        && code[j..=k].iter().any(|l| l.contains('{'))
+                    {
+                        break;
+                    }
+                    k += 1;
+                }
+                i = k + 1;
+                continue;
+            } else if j < n {
+                is_test[j] = true;
+                i = j + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    is_test
+}
+
+/// First `fn <name>` declared on the line, if any.
+fn fn_name(ln: &str) -> Option<&str> {
+    let bytes = ln.as_bytes();
+    let mut start = 0usize;
+    while let Some(p) = ln[start..].find("fn") {
+        let p = start + p;
+        let pre_ok = p == 0
+            || !(bytes[p - 1].is_ascii_alphanumeric() || bytes[p - 1] == b'_');
+        let after = &ln[p + 2..];
+        if pre_ok && after.starts_with(char::is_whitespace) {
+            let name = after.trim_start();
+            let end = name
+                .find(|c: char| !(c.is_alphanumeric() || c == '_'))
+                .unwrap_or(name.len());
+            if end > 0 {
+                return Some(&name[..end]);
+            }
+        }
+        start = p + 2;
+    }
+    None
+}
+
+/// Bool per line: inside the body (declaration through closing brace) of
+/// a fn whose name is in `names`.
+pub fn fn_regions(code: &[String], names: &[&str]) -> Vec<bool> {
+    let n = code.len();
+    let mut hot = vec![false; n];
+    for i in 0..n {
+        let Some(name) = fn_name(&code[i]) else { continue };
+        if !names.contains(&name) {
+            continue;
+        }
+        let mut d = 0i32;
+        let mut opened = false;
+        let mut k = i;
+        while k < n {
+            for ch in code[k].chars() {
+                if ch == '{' {
+                    d += 1;
+                    opened = true;
+                } else if ch == '}' {
+                    d -= 1;
+                }
+            }
+            hot[k] = true;
+            if opened && d <= 0 {
+                break;
+            }
+            k += 1;
+        }
+    }
+    hot
+}
+
+/// Whole-word occurrence of `tok` in `line` (word chars: `[A-Za-z0-9_]`).
+pub fn word_in(tok: &str, line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0usize;
+    while let Some(p) = line[start..].find(tok) {
+        let p = start + p;
+        let pre_ok = p == 0
+            || !(bytes[p - 1].is_ascii_alphanumeric() || bytes[p - 1] == b'_');
+        let q = p + tok.len();
+        let post_ok = q >= bytes.len()
+            || !(bytes[q].is_ascii_alphanumeric() || bytes[q] == b'_');
+        if pre_ok && post_ok {
+            return true;
+        }
+        start = p + tok.len().max(1);
+    }
+    false
+}
+
+/// Parse a well-formed allow waiver — `analyze:` followed by
+/// `allow(<kind>, <reason>)` — out of one comment line, returning the
+/// kind. The grammar requires a non-empty reason; [`allow_intent`]
+/// spots attempts that fail this parse.
+pub fn allow_in(comment: &str) -> Option<&str> {
+    let p = comment.find("analyze:")?;
+    let rest = comment[p + 8..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let kind_end = rest
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .unwrap_or(rest.len());
+    if kind_end == 0 {
+        return None;
+    }
+    let (kind, rest) = rest.split_at(kind_end);
+    let rest = rest.strip_prefix(',')?;
+    let body_end = rest.find(')')?;
+    if rest[..body_end].trim().is_empty() {
+        return None;
+    }
+    Some(kind)
+}
+
+/// True when the comment *tries* to be an allow annotation (`analyze:`
+/// followed by `allow(`) — used to flag malformed attempts instead of
+/// silently ignoring them.
+pub fn allow_intent(comment: &str) -> bool {
+    if let Some(p) = comment.find("analyze:") {
+        comment[p + 8..].trim_start().starts_with("allow(")
+    } else {
+        false
+    }
+}
+
+/// Does an allow annotation of `kind` cover line `i`?
+/// An allow comment covers its own line (trailing form) and, when placed
+/// on its own line, the remainder of the statement that follows it: the
+/// walk back from the finding stops at the first earlier line ending in
+/// a statement/block terminator (`;`, `{`, `}`), capped at 12 lines.
+pub fn has_allow(kind: &str, code: &[String], comment: &[String], i: usize) -> bool {
+    let lo = i.saturating_sub(12);
+    for j in (lo..=i).rev() {
+        if allow_in(&comment[j]) == Some(kind) {
+            return true;
+        }
+        if j < i {
+            if let Some(last) = code[j].trim_end().chars().last() {
+                if last == ';' || last == '{' || last == '}' {
+                    return false;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Split `s` on top-level commas (brackets of any kind nest).
+pub fn split_top(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut d = 0i32;
+    for ch in s.chars() {
+        match ch {
+            '(' | '[' | '{' => d += 1,
+            ')' | ']' | '}' => d -= 1,
+            _ => {}
+        }
+        if ch == ',' && d == 0 {
+            parts.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(ch);
+        }
+    }
+    parts.push(cur);
+    parts
+}
+
+/// Balanced-paren argument text of a call whose `(` sits at char column
+/// `col` of code line `i`; spans lines (joined with a space). `None` if
+/// the call never closes.
+pub fn extract_call(code: &[String], i: usize, col: usize) -> Option<String> {
+    let mut buf = String::new();
+    let mut d = 0i32;
+    let mut k = i;
+    let mut pos = col;
+    while k < code.len() {
+        let ln: Vec<char> = code[k].chars().collect();
+        while pos < ln.len() {
+            let ch = ln[pos];
+            if ch == '(' {
+                d += 1;
+                if d == 1 {
+                    pos += 1;
+                    continue;
+                }
+            } else if ch == ')' {
+                d -= 1;
+                if d == 0 {
+                    return Some(buf);
+                }
+            }
+            if d >= 1 {
+                buf.push(ch);
+            }
+            pos += 1;
+        }
+        buf.push(' ');
+        k += 1;
+        pos = 0;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_blanks_literals_and_keeps_line_numbers() {
+        let src = concat!(
+            "let a = \"Vec::new inside\"; // trailing\n",
+            "let b = 'x';\n",
+            "let c = \"two \\\n line\";\n",
+        );
+        let l = sanitize(src);
+        assert_eq!(l.code.len(), 4);
+        assert!(!l.code[0].contains("Vec::new"));
+        assert!(l.comment[0].contains("trailing"));
+        assert_eq!(l.code[1], "let b = ' ';");
+        // escaped-newline continuation still emits the line boundary
+        assert!(l.code[2].starts_with("let c = \""));
+        assert!(l.code[3].contains('"'));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"unsafe vec! HashMap\"#;\n";
+        let l = sanitize(src);
+        assert!(!l.code[0].contains("vec!"));
+        assert!(!l.code[0].contains("HashMap"));
+    }
+
+    #[test]
+    fn test_region_covers_cfg_test_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let l = sanitize(src);
+        let t = test_regions(&l.code);
+        assert_eq!(t, vec![false, false, true, true, true, false]);
+    }
+
+    #[test]
+    fn fn_region_tracks_named_body() {
+        let src = "fn cold() {\n    x();\n}\nfn step() {\n    y();\n}\n";
+        let l = sanitize(src);
+        let h = fn_regions(&l.code, &["step"]);
+        assert_eq!(h, vec![false, false, false, true, true, true]);
+    }
+
+    #[test]
+    fn allow_grammar() {
+        assert_eq!(allow_in("// analyze: allow(alloc, small table)"), Some("alloc"));
+        assert_eq!(allow_in("// analyze: allow(alloc)"), None);
+        assert!(allow_intent("// analyze: allow(alloc)"));
+        assert!(!allow_intent("// analyze::passes docs"));
+    }
+
+    #[test]
+    fn multi_line_call_extraction() {
+        let l = sanitize("f(\n    a,\n    b,\n);\n");
+        let args = extract_call(&l.code, 0, 1).unwrap();
+        let parts = split_top(&args);
+        assert_eq!(parts.len(), 3); // trailing comma leaves an empty part
+        assert_eq!(parts[0].trim(), "a");
+        assert_eq!(parts[1].trim(), "b");
+        assert_eq!(parts[2].trim(), "");
+    }
+}

@@ -1,0 +1,48 @@
+//! `uavjp-analyze` — repo-invariant static analysis entry point.
+//!
+//! Scans `rust/src` and `rust/tests` for violations of the repo's
+//! machine-checked contracts (DESIGN.md §7.8): RNG stream hygiene,
+//! unsafe discipline, determinism lints and hot-path allocation lints.
+//! Prints `file:line: [pass] message` diagnostics sorted by location and
+//! exits nonzero when anything fires, so CI can gate on it.
+//!
+//! Usage: `cargo run --release --bin uavjp-analyze [crate-root]`
+//! (the crate root defaults to this crate's own source tree).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use uavjp::analyze;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let report = match analyze::analyze_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("uavjp-analyze: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if report.is_clean() {
+        println!(
+            "uavjp-analyze: clean — {} files scanned, waivers: {}",
+            report.files_scanned,
+            report.allow_summary(),
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "uavjp-analyze: {} finding(s) across {} files (waivers: {})",
+            report.findings.len(),
+            report.files_scanned,
+            report.allow_summary(),
+        );
+        ExitCode::FAILURE
+    }
+}

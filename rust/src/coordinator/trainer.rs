@@ -14,7 +14,7 @@ use crate::data::{self, BatchIter, Dataset, DatasetKind};
 #[cfg(feature = "pjrt")]
 use crate::metrics::RunCurve;
 #[cfg(feature = "pjrt")]
-use crate::rng::Pcg64;
+use crate::rng::{streams, Pcg64};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, HostTensor, Runtime};
 #[cfg(feature = "pjrt")]
@@ -114,7 +114,7 @@ impl<'rt> Trainer<'rt> {
         let (train_ds, test_ds) = self.datasets()?;
         let mut state = self.init_state()?;
         let mut curve = RunCurve::default();
-        let mut rng = Pcg64::new(self.cfg.seed.wrapping_add(77), 3);
+        let mut rng = streams::train_batch(self.cfg.seed);
 
         let dim = train_ds.dim;
         let mut xbuf = vec![0.0f32; self.batch * dim];

@@ -122,13 +122,13 @@ pub fn measure_native(
     seed: u64,
 ) -> Result<VarianceReport> {
     use crate::native::{ActivationPolicy, SketchPolicy};
-    use crate::rng::Pcg64;
+    use crate::rng::streams;
     if !crate::native::NATIVE_METHODS.contains(&method) {
         anyhow::bail!("native variance probe: unsupported method {method}");
     }
     let (model, x, y) = native_probe_setup(seed);
     let mut ws = model.workspace(x.rows, x.cols);
-    let mut exact_rng = Pcg64::new(0, 0);
+    let mut exact_rng = streams::null();
     let exact_plan =
         model.plan(&SketchPolicy::exact(), &ActivationPolicy::exact())?;
     let g = native_grad(&model, &mut ws, &x, &y, &exact_plan, &mut exact_rng);
@@ -142,7 +142,7 @@ pub fn measure_native(
         &ActivationPolicy::exact(),
     )?;
     summarize(method, budget, &g, trials, |t| {
-        let mut rng = Pcg64::new(seed ^ 0xabcd, t as u64);
+        let mut rng = streams::variance_trial(seed, t as u64);
         Ok(native_grad(&model, &mut ws, &x, &y, &plan, &mut rng))
     })
 }
@@ -151,7 +151,7 @@ pub fn measure_native(
 /// batches, exact gradients (native backend).
 pub fn sigma2_native(trials: usize) -> Result<f64> {
     use crate::native::{models, ActivationPolicy, SketchPolicy};
-    use crate::rng::Pcg64;
+    use crate::rng::streams;
     use crate::tensor::Mat;
     let batch = 128usize;
     let model = models::mlp(models::MLP_DIMS, 5);
@@ -161,7 +161,7 @@ pub fn sigma2_native(trials: usize) -> Result<f64> {
     for t in 0..trials {
         let ds = data::generate(DatasetKind::SynthMnist, batch, 500 + t as u64, "train");
         let x = Mat { rows: batch, cols: ds.dim, data: ds.x.clone() };
-        let mut rng = Pcg64::new(0, 0);
+        let mut rng = streams::null();
         grads.push(native_grad(&model, &mut ws, &x, &ds.y, &plan, &mut rng));
     }
     Ok(spread(&grads))

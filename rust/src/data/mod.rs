@@ -15,7 +15,7 @@
 //!
 //! Everything is deterministic given (seed, split).
 
-use crate::rng::Pcg64;
+use crate::rng::{streams, Pcg64};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DatasetKind {
@@ -65,7 +65,7 @@ pub fn generate(kind: DatasetKind, n: usize, seed: u64, split: &str) -> Dataset 
         "test" => 2,
         other => panic!("unknown split {other}"),
     };
-    let mut rng = Pcg64::new(seed, stream);
+    let mut rng = streams::data_split(seed, stream);
     let dim = kind.dim();
     let anchors = match kind {
         DatasetKind::SynthMnist => mnist_anchors(seed),
@@ -93,7 +93,7 @@ fn mnist_anchors(seed: u64) -> Vec<Vec<f32>> {
     // upsampled to 28×28. Classes differ by which cells are "ink".
     let mut anchors = Vec::with_capacity(NUM_CLASSES);
     for cls in 0..NUM_CLASSES {
-        let mut rng = Pcg64::new(seed ^ 0xa17c, 100 + cls as u64);
+        let mut rng = streams::mnist_anchor(seed, cls as u64);
         let mut coarse = [0.0f32; 49];
         // each class draws a distinct connected stroke: random walk of 12 cells
         let mut pos = (rng.below(7), rng.below(7));
@@ -141,7 +141,7 @@ fn sample_mnist(out: &mut [f32], anchor: &[f32], rng: &mut Pcg64) {
 fn cifar_anchors(seed: u64) -> Vec<Vec<f32>> {
     let mut anchors = Vec::with_capacity(NUM_CLASSES);
     for cls in 0..NUM_CLASSES {
-        let mut rng = Pcg64::new(seed ^ 0xc1fa, 200 + cls as u64);
+        let mut rng = streams::cifar_anchor(seed, cls as u64);
         let mut img = vec![0.0f32; 32 * 32 * 3];
         // class-specific color palette + texture frequency
         let color = [rng.f32(), rng.f32(), rng.f32()];

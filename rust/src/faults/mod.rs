@@ -166,7 +166,7 @@ impl FaultPlan {
     /// The dedicated fault stream: disjoint from every training stream
     /// (gate `seed^0x9e3779b9`, act `seed^0x51ac7`, batch `seed+77`).
     pub fn stream(seed: u64) -> Pcg64 {
-        Pcg64::new(seed ^ 0xfa0175, 17)
+        crate::rng::streams::faults(seed)
     }
 
     /// Whether any fault is armed at all (a disarmed plan lets the

@@ -31,6 +31,7 @@
 #![deny(unsafe_op_in_unsafe_fn)]
 #![warn(clippy::undocumented_unsafe_blocks)]
 
+pub mod analyze;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -134,7 +134,7 @@ impl PosEmbed {
     /// Gaussian(0, 0.02²)-initialized table, deterministic given
     /// `(seed, stream)`.
     pub fn new(patches: usize, dim: usize, seed: u64, stream: u64) -> PosEmbed {
-        let mut rng = crate::rng::Pcg64::new(seed ^ 0x1e57, stream);
+        let mut rng = crate::rng::streams::layer_init(seed, stream);
         let table =
             (0..patches * dim).map(|_| (rng.gaussian() * 0.02) as f32).collect();
         PosEmbed { table }

@@ -518,7 +518,7 @@ impl Linear {
 
     /// Layer with gaussian(0, std²) weights and zero bias.
     pub fn init(din: usize, dout: usize, std: f64, seed: u64, stream: u64) -> Linear {
-        let mut rng = Pcg64::new(seed ^ 0x1e57, stream);
+        let mut rng = crate::rng::streams::layer_init(seed, stream);
         let w = Mat::from_fn(dout, din, |_, _| (rng.gaussian() * std) as f32);
         Linear { w, b: vec![0.0; dout] }
     }

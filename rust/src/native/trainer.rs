@@ -22,7 +22,7 @@ use crate::faults::{FaultPlan, InjectedKill, NonFiniteLoss, MAX_CONSECUTIVE_SKIP
 use crate::metrics::RunCurve;
 use crate::pool;
 use crate::replicate::{ExchangeStats, ReplicaGroup, StepFaults};
-use crate::rng::Pcg64;
+use crate::rng::{streams, Pcg64};
 use crate::tensor::kernels;
 use crate::tensor::Mat;
 use anyhow::{bail, Result};
@@ -125,11 +125,11 @@ impl NativeTrainer {
         let opt = Optim::parse(&cfg.optimizer)?;
         let loss = LossKind::parse(&cfg.loss)?;
         let data_kind = DatasetKind::for_model(&cfg.model)?;
-        let sk_rng = Pcg64::new(cfg.seed ^ 0x9e3779b9, 11);
+        let sk_rng = streams::sketch_gates(cfg.seed);
         // Distinct stream for the forward-side activation gates: the
         // §7.4 unbiasedness argument needs them independent of the
         // backward's G-gates. Exact/full stashes consume none of it.
-        let act_rng = Pcg64::new(cfg.seed ^ 0x51ac7, 13);
+        let act_rng = streams::act_gates(cfg.seed);
         if cfg.threads > 0 {
             pool::set_threads(cfg.threads);
         }
@@ -490,7 +490,7 @@ impl NativeTrainer {
     pub fn run(&mut self) -> Result<RunCurve> {
         let (train_ds, test_ds) = self.datasets();
         let mut curve = RunCurve::default();
-        let mut rng = Pcg64::new(self.cfg.seed.wrapping_add(77), 3);
+        let mut rng = streams::train_batch(self.cfg.seed);
 
         let batch = self.cfg.batch;
         let dim = train_ds.dim;

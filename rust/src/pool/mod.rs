@@ -143,18 +143,25 @@ pub fn run_row_chunks_with<S, F>(
 /// skewed (e.g. waterfilling-budget row chunks) so a slow item can't
 /// serialize the whole batch behind one worker.
 ///
+/// `items` is any owned iterable — a `Vec`, or (on the zero-allocation
+/// hot paths, DESIGN.md §7.2) a draining iterator over a stack array, so
+/// callers never have to materialize a heap-backed work list.
+///
 /// Determinism contract: which worker processes an item is
 /// non-deterministic, so `f` must write only item-owned data and each
 /// item's result must not depend on processing order — then results are
 /// identical for every worker count and schedule.
-pub fn run_dynamic<T, S, F>(items: Vec<T>, states: &mut [S], f: F)
+pub fn run_dynamic<T, S, F, I>(items: I, states: &mut [S], f: F)
 where
+    I: IntoIterator<Item = T>,
+    I::IntoIter: ExactSizeIterator + Send,
     T: Send,
     S: Send,
     F: Fn(T, &mut S) + Sync,
 {
     assert!(!states.is_empty(), "need at least one worker state");
-    if items.is_empty() {
+    let items = items.into_iter();
+    if items.len() == 0 {
         return;
     }
     let workers = states.len().min(items.len());
@@ -164,7 +171,7 @@ where
         }
         return;
     }
-    let queue = Mutex::new(items.into_iter());
+    let queue = Mutex::new(items);
     run_source(
         || queue.lock().unwrap_or_else(|e| e.into_inner()).next(),
         &mut states[..workers],

@@ -72,7 +72,7 @@ where
     G: Fn(&mut Pcg64) -> T,
     P: Fn(&T) -> Result<(), String>,
 {
-    let mut rng = Pcg64::new(seed, 0x9e37);
+    let mut rng = crate::rng::streams::ptest(seed);
     for case_idx in 0..cases {
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {

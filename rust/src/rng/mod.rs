@@ -5,6 +5,13 @@
 //! gaussians (Box–Muller), Fisher–Yates shuffles, Bernoulli gates and
 //! categorical draws. Deterministic given a seed + stream id, which is what
 //! makes every experiment in EXPERIMENTS.md replayable.
+//!
+//! Production code never calls [`Pcg64::new`] directly: every stream
+//! derivation routes through the named constructors in [`streams`], whose
+//! registry proves the (seed-mix, stream-range) pairs disjoint.
+//! `uavjp-analyze` enforces this (DESIGN.md §7.8).
+
+pub mod streams;
 
 const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
 

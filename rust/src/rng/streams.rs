@@ -1,0 +1,337 @@
+//! Central registry of every production PCG64 stream derivation.
+//!
+//! Every unbiasedness and bitwise-replay guarantee in this repo (sketch
+//! gates, activation gates, fault injection, per-lane replica streams —
+//! DESIGN.md §7.4–§7.7) rests on the PCG64 streams being *provably
+//! disjoint*: a silent collision would correlate gate draws with data or
+//! fault draws and quietly bias gradients. Historically each module
+//! derived its streams with an ad-hoc `Pcg64::new(seed ^ 0x…, stream)`
+//! literal; this module replaces those literals with named constructors
+//! backed by a declarative [`REGISTRY`], and `uavjp-analyze`
+//! (DESIGN.md §7.8) lints the tree so no undeclared derivation can creep
+//! back in.
+//!
+//! Disjointness rule: two registry entries *collide* iff they share the
+//! same [`SeedMix`] (same variant **and** same constant) and their
+//! stream-id ranges overlap. Entries with different mixes may reuse
+//! stream ids — the PCG64 increment is derived from the stream id, but
+//! the seed mix keeps the state trajectories decorrelated — while
+//! same-mix entries must keep disjoint ranges ([`check_disjoint`] is
+//! asserted by the analyzer's own test suite).
+//!
+//! Adding a stream (the §7.8 recipe):
+//! 1. add a [`StreamSpec`] row to [`REGISTRY`] with a fresh
+//!    (mix, range) pair — `cargo test rng::streams` fails on overlap;
+//! 2. add a named constructor below that asserts its ids into the range;
+//! 3. route the call site through the constructor — a raw
+//!    `Pcg64::new` outside `src/rng/` fails `cargo run --bin
+//!    uavjp-analyze`;
+//! 4. add the row to the DESIGN.md §7.8 stream table.
+
+use super::Pcg64;
+
+/// How a constructor folds the user seed before it reaches
+/// [`Pcg64::new`]. The mix constant is part of the identity: two entries
+/// with different xor constants are distinct families even when their
+/// stream ranges overlap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedMix {
+    /// `Pcg64::new(seed, stream)` — the seed passes through untouched.
+    Raw,
+    /// `Pcg64::new(seed ^ c, stream)`.
+    Xor(u64),
+    /// `Pcg64::new(seed.wrapping_add(c), stream)`.
+    Add(u64),
+    /// `Pcg64::new(c, stream)` — seed-independent (draw-free probes).
+    Fixed(u64),
+}
+
+/// One declared stream family: a seed mix plus an inclusive stream-id
+/// range, with owner/purpose docs that the DESIGN.md table mirrors.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamSpec {
+    /// Stable kebab-case name (referenced by diagnostics and docs).
+    pub name: &'static str,
+    /// Seed transformation applied before [`Pcg64::new`].
+    pub mix: SeedMix,
+    /// First stream id of the family (inclusive).
+    pub lo: u64,
+    /// Last stream id of the family (inclusive).
+    pub hi: u64,
+    /// Owning module — where the constructor is called from.
+    pub owner: &'static str,
+    /// What the draws decide.
+    pub purpose: &'static str,
+}
+
+impl StreamSpec {
+    /// True when `other` draws from the same seed-mix family and the
+    /// stream ranges overlap — the collision the registry exists to
+    /// prevent.
+    pub fn collides(&self, other: &StreamSpec) -> bool {
+        self.mix == other.mix && self.lo <= other.hi && other.lo <= self.hi
+    }
+}
+
+/// Every production stream derivation in the tree. `uavjp-analyze`
+/// checks each non-test `Pcg64::new` call site against this table, and
+/// [`check_disjoint`] proves the table itself is collision-free.
+pub const REGISTRY: &[StreamSpec] = &[
+    StreamSpec {
+        name: "data-split",
+        mix: SeedMix::Raw,
+        lo: 1,
+        hi: 2,
+        owner: "data::Dataset",
+        purpose: "synthetic train (1) / test (2) split generation",
+    },
+    StreamSpec {
+        name: "train-batch",
+        mix: SeedMix::Add(77),
+        lo: 3,
+        hi: 3,
+        owner: "native::trainer, coordinator::trainer",
+        purpose: "minibatch index sampling (native and PJRT loops share it)",
+    },
+    StreamSpec {
+        name: "sketch-gates",
+        mix: SeedMix::Xor(0x9e37_79b9),
+        lo: 11,
+        hi: 11,
+        owner: "native::trainer",
+        purpose: "per-step sketch sign/gate draws for the VJP estimator",
+    },
+    StreamSpec {
+        name: "act-gates",
+        mix: SeedMix::Xor(0x5_1ac7),
+        lo: 13,
+        hi: 13,
+        owner: "native::trainer",
+        purpose: "activation-policy kept-column gate draws",
+    },
+    StreamSpec {
+        name: "faults",
+        mix: SeedMix::Xor(0xfa_0175),
+        lo: 17,
+        hi: 17,
+        owner: "faults::FaultPlan",
+        purpose: "deterministic fault-injection schedule",
+    },
+    StreamSpec {
+        name: "mnist-anchor",
+        mix: SeedMix::Xor(0xa17c),
+        lo: 100,
+        hi: 109,
+        owner: "data (mnist-like)",
+        purpose: "per-class anchor images, stream 100 + class",
+    },
+    StreamSpec {
+        name: "cifar-anchor",
+        mix: SeedMix::Xor(0xc1fa),
+        lo: 200,
+        hi: 209,
+        owner: "data (cifar-like)",
+        purpose: "per-class anchor images, stream 200 + class",
+    },
+    StreamSpec {
+        name: "layer-init",
+        mix: SeedMix::Xor(0x1e57),
+        lo: 300,
+        hi: 999,
+        owner: "native::layer, native::attention",
+        purpose: "He/embedding weight init, one stream per tensor",
+    },
+    StreamSpec {
+        name: "lane-sketch-gates",
+        mix: SeedMix::Xor(0x9e37_79b9),
+        lo: 1100,
+        hi: 1107,
+        owner: "replicate::ReplicaGroup",
+        purpose: "per-lane sketch gates, stream 1100 + lane",
+    },
+    StreamSpec {
+        name: "lane-act-gates",
+        mix: SeedMix::Xor(0x5_1ac7),
+        lo: 1300,
+        hi: 1307,
+        owner: "replicate::ReplicaGroup",
+        purpose: "per-lane activation gates, stream 1300 + lane",
+    },
+    StreamSpec {
+        name: "variance-trial",
+        mix: SeedMix::Xor(0xabcd),
+        lo: 0,
+        hi: 4095,
+        owner: "coordinator::variance",
+        purpose: "per-trial probe streams for σ² estimation",
+    },
+    StreamSpec {
+        name: "null",
+        mix: SeedMix::Fixed(0),
+        lo: 0,
+        hi: 0,
+        owner: "coordinator::variance",
+        purpose: "draw-free placeholder for exact (non-stochastic) plans",
+    },
+    StreamSpec {
+        name: "ptest",
+        mix: SeedMix::Raw,
+        lo: 0x9e37,
+        hi: 0x9e37,
+        owner: "ptest",
+        purpose: "property-test case generation",
+    },
+];
+
+/// Look up a registry entry by name (panics on a typo — registry names
+/// are compile-time constants at every call site below).
+fn spec(name: &str) -> &'static StreamSpec {
+    REGISTRY
+        .iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("unknown rng stream family {name:?}"))
+}
+
+/// Construct the generator for `spec`, asserting `stream` into the
+/// declared range and applying the declared seed mix.
+fn make(name: &str, seed: u64, stream: u64) -> Pcg64 {
+    let s = spec(name);
+    assert!(
+        (s.lo..=s.hi).contains(&stream),
+        "stream {stream} outside registered range {}..={} for {name}",
+        s.lo,
+        s.hi,
+    );
+    let mixed = match s.mix {
+        SeedMix::Raw => seed,
+        SeedMix::Xor(c) => seed ^ c,
+        SeedMix::Add(c) => seed.wrapping_add(c),
+        SeedMix::Fixed(c) => c,
+    };
+    Pcg64::new(mixed, stream)
+}
+
+/// `data-split`: synthetic dataset generation, `stream` ∈ {1 train,
+/// 2 test}.
+pub fn data_split(seed: u64, stream: u64) -> Pcg64 {
+    make("data-split", seed, stream)
+}
+
+/// `train-batch`: the minibatch sampling stream both training loops use.
+pub fn train_batch(seed: u64) -> Pcg64 {
+    make("train-batch", seed, 3)
+}
+
+/// `sketch-gates`: the single-trainer sketch gate stream.
+pub fn sketch_gates(seed: u64) -> Pcg64 {
+    make("sketch-gates", seed, 11)
+}
+
+/// `act-gates`: the single-trainer activation-policy gate stream.
+pub fn act_gates(seed: u64) -> Pcg64 {
+    make("act-gates", seed, 13)
+}
+
+/// `faults`: the fault-injection schedule stream.
+pub fn faults(seed: u64) -> Pcg64 {
+    make("faults", seed, 17)
+}
+
+/// `mnist-anchor`: per-class anchor image stream, `cls` ∈ 0..10.
+pub fn mnist_anchor(seed: u64, cls: u64) -> Pcg64 {
+    make("mnist-anchor", seed, 100 + cls)
+}
+
+/// `cifar-anchor`: per-class anchor image stream, `cls` ∈ 0..10.
+pub fn cifar_anchor(seed: u64, cls: u64) -> Pcg64 {
+    make("cifar-anchor", seed, 200 + cls)
+}
+
+/// `layer-init`: weight-init stream for one tensor; `stream` is the
+/// layer-unique id models assign from 300 upward.
+pub fn layer_init(seed: u64, stream: u64) -> Pcg64 {
+    make("layer-init", seed, stream)
+}
+
+/// `lane-sketch-gates`: replica `lane`'s sketch gate stream.
+pub fn lane_sketch_gates(seed: u64, lane: u64) -> Pcg64 {
+    make("lane-sketch-gates", seed, 1100 + lane)
+}
+
+/// `lane-act-gates`: replica `lane`'s activation gate stream.
+pub fn lane_act_gates(seed: u64, lane: u64) -> Pcg64 {
+    make("lane-act-gates", seed, 1300 + lane)
+}
+
+/// `variance-trial`: probe stream for σ²-estimation trial `t`.
+pub fn variance_trial(seed: u64, t: u64) -> Pcg64 {
+    make("variance-trial", seed, t)
+}
+
+/// `null`: a fixed generator for plans that never draw (exact VJP
+/// probes) — keeps the draw-free invariant visible at the type level.
+pub fn null() -> Pcg64 {
+    make("null", 0, 0)
+}
+
+/// `ptest`: the property-test harness stream.
+pub fn ptest(seed: u64) -> Pcg64 {
+    make("ptest", seed, 0x9e37)
+}
+
+/// Verify the registry is pairwise collision-free. Returns the offending
+/// pair of names on failure; the analyzer test suite asserts `Ok`.
+pub fn check_disjoint() -> Result<(), (&'static str, &'static str)> {
+    for (i, a) in REGISTRY.iter().enumerate() {
+        for b in &REGISTRY[i + 1..] {
+            if a.collides(b) {
+                return Err((a.name, b.name));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_pairwise_disjoint() {
+        assert_eq!(check_disjoint(), Ok(()));
+    }
+
+    #[test]
+    fn constructors_match_legacy_derivations() {
+        // Each named constructor must reproduce the pre-registry ad-hoc
+        // derivation bit-for-bit, or every seeded experiment in
+        // EXPERIMENTS.md silently changes.
+        let seed = 0xdead_beef_u64;
+        let pairs: Vec<(Pcg64, Pcg64)> = vec![
+            (data_split(seed, 1), Pcg64::new(seed, 1)),
+            (train_batch(seed), Pcg64::new(seed.wrapping_add(77), 3)),
+            (sketch_gates(seed), Pcg64::new(seed ^ 0x9e37_79b9, 11)),
+            (act_gates(seed), Pcg64::new(seed ^ 0x5_1ac7, 13)),
+            (faults(seed), Pcg64::new(seed ^ 0xfa_0175, 17)),
+            (mnist_anchor(seed, 4), Pcg64::new(seed ^ 0xa17c, 104)),
+            (cifar_anchor(seed, 9), Pcg64::new(seed ^ 0xc1fa, 209)),
+            (layer_init(seed, 302), Pcg64::new(seed ^ 0x1e57, 302)),
+            (lane_sketch_gates(seed, 5), Pcg64::new(seed ^ 0x9e37_79b9, 1105)),
+            (lane_act_gates(seed, 5), Pcg64::new(seed ^ 0x5_1ac7, 1305)),
+            (variance_trial(seed, 7), Pcg64::new(seed ^ 0xabcd, 7)),
+            (null(), Pcg64::new(0, 0)),
+            (ptest(seed), Pcg64::new(seed, 0x9e37)),
+        ];
+        for (mut a, mut b) in pairs {
+            for _ in 0..4 {
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside registered range")]
+    fn out_of_range_stream_panics() {
+        layer_init(1, 7);
+    }
+}

@@ -42,7 +42,7 @@ use crate::tensor::{MatView, MatViewMut, GEMM_PAR_MIN_FLOPS};
 use super::lane::{PortableLane, SimdLane, LANE};
 #[cfg(target_arch = "x86_64")]
 use super::lane::Avx2Lane;
-use super::{aligned_slice, Kernel, PackArena};
+use super::{aligned_slice, Kernel, PackArena, MAX_WORKER_STATES};
 
 /// Micro-tile rows (register-tile height).
 pub(crate) const MR: usize = 6;
@@ -274,6 +274,8 @@ fn gemm_chunk<L: SimdLane>(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: caller must have verified avx2+fma at runtime (the
+// `Kernel::SimdAvx2` dispatch arm in `run_chunk` is the only caller).
 unsafe fn gemm_chunk_avx2(
     alpha: f32,
     beta: f32,
@@ -380,19 +382,25 @@ pub(crate) fn gemm_packed_workers(
         pack_b(&b, tb, n, k, s);
         s
     };
-    let workers = workers.clamp(1, m);
+    // Worker A-panel buffers live in a fixed stack array: the steady-state
+    // path may not touch the heap (DESIGN.md §7.2), so no collected Vec.
+    let workers = workers.clamp(1, m).min(MAX_WORKER_STATES);
     let chunk_rows = m.div_ceil(workers);
     let nchunks = m.div_ceil(chunk_rows);
     let alen = chunk_rows.div_ceil(MR) * MR * k;
-    let mut abufs: Vec<Vec<f32>> = (0..nchunks).map(|_| arena.take(alen)).collect();
-    pool::run_row_chunks_with(workers, m, n, c.data, &mut abufs, |i0, chunk, abuf| {
+    // analyze: allow(alloc, Vec::new is capacity-0 and never touches the heap)
+    let mut abufs: [Vec<f32>; MAX_WORKER_STATES] = std::array::from_fn(|_| Vec::new());
+    for ab in abufs.iter_mut().take(nchunks) {
+        *ab = arena.take(alen);
+    }
+    pool::run_row_chunks_with(workers, m, n, c.data, &mut abufs[..nchunks], |i0, chunk, abuf| {
         let rows = chunk.len() / n;
         let ap = aligned_slice(abuf, rows.div_ceil(MR) * MR * k);
         pack_a(&a, ta, i0, rows, k, ap);
         run_chunk(kernel, alpha, beta, ap, bp, rows, n, k, chunk);
     });
-    for ab in abufs {
-        arena.put(ab);
+    for ab in abufs.iter_mut().take(nchunks) {
+        arena.put(std::mem::take(ab));
     }
     arena.put(bbuf);
 }
@@ -440,19 +448,24 @@ pub(crate) fn sparse_dx_packed_workers(
         pack_b_kept_rows(&w, kept, n, s);
         s
     };
-    let workers = workers.clamp(1, m);
+    // Same stack-array scratch discipline as gemm_packed_workers (§7.2).
+    let workers = workers.clamp(1, m).min(MAX_WORKER_STATES);
     let chunk_rows = m.div_ceil(workers);
     let nchunks = m.div_ceil(chunk_rows);
     let alen = chunk_rows.div_ceil(MR) * MR * k;
-    let mut abufs: Vec<Vec<f32>> = (0..nchunks).map(|_| arena.take(alen)).collect();
-    pool::run_row_chunks_with(workers, m, n, dx.data, &mut abufs, |i0, chunk, abuf| {
+    // analyze: allow(alloc, Vec::new is capacity-0 and never touches the heap)
+    let mut abufs: [Vec<f32>; MAX_WORKER_STATES] = std::array::from_fn(|_| Vec::new());
+    for ab in abufs.iter_mut().take(nchunks) {
+        *ab = arena.take(alen);
+    }
+    pool::run_row_chunks_with(workers, m, n, dx.data, &mut abufs[..nchunks], |i0, chunk, abuf| {
         let rows = chunk.len() / n;
         let ap = aligned_slice(abuf, rows.div_ceil(MR) * MR * k);
         pack_a_kept_cols(&g, kept, i0, rows, ap);
         run_chunk(kernel, 1.0, 0.0, ap, bp, rows, n, k, chunk);
     });
-    for ab in abufs {
-        arena.put(ab);
+    for ab in abufs.iter_mut().take(nchunks) {
+        arena.put(std::mem::take(ab));
     }
     arena.put(bbuf);
 }
@@ -529,6 +542,8 @@ fn dw_chunk<L: SimdLane>(
 /// AVX2 instantiation of [`dw_chunk`].
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
+// SAFETY: caller must have verified avx2+fma at runtime (the
+// `Kernel::SimdAvx2` dispatch arm in `sparse_dw_tiles` is the only caller).
 unsafe fn dw_chunk_avx2(
     ap: &[f32],
     xp: &[f32],

@@ -438,6 +438,7 @@ mod tests {
 
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: caller must have verified avx2+fma (the test guard above).
     unsafe fn avx2_vs_portable() {
         let xs = [-1.5f32, -0.0, 0.0, 2.25, 1e8, 1.0, -1e8, 0.125];
         let ys = [0.5f32, 3.0, -2.0, 1.0, 1.0, -1e8, 1e8, 8.0];

@@ -231,6 +231,13 @@ pub struct PackArena {
 /// The shared process pool behind [`PackArena::global`].
 static GLOBAL_ARENA: OnceLock<PackArena> = OnceLock::new();
 
+/// Upper bound on the per-call worker scratch slots the tensor ops keep
+/// on the stack. Steady-state ops may not touch the heap (DESIGN.md
+/// §7.2), so worker state tables are fixed-size stack arrays rather than
+/// collected `Vec`s; the thread count is clamped to this bound at the
+/// call sites (far above the ROADMAP's single-digit-core testbed).
+pub const MAX_WORKER_STATES: usize = 64;
+
 impl PackArena {
     /// A fresh, empty pool (tests; product code shares
     /// [`PackArena::global`]).

@@ -567,15 +567,21 @@ pub fn sparse_dw_into(
     }
     // Carve the kept list into contiguous chunks (4 per worker) whose dW
     // row spans are ordered and disjoint, so the buffer splits with safe
-    // progressive split_at_mut — no raw pointers.
+    // progressive split_at_mut — no raw pointers. Chunk descriptors and
+    // worker scratch live in fixed stack arrays (§7.2: no heap on the
+    // steady-state path), sized by the MAX_WORKER_STATES clamp above.
     struct DwItem<'a> {
         part: &'a [(usize, f32)],
         span: &'a mut [f32],
         first: usize,
     }
+    const MAX_DW_CHUNKS: usize = 4 * kernels::MAX_WORKER_STATES;
+    let workers = workers.min(kernels::MAX_WORKER_STATES);
     let target = (workers * 4).min(kept.len());
     let chunk = kept.len().div_ceil(target);
-    let mut items: Vec<DwItem<'_>> = Vec::with_capacity(target);
+    let mut items: [Option<DwItem<'_>>; MAX_DW_CHUNKS] =
+        std::array::from_fn(|_| None);
+    let mut nitems = 0usize;
     {
         let mut rest: &mut [f32] = dw.data;
         let mut consumed_rows = 0usize;
@@ -587,32 +593,45 @@ pub fn sparse_dw_into(
             let (span, tail) = tail.split_at_mut((last - first + 1) * din);
             rest = tail;
             consumed_rows = last + 1;
-            items.push(DwItem { part, span, first });
+            items[nitems] = Some(DwItem { part, span, first });
+            nitems += 1;
         }
     }
     debug_assert_eq!(
-        items.iter().map(|it| it.part.len()).sum::<usize>(),
+        items[..nitems]
+            .iter()
+            .map(|it| it.as_ref().expect("filled").part.len())
+            .sum::<usize>(),
         kept.len(),
         "dw chunking must cover every kept row exactly once"
     );
+    // ceil(n / ceil(n/target)) ≤ target, so every chunk found a slot.
+    let drain = items[..nitems]
+        .iter_mut()
+        .map(|it| it.take().expect("filled"));
     if kernel.is_simd() {
         let arena = kernels::PackArena::global();
         let mut xbuf = arena.take(0);
-        let mut abufs: Vec<Vec<f32>> = (0..workers).map(|_| arena.take(0)).collect();
+        // analyze: allow(alloc, Vec::new is capacity-0 and never touches the heap)
+        let mut abufs: [Vec<f32>; kernels::MAX_WORKER_STATES] =
+            std::array::from_fn(|_| Vec::new());
+        for ab in abufs.iter_mut().take(workers) {
+            *ab = arena.take(0);
+        }
         {
             let xp = kernels::sparse_dw_pack_x(x, &mut xbuf);
-            pool::run_dynamic(items, &mut abufs, |it, abuf| {
+            pool::run_dynamic(drain, &mut abufs[..workers], |it, abuf| {
                 let DwItem { part, span, first } = it;
                 kernels::sparse_dw_tiles(kernel, g, part, xp, din, first, span, abuf);
             });
         }
-        for ab in abufs {
-            arena.put(ab);
+        for ab in abufs.iter_mut().take(workers) {
+            arena.put(std::mem::take(ab));
         }
         arena.put(xbuf);
     } else {
-        let mut states = vec![(); workers];
-        pool::run_dynamic(items, &mut states, |it, _| {
+        let mut states = [(); kernels::MAX_WORKER_STATES];
+        pool::run_dynamic(drain, &mut states[..workers], |it, _| {
             let DwItem { part, span, first } = it;
             for &(j, inv) in part {
                 let off = (j - first) * din;

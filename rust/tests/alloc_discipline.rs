@@ -1,0 +1,210 @@
+//! Runtime verification of the §7.2 zero-steady-state-allocation
+//! contract, the dynamic half of what `uavjp-analyze`'s `hot-alloc` pass
+//! checks statically: a counting `#[global_allocator]` wraps the system
+//! allocator and pins **zero** heap allocations in
+//!
+//! 1. a steady-state plain train step (after warmup), under both the
+//!    scalar and the simd kernel, on a sketched kept-policy config so
+//!    the sparse backward kernels and the kept-column activation stash
+//!    are on the measured path, and
+//! 2. a steady-state `InferenceEngine::infer_batch` call,
+//!
+//! with an intentionally-allocating negative control proving the counter
+//! has teeth. Allocation counts are tracked per thread (the test harness
+//! runs other suites concurrently in the same process), so the measured
+//! runs pin `threads = 1`: every kernel-pool primitive then executes
+//! inline on the caller thread and nothing on the hot path escapes the
+//! counter.
+//!
+//! Warmup is what makes the contract meaningful: the first steps grow
+//! the `PackArena` pools, the optimizer slot buffers and the reused gate
+//! buffers to their high-water marks. The correlated gate sampler keeps
+//! exactly `round(budget · dout)` columns every draw (systematic
+//! sampling with an integer target), so steady-state buffer lengths are
+//! constant and the post-warmup assertion is deterministic.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
+
+use uavjp::config::Preset;
+use uavjp::data::{self, DatasetKind};
+use uavjp::native::{models, NativeTrainer};
+use uavjp::serve::InferenceEngine;
+use uavjp::tensor::kernels::{self, KernelKind};
+use uavjp::tensor::Mat;
+
+// ---------------------------------------------------------------------------
+// Counting allocator
+// ---------------------------------------------------------------------------
+
+/// Forwards every call to [`System`], bumping a thread-local counter
+/// while the current thread is armed. Thread-local (rather than global)
+/// counting keeps concurrent test threads from polluting the measurement.
+struct CountingAlloc;
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+    static COUNT: Cell<usize> = const { Cell::new(0) };
+}
+
+/// `try_with` so late allocator calls during thread teardown (after TLS
+/// destruction) degrade to "not armed" instead of panicking inside the
+/// allocator.
+fn bump_if_armed() {
+    let _ = ARMED.try_with(|a| {
+        if a.get() {
+            let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+        }
+    });
+}
+
+// SAFETY: every method is a pure pass-through to `System` (which upholds
+// the GlobalAlloc contract); the only addition is a thread-local counter
+// bump, which itself never allocates (const-init `Cell`, no destructor).
+unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller contract is forwarded verbatim to `System.alloc`.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump_if_armed();
+        // SAFETY: same layout, forwarded verbatim to the System
+        // allocator, which upholds the GlobalAlloc contract.
+        unsafe { System.alloc(layout) }
+    }
+
+    // SAFETY: caller contract is forwarded verbatim to `System.dealloc`.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: `ptr` was returned by `self.alloc`, which is a pure
+        // pass-through to System with the same layout.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    // SAFETY: caller contract is forwarded verbatim to `System.realloc`.
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump_if_armed();
+        // SAFETY: contract is inherited unchanged from the caller; the
+        // original allocation came from System via `self.alloc`.
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` with the counter armed; returns (allocations, result).
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    COUNT.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    let r = f();
+    ARMED.with(|a| a.set(false));
+    (COUNT.with(|c| c.get()), r)
+}
+
+/// `set_kernel` / `pool::set_threads` are process-wide knobs: serialize
+/// every measured run so another test body cannot flip them mid-count.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+/// A sketched kept-policy MLP config: exercises the sparse dX/dW
+/// kernels, the kept-column activation stash and the packed-gemm arena —
+/// every §7.2 surface — on the plain (replicas = 0) trainer path.
+///
+/// Budget 0.5 over dims [784, 256, 64, 10] makes every site's kept
+/// target an integer (128 / 32 / 5), so the correlated sampler keeps a
+/// *constant* column count per site and steady-state buffer lengths
+/// never exceed their warmup high-water mark.
+fn steady_cfg(kernel: &str) -> uavjp::config::TrainConfig {
+    let mut cfg = Preset::Smoke.base("mlp").unwrap();
+    cfg.method = "l1".into();
+    cfg.location = "all".into();
+    cfg.budget = 0.5;
+    cfg.act_policy = "kept".into();
+    cfg.kernel = kernel.into();
+    cfg.threads = 1;
+    cfg.train_size = 64;
+    cfg.test_size = 32;
+    cfg.steps = 8;
+    cfg.eval_every = 8;
+    cfg.batch = 16;
+    cfg
+}
+
+/// One fixed training batch from the MLP's synthetic train split.
+fn train_batch(batch: usize) -> (Mat, Vec<i32>) {
+    let kind = DatasetKind::for_model("mlp").unwrap();
+    let ds = data::generate(kind, batch, 7, "train");
+    let mut x = Mat::zeros(ds.n, ds.dim);
+    x.data.copy_from_slice(&ds.x);
+    (x, ds.y)
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+/// Negative control: the counter must see an ordinary allocation, or the
+/// zero assertions below would be vacuous.
+#[test]
+fn counter_sees_allocations() {
+    let (n, v) = count_allocs(|| std::hint::black_box(vec![0u8; 256]));
+    assert!(n > 0, "counting allocator missed a fresh Vec");
+    drop(v);
+    // and stays quiet on allocation-free work
+    let (n, s) = count_allocs(|| std::hint::black_box(1.0f64).sqrt());
+    assert_eq!(n, 0, "counter fired on pure arithmetic (s = {s})");
+}
+
+/// §7.2, training half: after warmup, a plain train step performs zero
+/// heap allocations — under both kernel kinds, on the sketched
+/// kept-policy path.
+#[test]
+fn steady_state_train_step_does_not_allocate() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for kernel in ["scalar", "simd"] {
+        kernels::set_kernel(KernelKind::parse(kernel).unwrap());
+        let mut trainer =
+            NativeTrainer::with_dims(steady_cfg(kernel), &[784, 256, 64, 10]).unwrap();
+        let (x, y) = train_batch(16);
+        // Warmup: grows the pack-arena pools, optimizer slot buffers and
+        // gate/kept buffers to their (constant) steady-state sizes.
+        for step in 0..3 {
+            trainer.step(&x, &y, step).unwrap();
+        }
+        for step in 3..5 {
+            let (n, res) = count_allocs(|| trainer.step(&x, &y, step));
+            let loss = res.unwrap();
+            assert!(loss.is_finite(), "{kernel}: non-finite loss {loss}");
+            assert_eq!(
+                n, 0,
+                "{kernel}: steady-state step {step} performed {n} heap \
+                 allocation(s); §7.2 pins zero"
+            );
+        }
+    }
+    kernels::set_kernel(KernelKind::Auto);
+}
+
+/// §7.2, serving half: after a warmup call, `infer_batch` at a fixed
+/// batch shape performs zero heap allocations.
+#[test]
+fn steady_state_infer_batch_does_not_allocate() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    uavjp::pool::set_threads(1);
+    let model = Arc::new(models::build("mlp", 3).unwrap());
+    let (x, _) = train_batch(8);
+    let mut engine = InferenceEngine::new(Arc::clone(&model), x.cols, 8);
+    let out_dim = engine.out_dim();
+    engine.infer_batch(&x); // warmup: sizes the engine workspace
+    for round in 0..2 {
+        let (n, len) = count_allocs(|| engine.infer_batch(&x).data.len());
+        assert_eq!(len, 8 * out_dim);
+        assert_eq!(
+            n, 0,
+            "round {round}: steady-state infer_batch performed {n} heap \
+             allocation(s); §7.2 pins zero"
+        );
+    }
+    uavjp::pool::set_threads(0);
+}

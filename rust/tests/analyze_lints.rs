@@ -1,0 +1,157 @@
+//! `uavjp-analyze` lint-pass suite (DESIGN.md §7.8): every pass fires
+//! exactly once on its seeded fixture, the clean fixture fires nothing,
+//! the diagnostic format is golden-pinned, the waiver grammar counts
+//! well-formed allows and flags malformed ones, the RNG stream registry
+//! is pairwise disjoint, and — the acceptance bar — the analyzer runs
+//! **clean on the real repo tree**, so CI's `analyze` leg stays green by
+//! construction.
+//!
+//! Fixtures live in `uavjp::analyze::fixtures` as string literals: the
+//! analyzer blanks literals when it scans its own sources, so the seeded
+//! violations are invisible to the self-scan.
+
+use std::path::Path;
+
+use uavjp::analyze::{analyze_source, analyze_tree, fixtures, Pass};
+use uavjp::rng::streams;
+
+/// Analyze a fixture under a pretend repo path and return the report.
+fn run(path: &str, src: &str) -> uavjp::analyze::Report {
+    analyze_source(path, src)
+}
+
+/// Assert exactly one finding of `pass` at `line`, message containing
+/// `needle`.
+fn assert_single(rep: &uavjp::analyze::Report, pass: Pass, line: usize, needle: &str) {
+    assert_eq!(rep.findings.len(), 1, "expected exactly one finding, got: {:?}", rep.findings);
+    let f = &rep.findings[0];
+    assert_eq!(f.pass, pass, "wrong pass: {f}");
+    assert_eq!(f.line, line, "wrong line: {f}");
+    assert!(f.message.contains(needle), "message {:?} missing {needle:?}", f.message);
+}
+
+#[test]
+fn clean_fixture_fires_nothing() {
+    let rep = run("src/native/clean.rs", fixtures::CLEAN);
+    assert!(rep.is_clean(), "clean fixture flagged: {:?}", rep.findings);
+    assert!(rep.allows.is_empty());
+}
+
+#[test]
+fn rng_pass_flags_undeclared_stream() {
+    let rep = run("src/native/clean.rs", fixtures::RNG_UNDECLARED);
+    assert_single(&rep, Pass::RngStream, 5, "undeclared RNG stream");
+}
+
+#[test]
+fn rng_pass_names_the_declared_stream_it_matches() {
+    let rep = run("src/native/clean.rs", fixtures::RNG_ADHOC_DECLARED);
+    assert_single(&rep, Pass::RngStream, 5, "sketch-gates");
+    assert!(rep.findings[0].message.contains("route through rng::streams"), "{}", rep.findings[0]);
+}
+
+#[test]
+fn rng_pass_skips_the_registry_module_itself() {
+    let rep = run("src/rng/streams.rs", fixtures::RNG_UNDECLARED);
+    assert!(rep.is_clean(), "src/rng/ must be exempt: {:?}", rep.findings);
+}
+
+#[test]
+fn unsafe_pass_confines_to_allowlist() {
+    let rep = run("src/serve/engine.rs", fixtures::UNSAFE_OUTSIDE);
+    assert_single(&rep, Pass::Unsafe, 3, "outside the kernel-file allowlist");
+}
+
+#[test]
+fn unsafe_pass_requires_safety_comment() {
+    let rep = run("src/tensor/kernels/vec.rs", fixtures::UNSAFE_NO_SAFETY);
+    assert_single(&rep, Pass::Unsafe, 3, "SAFETY");
+    let ok = run("src/tensor/kernels/vec.rs", fixtures::UNSAFE_JUSTIFIED);
+    assert!(ok.is_clean(), "justified unsafe flagged: {:?}", ok.findings);
+}
+
+#[test]
+fn det_pass_bans_hashmap_in_deterministic_modules() {
+    let rep = run("src/native/clean.rs", fixtures::DET_HASHMAP);
+    assert_single(&rep, Pass::Determinism, 2, "HashMap");
+    // the same source outside the deterministic modules is fine
+    let out = run("src/serve/engine.rs", fixtures::DET_HASHMAP);
+    assert!(out.is_clean(), "serve is not a det module: {:?}", out.findings);
+}
+
+#[test]
+fn det_pass_flags_unordered_reductions() {
+    let rep = run("src/native/clean.rs", fixtures::DET_UNORDERED_SUM);
+    assert_single(&rep, Pass::Determinism, 3, "unordered reduction");
+}
+
+#[test]
+fn alloc_pass_fires_only_inside_declared_hot_fns() {
+    // `step` is declared hot for src/native/trainer.rs; `evaluate` is not,
+    // so only the first vec! fires.
+    let rep = run("src/native/trainer.rs", fixtures::ALLOC_IN_STEP);
+    assert_single(&rep, Pass::HotAlloc, 3, "steady-state function");
+    assert!(rep.findings[0].message.contains("vec!"), "{}", rep.findings[0]);
+}
+
+#[test]
+fn allow_comment_suppresses_and_is_counted() {
+    let rep = run("src/native/trainer.rs", fixtures::ALLOC_ALLOWED);
+    assert!(rep.is_clean(), "waived alloc flagged: {:?}", rep.findings);
+    assert_eq!(rep.allows.get("alloc"), Some(&1), "waiver not counted");
+    assert_eq!(rep.allow_summary(), "alloc: 1");
+}
+
+#[test]
+fn malformed_allow_is_a_finding() {
+    let rep = run("src/native/clean.rs", fixtures::ALLOW_MALFORMED);
+    assert_single(&rep, Pass::AllowGrammar, 3, "malformed allow comment");
+    assert!(rep.allows.is_empty(), "malformed waiver must not count");
+}
+
+/// Golden diagnostic format: `{file}:{line}: [{slug}] {message}` — the
+/// CI log contract.
+#[test]
+fn diagnostic_format_is_stable() {
+    let rep = run("src/serve/engine.rs", fixtures::UNSAFE_OUTSIDE);
+    assert_eq!(
+        rep.findings[0].to_string(),
+        "src/serve/engine.rs:3: [unsafe] `unsafe` outside the kernel-file allowlist"
+    );
+    for (pass, slug) in [
+        (Pass::RngStream, "rng-stream"),
+        (Pass::Unsafe, "unsafe"),
+        (Pass::Determinism, "determinism"),
+        (Pass::HotAlloc, "hot-alloc"),
+        (Pass::AllowGrammar, "allow-grammar"),
+    ] {
+        assert_eq!(pass.slug(), slug);
+    }
+}
+
+/// The RNG stream registry's (mix, stream-range) pairs are pairwise
+/// disjoint — the property that makes "route everything through the
+/// registry" a collision-freedom proof rather than a convention.
+#[test]
+fn stream_registry_is_pairwise_disjoint() {
+    assert_eq!(streams::check_disjoint(), Ok(()));
+}
+
+/// Acceptance bar: the analyzer runs clean on the real tree. Every
+/// production `Pcg64::new` routes through `rng::streams`, `unsafe`
+/// stays justified inside the allowlist, the deterministic modules stay
+/// free of banned tokens, and the declared steady-state functions only
+/// allocate under counted waivers.
+#[test]
+fn repo_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let rep = analyze_tree(root).expect("scan repo tree");
+    assert!(
+        rep.is_clean(),
+        "uavjp-analyze found violations in the repo tree:\n{}",
+        rep.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    assert!(rep.files_scanned > 30, "suspiciously few files scanned");
+    // the tree's waivers are all well-formed and counted
+    assert!(rep.allows.get("alloc").copied().unwrap_or(0) >= 1);
+}
